@@ -1,0 +1,51 @@
+//! Quickstart: run the VPaaS High-and-Low protocol end to end on a small
+//! synthetic workload and print every §VI metric.
+//!
+//! ```bash
+//! make artifacts            # once: AOT-compile the models (python, build time)
+//! cargo run --release --example quickstart
+//! ```
+
+use vpaas::metrics::report::table;
+use vpaas::pipeline::{Harness, RunConfig, SystemKind};
+use vpaas::sim::video::datasets;
+
+fn main() -> anyhow::Result<()> {
+    // The harness owns the shared PJRT engine; artifacts are loaded from
+    // the repo's artifacts/ directory (built once by `make artifacts`).
+    let harness = Harness::new()?;
+
+    // A scaled-down copy of the paper's drone dataset (Table I).
+    let dataset = datasets::drone(0.04);
+    let cfg = RunConfig { golden: true, ..RunConfig::default() };
+
+    println!("running VPaaS and the MPEG reference on {} ...", dataset.name);
+    let vpaas = harness.run(SystemKind::Vpaas, &dataset, &cfg)?;
+    let mpeg = harness.run(SystemKind::Mpeg, &dataset, &cfg)?;
+
+    let s = vpaas.latency.summary();
+    let rows = vec![
+        vec!["F1 (true GT)".into(), format!("{:.3}", vpaas.f1_true.f1())],
+        vec!["F1 (golden-config GT)".into(), format!("{:.3}", vpaas.f1_golden.f1())],
+        vec![
+            "bandwidth vs MPEG".into(),
+            format!("{:.1}%", 100.0 * vpaas.normalized_bandwidth(&mpeg.bandwidth)),
+        ],
+        vec![
+            "cloud cost vs MPEG".into(),
+            format!("{:.1}%", 100.0 * vpaas.normalized_cost(&mpeg.cost)),
+        ],
+        vec!["freshness p50".into(), format!("{:.2} s", s.p50)],
+        vec!["freshness p99".into(), format!("{:.2} s", s.p99)],
+        vec!["chunks".into(), vpaas.chunks.to_string()],
+        vec!["regions classified at fog".into(), vpaas.fog_regions.to_string()],
+        vec!["human labels consumed".into(), vpaas.labels_used.to_string()],
+    ];
+    println!("\nVPaaS results\n{}", table(&["metric", "value"], &rows));
+    println!(
+        "MPEG reference: F1={:.3}, latency p50={:.2}s",
+        mpeg.f1_true.f1(),
+        mpeg.latency.summary().p50
+    );
+    Ok(())
+}

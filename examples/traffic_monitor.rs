@@ -1,0 +1,72 @@
+//! End-to-end validation driver (the intro's smart-city motivation): serve
+//! a city traffic-camera workload through the full VPaaS stack — client →
+//! fog → cloud with the High-and-Low protocol, HITL incremental learning
+//! under data drift, and all baselines for comparison — reporting the
+//! paper's headline metrics. EXPERIMENTS.md records a run of this binary.
+//!
+//! ```bash
+//! cargo run --release --example traffic_monitor -- --scale 0.05
+//! ```
+
+use vpaas::metrics::report::table;
+use vpaas::pipeline::{Harness, RunConfig, SystemKind};
+use vpaas::sim::video::datasets;
+use vpaas::util::cli::Args;
+use vpaas::util::clock::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale = args.get_f64("scale", 0.05)?;
+    let harness = Harness::new()?;
+    let ds = datasets::traffic(scale);
+    let cfg = RunConfig { golden: true, ..RunConfig::default() };
+
+    println!(
+        "traffic dataset @ scale {scale}: {} videos, {:.0}s total, ~{:.0} objects",
+        ds.videos.len(),
+        ds.total_length_s(),
+        ds.expected_objects()
+    );
+
+    let mut rows = Vec::new();
+    let mut wall = Vec::new();
+    let mut reference = None;
+    for kind in SystemKind::all() {
+        let sw = Stopwatch::new();
+        let m = harness.run(kind, &ds, &cfg)?;
+        let elapsed = sw.elapsed();
+        wall.push((kind.name(), elapsed, m.chunks));
+        if kind == SystemKind::Mpeg {
+            reference = Some((m.bandwidth.clone(), m.cost.clone()));
+        }
+        let (ref_bw, ref_cost) = reference.as_ref().expect("mpeg runs first");
+        let s = m.latency.summary();
+        rows.push(vec![
+            m.system.clone(),
+            format!("{:.3}", m.normalized_bandwidth(ref_bw)),
+            format!("{:.3}", m.normalized_cost(ref_cost)),
+            format!("{:.3}", m.f1_true.f1()),
+            format!("{:.3}", m.f1_golden.f1()),
+            format!("{:.2}", s.p50),
+            format!("{:.2}", s.p99),
+        ]);
+    }
+    println!(
+        "\n{}",
+        table(
+            &["system", "norm_bw", "norm_cost", "f1_true", "f1_golden", "lat_p50", "lat_p99"],
+            &rows
+        )
+    );
+
+    // serving throughput of the coordinator stack on this host
+    println!("host-side serving throughput (real wall time, full stack):");
+    for (name, secs, chunks) in wall {
+        println!(
+            "  {name:<12} {chunks:>4} chunks in {secs:>6.2}s  ->  {:>6.1} chunks/s ({:.1}x realtime)",
+            chunks as f64 / secs,
+            (chunks as f64 * 7.5) / secs
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,119 @@
+"""AOT compile path: lower every L2 model to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); Python never appears on the
+Rust request path. HLO text — NOT ``.serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.
+
+Outputs (under ``artifacts/``):
+    <model>_b<N>.hlo.txt      one per model x batch bucket
+    manifest.txt              artifact index: names, files, I/O shapes
+    constants.txt             scene/model interchange constants for Rust
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import constants as C
+from . import weights as W
+from .models.classifier import make_classifier
+from .models.detector import make_detector
+from .models.il import make_il_step
+from .models.sr import make_sr
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True; the Rust
+    side unwraps with to_tuple1/decompose).
+
+    `as_hlo_text(True)` = print_large_constants: the default printer ELIDES
+    big constants as `{...}`, silently zeroing every baked weight on the
+    Rust side — the text must carry them in full.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def _spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def _shape_str(spec) -> str:
+    return "f32:" + "x".join(str(d) for d in spec.shape)
+
+
+def build_entries():
+    """(name, fn, [input specs], n_outputs) for every artifact."""
+    a, d = C.ANCHORS, C.FEAT_DIM
+    hf, k = C.CLS_FEAT, C.NUM_CLASSES
+    entries = []
+    det, lite, cls, sr = make_detector(False), make_detector(True), make_classifier(), make_sr()
+    for b in C.BATCH_BUCKETS:
+        entries.append((f"detector_b{b}", det, [_spec(b, a, d)], 3))
+        entries.append((f"detector_lite_b{b}", lite, [_spec(b, a, d)], 3))
+        entries.append((f"classifier_b{b}", cls, [_spec(b, d), _spec(hf, k)], 2))
+        entries.append((f"sr_b{b}", sr, [_spec(b, a, d)], 1))
+    il = make_il_step()
+    bi = C.IL_BATCH
+    entries.append(
+        ("il_step", il, [_spec(hf, k), _spec(bi, hf), _spec(bi, k), _spec(bi)], 1)
+    )
+    return entries
+
+
+def output_specs(fn, in_specs):
+    out = jax.eval_shape(fn, *in_specs)
+    leaves = jax.tree_util.tree_leaves(out)
+    return leaves
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, fn, in_specs, n_out in build_entries():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = output_specs(fn, in_specs)
+        assert len(outs) == n_out, (name, len(outs), n_out)
+        manifest.append(
+            "artifact {} {} inputs={} outputs={}".format(
+                name,
+                fname,
+                ";".join(_shape_str(s) for s in in_specs),
+                ";".join(_shape_str(s) for s in outs),
+            )
+        )
+        print(f"  lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    W.export_constants(os.path.join(args.out_dir, "constants.txt"))
+    print(f"wrote {len(manifest)} artifacts + manifest + constants to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

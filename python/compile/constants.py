@@ -1,0 +1,94 @@
+"""Shared constants for the VPaaS reproduction.
+
+These constants define the *interchange contract* between the build-time
+Python side (JAX/Pallas models, lowered to HLO text) and the run-time Rust
+side (scene simulator, codec model, coordinator). ``weights.py`` exports the
+derived tensors (signature bank, initial last layer, ...) to
+``artifacts/constants.txt`` so the Rust renderer produces frames drawn from
+exactly the distribution the compiled models expect.
+
+Geometry
+--------
+A frame is a ``G x G`` grid of cells; each cell carries a ``D``-dimensional
+feature vector (the simulator's stand-in for decoded pixels). An object of
+class ``c`` deposits ``alpha * ((1-m) * s_c + m * s_c' + eps * n)`` into the
+cells it covers, where ``s_c`` is the class signature, ``c'`` a confuser
+class, ``m`` the quality-dependent confusion mix and ``eps * n`` white noise.
+This single mechanism reproduces the paper's key observations: cell *energy*
+(localization evidence) is invariant to ``m`` while the *class margin*
+collapses as ``m`` approaches 0.5.
+"""
+
+# ---------------------------------------------------------------- geometry
+GRID = 16            # G: cells per frame side
+ANCHORS = GRID * GRID
+FEAT_DIM = 24        # D: per-cell feature dimension
+NUM_CLASSES = 8      # K
+DET_HIDDEN = 2 * NUM_CLASSES   # +/- signature pairs (relu-split |proj|)
+CLS_HIDDEN = 48      # fog classifier backbone width
+CLS_FEAT = CLS_HIDDEN + 1      # +1 bias feature appended
+
+# Batch-size buckets compiled per model (dynamic batcher pads to these).
+BATCH_BUCKETS = (1, 4, 16)
+IL_BATCH = 16        # incremental-learning update batch (mask for partial)
+
+# ---------------------------------------------------------------- quality
+# Codec model: bitstream size F_v(r, q) = BPP0 * pixels(r) * 2^(-(q-Q0)/6)
+# (standard ~ -6 dB per QP step rate model). r is the resolution scale of a
+# 1920x1080 source, q the quantization parameter.
+Q0 = 20
+BPP0 = 0.12                      # bits/pixel at q = Q0
+SRC_W, SRC_H = 1920, 1080
+
+# Signal amplitude: localization energy degrades *slowly* with quality.
+#   alpha(r, q) = r^ALPHA_R_EXP * 2^(-(q - Q0) / ALPHA_Q_DIV)
+ALPHA_R_EXP = 0.7
+ALPHA_Q_DIV = 18.0
+
+# Confusion mix: class margin degrades *fast* with quality.
+#   m(r, q) = clip(M_BASE + M_R * (1 - r) + M_Q * (q - Q0), 0, M_MAX)
+# plus a per-object uniform jitter of +/- M_JITTER.
+M_BASE = 0.05
+M_R = 0.35
+M_Q = 0.008
+M_MAX = 0.90
+M_JITTER = 0.25
+
+# Additive white-noise level on object cells: eps(q) = EPS_BASE + EPS_Q*(q-Q0)
+EPS_BASE = 0.02
+EPS_Q = 0.0008
+# Background clutter level on empty cells (signature-subspace projection of
+# scene texture; independent of encoding quality to first order).
+CLUTTER = 0.02
+
+# ---------------------------------------------------------------- drift
+# The renderer's signature bank rotates pairwise along the stream:
+#   s_k(t) = cos(phi t) s_k + sin(phi t) s_perm(k),  t = chunk index.
+# Models are synthesized at t = 0, so accuracy decays until HITL re-tracks.
+# phi(t) = min(DRIFT_RATE * t, DRIFT_MAX) so long streams plateau in the
+# "cloud-uncertain, fog-recoverable" regime rather than fully flipping.
+DRIFT_RATE = 0.0025              # radians per chunk
+# Saturation past pi/4 so the stale fog classifier's argmax actually flips
+# (the regime HITL exists to fix), while staying below the point where the
+# cloud detector becomes *confidently* wrong on most objects.
+DRIFT_MAX = 0.95                 # saturation angle
+
+# ---------------------------------------------------------------- heads
+# Location confidence: sigmoid(OBJ_GAIN * (cell_energy - OBJ_BIAS)).
+OBJ_GAIN = 14.0
+OBJ_BIAS = 0.30
+# Class confidence: softmax(CLS_GAIN * logits / energy_hat).
+CLS_GAIN = 8.0
+
+# ---------------------------------------------------------------- SR model
+SR_GAMMA = 0.75      # blend toward the reconstructed dominant signature
+SR_BETA = 9.0        # attention sharpness over the signature bank
+
+# ---------------------------------------------------------------- IL
+IL_LR = 0.35         # eta in Eq. (8)
+ENSEMBLE_RIDGE = 0.05  # v in Eq. (9)
+
+# ---------------------------------------------------------------- seeds
+SEED_SIGNATURES = 7
+SEED_BACKBONE = 11
+SEED_LITE = 13

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: the fog hot path — batched one-vs-all crop classifier.
+
+Backbone GEMM + ReLU + one-vs-all heads fused so a crop batch is read once.
+The last layer ``w_last`` is a RUNTIME INPUT (not a baked constant): the
+incremental learner updates it between requests without recompiling — this
+is the mechanism behind the paper's "update models with almost negligible
+overhead" claim.
+
+TPU adaptation: crops arrive as a [B, D] matrix; the batch is tiled into
+[TB, D] VMEM blocks feeding the MXU as (TB x D) x (D x H) matmuls, with the
+head GEMM fused in the epilogue. The bias feature is materialized into the
+feats output so Rust's data collector sees exactly what Eq. (8) consumes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BATCH_TILE = 8
+
+
+def _kernel(x_ref, wb_ref, wl_ref, scores_ref, feats_ref):
+    h = jnp.maximum(
+        jnp.dot(x_ref[...], wb_ref[...], preferred_element_type=jnp.float32),
+        0.0,
+    )                                                    # [TB, H]
+    hidden = wb_ref.shape[1]
+    ones = jnp.ones((h.shape[0], 1), h.dtype)
+    feats_ref[...] = jnp.concatenate([h, ones], axis=1)
+    # scores = [h, 1] @ w_last == h @ w_last[:H] + w_last[H] (bias row)
+    scores_ref[...] = (
+        jnp.dot(h, wl_ref[:hidden, :], preferred_element_type=jnp.float32)
+        + wl_ref[hidden, :][None, :]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile",))
+def classifier_kernel(x, w_backbone, w_last, *, batch_tile: int = BATCH_TILE):
+    """x: [B, D], w_backbone: [D, H], w_last: [H+1, K]
+    -> (scores [B, K], feats [B, H+1])."""
+    b, d = x.shape
+    h = w_backbone.shape[1]
+    k = w_last.shape[1]
+    tb = min(batch_tile, b)
+    assert b % tb == 0, f"batch {b} not divisible by tile {tb}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((h + 1, k), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+            pl.BlockSpec((tb, h + 1), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, k), x.dtype),
+            jax.ShapeDtypeStruct((b, h + 1), x.dtype),
+        ),
+        interpret=True,
+    )(x, w_backbone, w_last)

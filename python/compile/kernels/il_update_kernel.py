@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: Eq. (8) incremental last-layer update.
+
+One fused block: score GEMM, sigmoid error, mask, and the rank-B outer
+product accumulation ``W' = W + lr * feats^T ((y - sigmoid(feats W)) * m)``.
+The batch is small (the paper trains with batch size 4; we compile a
+mask-padded bucket of IL_BATCH) so the whole update fits in a single VMEM
+block — the point of the kernel is fusing the read-modify-write on W so the
+serving path never observes a half-updated last layer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, feats_ref, labels_ref, mask_ref, o_ref, *, lr: float):
+    w = w_ref[...]                                       # [H+1, K]
+    feats = feats_ref[...]                               # [B, H+1]
+    scores = jnp.dot(feats, w, preferred_element_type=jnp.float32)
+    err = (labels_ref[...] - 1.0 / (1.0 + jnp.exp(-scores))) * mask_ref[...][:, None]
+    o_ref[...] = w + lr * jnp.dot(
+        feats.T, err, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def il_update_kernel(w_last, feats, labels, mask, *, lr: float):
+    """w_last: [H+1, K], feats: [B, H+1], labels: [B, K] one-hot,
+    mask: [B] 0/1 -> updated w_last [H+1, K]."""
+    return pl.pallas_call(
+        functools.partial(_kernel, lr=lr),
+        out_shape=jax.ShapeDtypeStruct(w_last.shape, w_last.dtype),
+        interpret=True,
+    )(w_last, feats, labels, mask)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: ``python/tests/test_kernels.py``
+sweeps shapes/dtypes with hypothesis and asserts allclose between each
+Pallas kernel (interpret=True) and the oracle here. The L2 models are also
+written against these semantics, so kernel == ref == model is transitive.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def detector_ref(x, w_embed, w_obj, w_cls):
+    """Two-stage detector head over anchor features.
+
+    x: [B, A, D] anchor (cell) features.
+    Returns (obj [B, A], cls [B, A, K]) — raw logits, heads applied later.
+    """
+    h = jnp.maximum(jnp.einsum("bad,dh->bah", x, w_embed), 0.0)
+    obj = jnp.einsum("bah,ho->ba", h, w_obj)
+    cls = jnp.einsum("bah,hk->bak", h, w_cls)
+    return obj, cls
+
+
+def classifier_ref(x, w_backbone, w_last):
+    """Fog one-vs-all crop classifier.
+
+    x: [B, D] crop features; w_backbone: [D, H] (baked constant);
+    w_last: [H+1, K] (RUNTIME input — IL updates it without recompiling).
+    Returns (scores [B, K], feats [B, H+1]) — feats feed the data collector.
+    """
+    h = jnp.maximum(x @ w_backbone, 0.0)
+    feats = jnp.concatenate([h, jnp.ones((x.shape[0], 1), x.dtype)], axis=1)
+    scores = feats @ w_last
+    return scores, feats
+
+
+def il_update_ref(w_last, feats, labels, mask, lr):
+    """Eq. (8)-style online last-layer update, batched.
+
+    Per-class sigmoid cross-entropy rank-1 step (the standard online update
+    the paper's Eq. (8) approximates — see DESIGN.md, the literal Eq. (8)
+    sign convention diverges):
+        W' = W + lr * feats^T ((y - sigmoid(feats W)) * mask)
+    feats: [B, H+1]; labels: [B, K] one-hot; mask: [B] 0/1 (partial batch).
+    """
+    scores = feats @ w_last
+    err = (labels - 1.0 / (1.0 + jnp.exp(-scores))) * mask[:, None]
+    return w_last + lr * feats.T @ err
+
+
+def sr_ref(x, signatures, gamma, beta):
+    """CloudSeg super-resolution stand-in: signature-attention denoiser.
+
+    Pulls each cell feature toward its dominant class signature, recovering
+    the class margin that low-quality encoding destroyed (and occasionally
+    entrenching a confuser that already dominates — SR is not free accuracy,
+    matching the paper's observation that CloudSeg trails slightly).
+    x: [B, A, D]; signatures: [K, D].
+    """
+    energy = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))    # [B, A, 1]
+    proj = jnp.einsum("bad,kd->bak", x, signatures)              # [B, A, K]
+    attn = proj / (energy + 1e-6)
+    p = jnp.exp(beta * attn)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    recon = jnp.einsum("bak,kd->bad", p, signatures) * energy
+    return (1.0 - gamma) * x + gamma * recon

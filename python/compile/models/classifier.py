@@ -1,0 +1,32 @@
+"""L2 model: the fog one-vs-all crop classifier.
+
+The backbone (pre-trained on "ImageNet" in the paper; synthesized here) is
+baked into the artifact; the last layer is a runtime input so the
+incremental learner can swap it per request with zero recompilation.
+Outputs per-class one-vs-all probabilities plus the feature vector that the
+HITL data collector stores for Eq. (8) updates.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import weights as W
+from ..kernels.classifier_kernel import classifier_kernel
+
+
+def classifier_forward(x, w_backbone, w_last):
+    """x: [B, D], w_last: [H+1, K] -> (prob [B, K], feats [B, H+1])."""
+    scores, feats = classifier_kernel(x, w_backbone, w_last)
+    prob = 1.0 / (1.0 + jnp.exp(-scores))   # one-vs-all sigmoids
+    return prob, feats
+
+
+def make_classifier():
+    """Returns fn(x [B, D], w_last [H+1, K]) -> (prob, feats)."""
+    w_backbone = jnp.asarray(W.classifier_backbone())
+
+    def fwd(x, w_last):
+        return classifier_forward(x, w_backbone, w_last)
+
+    return fwd

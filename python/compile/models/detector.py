@@ -1,0 +1,50 @@
+"""L2 model: the cloud detector (FasterRCNN101 stand-in) forward pass.
+
+Wraps the fused Pallas detector kernel with the confidence heads the
+coordinator consumes:
+
+* ``loc_conf``  — sigmoid(OBJ_GAIN * (energy - OBJ_BIAS)); robust to the
+  quality-induced confusion mix (Key Observation 2): a blurry object still
+  *localizes*.
+* ``cls_prob``  — softmax over energy-normalized class logits; collapses as
+  quality drops, which is exactly what routes regions to the fog.
+
+Weights are baked as HLO constants at lowering time; the ``lite`` variant is
+the fog fallback detector (YOLOv3 stand-in, Fig. 15).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import constants as C
+from .. import weights as W
+from ..kernels.detector_kernel import detector_kernel
+
+
+def detector_forward(x, w_embed, w_obj, w_cls):
+    """x: [B, A, D] -> (loc_conf [B, A], cls_prob [B, A, K], energy [B, A])."""
+    obj, cls = detector_kernel(x, w_embed, w_obj, w_cls)
+    energy = obj  # sum_k |s_k . x| — the signature-subspace energy
+    loc_conf = 1.0 / (1.0 + jnp.exp(-C.OBJ_GAIN * (energy - C.OBJ_BIAS)))
+    # Energy-normalized logits: the margin in units of signal amplitude, so
+    # the confidence is calibrated across quality settings (alpha varies).
+    norm = jnp.maximum(energy, 1e-4)[..., None]
+    logits = C.CLS_GAIN * cls / norm
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    cls_prob = e / jnp.sum(e, axis=-1, keepdims=True)
+    return loc_conf, cls_prob, energy
+
+
+def make_detector(lite: bool = False):
+    """Returns fn(x [B, A, D]) -> 3-tuple, with weights baked."""
+    dw = W.detector_weights(lite=lite)
+    w_embed = jnp.asarray(dw["w_embed"])
+    w_obj = jnp.asarray(dw["w_obj"])
+    w_cls = jnp.asarray(dw["w_cls"])
+
+    def fwd(x):
+        return detector_forward(x, w_embed, w_obj, w_cls)
+
+    return fwd

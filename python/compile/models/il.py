@@ -1,0 +1,44 @@
+"""L2 model: the incremental-learning update step (Eq. 8) and the
+snapshot-ensemble predictor (Eq. 9).
+
+``il_step`` is AOT-compiled so the fog's auto-trainer runs the update
+through the same PJRT runtime as inference (the paper co-locates training
+with inference on one device — Fig. 13b measures exactly this contention).
+The Eq. (9) ridge solve is a tiny tau x tau system done on the Rust side;
+``ensemble_predict_ref`` here is its test oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import constants as C
+from ..kernels.il_update_kernel import il_update_kernel
+
+
+def make_il_step(lr: float = C.IL_LR):
+    def step(w_last, feats, labels, mask):
+        """One Eq. (8) update: (w [H+1,K], feats [B,H+1], y [B,K], m [B])."""
+        return il_update_kernel(w_last, feats, labels, mask, lr=lr)
+
+    return step
+
+
+def ensemble_predict_ref(w_stack, feats, omega):
+    """Eq. (9) oracle: weighted combination of snapshot classifiers.
+
+    w_stack: [T, H+1, K]; feats: [B, H+1]; omega: [T] -> scores [B, K].
+    """
+    per = jnp.einsum("bh,thk->tbk", feats, w_stack)
+    return jnp.einsum("t,tbk->bk", omega, per)
+
+
+def ensemble_weights_ref(z, y, ridge: float = C.ENSEMBLE_RIDGE):
+    """Eq. (9) oracle: omega = argmin 1/2 ||omega^T z - y||^2 + v ||omega||^2.
+
+    z: [N, T] per-snapshot correct-class scores on held-out labeled data,
+    y: [N] targets. Solved in closed form: (z^T z + 2vI)^-1 z^T y.
+    """
+    t = z.shape[1]
+    a = z.T @ z + 2.0 * ridge * jnp.eye(t, dtype=z.dtype)
+    return jnp.linalg.solve(a, z.T @ y)

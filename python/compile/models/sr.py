@@ -1,0 +1,26 @@
+"""L2 model: CloudSeg's super-resolution stand-in (CARN in the paper).
+
+Signature-attention denoiser over the anchor grid — recovers the class
+margin low-quality encoding destroyed (at the price of one extra cloud model
+invocation per frame, which is precisely CloudSeg's 2x cloud cost in
+Fig. 10a). Pure-jnp: the computation is one attention block that XLA fuses
+fully; a Pallas kernel would add nothing on this shape (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import constants as C
+from .. import weights as W
+from ..kernels.ref import sr_ref
+
+
+def make_sr():
+    signatures = jnp.asarray(W.signature_bank())
+
+    def fwd(x):
+        """x: [B, A, D] low-quality anchor features -> recovered features."""
+        return sr_ref(x, signatures, C.SR_GAMMA, C.SR_BETA)
+
+    return fwd

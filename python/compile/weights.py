@@ -1,0 +1,192 @@
+"""Deterministic weight synthesis for all VPaaS models.
+
+No training is required: the scene simulator and the models share one
+class-signature bank, so detector/classifier weights can be *constructed*
+to have the accuracy-vs-quality behaviour the paper measures. Everything is
+seeded, so Python (model constants baked into HLO) and Rust (renderer,
+reading ``artifacts/constants.txt``) agree bit-for-bit on the bank.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import constants as C
+
+
+def _orthonormal_rows(n: int, d: int, seed: int) -> np.ndarray:
+    """n orthonormal rows in R^d via seeded Gram-Schmidt."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    while len(rows) < n:
+        v = rng.standard_normal(d)
+        for u in rows:
+            v -= (v @ u) * u
+        norm = np.linalg.norm(v)
+        if norm > 1e-3:
+            rows.append(v / norm)
+    return np.stack(rows).astype(np.float32)
+
+
+def signature_bank() -> np.ndarray:
+    """[K, D] orthonormal class signatures (t = 0 bank)."""
+    return _orthonormal_rows(C.NUM_CLASSES, C.FEAT_DIM, C.SEED_SIGNATURES)
+
+
+def drift_perm() -> np.ndarray:
+    """Pairwise drift permutation: class k drifts toward class perm[k].
+
+    A fixed-point-free permutation (cyclic shift) so every class drifts
+    toward a *different* class's signature — decisions genuinely flip.
+    """
+    return np.roll(np.arange(C.NUM_CLASSES), 1)
+
+
+def drifted_bank(t: float) -> np.ndarray:
+    """Renderer's bank at stream time t (chunk index)."""
+    s = signature_bank()
+    phi = min(C.DRIFT_RATE * t, C.DRIFT_MAX)
+    return (np.cos(phi) * s + np.sin(phi) * s[drift_perm()]).astype(np.float32)
+
+
+# --------------------------------------------------------------- detector
+def detector_weights(lite: bool = False) -> dict[str, np.ndarray]:
+    """Cloud detector (FasterRCNN101 stand-in) / fog fallback (YOLOv3 stand-in).
+
+    Embedding splits each signature projection into +/- relu pairs so the
+    hidden layer carries ``|s_k . x|`` exactly:
+        h[2k]   = relu( s_k . x)
+        h[2k+1] = relu(-s_k . x)
+    objectness  = sum_k |s_k . x|   (energy in the signature subspace,
+                                     invariant to the confusion mix m)
+    class logit = h[2k] - h[2k+1] = s_k . x
+    The *lite* fallback (YOLOv3 stand-in, Fig. 15) keeps the localization
+    head intact but entangles sibling classes in the class head (a small
+    backbone cannot separate fine-grained classes) and adds mild embedding
+    noise — reduced classification accuracy at full localization power.
+    """
+    s = signature_bank()                        # [K, D]
+    w_embed = np.zeros((C.FEAT_DIM, C.DET_HIDDEN), dtype=np.float32)
+    for k in range(C.NUM_CLASSES):
+        w_embed[:, 2 * k] = s[k]
+        w_embed[:, 2 * k + 1] = -s[k]
+    w_obj = np.ones((C.DET_HIDDEN, 1), dtype=np.float32)
+    w_cls = np.zeros((C.DET_HIDDEN, C.NUM_CLASSES), dtype=np.float32)
+    for k in range(C.NUM_CLASSES):
+        w_cls[2 * k, k] = 1.0
+        w_cls[2 * k + 1, k] = -1.0
+    if lite:
+        # Random cross-class mixing in the class head: the small backbone's
+        # features entangle classes (objectness head stays clean, so the
+        # fallback localizes at full power but misclassifies a good chunk —
+        # gamma = 0.8 lands around 65-75 % top-1 on clean crops).
+        rng = np.random.default_rng(C.SEED_LITE)
+        gamma = 0.8
+        mix = rng.standard_normal((C.NUM_CLASSES, C.NUM_CLASSES)).astype(np.float32)
+        for k in range(C.NUM_CLASSES):
+            for j in range(C.NUM_CLASSES):
+                w_cls[2 * j, k] += gamma * mix[j, k]
+                w_cls[2 * j + 1, k] -= gamma * mix[j, k]
+    return {"w_embed": w_embed, "w_obj": w_obj, "w_cls": w_cls}
+
+
+# ------------------------------------------------------------- classifier
+def classifier_backbone() -> np.ndarray:
+    """[D, H] fog backbone.
+
+    First 2K columns are the +/- signature pairs (so the feature layer spans
+    the whole drift subspace — drift stays *linearly* recoverable by a
+    last-layer update, which is why the paper's last-layer-only IL works).
+    Remaining columns are random directions (clutter context).
+    """
+    s = signature_bank()
+    rng = np.random.default_rng(C.SEED_BACKBONE)
+    w = 0.25 * rng.standard_normal((C.FEAT_DIM, C.CLS_HIDDEN)).astype(np.float32)
+    for k in range(C.NUM_CLASSES):
+        w[:, 2 * k] = s[k]
+        w[:, 2 * k + 1] = -s[k]
+    return w
+
+
+def classifier_last_layer() -> np.ndarray:
+    """[H+1, K] initial one-vs-all last layer (t = 0), bias row last.
+
+    score_k = 4*(h[2k] - h[2k+1]) - 2 = 4*(s_k . x) - 2: positive for the
+    dominant class at high quality, well negative otherwise.
+    """
+    w = np.zeros((C.CLS_FEAT, C.NUM_CLASSES), dtype=np.float32)
+    for k in range(C.NUM_CLASSES):
+        w[2 * k, k] = 4.0
+        w[2 * k + 1, k] = -4.0
+    w[-1, :] = -2.0
+    return w
+
+
+def all_weights() -> dict[str, np.ndarray]:
+    det = detector_weights(lite=False)
+    lite = detector_weights(lite=True)
+    return {
+        "signatures": signature_bank(),
+        "drift_perm": drift_perm().astype(np.float32),
+        "det_embed": det["w_embed"],
+        "det_obj": det["w_obj"],
+        "det_cls": det["w_cls"],
+        "lite_embed": lite["w_embed"],
+        "lite_obj": lite["w_obj"],
+        "lite_cls": lite["w_cls"],
+        "cls_backbone": classifier_backbone(),
+        "cls_last": classifier_last_layer(),
+    }
+
+
+# ------------------------------------------------------------- interchange
+_SCALARS = {
+    "grid": C.GRID,
+    "feat_dim": C.FEAT_DIM,
+    "num_classes": C.NUM_CLASSES,
+    "det_hidden": C.DET_HIDDEN,
+    "cls_hidden": C.CLS_HIDDEN,
+    "cls_feat": C.CLS_FEAT,
+    "il_batch": C.IL_BATCH,
+    "q0": C.Q0,
+    "bpp0": C.BPP0,
+    "src_w": C.SRC_W,
+    "src_h": C.SRC_H,
+    "alpha_r_exp": C.ALPHA_R_EXP,
+    "alpha_q_div": C.ALPHA_Q_DIV,
+    "m_base": C.M_BASE,
+    "m_r": C.M_R,
+    "m_q": C.M_Q,
+    "m_max": C.M_MAX,
+    "m_jitter": C.M_JITTER,
+    "eps_base": C.EPS_BASE,
+    "eps_q": C.EPS_Q,
+    "clutter": C.CLUTTER,
+    "drift_rate": C.DRIFT_RATE,
+    "drift_max": C.DRIFT_MAX,
+    "obj_gain": C.OBJ_GAIN,
+    "obj_bias": C.OBJ_BIAS,
+    "cls_gain": C.CLS_GAIN,
+    "il_lr": C.IL_LR,
+    "ensemble_ridge": C.ENSEMBLE_RIDGE,
+}
+
+
+def export_constants(path: str) -> None:
+    """Write the Rust-side interchange file.
+
+    Format (line oriented, parsed by ``rust/src/runtime/manifest.rs``):
+        scalar <name> <value>
+        tensor <name> <d0>x<d1>... <v0> <v1> ...
+    """
+    w = all_weights()
+    lines = []
+    for name, value in sorted(_SCALARS.items()):
+        lines.append(f"scalar {name} {value!r}".replace("'", ""))
+    for name in ("signatures", "drift_perm", "cls_backbone", "cls_last"):
+        arr = w[name]
+        dims = "x".join(str(d) for d in arr.shape)
+        vals = " ".join(f"{v:.8g}" for v in arr.reshape(-1))
+        lines.append(f"tensor {name} {dims} {vals}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")

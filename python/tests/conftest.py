@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make `compile` importable when pytest is run from python/ or the repo root.
+_HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
+
+ARTIFACTS = os.path.join(os.path.dirname(_HERE), "artifacts")

@@ -1,0 +1,103 @@
+"""AOT artifact contract: manifest consistency and HLO-text validity.
+
+The Rust runtime trusts ``artifacts/manifest.txt`` blindly; these tests pin
+the contract from the producing side. They run against the checked-out
+``artifacts/`` directory when present (built by ``make artifacts``), else
+they lower a fresh copy into a temp dir.
+"""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import constants as C
+from compile.aot import build_entries, to_hlo_text, _shape_str
+
+ARTIFACTS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "artifacts",
+)
+
+
+def _parse_manifest(path):
+    entries = {}
+    for line in open(path):
+        parts = line.split()
+        assert parts[0] == "artifact"
+        name, fname = parts[1], parts[2]
+        ins = parts[3].split("=", 1)[1].split(";")
+        outs = parts[4].split("=", 1)[1].split(";")
+        entries[name] = (fname, ins, outs)
+    return entries
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ARTIFACTS, "manifest.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    return _parse_manifest(path)
+
+
+def test_manifest_covers_all_models(manifest):
+    for b in C.BATCH_BUCKETS:
+        for model in ("detector", "detector_lite", "classifier", "sr"):
+            assert f"{model}_b{b}" in manifest
+    assert "il_step" in manifest
+
+
+def test_manifest_shapes_match_entries(manifest):
+    for name, fn, in_specs, _ in build_entries():
+        fname, ins, outs = manifest[name]
+        assert ins == [_shape_str(s) for s in in_specs]
+        out_leaves = jax.tree_util.tree_leaves(jax.eval_shape(fn, *in_specs))
+        assert outs == [_shape_str(s) for s in out_leaves]
+
+
+def test_artifact_files_exist_and_are_hlo_text(manifest):
+    for name, (fname, _, _) in manifest.items():
+        path = os.path.join(ARTIFACTS, fname)
+        assert os.path.exists(path), path
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{name} missing HloModule header"
+        assert "ENTRY" in text
+
+
+def test_classifier_artifact_takes_runtime_last_layer(manifest):
+    """The IL contract: w_last must be a parameter, not a baked constant."""
+    _, ins, _ = manifest["classifier_b4"]
+    assert ins == [f"f32:4x{C.FEAT_DIM}", f"f32:{C.CLS_FEAT}x{C.NUM_CLASSES}"]
+
+
+def test_lowered_hlo_executes_like_python():
+    """Round-trip one model through HLO text -> jax runtime and compare."""
+    from compile.models.classifier import make_classifier
+    from compile import weights as W
+
+    cls = make_classifier()
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, C.FEAT_DIM)).astype(np.float32)
+    wl = W.classifier_last_layer()
+    lowered = jax.jit(cls).lower(
+        jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        jax.ShapeDtypeStruct(wl.shape, jnp.float32),
+    )
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    direct = cls(jnp.asarray(x), jnp.asarray(wl))
+    compiled = lowered.compile()
+    via_aot = compiled(jnp.asarray(x), jnp.asarray(wl))
+    for a, b in zip(jax.tree_util.tree_leaves(direct), jax.tree_util.tree_leaves(via_aot)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_constants_file_present_when_built():
+    path = os.path.join(ARTIFACTS, "constants.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    lines = open(path).read().splitlines()
+    kinds = {ln.split()[0] for ln in lines}
+    assert kinds == {"scalar", "tensor"}

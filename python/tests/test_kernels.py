@@ -1,0 +1,138 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (batch, anchors, dims) and value regimes; every
+kernel must be allclose to its ref. This is the core L1 correctness signal.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.detector_kernel import detector_kernel
+from compile.kernels.classifier_kernel import classifier_kernel
+from compile.kernels.il_update_kernel import il_update_kernel
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ------------------------------------------------------------- detector
+@given(
+    b=st.integers(1, 4),
+    a_tiles=st.integers(1, 4),
+    ta=st.sampled_from([8, 16, 64]),
+    d=st.sampled_from([8, 24]),
+    h=st.sampled_from([4, 16]),
+    k=st.sampled_from([3, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_detector_kernel_matches_ref(b, a_tiles, ta, d, h, k, seed):
+    rng = _rng(seed)
+    a = a_tiles * ta
+    x = rng.standard_normal((b, a, d)).astype(np.float32)
+    we = rng.standard_normal((d, h)).astype(np.float32)
+    wo = rng.standard_normal((h, 1)).astype(np.float32)
+    wc = rng.standard_normal((h, k)).astype(np.float32)
+    obj_k, cls_k = detector_kernel(
+        jnp.asarray(x), jnp.asarray(we), jnp.asarray(wo), jnp.asarray(wc),
+        anchor_tile=ta,
+    )
+    obj_r, cls_r = ref.detector_ref(x, we, wo, wc)
+    np.testing.assert_allclose(np.asarray(obj_k), np.asarray(obj_r), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cls_k), np.asarray(cls_r), rtol=1e-5, atol=1e-5)
+
+
+def test_detector_kernel_rejects_ragged_grid():
+    x = jnp.zeros((1, 60, 8))
+    w = jnp.zeros((8, 4))
+    with pytest.raises(AssertionError):
+        detector_kernel(x, w, jnp.zeros((4, 1)), jnp.zeros((4, 3)), anchor_tile=16)
+
+
+# ----------------------------------------------------------- classifier
+@given(
+    b_tiles=st.integers(1, 4),
+    tb=st.sampled_from([1, 2, 8]),
+    d=st.sampled_from([8, 24]),
+    h=st.sampled_from([16, 48]),
+    k=st.sampled_from([2, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_classifier_kernel_matches_ref(b_tiles, tb, d, h, k, seed):
+    rng = _rng(seed)
+    b = b_tiles * tb
+    x = rng.standard_normal((b, d)).astype(np.float32)
+    wb = rng.standard_normal((d, h)).astype(np.float32)
+    wl = rng.standard_normal((h + 1, k)).astype(np.float32)
+    s_k, f_k = classifier_kernel(
+        jnp.asarray(x), jnp.asarray(wb), jnp.asarray(wl), batch_tile=tb
+    )
+    s_r, f_r = ref.classifier_ref(x, wb, wl)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_r), rtol=1e-5, atol=1e-5)
+
+
+def test_classifier_bias_feature_is_one():
+    x = np.zeros((4, 24), np.float32)
+    wb = np.zeros((24, 48), np.float32)
+    wl = np.zeros((49, 8), np.float32)
+    _, feats = classifier_kernel(jnp.asarray(x), jnp.asarray(wb), jnp.asarray(wl))
+    np.testing.assert_array_equal(np.asarray(feats[:, -1]), np.ones(4, np.float32))
+
+
+# -------------------------------------------------------------- IL step
+@given(
+    b=st.sampled_from([4, 16]),
+    hf=st.sampled_from([9, 49]),
+    k=st.sampled_from([2, 8]),
+    lr=st.floats(0.01, 1.0),
+    n_masked=st.integers(0, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_il_update_matches_ref(b, hf, k, lr, n_masked, seed):
+    rng = _rng(seed)
+    w = rng.standard_normal((hf, k)).astype(np.float32)
+    feats = rng.standard_normal((b, hf)).astype(np.float32)
+    labels = np.eye(k, dtype=np.float32)[rng.integers(0, k, b)]
+    mask = np.ones(b, np.float32)
+    mask[: min(n_masked, b)] = 0.0
+    w_k = il_update_kernel(
+        jnp.asarray(w), jnp.asarray(feats), jnp.asarray(labels),
+        jnp.asarray(mask), lr=float(lr),
+    )
+    w_r = ref.il_update_ref(w, feats, labels, mask, float(lr))
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r), rtol=1e-4, atol=1e-5)
+
+
+def test_il_update_masked_batch_is_noop():
+    rng = _rng(3)
+    w = rng.standard_normal((49, 8)).astype(np.float32)
+    feats = rng.standard_normal((16, 49)).astype(np.float32)
+    labels = np.eye(8, dtype=np.float32)[rng.integers(0, 8, 16)]
+    w2 = il_update_kernel(
+        jnp.asarray(w), jnp.asarray(feats), jnp.asarray(labels),
+        jnp.zeros(16, jnp.float32), lr=0.5,
+    )
+    np.testing.assert_allclose(np.asarray(w2), w, rtol=0, atol=0)
+
+
+def test_il_update_moves_toward_labels():
+    """One step must raise the correct-class score on the training points."""
+    rng = _rng(4)
+    w = np.zeros((49, 8), np.float32)
+    feats = rng.standard_normal((16, 49)).astype(np.float32)
+    labels = np.eye(8, dtype=np.float32)[rng.integers(0, 8, 16)]
+    mask = np.ones(16, np.float32)
+    w2 = np.asarray(il_update_kernel(
+        jnp.asarray(w), jnp.asarray(feats), jnp.asarray(labels),
+        jnp.asarray(mask), lr=0.1,
+    ))
+    before = (feats @ w * labels).sum()
+    after = (feats @ w2 * labels).sum()
+    assert after > before

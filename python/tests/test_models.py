@@ -1,0 +1,255 @@
+"""L2 model semantics: the paper's key observations must hold by construction.
+
+These tests render frames exactly the way the Rust simulator does (same
+constants, same signature bank) and assert the behaviours every experiment
+relies on: localization survives low quality (Key Obs 2), classification
+does not, fog crops recover labels (Key Obs 1/5), drift degrades stale
+models and Eq. (8) IL re-tracks them, SR recovers moderate degradation.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import constants as C
+from compile import weights as W
+from compile.models.detector import make_detector
+from compile.models.classifier import make_classifier
+from compile.models.il import (
+    make_il_step,
+    ensemble_predict_ref,
+    ensemble_weights_ref,
+)
+from compile.models.sr import make_sr
+
+
+def alpha(r, q):
+    return r**C.ALPHA_R_EXP * 2.0 ** (-(q - C.Q0) / C.ALPHA_Q_DIV)
+
+
+def mix(r, q):
+    return min(C.M_BASE + C.M_R * (1 - r) + C.M_Q * (q - C.Q0), C.M_MAX)
+
+
+def render(rng, objects, r, q, t=0.0, grid=C.GRID):
+    """objects: list of (class, cell_indices). Returns [1, A, D] frame."""
+    bank = W.drifted_bank(t)
+    x = (C.CLUTTER * rng.standard_normal((grid * grid, C.FEAT_DIM))).astype(
+        np.float32
+    )
+    a, eps = alpha(r, q), C.EPS_BASE + C.EPS_Q * (q - C.Q0)
+    for cls, cells in objects:
+        m = np.clip(mix(r, q) + rng.uniform(-C.M_JITTER, C.M_JITTER), 0, C.M_MAX)
+        conf = (cls + 1 + rng.integers(0, C.NUM_CLASSES - 1)) % C.NUM_CLASSES
+        for cell in cells:
+            n = rng.standard_normal(C.FEAT_DIM).astype(np.float32)
+            x[cell] += a * ((1 - m) * bank[cls] + m * bank[conf] + eps * n)
+    return x[None, :, :]
+
+
+HIGH = (1.0, 20)    # original quality (MPEG reference)
+LOW = (0.8, 36)     # VPaaS/DDS first-round setting (§VI-B)
+
+
+@pytest.fixture(scope="module")
+def det():
+    return make_detector(False)
+
+
+@pytest.fixture(scope="module")
+def cls():
+    return make_classifier()
+
+
+def _run_det(det, frame):
+    loc, cp, en = det(jnp.asarray(frame))
+    return np.asarray(loc[0]), np.asarray(cp[0]), np.asarray(en[0])
+
+
+def test_key_obs_2_localization_survives_low_quality(det):
+    """Low quality: object cells still localize; clutter does not."""
+    rng = np.random.default_rng(0)
+    hits = 0
+    for trial in range(20):
+        cells = [17 * trial % 200 + i for i in range(2)]
+        frame = render(rng, [(trial % 8, cells)], *LOW)
+        loc, _, _ = _run_det(det, frame)
+        if all(loc[c] > 0.5 for c in cells):
+            hits += 1
+        clutter = np.delete(loc, cells)
+        assert np.mean(clutter > 0.5) < 0.02
+    assert hits >= 18
+
+
+def test_key_obs_2_classification_collapses_at_low_quality(det):
+    """Class margin: confident at HIGH; a large uncertain tail at LOW.
+
+    The §VI-B operating point is tuned so that a sizable fraction of
+    low-quality regions falls below θ_cls — those are exactly the regions
+    the protocol routes to the fog.
+    """
+    rng = np.random.default_rng(1)
+    conf_hi, conf_lo = [], []
+    for trial in range(60):
+        objs = [(trial % 8, [100])]
+        _, cp_h, _ = _run_det(det, render(rng, objs, *HIGH))
+        _, cp_l, _ = _run_det(det, render(rng, objs, *LOW))
+        conf_hi.append(cp_h[100].max())
+        conf_lo.append(cp_l[100].max())
+    assert np.mean(conf_hi) > 0.9
+    assert np.mean(conf_lo) < np.mean(conf_hi) - 0.05
+    uncertain_hi = np.mean(np.array(conf_hi) < 0.70)
+    uncertain_lo = np.mean(np.array(conf_lo) < 0.70)
+    assert uncertain_lo > 0.08, f"too few uncertain at LOW: {uncertain_lo}"
+    assert uncertain_lo > 2.0 * max(uncertain_hi, 0.02)
+
+
+def test_key_obs_1_fog_classifier_recovers_from_high_quality_crop(cls):
+    """Uncertain-at-cloud regions are correctly labeled from HQ crops."""
+    rng = np.random.default_rng(2)
+    wl = jnp.asarray(W.classifier_last_layer())
+    bank = W.signature_bank()
+    ok = 0
+    n = 64
+    for i in range(n):
+        c = i % C.NUM_CLASSES
+        eps = C.EPS_BASE
+        m = mix(*HIGH) + rng.uniform(0, C.M_JITTER)
+        conf = (c + 3) % C.NUM_CLASSES
+        crop = (1 - m) * bank[c] + m * bank[conf] + eps * rng.standard_normal(
+            C.FEAT_DIM
+        )
+        prob, _ = cls(jnp.asarray(crop.astype(np.float32))[None, :], wl)
+        ok += int(np.argmax(np.asarray(prob[0])) == c)
+    assert ok / n > 0.9
+
+
+def test_lite_detector_is_worse_than_full():
+    """Fallback (YOLOv3 stand-in) localizes but misclassifies more."""
+    rng = np.random.default_rng(3)
+    full, lite = make_detector(False), make_detector(True)
+    acc_f = acc_l = loc_l = 0
+    n = 40
+    for i in range(n):
+        c = i % 8
+        frame = render(rng, [(c, [50])], *HIGH)
+        _, cp_f, _ = _run_det(full, frame)
+        loc, cp_l, _ = _run_det(lite, frame)
+        acc_f += int(np.argmax(cp_f[50]) == c)
+        acc_l += int(np.argmax(cp_l[50]) == c)
+        loc_l += int(loc[50] > 0.5)
+    assert acc_f > acc_l, (acc_f, acc_l)
+    assert acc_f / n > 0.9
+    assert acc_l / n > 0.4       # degraded but usable (Fig. 15)
+    assert loc_l / n > 0.9       # localization power retained
+
+
+def test_drift_degrades_stale_fog_classifier(cls):
+    rng = np.random.default_rng(4)
+    wl = jnp.asarray(W.classifier_last_layer())
+    bank_now = W.drifted_bank(C.DRIFT_MAX / C.DRIFT_RATE)  # saturated drift
+
+    def acc(bank):
+        ok = 0
+        for i in range(48):
+            c = i % 8
+            crop = bank[c] + 0.05 * rng.standard_normal(C.FEAT_DIM)
+            p, _ = cls(jnp.asarray(crop.astype(np.float32))[None, :], wl)
+            ok += int(np.argmax(np.asarray(p[0])) == c)
+        return ok / 48
+
+    fresh, stale = acc(W.signature_bank()), acc(bank_now)
+    assert fresh > 0.9
+    # Margin shrinks; one-vs-all *probabilities* must reflect it.
+    probs = []
+    for c in range(8):
+        p, _ = cls(jnp.asarray(bank_now[c].astype(np.float32))[None, :], wl)
+        probs.append(float(np.max(np.asarray(p[0]))))
+    assert np.mean(probs) < 0.8  # vs ~0.88 fresh
+
+
+def test_il_retracks_drift(cls):
+    """Eq. (8) last-layer updates on drifted labeled crops restore margins."""
+    rng = np.random.default_rng(5)
+    il = make_il_step()
+    wl = jnp.asarray(W.classifier_last_layer())
+    bank = W.drifted_bank(C.DRIFT_MAX / C.DRIFT_RATE)
+
+    def margin(w):
+        vals = []
+        for c in range(8):
+            crop = bank[c] + 0.05 * rng.standard_normal(C.FEAT_DIM)
+            p, _ = cls(jnp.asarray(crop.astype(np.float32))[None, :], w)
+            p = np.asarray(p[0])
+            vals.append(p[c] - np.max(np.delete(p, c)))
+        return float(np.mean(vals))
+
+    m0 = margin(wl)
+    w = wl
+    for step in range(12):
+        feats, labels = [], []
+        for i in range(C.IL_BATCH):
+            c = (step * C.IL_BATCH + i) % 8
+            crop = bank[c] + 0.05 * rng.standard_normal(C.FEAT_DIM)
+            _, f = cls(jnp.asarray(crop.astype(np.float32))[None, :], w)
+            feats.append(np.asarray(f[0]))
+            y = np.zeros(8, np.float32)
+            y[c] = 1
+            labels.append(y)
+        w = il(
+            w,
+            jnp.asarray(np.stack(feats)),
+            jnp.asarray(np.stack(labels)),
+            jnp.ones(C.IL_BATCH, jnp.float32),
+        )
+    m1 = margin(w)
+    assert m1 > m0 + 0.1, (m0, m1)
+
+
+def test_sr_recovers_moderate_degradation(det):
+    """CloudSeg path: SR raises class confidence on moderately-mixed cells."""
+    rng = np.random.default_rng(6)
+    sr = make_sr()
+    bank = W.signature_bank()
+    gains = []
+    for i in range(24):
+        c = i % 8
+        conf = (c + 2) % 8
+        m = 0.40
+        x = (C.CLUTTER * rng.standard_normal((1, C.ANCHORS, C.FEAT_DIM))).astype(
+            np.float32
+        )
+        x[0, 80] += 0.5 * ((1 - m) * bank[c] + m * bank[conf])
+        _, cp0, _ = _run_det(det, x)
+        _, cp1, _ = _run_det(det, np.asarray(sr(jnp.asarray(x))))
+        gains.append(cp1[80, c] - cp0[80, c])
+    assert np.mean(gains) > 0.1
+
+
+def test_ensemble_weights_prefer_better_snapshot():
+    """Eq. (9): the ridge solve upweights the snapshot that predicts y."""
+    rng = np.random.default_rng(7)
+    n, t = 64, 3
+    good = rng.standard_normal(n).astype(np.float32)
+    z = np.stack(
+        [0.05 * rng.standard_normal(n), good, 0.3 * rng.standard_normal(n)],
+        axis=1,
+    ).astype(np.float32)
+    y = good
+    om = np.asarray(ensemble_weights_ref(jnp.asarray(z), jnp.asarray(y)))
+    assert np.argmax(np.abs(om)) == 1
+    # and the combination predicts better than the worst snapshot
+    pred = z @ om
+    assert np.mean((pred - y) ** 2) < np.mean((z[:, 0] - y) ** 2)
+
+
+def test_ensemble_predict_matches_manual():
+    rng = np.random.default_rng(8)
+    w_stack = rng.standard_normal((3, C.CLS_FEAT, C.NUM_CLASSES)).astype(np.float32)
+    feats = rng.standard_normal((5, C.CLS_FEAT)).astype(np.float32)
+    om = rng.standard_normal(3).astype(np.float32)
+    out = np.asarray(
+        ensemble_predict_ref(jnp.asarray(w_stack), jnp.asarray(feats), jnp.asarray(om))
+    )
+    manual = sum(om[i] * feats @ w_stack[i] for i in range(3))
+    np.testing.assert_allclose(out, manual, rtol=1e-4, atol=1e-5)

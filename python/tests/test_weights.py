@@ -1,0 +1,86 @@
+"""Weight synthesis invariants: determinism, orthonormality, drift geometry."""
+
+import numpy as np
+
+from compile import constants as C
+from compile import weights as W
+
+
+def test_signature_bank_orthonormal():
+    s = W.signature_bank()
+    gram = s @ s.T
+    np.testing.assert_allclose(gram, np.eye(C.NUM_CLASSES), atol=1e-5)
+
+
+def test_signature_bank_deterministic():
+    np.testing.assert_array_equal(W.signature_bank(), W.signature_bank())
+
+
+def test_drift_perm_is_fixed_point_free():
+    perm = W.drift_perm()
+    assert sorted(perm) == list(range(C.NUM_CLASSES))
+    assert all(perm[k] != k for k in range(C.NUM_CLASSES))
+
+
+def test_drifted_bank_preserves_norms():
+    """Pairwise rotation within the orthonormal bank keeps unit rows."""
+    for t in (0.0, 50.0, 400.0):
+        b = W.drifted_bank(t)
+        np.testing.assert_allclose(
+            np.linalg.norm(b, axis=1), np.ones(C.NUM_CLASSES), atol=1e-5
+        )
+
+
+def test_drift_saturates():
+    a = W.drifted_bank(C.DRIFT_MAX / C.DRIFT_RATE)
+    b = W.drifted_bank(10 * C.DRIFT_MAX / C.DRIFT_RATE)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_detector_embed_is_signature_pairs():
+    s = W.signature_bank()
+    d = W.detector_weights(lite=False)
+    for k in range(C.NUM_CLASSES):
+        np.testing.assert_allclose(d["w_embed"][:, 2 * k], s[k], atol=1e-6)
+        np.testing.assert_allclose(d["w_embed"][:, 2 * k + 1], -s[k], atol=1e-6)
+
+
+def test_lite_detector_differs_from_full():
+    full = W.detector_weights(lite=False)
+    lite = W.detector_weights(lite=True)
+    # localization head identical (full power), class head entangled
+    np.testing.assert_allclose(full["w_obj"], lite["w_obj"])
+    assert np.abs(full["w_cls"] - lite["w_cls"]).max() > 0.3
+
+
+def test_classifier_backbone_spans_signatures():
+    """Every signature is exactly recoverable from the first 2K features."""
+    s = W.signature_bank()
+    wb = W.classifier_backbone()
+    for k in range(C.NUM_CLASSES):
+        h = np.maximum(s[k] @ wb, 0.0)
+        assert abs((h[2 * k] - h[2 * k + 1]) - 1.0) < 1e-5
+
+
+def test_export_constants_roundtrip(tmp_path):
+    path = tmp_path / "constants.txt"
+    W.export_constants(str(path))
+    scalars, tensors = {}, {}
+    for line in path.read_text().splitlines():
+        parts = line.split()
+        if parts[0] == "scalar":
+            scalars[parts[1]] = float(parts[2])
+        elif parts[0] == "tensor":
+            dims = [int(d) for d in parts[2].split("x")]
+            vals = np.array([float(v) for v in parts[3:]], np.float32)
+            tensors[parts[1]] = vals.reshape(dims)
+    assert scalars["grid"] == C.GRID
+    assert scalars["num_classes"] == C.NUM_CLASSES
+    assert scalars["drift_rate"] == C.DRIFT_RATE
+    np.testing.assert_allclose(
+        tensors["signatures"], W.signature_bank(), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        tensors["cls_last"], W.classifier_last_layer(), rtol=1e-5, atol=1e-6
+    )
+    assert tensors["cls_backbone"].shape == (C.FEAT_DIM, C.CLS_HIDDEN)

@@ -1,0 +1,57 @@
+//! Shared support for the custom bench harness (criterion is not vendored
+//! in this environment — see DESIGN.md §Installed-tooling substitutions).
+//!
+//! Each bench binary regenerates its paper figure/table (correctness
+//! artifact) and then times the figure's core loop with warmup + repeated
+//! iterations, reporting mean/p50/p99 wall time.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub samples_ms: Vec<f64>,
+}
+
+impl BenchResult {
+    fn pct(&self, p: f64) -> f64 {
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0 * (s.len() - 1) as f64).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn report(&self) {
+        let mean = self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64;
+        println!(
+            "bench {:<28} iters={:<3} mean={:>9.2}ms p50={:>9.2}ms p99={:>9.2}ms",
+            self.name,
+            self.iters,
+            mean,
+            self.pct(50.0),
+            self.pct(99.0)
+        );
+    }
+}
+
+/// Time `f` with one warmup call and `iters` measured calls.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let r = BenchResult { name: name.to_string(), iters, samples_ms: samples };
+    r.report();
+    r
+}
+
+/// Scale for bench-time dataset runs (keeps `cargo bench` minutes-scale).
+pub fn bench_scale() -> f64 {
+    std::env::var("VPAAS_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.02)
+}

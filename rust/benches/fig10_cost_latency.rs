@@ -1,0 +1,29 @@
+//! Bench: Fig. 10 — normalized cloud cost + freshness latency percentiles.
+#[path = "bench_support.rs"]
+mod bench_support;
+use bench_support::{bench, bench_scale};
+use vpaas::pipeline::{figures, Harness, RunConfig, SystemKind};
+use vpaas::sim::video::datasets;
+
+fn main() {
+    let h = Harness::new().expect("artifacts");
+    let cfg = RunConfig { golden: false, ..RunConfig::default() };
+    let runs = figures::macro_runs(&h, bench_scale(), &cfg).unwrap();
+    println!("{}", figures::fig10(&runs));
+    for (ds, metrics) in &runs {
+        let get = |name: &str| metrics.iter().find(|m| m.system == name).unwrap();
+        let mpeg = get("mpeg");
+        assert!(
+            get("cloudseg").normalized_cost(&mpeg.cost) > 1.8,
+            "{ds}: cloudseg must ~double cloud cost"
+        );
+        assert!(
+            get("vpaas").latency.summary().p50 < get("dds").latency.summary().p50,
+            "{ds}: vpaas must beat dds latency"
+        );
+    }
+    let ds = datasets::traffic(bench_scale());
+    bench("fig10/dds_traffic_end_to_end", 5, || {
+        h.run(SystemKind::Dds, &ds, &cfg).unwrap();
+    });
+}

@@ -1,0 +1,25 @@
+//! Bench: Fig. 11 — latency stability across WAN bandwidths {10,15,20} Mbps.
+#[path = "bench_support.rs"]
+mod bench_support;
+use bench_support::{bench, bench_scale};
+use vpaas::pipeline::{figures, Harness, RunConfig, SystemKind};
+use vpaas::sim::video::datasets;
+
+fn main() {
+    let h = Harness::new().expect("artifacts");
+    let cfg = RunConfig { golden: false, ..RunConfig::default() };
+    println!("{}", figures::fig11(&h, bench_scale(), &cfg).unwrap());
+    // robustness claim: vpaas p50 at 10 Mbps within 2x of p50 at 20 Mbps
+    let ds = datasets::traffic(bench_scale());
+    let p50 = |wan: f64| {
+        let m = h
+            .run(SystemKind::Vpaas, &ds, &RunConfig { wan_mbps: wan, ..cfg.clone() })
+            .unwrap();
+        m.latency.summary().p50
+    };
+    let (slow, fast) = (p50(10.0), p50(20.0));
+    assert!(slow < 2.0 * fast, "vpaas not robust to bandwidth: {slow} vs {fast}");
+    bench("fig11/vpaas_at_10mbps", 3, || {
+        p50(10.0);
+    });
+}

@@ -1,0 +1,14 @@
+//! Bench: Fig. 12 — per-video bandwidth (VPaaS normalized to DDS).
+#[path = "bench_support.rs"]
+mod bench_support;
+use bench_support::{bench, bench_scale};
+use vpaas::pipeline::{figures, Harness, RunConfig};
+
+fn main() {
+    let h = Harness::new().expect("artifacts");
+    let cfg = RunConfig { golden: false, ..RunConfig::default() };
+    println!("{}", figures::fig12(&h, bench_scale(), &cfg).unwrap());
+    bench("fig12/regenerate", 3, || {
+        figures::fig12(&h, bench_scale(), &cfg).unwrap();
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench: Fig. 13 — HITL budget vs accuracy (13a) and training overhead (13b).
+#[path = "bench_support.rs"]
+mod bench_support;
+use bench_support::{bench, bench_scale};
+use vpaas::pipeline::{figures, Harness, RunConfig, SystemKind};
+use vpaas::sim::video::datasets;
+
+fn main() {
+    let h = Harness::new().expect("artifacts");
+    let cfg = RunConfig::default();
+    println!("{}", figures::fig13a(&h, bench_scale(), &cfg).unwrap());
+    println!("{}", figures::fig13b(&h, bench_scale(), &cfg).unwrap());
+    // the headline: IL must beat the no-HITL ablation under drift
+    let ds = datasets::traffic(bench_scale());
+    let drift = RunConfig { drift: true, drift_scale: 12.0, golden: false, hitl_budget: 0.4, ..cfg };
+    let with = h.run(SystemKind::Vpaas, &ds, &drift).unwrap();
+    let without = h.run(SystemKind::VpaasNoHitl, &ds, &drift).unwrap();
+    assert!(
+        with.f1_true.f1() >= without.f1_true.f1(),
+        "HITL made accuracy worse: {} vs {}",
+        with.f1_true.f1(),
+        without.f1_true.f1()
+    );
+    bench("fig13/vpaas_hitl_run", 3, || {
+        h.run(SystemKind::Vpaas, &ds, &drift).unwrap();
+    });
+}

@@ -1,0 +1,17 @@
+//! Bench: Fig. 15 — cloud outage at t=25 s; fog fallback keeps serving.
+#[path = "bench_support.rs"]
+mod bench_support;
+use bench_support::bench;
+use vpaas::pipeline::{figures, Harness, RunConfig};
+
+fn main() {
+    let h = Harness::new().expect("artifacts");
+    let cfg = RunConfig { golden: false, ..RunConfig::default() };
+    let (text, trace) = figures::fig15(&h, &cfg).unwrap();
+    println!("{text}");
+    assert!(trace.rows.iter().any(|r| r.3), "no fallback window");
+    assert!(!trace.rows.last().unwrap().3, "no recovery");
+    bench("fig15/outage_timeline", 3, || {
+        figures::fig15(&h, &cfg).unwrap();
+    });
+}

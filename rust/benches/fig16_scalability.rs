@@ -1,0 +1,16 @@
+//! Bench: Fig. 16 — autoscaling under a camera-fleet ramp.
+#[path = "bench_support.rs"]
+mod bench_support;
+use bench_support::bench;
+use vpaas::pipeline::{figures, Harness, RunConfig};
+
+fn main() {
+    let h = Harness::new().expect("artifacts");
+    let cfg = RunConfig { golden: false, ..RunConfig::default() };
+    let text = figures::fig16(&h, &cfg).unwrap();
+    println!("{text}");
+    assert!(text.contains("gpus"), "missing provisioning history");
+    bench("fig16/fleet_ramp", 3, || {
+        figures::fig16(&h, &cfg).unwrap();
+    });
+}

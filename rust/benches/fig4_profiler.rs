@@ -1,0 +1,17 @@
+//! Bench: Fig. 4 — device QC/inference profile + real PJRT model profiling.
+#[path = "bench_support.rs"]
+mod bench_support;
+use bench_support::bench;
+use vpaas::pipeline::{figures, Harness};
+use vpaas::zoo::Profiler;
+
+fn main() {
+    let h = Harness::new().expect("artifacts");
+    println!("{}", figures::fig4(&h).unwrap());
+    let p = h.params.clone();
+    let prof = Profiler::new(h.handle());
+    bench("fig4/profile_detector_buckets", 5, || {
+        prof.profile_model("detector", &[1, 4, 16], |b| vec![vec![b, p.anchors, p.feat_dim]])
+            .unwrap();
+    });
+}

@@ -1,0 +1,14 @@
+//! Bench: Fig. 5 — detector output on high vs low quality video.
+#[path = "bench_support.rs"]
+mod bench_support;
+use bench_support::bench;
+use vpaas::pipeline::{figures, Harness};
+
+fn main() {
+    let h = Harness::new().expect("artifacts");
+    println!("{}", figures::fig5(&h).unwrap());
+    println!("{}", figures::quality_operating_points(&h));
+    bench("fig5/regenerate", 3, || {
+        figures::fig5(&h).unwrap();
+    });
+}

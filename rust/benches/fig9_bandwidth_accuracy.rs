@@ -1,0 +1,26 @@
+//! Bench: Fig. 9 — normalized bandwidth + F1, all systems x all datasets.
+#[path = "bench_support.rs"]
+mod bench_support;
+use bench_support::{bench, bench_scale};
+use vpaas::pipeline::{figures, Harness, RunConfig, SystemKind};
+use vpaas::sim::video::datasets;
+
+fn main() {
+    let h = Harness::new().expect("artifacts");
+    let cfg = RunConfig::default();
+    let runs = figures::macro_runs(&h, bench_scale(), &cfg).unwrap();
+    println!("{}", figures::fig9(&runs));
+    // sanity: the paper's ordering must hold on every dataset
+    for (ds, metrics) in &runs {
+        let f1 = |name: &str| metrics.iter().find(|m| m.system == name).unwrap().f1_true.f1();
+        let bw = |name: &str| metrics.iter().find(|m| m.system == name).unwrap().bandwidth.bytes;
+        assert!(bw("vpaas") < bw("mpeg") * 0.5, "{ds}: vpaas must save vs mpeg");
+        assert!(bw("vpaas") <= bw("dds") * 1.001, "{ds}: vpaas <= dds bandwidth");
+        assert!(f1("vpaas") > f1("glimpse") - 0.02, "{ds}: vpaas vs glimpse accuracy");
+    }
+    let ds = datasets::drone(bench_scale());
+    let quick = RunConfig { golden: false, ..RunConfig::default() };
+    bench("fig9/vpaas_drone_end_to_end", 5, || {
+        h.run(SystemKind::Vpaas, &ds, &quick).unwrap();
+    });
+}

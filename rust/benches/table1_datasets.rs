@@ -1,0 +1,22 @@
+//! Bench: Table I — dataset generation throughput + spec regeneration.
+#[path = "bench_support.rs"]
+mod bench_support;
+use bench_support::{bench, bench_scale};
+use vpaas::pipeline::figures;
+use vpaas::sim::params::SimParams;
+use vpaas::sim::video::datasets;
+
+fn main() {
+    println!("{}", figures::table1(1.0));
+    let p = SimParams::load().expect("run `make artifacts`");
+    bench("table1/generate_drone_chunks", 5, || {
+        let mut videos = datasets::drone(bench_scale()).make_videos(&p);
+        let mut total = 0usize;
+        for v in videos.iter_mut().take(4) {
+            while let Some(c) = v.next_chunk() {
+                total += c.total_objects();
+            }
+        }
+        assert!(total > 0);
+    });
+}

@@ -1,0 +1,79 @@
+//! CloudSeg baseline (Wang et al., HotCloud'19): the client downscales
+//! aggressively (RS 0.35, QP 20 — §VI-B) and the cloud recovers the frames
+//! with a super-resolution model before detection.
+//!
+//! Every frame bills BOTH the SR model and the detector — the "cost is
+//! doubled" observation of Fig. 10a.
+
+use anyhow::Result;
+
+use crate::baselines::BaselineOutcome;
+use crate::cloud::CloudServer;
+use crate::metrics::meters::RunMetrics;
+use crate::protocol::post::regions_from_heads;
+use crate::sim::device::CLIENT;
+use crate::sim::net::Topology;
+use crate::sim::params::SimParams;
+use crate::sim::video::{codec, render_frame, Chunk, Quality};
+
+pub struct CloudSeg {
+    pub down: Quality,
+    pub theta_loc: f64,
+    client_free: f64,
+}
+
+impl Default for CloudSeg {
+    fn default() -> Self {
+        CloudSeg { down: Quality::CLOUDSEG_DOWN, theta_loc: 0.5, client_free: 0.0 }
+    }
+}
+
+impl CloudSeg {
+    #[allow(clippy::too_many_arguments)]
+    pub fn process_chunk(
+        &mut self,
+        chunk: &Chunk,
+        phi: f64,
+        t_offset: f64,
+        p: &SimParams,
+        topo: &mut Topology,
+        cloud: &mut CloudServer,
+        metrics: &mut RunMetrics,
+    ) -> Result<BaselineOutcome> {
+        let n = chunk.frames.len();
+        let captured = t_offset + chunk.t_capture + chunk.duration();
+
+        // Client-side downscale (weak CPU).
+        let qc_start = captured.max(self.client_free);
+        let qc_done = qc_start + CLIENT.quality_control_s(n);
+        self.client_free = qc_done;
+
+        let bytes = n as f64 * codec::frame_bytes(self.down, p);
+        let at_cloud = topo
+            .wan_up
+            .transfer(bytes, qc_done)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        metrics.bandwidth.add(bytes);
+
+        // Cloud: SR recovery, then detection on the recovered frames.
+        let down_frames: Vec<_> = chunk
+            .frames
+            .iter()
+            .map(|f| render_frame(f, self.down, phi, p))
+            .collect();
+        let (recovered, sr_t) = cloud.sr_chunk(&down_frames, at_cloud)?;
+        let (heads, det_t) = cloud.detect_chunk(&recovered, sr_t.done, "detector")?;
+        let per_frame = heads
+            .iter()
+            .map(|h| regions_from_heads(&h.as_heads(), self.theta_loc))
+            .collect();
+
+        for i in 0..n {
+            metrics
+                .latency
+                .record(det_t.done - (t_offset + chunk.frame_time(i)));
+        }
+        metrics.chunks += 1;
+        Ok(BaselineOutcome { per_frame, done: det_t.done })
+    }
+}

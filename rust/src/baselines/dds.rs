@@ -1,0 +1,152 @@
+//! DDS baseline (Du et al., SIGCOMM'20): server-driven two-round streaming.
+//!
+//! Round 1: the **client** re-encodes to LOW (on its weak CPU — the paper's
+//! latency argument) and ships to the cloud; the heavy detector runs; the
+//! same θ filter extracts uncertain regions. Round 2: the client re-encodes
+//! those regions at HIGH_ROUND2 quality and ships them; the cloud re-runs
+//! the detector on the high-quality re-send and merges the labels.
+//!
+//! Costs: ≥1 detector invocation per frame plus one more per frame that
+//! needs round 2 (Fig. 10a), extra WAN bytes for region re-sends (Fig. 9),
+//! and an extra WAN round trip (Fig. 10b).
+
+use anyhow::Result;
+
+use crate::baselines::BaselineOutcome;
+use crate::cloud::CloudServer;
+use crate::metrics::f1::PredBox;
+use crate::metrics::meters::RunMetrics;
+use crate::protocol::post::regions_from_heads;
+use crate::protocol::{split_regions, FilterConfig};
+use crate::sim::device::CLIENT;
+use crate::sim::net::Topology;
+use crate::sim::params::SimParams;
+use crate::sim::video::{codec, render_frame, Chunk, Quality};
+
+pub struct Dds {
+    pub low: Quality,
+    pub round2: Quality,
+    pub theta_cls: f64,
+    pub filter: FilterConfig,
+    /// Client CPU horizon (QC runs on the client in DDS).
+    client_free: f64,
+}
+
+impl Default for Dds {
+    fn default() -> Self {
+        Dds {
+            low: Quality::LOW,
+            round2: Quality::HIGH_ROUND2,
+            theta_cls: 0.70,
+            filter: FilterConfig::default(),
+            client_free: 0.0,
+        }
+    }
+}
+
+impl Dds {
+    #[allow(clippy::too_many_arguments)]
+    pub fn process_chunk(
+        &mut self,
+        chunk: &Chunk,
+        phi: f64,
+        t_offset: f64,
+        p: &SimParams,
+        topo: &mut Topology,
+        cloud: &mut CloudServer,
+        metrics: &mut RunMetrics,
+    ) -> Result<BaselineOutcome> {
+        let n = chunk.frames.len();
+        let captured = t_offset + chunk.t_capture + chunk.duration();
+
+        // Round 1: client-side QC (slow RPi) then LOW over the WAN.
+        let qc_start = captured.max(self.client_free);
+        let qc_done = qc_start + CLIENT.quality_control_s(n);
+        self.client_free = qc_done;
+        let low_bytes = n as f64 * codec::frame_bytes(self.low, p);
+        let at_cloud = topo
+            .wan_up
+            .transfer(low_bytes, qc_done)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        metrics.bandwidth.add(low_bytes);
+
+        let low_frames: Vec<_> = chunk
+            .frames
+            .iter()
+            .map(|f| render_frame(f, self.low, phi, p))
+            .collect();
+        let (heads, t1) = cloud.detect_chunk(&low_frames, at_cloud, "detector")?;
+
+        let mut per_frame: Vec<Vec<PredBox>> = Vec::with_capacity(n);
+        let mut round2_frames: Vec<usize> = Vec::new();
+        let mut round2_area = 0.0f64;
+        let mut uncertain_per_frame: Vec<Vec<PredBox>> = vec![Vec::new(); n];
+        for (fi, h) in heads.iter().enumerate() {
+            let regions = regions_from_heads(&h.as_heads(), self.filter.theta_loc);
+            let (confident, uncertain) =
+                split_regions(&regions, self.theta_cls, &self.filter, p.grid);
+            per_frame.push(confident);
+            if !uncertain.is_empty() {
+                round2_frames.push(fi);
+                for r in &uncertain {
+                    round2_area += r.rect.area() as f64 / (p.grid * p.grid) as f64;
+                }
+                uncertain_per_frame[fi] = uncertain;
+            }
+        }
+
+        // Feedback: labels + region coordinates back to the client (same
+        // accounting as VPaaS's coordinate feedback).
+        let n_regions: usize = per_frame.iter().map(Vec::len).sum::<usize>()
+            + uncertain_per_frame.iter().map(Vec::len).sum::<usize>();
+        let fb = codec::feedback_bytes(n_regions);
+        let at_client = topo
+            .wan_down
+            .transfer(fb, t1.done)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        metrics.bandwidth.add(fb);
+
+        let mut done = t1.done;
+        if !round2_frames.is_empty() {
+            // Client re-encodes the regions (client CPU again) and sends.
+            let enc_start = at_client.max(self.client_free);
+            let enc_done =
+                enc_start + CLIENT.encode_s * round2_frames.len() as f64 * 0.5;
+            self.client_free = enc_done;
+            let r2_bytes = codec::region_bytes(round2_area, self.round2, p);
+            let at_cloud2 = topo
+                .wan_up
+                .transfer(r2_bytes, enc_done)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            metrics.bandwidth.add(r2_bytes);
+
+            // Cloud round 2: detector on the high-quality re-sends.
+            let hi_frames: Vec<_> = round2_frames
+                .iter()
+                .map(|&fi| render_frame(&chunk.frames[fi], self.round2, phi, p))
+                .collect();
+            let (heads2, t2) = cloud.detect_chunk(&hi_frames, at_cloud2, "detector")?;
+            done = t2.done;
+            for (k, &fi) in round2_frames.iter().enumerate() {
+                let regions = regions_from_heads(&heads2[k].as_heads(), self.filter.theta_loc);
+                // keep round-2 labels only where round 1 was uncertain
+                for r in regions {
+                    let matches_uncertain = uncertain_per_frame[fi]
+                        .iter()
+                        .any(|u| u.rect.iou(&r.rect) >= 0.3);
+                    if matches_uncertain {
+                        per_frame[fi].push(r);
+                    }
+                }
+            }
+        }
+
+        for i in 0..n {
+            metrics
+                .latency
+                .record(done - (t_offset + chunk.frame_time(i)));
+        }
+        metrics.chunks += 1;
+        Ok(BaselineOutcome { per_frame, done })
+    }
+}

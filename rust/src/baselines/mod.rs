@@ -1,0 +1,27 @@
+//! The comparison systems from §VI (all re-implemented, per the paper's
+//! own experimental setup, sharing the same cloud detector artifact):
+//!
+//! * [`mpeg`] — stream original-quality video straight to the cloud.
+//! * [`glimpse`] — client-driven frame differencing + stale-box tracking.
+//! * [`dds`] — server-driven two-round streaming (low first, high regions).
+//! * [`cloudseg`] — client downscale + cloud super-resolution recovery.
+
+pub mod cloudseg;
+pub mod dds;
+pub mod glimpse;
+pub mod mpeg;
+
+pub use cloudseg::CloudSeg;
+pub use dds::Dds;
+pub use glimpse::Glimpse;
+pub use mpeg::Mpeg;
+
+use crate::metrics::f1::PredBox;
+
+/// Per-chunk output every system produces (same shape as the VPaaS
+/// coordinator's outcome so pipelines can score them uniformly).
+#[derive(Debug, Clone)]
+pub struct BaselineOutcome {
+    pub per_frame: Vec<Vec<PredBox>>,
+    pub done: f64,
+}

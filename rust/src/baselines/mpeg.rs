@@ -1,0 +1,64 @@
+//! MPEG baseline: ship the original-quality stream to the cloud and run
+//! the best detector once per frame ("using original videos to do
+//! inference", Fig. 9). Highest bandwidth; golden-config accuracy.
+
+use anyhow::Result;
+
+use crate::baselines::BaselineOutcome;
+use crate::cloud::CloudServer;
+use crate::metrics::meters::RunMetrics;
+use crate::protocol::post::regions_from_heads;
+use crate::sim::net::Topology;
+use crate::sim::params::SimParams;
+use crate::sim::video::{codec, render_frame, Chunk, Quality};
+
+pub struct Mpeg {
+    pub theta_loc: f64,
+}
+
+impl Default for Mpeg {
+    fn default() -> Self {
+        Mpeg { theta_loc: 0.5 }
+    }
+}
+
+impl Mpeg {
+    pub fn process_chunk(
+        &mut self,
+        chunk: &Chunk,
+        phi: f64,
+        t_offset: f64,
+        p: &SimParams,
+        topo: &mut Topology,
+        cloud: &mut CloudServer,
+        metrics: &mut RunMetrics,
+    ) -> Result<BaselineOutcome> {
+        let n = chunk.frames.len();
+        let captured = t_offset + chunk.t_capture + chunk.duration();
+        // Client streams the original chunk straight over the WAN (no QC).
+        let bytes = n as f64 * codec::frame_bytes(Quality::ORIGINAL, p);
+        let at_cloud = topo
+            .wan_up
+            .transfer(bytes, captured)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        metrics.bandwidth.add(bytes);
+
+        let frames: Vec<_> = chunk
+            .frames
+            .iter()
+            .map(|f| render_frame(f, Quality::ORIGINAL, phi, p))
+            .collect();
+        let (heads, timing) = cloud.detect_chunk(&frames, at_cloud, "detector")?;
+        let per_frame = heads
+            .iter()
+            .map(|h| regions_from_heads(&h.as_heads(), self.theta_loc))
+            .collect();
+        for i in 0..n {
+            metrics
+                .latency
+                .record(timing.done - (t_offset + chunk.frame_time(i)));
+        }
+        metrics.chunks += 1;
+        Ok(BaselineOutcome { per_frame, done: timing.done })
+    }
+}

@@ -1,0 +1,369 @@
+//! The serverless cloud ML server (Fig. 3, left): GPU executor pool with a
+//! load balancer, an autoscaling provisioner (Fig. 16), serverless billing,
+//! and co-located training contention (Fig. 13b).
+//!
+//! Real model math runs through the PJRT runtime; *time* is virtual —
+//! each simulated V100 is a resource with a `next_free` horizon, and batch
+//! execution costs come from the Fig. 4-calibrated device profile.
+
+use anyhow::{bail, Result};
+
+use crate::interchange::Tensor;
+use crate::metrics::meters::CostMeter;
+use crate::protocol::post::FrameHeads;
+use crate::runtime::InferenceHandle;
+use crate::serving::batcher::BatchPlanner;
+use crate::sim::device::{DeviceProfile, CLOUD};
+use crate::util::stats::Ewma;
+
+/// Owned per-frame detector head outputs.
+#[derive(Debug, Clone)]
+pub struct HeadsOwned {
+    pub loc: Vec<f32>,
+    pub cls: Vec<f32>,
+    pub energy: Vec<f32>,
+    pub grid: usize,
+    pub num_classes: usize,
+}
+
+impl HeadsOwned {
+    pub fn as_heads(&self) -> FrameHeads<'_> {
+        FrameHeads {
+            loc_conf: &self.loc,
+            cls_prob: &self.cls,
+            energy: &self.energy,
+            grid: self.grid,
+            num_classes: self.num_classes,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CloudConfig {
+    pub initial_gpus: usize,
+    pub max_gpus: usize,
+    pub autoscale: bool,
+    /// Scale up when smoothed queue wait exceeds this (seconds).
+    pub scale_up_wait_s: f64,
+    /// Scale down when smoothed queue wait falls below this.
+    pub scale_down_wait_s: f64,
+    pub batch_buckets: Vec<usize>,
+}
+
+impl Default for CloudConfig {
+    fn default() -> Self {
+        CloudConfig {
+            initial_gpus: 1,
+            max_gpus: 4,
+            autoscale: false,
+            scale_up_wait_s: 0.5,
+            scale_down_wait_s: 0.05,
+            batch_buckets: vec![1, 4, 16],
+        }
+    }
+}
+
+/// One execution's virtual timing.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecTiming {
+    pub start: f64,
+    pub done: f64,
+    pub queue_wait: f64,
+}
+
+pub struct CloudServer {
+    handle: InferenceHandle,
+    pub device: DeviceProfile,
+    cfg: CloudConfig,
+    /// Load balancer state: per-GPU next-free horizon.
+    gpu_free: Vec<f64>,
+    planner: BatchPlanner,
+    pub billing: CostMeter,
+    wait_ewma: Ewma,
+    /// (virtual time, gpu count) provisioning history for Fig. 16.
+    pub gpu_history: Vec<(f64, usize)>,
+    /// Training bursts: (start, end) windows when the trainer shares GPU 0.
+    train_windows: Vec<(f64, f64)>,
+    grid: usize,
+    num_classes: usize,
+    feat_dim: usize,
+}
+
+impl CloudServer {
+    pub fn new(
+        handle: InferenceHandle,
+        cfg: CloudConfig,
+        grid: usize,
+        num_classes: usize,
+        feat_dim: usize,
+    ) -> Self {
+        assert!(cfg.initial_gpus >= 1 && cfg.max_gpus >= cfg.initial_gpus);
+        let planner = BatchPlanner::new(cfg.batch_buckets.clone());
+        CloudServer {
+            handle,
+            device: CLOUD,
+            gpu_free: vec![0.0; cfg.initial_gpus],
+            cfg,
+            planner,
+            billing: CostMeter::default(),
+            wait_ewma: Ewma::new(0.3),
+            gpu_history: vec![(0.0, 1)],
+            train_windows: Vec::new(),
+            grid,
+            num_classes,
+            feat_dim,
+        }
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.gpu_free.len()
+    }
+
+    /// Pick the least-loaded GPU (the load balancer) and occupy it.
+    fn schedule(&mut self, arrival: f64, dur: f64) -> ExecTiming {
+        let (idx, &free) = self
+            .gpu_free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .expect("at least one GPU");
+        let mut start = arrival.max(free);
+        // Co-located training contention: ops overlapping a training window
+        // on GPU 0 run slower (Fig. 13b measures ~+0.5 s latency).
+        let mut dur = dur;
+        if idx == 0 && self.in_train_window(start) {
+            dur *= 1.6;
+            start += 0.05;
+        }
+        let done = start + dur;
+        self.gpu_free[idx] = done;
+        let wait = (start - arrival).max(0.0);
+        self.wait_ewma.update(wait);
+        if self.cfg.autoscale {
+            self.autoscale(arrival);
+        }
+        ExecTiming { start, done, queue_wait: wait }
+    }
+
+    fn in_train_window(&self, t: f64) -> bool {
+        self.train_windows.iter().any(|&(s, e)| t >= s && t < e)
+    }
+
+    fn autoscale(&mut self, now: f64) {
+        let wait = self.wait_ewma.get().unwrap_or(0.0);
+        let n = self.gpu_free.len();
+        if wait > self.cfg.scale_up_wait_s && n < self.cfg.max_gpus {
+            self.gpu_free.push(now);
+            self.gpu_history.push((now, self.gpu_free.len()));
+        } else if wait < self.cfg.scale_down_wait_s && n > 1 {
+            // only shed a GPU that is idle
+            if let Some(pos) = self.gpu_free.iter().position(|&f| f <= now) {
+                if self.gpu_free.len() > 1 {
+                    self.gpu_free.remove(pos);
+                    self.gpu_history.push((now, self.gpu_free.len()));
+                }
+            }
+        }
+    }
+
+    /// Run the heavy detector over a chunk's frames (each `[A, D]`),
+    /// dynamic-batched into compiled buckets. Returns per-frame heads and
+    /// the completion time on the virtual clock.
+    pub fn detect_chunk(
+        &mut self,
+        frames: &[Tensor],
+        arrival: f64,
+        artifact_prefix: &str,
+    ) -> Result<(Vec<HeadsOwned>, ExecTiming)> {
+        if frames.is_empty() {
+            bail!("empty chunk");
+        }
+        let (a, d) = (self.grid * self.grid, self.feat_dim);
+        let plan = self.planner.plan(frames.len());
+        let mut heads = Vec::with_capacity(frames.len());
+        let mut t_done = arrival;
+        let mut t_start = f64::INFINITY;
+        let mut wait_total = 0.0;
+        let mut offset = 0;
+        for b in plan {
+            let take = b.min(frames.len() - offset);
+            // Build padded batch input [b, A, D].
+            let mut data = vec![0.0f32; b * a * d];
+            for i in 0..take {
+                let f = &frames[offset + i];
+                assert_eq!(f.dims, vec![a, d], "frame tensor must be [A, D]");
+                data[i * a * d..(i + 1) * a * d].copy_from_slice(&f.data);
+            }
+            let input = Tensor::new(vec![b, a, d], data)?;
+            let out = self.handle.infer(&format!("{artifact_prefix}_b{b}"), vec![input])?;
+            // outputs: loc [b, A], cls [b, A, K], energy [b, A]
+            let k = self.num_classes;
+            for i in 0..take {
+                heads.push(HeadsOwned {
+                    loc: out[0].data[i * a..(i + 1) * a].to_vec(),
+                    cls: out[1].data[i * a * k..(i + 1) * a * k].to_vec(),
+                    energy: out[2].data[i * a..(i + 1) * a].to_vec(),
+                    grid: self.grid,
+                    num_classes: k,
+                });
+            }
+            let timing = self.schedule(arrival, self.device.batched(self.device.detect_s, b));
+            t_done = t_done.max(timing.done);
+            t_start = t_start.min(timing.start);
+            wait_total += timing.queue_wait;
+            offset += take;
+        }
+        self.billing.detector_frames += frames.len() as u64;
+        Ok((
+            heads,
+            ExecTiming { start: t_start, done: t_done, queue_wait: wait_total },
+        ))
+    }
+
+    /// CloudSeg's extra stage: super-resolve a chunk's frames, billing one
+    /// SR invocation per frame, then the caller runs detection on the
+    /// recovered frames.
+    pub fn sr_chunk(
+        &mut self,
+        frames: &[Tensor],
+        arrival: f64,
+    ) -> Result<(Vec<Tensor>, ExecTiming)> {
+        if frames.is_empty() {
+            bail!("empty chunk");
+        }
+        let (a, d) = (self.grid * self.grid, self.feat_dim);
+        let plan = self.planner.plan(frames.len());
+        let mut recovered = Vec::with_capacity(frames.len());
+        let mut t_done = arrival;
+        let mut t_start = f64::INFINITY;
+        let mut offset = 0;
+        for b in plan {
+            let take = b.min(frames.len() - offset);
+            let mut data = vec![0.0f32; b * a * d];
+            for i in 0..take {
+                data[i * a * d..(i + 1) * a * d].copy_from_slice(&frames[offset + i].data);
+            }
+            let input = Tensor::new(vec![b, a, d], data)?;
+            let out = self.handle.infer(&format!("sr_b{b}"), vec![input])?;
+            for i in 0..take {
+                recovered.push(Tensor::new(
+                    vec![a, d],
+                    out[0].data[i * a * d..(i + 1) * a * d].to_vec(),
+                )?);
+            }
+            let timing = self.schedule(arrival, self.device.batched(self.device.sr_s, b));
+            t_done = t_done.max(timing.done);
+            t_start = t_start.min(timing.start);
+            offset += take;
+        }
+        self.billing.sr_frames += frames.len() as u64;
+        Ok((recovered, ExecTiming { start: t_start, done: t_done, queue_wait: 0.0 }))
+    }
+
+    /// Register a co-located training burst (the auto-trainer runs on the
+    /// inference GPU; Fig. 13b). Returns the window end.
+    pub fn train_burst(&mut self, start: f64, batches: u64) -> f64 {
+        // 0.25 s per batch-of-4 fine-tuning step. Co-location is real: the
+        // trainer OCCUPIES GPU 0, so inference queues behind it and runs
+        // slower while the window is open (Fig. 13b's latency spike).
+        let dur = batches as f64 * 0.25;
+        let start = start.max(self.gpu_free[0]);
+        self.gpu_free[0] = start + dur;
+        self.train_windows.push((start, start + dur));
+        self.billing.trainer_batches += batches;
+        start + dur
+    }
+
+    /// Smoothed queue wait (drives the provisioner and Fig. 16 reporting).
+    pub fn queue_wait(&self) -> f64 {
+        self.wait_ewma.get().unwrap_or(0.0)
+    }
+
+    pub fn padding_frac(&self) -> f64 {
+        self.planner.padding_frac()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::InferenceService;
+    use crate::sim::params::SimParams;
+    use crate::sim::video::{render_frame, Quality, Scene, SceneConfig};
+
+    fn setup() -> (InferenceService, std::sync::Arc<SimParams>, Vec<Tensor>) {
+        let svc = InferenceService::start().unwrap();
+        let p = SimParams::load().unwrap();
+        let mut scene = Scene::new(SceneConfig {
+            grid: p.grid,
+            num_classes: p.num_classes,
+            density: 3.0,
+            speed: 0.4,
+            size_range: (1.0, 2.0),
+            class_skew: 0.5,
+            seed: 5,
+        });
+        let frames: Vec<Tensor> = (0..5)
+            .map(|_| render_frame(&scene.step(), Quality::ORIGINAL, 0.0, &p))
+            .collect();
+        (svc, p, frames)
+    }
+
+    #[test]
+    fn detect_chunk_returns_per_frame_heads_and_bills() {
+        let (svc, p, frames) = setup();
+        let mut cloud = CloudServer::new(svc.handle(), CloudConfig::default(), p.grid, p.num_classes, p.feat_dim);
+        let (heads, timing) = cloud.detect_chunk(&frames, 1.0, "detector").unwrap();
+        assert_eq!(heads.len(), 5);
+        assert!(timing.done > 1.0);
+        assert_eq!(cloud.billing.detector_frames, 5);
+        // objects must light up somewhere
+        let max_loc = heads
+            .iter()
+            .flat_map(|h| h.loc.iter())
+            .cloned()
+            .fold(f32::MIN, f32::max);
+        assert!(max_loc > 0.5, "no confident anchors: {max_loc}");
+    }
+
+    #[test]
+    fn sr_chunk_bills_separately() {
+        let (svc, p, frames) = setup();
+        let mut cloud = CloudServer::new(svc.handle(), CloudConfig::default(), p.grid, p.num_classes, p.feat_dim);
+        let (rec, _) = cloud.sr_chunk(&frames, 0.0).unwrap();
+        assert_eq!(rec.len(), 5);
+        assert_eq!(cloud.billing.sr_frames, 5);
+        assert_eq!(cloud.billing.detector_frames, 0);
+    }
+
+    #[test]
+    fn autoscaling_adds_gpus_under_load() {
+        let (svc, p, frames) = setup();
+        let cfg = CloudConfig { autoscale: true, max_gpus: 4, scale_up_wait_s: 0.01, ..Default::default() };
+        let mut cloud = CloudServer::new(svc.handle(), cfg, p.grid, p.num_classes, p.feat_dim);
+        // hammer it with chunks all arriving at t=0
+        for _ in 0..8 {
+            cloud.detect_chunk(&frames, 0.0, "detector").unwrap();
+        }
+        assert!(cloud.gpus() > 1, "provisioner never scaled up");
+        assert!(cloud.gpu_history.len() > 1);
+    }
+
+    #[test]
+    fn training_window_slows_colocated_inference() {
+        let (svc, p, frames) = setup();
+        let mut a = CloudServer::new(svc.handle(), CloudConfig::default(), p.grid, p.num_classes, p.feat_dim);
+        let (_, clean) = a.detect_chunk(&frames, 0.0, "detector").unwrap();
+        let mut b = CloudServer::new(svc.handle(), CloudConfig::default(), p.grid, p.num_classes, p.feat_dim);
+        let train_end = b.train_burst(0.0, 100); // occupies GPU 0 for 25 s
+        let (_, contended) = b.detect_chunk(&frames, 0.0, "detector").unwrap();
+        // inference queues behind the co-located trainer
+        assert!(contended.start >= train_end - 1e-9, "did not queue behind trainer");
+        assert!(
+            contended.done > clean.done + 20.0,
+            "training contention had no effect: {} vs {}",
+            contended.done,
+            clean.done
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! The fog model cache (Fig. 3): stores models dispatched from the cloud,
+//! LRU-evicted under a capacity budget; the IL loop refreshes entries
+//! "periodically" by bumping their version.
+
+use std::collections::VecDeque;
+
+/// An entry in the fog cache.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CachedModel {
+    pub name: String,
+    pub version: u64,
+}
+
+/// LRU cache of model names (compiled executables live in the shared PJRT
+/// engine; this tracks *which* models the fog is allowed to serve — a cache
+/// miss means a dispatch round-trip to the cloud zoo).
+#[derive(Debug)]
+pub struct ModelCache {
+    capacity: usize,
+    // front = most recent
+    entries: VecDeque<CachedModel>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ModelCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        ModelCache { capacity, entries: VecDeque::new(), hits: 0, misses: 0 }
+    }
+
+    /// Install (dispatch) a model, evicting the LRU entry if full.
+    /// Returns the evicted model, if any.
+    pub fn install(&mut self, name: &str, version: u64) -> Option<CachedModel> {
+        self.entries.retain(|e| e.name != name);
+        self.entries.push_front(CachedModel { name: name.to_string(), version });
+        if self.entries.len() > self.capacity {
+            self.entries.pop_back()
+        } else {
+            None
+        }
+    }
+
+    /// Touch a model for serving. Hit → bump recency; miss → recorded.
+    pub fn lookup(&mut self, name: &str) -> Option<CachedModel> {
+        if let Some(pos) = self.entries.iter().position(|e| e.name == name) {
+            let entry = self.entries.remove(pos).unwrap();
+            self.entries.push_front(entry.clone());
+            self.hits += 1;
+            Some(entry)
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.iter().any(|e| e.name == name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Refresh a cached model's version in place (the IL update path).
+    pub fn refresh(&mut self, name: &str, version: u64) -> bool {
+        for e in self.entries.iter_mut() {
+            if e.name == name {
+                e.version = version;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn install_and_lookup() {
+        let mut c = ModelCache::new(2);
+        c.install("cls", 1);
+        assert!(c.lookup("cls").is_some());
+        assert_eq!(c.hits, 1);
+        assert!(c.lookup("missing").is_none());
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = ModelCache::new(2);
+        c.install("a", 1);
+        c.install("b", 1);
+        c.lookup("a"); // a is now most-recent
+        let evicted = c.install("c", 1).unwrap();
+        assert_eq!(evicted.name, "b");
+        assert!(c.contains("a") && c.contains("c"));
+    }
+
+    #[test]
+    fn reinstall_moves_to_front_without_growth() {
+        let mut c = ModelCache::new(2);
+        c.install("a", 1);
+        c.install("b", 1);
+        c.install("a", 2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.lookup("a").unwrap().version, 2);
+    }
+
+    #[test]
+    fn refresh_bumps_version() {
+        let mut c = ModelCache::new(2);
+        c.install("cls", 1);
+        assert!(c.refresh("cls", 5));
+        assert_eq!(c.lookup("cls").unwrap().version, 5);
+        assert!(!c.refresh("ghost", 1));
+    }
+}

@@ -1,0 +1,277 @@
+//! The fog ML server (Fig. 3, right): low-latency executor, model cache,
+//! crop-classification pipeline with dynamic batching, and the fallback
+//! detector that keeps service alive through cloud outages (Fig. 15).
+
+pub mod cache;
+
+use anyhow::{bail, Result};
+
+use crate::cloud::HeadsOwned;
+use crate::interchange::Tensor;
+use crate::runtime::InferenceHandle;
+use crate::serving::batcher::BatchPlanner;
+use crate::sim::device::{DeviceProfile, FOG};
+
+pub use cache::ModelCache;
+
+/// One classified crop.
+#[derive(Debug, Clone, Copy)]
+pub struct CropResult {
+    pub class: usize,
+    /// One-vs-all probability of the winning class.
+    pub prob: f64,
+}
+
+pub struct FogNode {
+    handle: InferenceHandle,
+    pub device: DeviceProfile,
+    pub cache: ModelCache,
+    /// Current classifier last layer `[H+1, K]` — swapped by the IL loop.
+    w_last: Tensor,
+    pub w_last_version: u64,
+    gpu_free: f64,
+    planner: BatchPlanner,
+    feat_dim: usize,
+    num_classes: usize,
+    cls_feat: usize,
+}
+
+impl FogNode {
+    pub fn new(
+        handle: InferenceHandle,
+        w_last0: Tensor,
+        feat_dim: usize,
+        num_classes: usize,
+    ) -> Self {
+        let cls_feat = w_last0.dims[0];
+        FogNode {
+            handle,
+            device: FOG,
+            cache: ModelCache::new(4),
+            w_last: w_last0,
+            w_last_version: 0,
+            gpu_free: 0.0,
+            planner: BatchPlanner::new(vec![1, 4, 16]),
+            feat_dim,
+            num_classes,
+            cls_feat,
+        }
+    }
+
+    /// Swap in an updated last layer (the paper's "almost negligible
+    /// overhead" model update: no recompilation, just new weights).
+    pub fn set_last_layer(&mut self, w: Tensor) {
+        assert_eq!(w.dims, self.w_last.dims);
+        self.w_last = w;
+        self.w_last_version += 1;
+    }
+
+    pub fn last_layer(&self) -> &Tensor {
+        &self.w_last
+    }
+
+    fn schedule(&mut self, arrival: f64, dur: f64) -> (f64, f64) {
+        let start = arrival.max(self.gpu_free);
+        let done = start + dur;
+        self.gpu_free = done;
+        (start, done)
+    }
+
+    /// Quality control for a chunk at the fog (decode + re-encode), the
+    /// step the paper moves off the weak client. Returns completion time.
+    pub fn quality_control(&mut self, frames: usize, arrival: f64) -> f64 {
+        let (_, done) = self.schedule(arrival, self.device.quality_control_s(frames));
+        done
+    }
+
+    /// Classify region crops (each a `[D]` feature) with dynamic batching.
+    /// Returns per-crop results, the feature vectors (for the HITL data
+    /// collector), and the completion time.
+    pub fn classify_crops(
+        &mut self,
+        crops: &[Vec<f32>],
+        arrival: f64,
+    ) -> Result<(Vec<CropResult>, Vec<Vec<f32>>, f64)> {
+        if crops.is_empty() {
+            return Ok((Vec::new(), Vec::new(), arrival));
+        }
+        let d = self.feat_dim;
+        let k = self.num_classes;
+        let plan = self.planner.plan(crops.len());
+        let mut results = Vec::with_capacity(crops.len());
+        let mut feats = Vec::with_capacity(crops.len());
+        let mut done = arrival;
+        let mut offset = 0;
+        for b in plan {
+            let take = b.min(crops.len() - offset);
+            let mut data = vec![0.0f32; b * d];
+            for i in 0..take {
+                assert_eq!(crops[offset + i].len(), d);
+                data[i * d..(i + 1) * d].copy_from_slice(&crops[offset + i]);
+            }
+            let input = Tensor::new(vec![b, d], data)?;
+            let out = self
+                .handle
+                .infer(&format!("classifier_b{b}"), vec![input, self.w_last.clone()])?;
+            // outputs: prob [b, K], feats [b, H+1]
+            for i in 0..take {
+                let row = &out[0].data[i * k..(i + 1) * k];
+                let (mut best, mut best_p) = (0usize, f32::MIN);
+                for (j, &p) in row.iter().enumerate() {
+                    if p > best_p {
+                        best = j;
+                        best_p = p;
+                    }
+                }
+                results.push(CropResult { class: best, prob: best_p as f64 });
+                feats.push(out[1].data[i * self.cls_feat..(i + 1) * self.cls_feat].to_vec());
+            }
+            let (_, d_t) = self.schedule(arrival, self.device.batched(self.device.classify_s, b));
+            done = done.max(d_t);
+            offset += take;
+        }
+        Ok((results, feats, done))
+    }
+
+    /// Fallback detection with the lite model (cloud outage, Fig. 15).
+    /// Frames are `[A, D]` tensors of the *high-quality* cached stream.
+    pub fn fallback_detect(
+        &mut self,
+        frames: &[Tensor],
+        arrival: f64,
+        grid: usize,
+    ) -> Result<(Vec<HeadsOwned>, f64)> {
+        if frames.is_empty() {
+            bail!("empty chunk");
+        }
+        let a = grid * grid;
+        let d = self.feat_dim;
+        let k = self.num_classes;
+        let plan = self.planner.plan(frames.len());
+        let mut heads = Vec::with_capacity(frames.len());
+        let mut done = arrival;
+        let mut offset = 0;
+        for b in plan {
+            let take = b.min(frames.len() - offset);
+            let mut data = vec![0.0f32; b * a * d];
+            for i in 0..take {
+                data[i * a * d..(i + 1) * a * d].copy_from_slice(&frames[offset + i].data);
+            }
+            let input = Tensor::new(vec![b, a, d], data)?;
+            let out = self.handle.infer(&format!("detector_lite_b{b}"), vec![input])?;
+            for i in 0..take {
+                heads.push(HeadsOwned {
+                    loc: out[0].data[i * a..(i + 1) * a].to_vec(),
+                    cls: out[1].data[i * a * k..(i + 1) * a * k].to_vec(),
+                    energy: out[2].data[i * a..(i + 1) * a].to_vec(),
+                    grid,
+                    num_classes: k,
+                });
+            }
+            let (_, d_t) =
+                self.schedule(arrival, self.device.batched(self.device.detect_lite_s, b));
+            done = done.max(d_t);
+            offset += take;
+        }
+        Ok((heads, done))
+    }
+
+    pub fn padding_frac(&self) -> f64 {
+        self.planner.padding_frac()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::InferenceService;
+    use crate::sim::params::SimParams;
+    use crate::sim::video::{render_crop, render_frame, Quality, Scene, SceneConfig};
+
+    fn fog_and_scene() -> (InferenceService, std::sync::Arc<SimParams>, crate::sim::video::FrameTruth) {
+        let svc = InferenceService::start().unwrap();
+        let p = SimParams::load().unwrap();
+        let mut scene = Scene::new(SceneConfig {
+            grid: p.grid,
+            num_classes: p.num_classes,
+            density: 4.0,
+            speed: 0.4,
+            size_range: (1.0, 2.0),
+            class_skew: 0.5,
+            seed: 9,
+        });
+        let truth = scene.step();
+        (svc, p, truth)
+    }
+
+    #[test]
+    fn classifies_high_quality_crops_correctly() {
+        let (svc, p, truth) = fog_and_scene();
+        let mut fog = FogNode::new(svc.handle(), p.cls_last0.clone(), p.feat_dim, p.num_classes);
+        let crops: Vec<Vec<f32>> = truth
+            .objects
+            .iter()
+            .map(|o| render_crop(o, Quality::ORIGINAL, 0.0, &p))
+            .collect();
+        let (results, feats, done) = fog.classify_crops(&crops, 1.0).unwrap();
+        assert_eq!(results.len(), truth.objects.len());
+        assert_eq!(feats[0].len(), p.cls_feat);
+        assert!(done > 1.0);
+        let correct = results
+            .iter()
+            .zip(&truth.objects)
+            .filter(|(r, o)| r.class == o.gt.class)
+            .count();
+        assert!(
+            correct as f64 / results.len() as f64 > 0.8,
+            "{correct}/{} correct",
+            results.len()
+        );
+    }
+
+    #[test]
+    fn last_layer_swap_changes_predictions() {
+        let (svc, p, truth) = fog_and_scene();
+        let mut fog = FogNode::new(svc.handle(), p.cls_last0.clone(), p.feat_dim, p.num_classes);
+        let crop = vec![render_crop(&truth.objects[0], Quality::ORIGINAL, 0.0, &p)];
+        let (before, _, _) = fog.classify_crops(&crop, 0.0).unwrap();
+        let zero = Tensor::zeros(p.cls_last0.dims.clone());
+        fog.set_last_layer(zero);
+        assert_eq!(fog.w_last_version, 1);
+        let (after, _, _) = fog.classify_crops(&crop, 0.0).unwrap();
+        // zero weights → all probs 0.5 → prediction degenerates
+        assert!((after[0].prob - 0.5).abs() < 1e-4);
+        assert!(before[0].prob > after[0].prob);
+    }
+
+    #[test]
+    fn empty_crop_list_is_noop() {
+        let (svc, p, _) = fog_and_scene();
+        let mut fog = FogNode::new(svc.handle(), p.cls_last0.clone(), p.feat_dim, p.num_classes);
+        let (r, f, done) = fog.classify_crops(&[], 3.0).unwrap();
+        assert!(r.is_empty() && f.is_empty());
+        assert_eq!(done, 3.0);
+    }
+
+    #[test]
+    fn fallback_detector_localizes_on_high_quality() {
+        let (svc, p, truth) = fog_and_scene();
+        let mut fog = FogNode::new(svc.handle(), p.cls_last0.clone(), p.feat_dim, p.num_classes);
+        let frame = render_frame(&truth, Quality::ORIGINAL, 0.0, &p);
+        let (heads, done) = fog.fallback_detect(&[frame], 0.0, p.grid).unwrap();
+        assert_eq!(heads.len(), 1);
+        assert!(done > 0.0);
+        let max_loc = heads[0].loc.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(max_loc > 0.5, "lite detector found nothing");
+    }
+
+    #[test]
+    fn quality_control_occupies_the_fog() {
+        let (svc, p, _) = fog_and_scene();
+        let mut fog = FogNode::new(svc.handle(), p.cls_last0.clone(), p.feat_dim, p.num_classes);
+        let d1 = fog.quality_control(15, 0.0);
+        let d2 = fog.quality_control(15, 0.0); // queues behind the first
+        assert!(d2 > d1);
+        assert!(d1 < 0.5, "fog QC must be fast (Fig. 4a): {d1}");
+    }
+}

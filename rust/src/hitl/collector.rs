@@ -1,0 +1,80 @@
+//! The HITL data collector (Fig. 3, auto-training backend): buffers
+//! human-labeled crop features until a training batch is ready.
+
+/// One labeled example: the classifier's feature vector (`[H+1]`, as
+/// emitted by the classifier artifact) and the human's class label.
+#[derive(Debug, Clone)]
+pub struct LabeledCrop {
+    pub feats: Vec<f32>,
+    pub label: usize,
+}
+
+#[derive(Debug)]
+pub struct DataCollector {
+    buffer: Vec<LabeledCrop>,
+    /// Batch size that triggers training (the paper uses 4; we pad into the
+    /// compiled IL_BATCH artifact).
+    pub trigger: usize,
+    pub total_collected: u64,
+}
+
+impl DataCollector {
+    pub fn new(trigger: usize) -> Self {
+        assert!(trigger > 0);
+        DataCollector { buffer: Vec::new(), trigger, total_collected: 0 }
+    }
+
+    pub fn submit(&mut self, feats: Vec<f32>, label: usize) {
+        self.buffer.push(LabeledCrop { feats, label });
+        self.total_collected += 1;
+    }
+
+    pub fn pending(&self) -> usize {
+        self.buffer.len()
+    }
+
+    /// Take a training batch if the trigger is met.
+    pub fn take_batch(&mut self) -> Option<Vec<LabeledCrop>> {
+        if self.buffer.len() >= self.trigger {
+            Some(self.buffer.drain(..self.trigger).collect())
+        } else {
+            None
+        }
+    }
+
+    /// Drain whatever is left (end of stream).
+    pub fn drain(&mut self) -> Vec<LabeledCrop> {
+        std::mem::take(&mut self.buffer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_trigger_at_threshold() {
+        let mut c = DataCollector::new(4);
+        for i in 0..3 {
+            c.submit(vec![i as f32], 0);
+            assert!(c.take_batch().is_none());
+        }
+        c.submit(vec![3.0], 1);
+        let batch = c.take_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.total_collected, 4);
+    }
+
+    #[test]
+    fn excess_stays_buffered() {
+        let mut c = DataCollector::new(2);
+        for _ in 0..5 {
+            c.submit(vec![0.0], 0);
+        }
+        assert_eq!(c.take_batch().unwrap().len(), 2);
+        assert_eq!(c.take_batch().unwrap().len(), 2);
+        assert!(c.take_batch().is_none());
+        assert_eq!(c.drain().len(), 1);
+    }
+}

@@ -1,0 +1,149 @@
+//! Eq. (9): ridge-weighted combination of IL snapshot classifiers.
+//!
+//! `argmin_ω ½‖ωᵀz − y‖² + v‖ω‖²` has the closed form
+//! `ω = (ZᵀZ + 2vI)⁻¹ Zᵀy`; the system is tiny (T snapshots, T ≤ dozens),
+//! solved by Gaussian elimination with partial pivoting.
+
+use anyhow::{bail, Result};
+
+/// Solve the symmetric positive-definite system `A x = b` (dense, small).
+pub fn solve_ridge(a: &[Vec<f64>], b: &[f64]) -> Result<Vec<f64>> {
+    let n = b.len();
+    if a.len() != n || a.iter().any(|row| row.len() != n) {
+        bail!("solve_ridge: non-square system");
+    }
+    let mut m: Vec<Vec<f64>> = a
+        .iter()
+        .zip(b)
+        .map(|(row, &bi)| {
+            let mut r = row.clone();
+            r.push(bi);
+            r
+        })
+        .collect();
+    for col in 0..n {
+        // partial pivot
+        let pivot = (col..n)
+            .max_by(|&i, &j| m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap())
+            .unwrap();
+        if m[pivot][col].abs() < 1e-12 {
+            bail!("solve_ridge: singular system");
+        }
+        m.swap(col, pivot);
+        for row in col + 1..n {
+            let f = m[row][col] / m[col][col];
+            for k in col..=n {
+                m[row][k] -= f * m[col][k];
+            }
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut s = m[row][n];
+        for k in row + 1..n {
+            s -= m[row][k] * x[k];
+        }
+        x[row] = s / m[row][row];
+    }
+    Ok(x)
+}
+
+/// Eq. (9): given `z[i][t]` = snapshot t's correct-class score on held-out
+/// example i, and target `y[i]`, return the snapshot weights ω.
+pub fn ensemble_weights(z: &[Vec<f64>], y: &[f64], ridge: f64) -> Result<Vec<f64>> {
+    let n = z.len();
+    if n == 0 || y.len() != n {
+        bail!("ensemble_weights: empty or mismatched data");
+    }
+    let t = z[0].len();
+    if z.iter().any(|row| row.len() != t) {
+        bail!("ensemble_weights: ragged z");
+    }
+    // A = ZᵀZ + 2vI, b = Zᵀy
+    let mut a = vec![vec![0.0; t]; t];
+    let mut b = vec![0.0; t];
+    for i in 0..n {
+        for p in 0..t {
+            b[p] += z[i][p] * y[i];
+            for q in 0..t {
+                a[p][q] += z[i][p] * z[i][q];
+            }
+        }
+    }
+    for (p, row) in a.iter_mut().enumerate() {
+        row[p] += 2.0 * ridge;
+    }
+    solve_ridge(&a, &b)
+}
+
+/// Weighted combination of per-snapshot class scores:
+/// `scores[t*K + j]` → combined `[K]`.
+pub fn combine_scores(snapshot_scores: &[f64], omega: &[f64], k: usize) -> Vec<f64> {
+    assert_eq!(snapshot_scores.len(), omega.len() * k);
+    let mut out = vec![0.0; k];
+    for (t, &w) in omega.iter().enumerate() {
+        for j in 0..k {
+            out[j] += w * snapshot_scores[t * k + j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn solves_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let x = solve_ridge(&a, &[3.0, -2.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solves_known_system() {
+        // [2 1; 1 3] x = [5; 10] -> x = [1, 3]
+        let a = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
+        let x = solve_ridge(&a, &[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-9 && (x[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_singular() {
+        let a = vec![vec![1.0, 1.0], vec![1.0, 1.0]];
+        assert!(solve_ridge(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn upweights_informative_snapshot() {
+        let mut rng = Pcg32::seeded(3);
+        let n = 200;
+        let mut z = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let signal = rng.normal();
+            z.push(vec![0.05 * rng.normal(), signal, 0.4 * rng.normal()]);
+            y.push(signal);
+        }
+        let om = ensemble_weights(&z, &y, 0.05).unwrap();
+        assert!(om[1].abs() > om[0].abs() && om[1].abs() > om[2].abs(), "{om:?}");
+        assert!((om[1] - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn ridge_shrinks_weights() {
+        let z = vec![vec![1.0], vec![1.0], vec![1.0]];
+        let y = vec![1.0, 1.0, 1.0];
+        let small = ensemble_weights(&z, &y, 0.01).unwrap()[0];
+        let large = ensemble_weights(&z, &y, 10.0).unwrap()[0];
+        assert!(large < small);
+    }
+
+    #[test]
+    fn combine_scores_is_weighted_sum() {
+        let scores = vec![1.0, 2.0, 10.0, 20.0]; // T=2, K=2
+        let combined = combine_scores(&scores, &[0.5, 0.25], 2);
+        assert_eq!(combined, vec![3.0, 6.0]);
+    }
+}

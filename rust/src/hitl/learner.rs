@@ -1,0 +1,296 @@
+//! The incremental learner: Eq. (8) last-layer updates via the AOT
+//! `il_step` artifact, with periodic snapshots for the Eq. (9) ensemble.
+
+use anyhow::Result;
+
+use crate::hitl::collector::LabeledCrop;
+use crate::hitl::ensemble;
+use crate::interchange::Tensor;
+use crate::runtime::InferenceHandle;
+
+pub struct IncrementalLearner {
+    handle: InferenceHandle,
+    pub w_last: Tensor,
+    pub snapshots: Vec<Tensor>,
+    pub snapshot_every: usize,
+    pub updates: u64,
+    il_batch: usize,
+    num_classes: usize,
+    /// Held-out labeled examples reused for the Eq. (9) ridge solve.
+    holdout: Vec<LabeledCrop>,
+    /// Cached snapshot weights ω (invalidated on snapshot/holdout change).
+    omega: Option<Vec<f64>>,
+    pub ridge: f64,
+}
+
+impl IncrementalLearner {
+    pub fn new(
+        handle: InferenceHandle,
+        w_last0: Tensor,
+        il_batch: usize,
+        num_classes: usize,
+    ) -> Self {
+        IncrementalLearner {
+            handle,
+            snapshots: vec![w_last0.clone()],
+            w_last: w_last0,
+            snapshot_every: 8,
+            updates: 0,
+            il_batch,
+            num_classes,
+            holdout: Vec::new(),
+            omega: None,
+            ridge: 0.05,
+        }
+    }
+
+    /// Apply one Eq. (8) update with a (possibly short) labeled batch.
+    /// Short batches are padded and masked — the artifact has a fixed
+    /// `[IL_BATCH]` shape. Returns the new last layer (also stored).
+    pub fn update(&mut self, batch: &[LabeledCrop]) -> Result<&Tensor> {
+        assert!(!batch.is_empty() && batch.len() <= self.il_batch);
+        let hf = self.w_last.dims[0];
+        let k = self.num_classes;
+        let b = self.il_batch;
+        let mut feats = vec![0.0f32; b * hf];
+        let mut labels = vec![0.0f32; b * k];
+        let mut mask = vec![0.0f32; b];
+        for (i, ex) in batch.iter().enumerate() {
+            assert_eq!(ex.feats.len(), hf, "feature width mismatch");
+            assert!(ex.label < k);
+            feats[i * hf..(i + 1) * hf].copy_from_slice(&ex.feats);
+            labels[i * k + ex.label] = 1.0;
+            mask[i] = 1.0;
+        }
+        let out = self.handle.infer(
+            "il_step",
+            vec![
+                self.w_last.clone(),
+                Tensor::new(vec![b, hf], feats)?,
+                Tensor::new(vec![b, k], labels)?,
+                Tensor::new(vec![b], mask)?,
+            ],
+        )?;
+        self.w_last = out.into_iter().next().expect("il_step returns one tensor");
+        self.updates += 1;
+        // every few updates, hold one example out for the Eq. (9) solve
+        if let Some(ex) = batch.first() {
+            if self.updates % 2 == 0 && self.holdout.len() < 256 {
+                self.holdout.push(ex.clone());
+                self.omega = None;
+            }
+        }
+        if self.updates as usize % self.snapshot_every == 0 {
+            self.snapshots.push(self.w_last.clone());
+            self.omega = None;
+        }
+        Ok(&self.w_last)
+    }
+
+    /// Eq. (9): solve for the snapshot-ensemble weights ω on the held-out
+    /// labeled data (z_i = each snapshot's correct-class score; y_i = 1).
+    /// Returns None until there are ≥2 snapshots and enough held-out data.
+    pub fn ensemble_omega(&mut self) -> Option<&[f64]> {
+        if self.omega.is_none() {
+            let t = self.snapshots.len();
+            if t < 2 || self.holdout.len() < 2 * t {
+                return None;
+            }
+            let k = self.num_classes;
+            let mut z = Vec::with_capacity(self.holdout.len());
+            let mut y = Vec::with_capacity(self.holdout.len());
+            for ex in &self.holdout {
+                let scores = self.snapshot_scores(&ex.feats);
+                z.push((0..t).map(|ti| scores[ti * k + ex.label]).collect::<Vec<f64>>());
+                y.push(1.0);
+            }
+            self.omega = ensemble::ensemble_weights(&z, &y, self.ridge).ok();
+        }
+        self.omega.as_deref()
+    }
+
+    /// Classify a crop feature with the ω-weighted snapshot ensemble
+    /// (Eq. 9); returns (class, combined score) or None if ω unavailable.
+    pub fn ensemble_classify(&mut self, feats: &[f32]) -> Option<(usize, f64)> {
+        let scores = self.snapshot_scores(feats);
+        let k = self.num_classes;
+        let omega = self.ensemble_omega()?;
+        let combined = ensemble::combine_scores(&scores, omega, k);
+        combined
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(c, &s)| (c, s))
+    }
+
+    /// Scores of every snapshot on one feature vector: `[T, K]` row-major.
+    pub fn snapshot_scores(&self, feats: &[f32]) -> Vec<f64> {
+        let hf = self.w_last.dims[0];
+        let k = self.num_classes;
+        assert_eq!(feats.len(), hf);
+        let mut out = Vec::with_capacity(self.snapshots.len() * k);
+        for snap in &self.snapshots {
+            for j in 0..k {
+                let mut s = 0.0f64;
+                for i in 0..hf {
+                    s += feats[i] as f64 * snap.data[i * k + j] as f64;
+                }
+                out.push(s);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::InferenceService;
+    use crate::sim::params::SimParams;
+    use crate::sim::video::{render_crop, Quality, Scene, SceneConfig};
+
+    fn learner_with_scene(
+        phi: f64,
+    ) -> (InferenceService, std::sync::Arc<SimParams>, IncrementalLearner, Vec<LabeledCrop>) {
+        let svc = InferenceService::start().unwrap();
+        let p = SimParams::load().unwrap();
+        let learner =
+            IncrementalLearner::new(svc.handle(), p.cls_last0.clone(), p.il_batch, p.num_classes);
+        // labeled crops rendered under drift phi, features via classifier artifact
+        let mut scene = Scene::new(SceneConfig {
+            grid: p.grid,
+            num_classes: p.num_classes,
+            density: 6.0,
+            speed: 0.3,
+            size_range: (1.0, 2.0),
+            class_skew: 0.0,
+            seed: 31,
+        });
+        let h = svc.handle();
+        let mut labeled = Vec::new();
+        for _ in 0..12 {
+            let truth = scene.step();
+            for o in &truth.objects {
+                let crop = render_crop(o, Quality::ORIGINAL, phi, &p);
+                let out = h
+                    .infer(
+                        "classifier_b1",
+                        vec![
+                            Tensor::new(vec![1, p.feat_dim], crop).unwrap(),
+                            p.cls_last0.clone(),
+                        ],
+                    )
+                    .unwrap();
+                labeled.push(LabeledCrop { feats: out[1].data.clone(), label: o.gt.class });
+            }
+        }
+        (svc, p, learner, labeled)
+    }
+
+    #[test]
+    fn update_changes_weights_and_snapshots() {
+        let (_svc, p, mut learner, labeled) = learner_with_scene(0.0);
+        let before = learner.w_last.data.clone();
+        learner.update(&labeled[..p.il_batch.min(labeled.len())]).unwrap();
+        assert_ne!(learner.w_last.data, before);
+        assert_eq!(learner.updates, 1);
+        assert_eq!(learner.snapshots.len(), 1); // snapshot_every = 8
+        for _ in 0..7 {
+            learner.update(&labeled[..4]).unwrap();
+        }
+        assert_eq!(learner.snapshots.len(), 2);
+    }
+
+    #[test]
+    fn short_batches_are_masked_not_diluted() {
+        let (_svc, _p, mut learner, labeled) = learner_with_scene(0.0);
+        let before = learner.w_last.data.clone();
+        learner.update(&labeled[..2]).unwrap();
+        let delta: f32 = learner
+            .w_last
+            .data
+            .iter()
+            .zip(&before)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(delta > 0.0, "masked batch applied no update");
+    }
+
+    #[test]
+    fn updates_improve_drifted_margin() {
+        // under saturated drift, Eq. (8) updates must raise correct-class
+        // scores on the drifted distribution
+        let (svc, p, mut learner, labeled) = learner_with_scene(0.6);
+        let h = svc.handle();
+        let eval = |w: &Tensor| -> f64 {
+            let mut correct = 0usize;
+            for ex in labeled.iter().take(48) {
+                let k = p.num_classes;
+                let mut best = (0usize, f64::MIN);
+                for j in 0..k {
+                    let mut s = 0.0f64;
+                    for i in 0..p.cls_feat {
+                        s += ex.feats[i] as f64 * w.data[i * k + j] as f64;
+                    }
+                    if s > best.1 {
+                        best = (j, s);
+                    }
+                }
+                if best.0 == ex.label {
+                    correct += 1;
+                }
+            }
+            correct as f64 / 48.0
+        };
+        let acc0 = eval(&p.cls_last0);
+        for chunk in labeled.chunks(p.il_batch).take(10) {
+            learner.update(chunk).unwrap();
+        }
+        let acc1 = eval(&learner.w_last);
+        assert!(acc1 >= acc0, "IL made things worse: {acc0} -> {acc1}");
+        let _ = h;
+    }
+
+    #[test]
+    fn ensemble_omega_appears_after_enough_snapshots() {
+        let (_svc, p, mut learner, labeled) = learner_with_scene(0.6);
+        assert!(learner.ensemble_omega().is_none(), "no omega before snapshots");
+        for chunk in labeled.chunks(4).take(20) {
+            learner.update(chunk).unwrap();
+        }
+        assert!(learner.snapshots.len() >= 2);
+        let omega = learner.ensemble_omega().expect("omega after snapshots");
+        assert_eq!(omega.len(), learner.snapshots.len());
+        let _ = p;
+    }
+
+    #[test]
+    fn ensemble_classify_agrees_with_labels_on_drifted_data() {
+        let (_svc, _p, mut learner, labeled) = learner_with_scene(0.8);
+        for chunk in labeled.chunks(4).take(24) {
+            learner.update(chunk).unwrap();
+        }
+        if learner.ensemble_omega().is_none() {
+            return; // not enough holdout in this configuration
+        }
+        let mut ok = 0;
+        let eval: Vec<_> = labeled.iter().rev().take(32).collect();
+        for ex in &eval {
+            if let Some((c, _)) = learner.ensemble_classify(&ex.feats) {
+                ok += usize::from(c == ex.label);
+            }
+        }
+        assert!(
+            ok as f64 / eval.len() as f64 > 0.6,
+            "ensemble accuracy {ok}/{}",
+            eval.len()
+        );
+    }
+
+    #[test]
+    fn snapshot_scores_shape() {
+        let (_svc, p, learner, labeled) = learner_with_scene(0.0);
+        let scores = learner.snapshot_scores(&labeled[0].feats);
+        assert_eq!(scores.len(), learner.snapshots.len() * p.num_classes);
+    }
+}

@@ -1,0 +1,15 @@
+//! Human-in-the-loop incremental learning (§V, Fig. 8).
+//!
+//! The data collector accumulates (crop features, human label) pairs during
+//! inference; once a training batch is full, the auto-trainer runs the AOT
+//! Eq. (8) update kernel through the same PJRT runtime as inference and
+//! swaps the fog classifier's last layer. Snapshots feed the Eq. (9)
+//! ridge-weighted ensemble.
+
+pub mod collector;
+pub mod ensemble;
+pub mod learner;
+
+pub use collector::DataCollector;
+pub use ensemble::{ensemble_weights, solve_ridge};
+pub use learner::IncrementalLearner;

@@ -1,0 +1,303 @@
+//! The Python ⇄ Rust interchange contract.
+//!
+//! `make artifacts` (the build-time Python path) writes three kinds of files
+//! under `artifacts/`:
+//!
+//! * `*.hlo.txt` — AOT-lowered HLO text modules (loaded by [`crate::runtime`])
+//! * `manifest.txt` — artifact index: names, files, input/output shapes
+//! * `constants.txt` — scene/model constants (signature bank, codec model
+//!   parameters, head gains) so the Rust simulator renders frames from
+//!   exactly the distribution the compiled models expect
+//!
+//! This module parses the two text files. Formats are line-oriented and
+//! deliberately trivial (serde is not vendored in this environment):
+//!
+//! ```text
+//! scalar <name> <value>
+//! tensor <name> <d0>x<d1>... <v0> <v1> ...
+//! artifact <name> <file> inputs=f32:4x24;f32:49x8 outputs=f32:4x8;f32:4x49
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A dense f32 tensor with shape metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("tensor shape {dims:?} wants {n} values, got {}", data.len());
+        }
+        Ok(Tensor { dims, data })
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.dims.len(), 2, "row() needs a 2-D tensor");
+        let w = self.dims[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+}
+
+/// Parsed `constants.txt`.
+#[derive(Debug, Clone, Default)]
+pub struct Constants {
+    scalars: BTreeMap<String, f64>,
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl Constants {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut c = Constants::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kind = parts.next().unwrap();
+            let err = || anyhow!("constants.txt line {}: {line:?}", lineno + 1);
+            match kind {
+                "scalar" => {
+                    let name = parts.next().ok_or_else(err)?;
+                    let value: f64 = parts.next().ok_or_else(err)?.parse().map_err(|_| err())?;
+                    c.scalars.insert(name.to_string(), value);
+                }
+                "tensor" => {
+                    let name = parts.next().ok_or_else(err)?;
+                    let dims: Vec<usize> = parts
+                        .next()
+                        .ok_or_else(err)?
+                        .split('x')
+                        .map(|d| d.parse().map_err(|_| err()))
+                        .collect::<Result<_>>()?;
+                    let data: Vec<f32> = parts
+                        .map(|v| v.parse().map_err(|_| err()))
+                        .collect::<Result<_>>()?;
+                    c.tensors.insert(name.to_string(), Tensor::new(dims, data)?);
+                }
+                _ => bail!("constants.txt line {}: unknown kind {kind:?}", lineno + 1),
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn scalar(&self, name: &str) -> Result<f64> {
+        self.scalars
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("missing scalar {name:?} in constants.txt"))
+    }
+
+    pub fn scalar_usize(&self, name: &str) -> Result<usize> {
+        Ok(self.scalar(name)? as usize)
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("missing tensor {name:?} in constants.txt"))
+    }
+}
+
+/// One parsed shape like `f32:4x256x24`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapeSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl ShapeSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dtype, dims) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad shape spec {s:?}"))?;
+        let dims = dims
+            .split('x')
+            .map(|d| d.parse().map_err(|_| anyhow!("bad shape spec {s:?}")))
+            .collect::<Result<_>>()?;
+        Ok(ShapeSpec { dtype: dtype.to_string(), dims })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One artifact entry from `manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<ShapeSpec>,
+    pub outputs: Vec<ShapeSpec>,
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = || anyhow!("manifest.txt line {}: {line:?}", lineno + 1);
+            let mut parts = line.split_whitespace();
+            if parts.next() != Some("artifact") {
+                return Err(err());
+            }
+            let name = parts.next().ok_or_else(err)?.to_string();
+            let file = parts.next().ok_or_else(err)?.to_string();
+            let mut inputs = Vec::new();
+            let mut outputs = Vec::new();
+            for field in parts {
+                let (key, val) = field.split_once('=').ok_or_else(err)?;
+                let shapes = val
+                    .split(';')
+                    .map(ShapeSpec::parse)
+                    .collect::<Result<Vec<_>>>()?;
+                match key {
+                    "inputs" => inputs = shapes,
+                    "outputs" => outputs = shapes,
+                    _ => return Err(err()),
+                }
+            }
+            entries.push(ArtifactEntry { name, file, inputs, outputs });
+        }
+        Ok(Manifest { entries, dir: dir.to_path_buf() })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+/// Locate the `artifacts/` directory: `$VPAAS_ARTIFACTS` or walk up from cwd.
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("VPAAS_ARTIFACTS") {
+        return Ok(PathBuf::from(dir));
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            bail!("artifacts/ not found; run `make artifacts` or set VPAAS_ARTIFACTS");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tensors() {
+        let c = Constants::parse("scalar grid 16\ntensor t 2x2 1 2 3 4\n").unwrap();
+        assert_eq!(c.scalar_usize("grid").unwrap(), 16);
+        let t = c.tensor("t").unwrap();
+        assert_eq!(t.dims, vec![2, 2]);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        assert!(Constants::parse("tensor t 2x2 1 2 3\n").is_err());
+    }
+
+    #[test]
+    fn missing_names_error() {
+        let c = Constants::parse("scalar a 1\n").unwrap();
+        assert!(c.scalar("b").is_err());
+        assert!(c.tensor("a").is_err());
+    }
+
+    #[test]
+    fn parses_manifest_entries() {
+        let m = Manifest::parse(
+            "artifact det det.hlo.txt inputs=f32:1x256x24 outputs=f32:1x256;f32:1x256x8\n",
+            Path::new("/tmp/a"),
+        )
+        .unwrap();
+        let e = m.get("det").unwrap();
+        assert_eq!(e.inputs[0].dims, vec![1, 256, 24]);
+        assert_eq!(e.outputs.len(), 2);
+        assert_eq!(m.path_of(e), PathBuf::from("/tmp/a/det.hlo.txt"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn shape_spec_elements() {
+        let s = ShapeSpec::parse("f32:4x49").unwrap();
+        assert_eq!(s.dtype, "f32");
+        assert_eq!(s.elements(), 196);
+        assert!(ShapeSpec::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn real_artifacts_parse_when_present() {
+        if let Ok(dir) = artifacts_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("detector_b16").is_ok());
+            let c = Constants::load(&dir.join("constants.txt")).unwrap();
+            assert_eq!(c.scalar_usize("num_classes").unwrap(), 8);
+            let sig = c.tensor("signatures").unwrap();
+            assert_eq!(sig.dims, vec![8, 24]);
+            // orthonormal rows
+            for i in 0..8 {
+                let norm: f32 = sig.row(i).iter().map(|v| v * v).sum();
+                assert!((norm - 1.0).abs() < 1e-3);
+            }
+        }
+    }
+}

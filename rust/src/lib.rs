@@ -1,0 +1,30 @@
+//! # VPaaS — a serverless cloud-fog platform for DNN video analytics
+//!
+//! Reproduction of Zhang et al., *"A Serverless Cloud-Fog Platform for
+//! DNN-Based Video Analytics with Incremental Learning"* (2021), as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: the High-and-Low streaming
+//!   protocol, the serverless cloud/fog servers, HITL incremental learning,
+//!   the baselines it is evaluated against, and every substrate the paper's
+//!   testbed provided (scene/codec/network/human simulators).
+//! * **L2/L1 (python/, build-time only)** — JAX models + Pallas kernels,
+//!   AOT-lowered to HLO text artifacts loaded by [`runtime`] via PJRT.
+//!   Python never runs on the request path.
+//!
+//! Start with `pipeline` for end-to-end drivers, or `examples/quickstart.rs`.
+
+pub mod baselines;
+pub mod cloud;
+pub mod fog;
+pub mod hitl;
+pub mod interchange;
+pub mod metrics;
+pub mod pipeline;
+pub mod protocol;
+pub mod runtime;
+pub mod serverless;
+pub mod serving;
+pub mod zoo;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,185 @@
+//! `vpaas` — the leader binary: regenerate paper figures, run single
+//! experiments, profile models, or drive the serverless demo app.
+//!
+//! ```text
+//! vpaas figures --id fig9 [--scale 0.05]     regenerate one figure/table
+//! vpaas figures --id all                     regenerate everything
+//! vpaas run --system vpaas --dataset drone   one system on one dataset
+//! vpaas profile                              model profiler (Fig. 4)
+//! vpaas serve --config policy.cfg            serverless demo loop
+//! ```
+
+use anyhow::{bail, Result};
+
+use vpaas::metrics::report::table;
+use vpaas::pipeline::{figures, Harness, RunConfig, SystemKind};
+use vpaas::sim::video::datasets;
+use vpaas::util::cli::Args;
+use vpaas::util::config::Config;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("figures") => cmd_figures(args),
+        Some("run") => cmd_run(args),
+        Some("profile") => cmd_profile(),
+        Some("serve") => cmd_serve(args),
+        Some("help") | None => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "vpaas — serverless cloud-fog video analytics (paper reproduction)
+subcommands:
+  figures --id <table1|fig4|fig5|fig9|fig10|fig11|fig12|fig13a|fig13b|fig15|fig16|quality|all>
+          [--scale 0.05] [--seed N]
+  run     --system <vpaas|vpaas-nohitl|mpeg|dds|cloudseg|glimpse>
+          --dataset <dashcam|drone|traffic> [--scale 0.05] [--wan 15]
+          [--budget 0.2] [--no-drift] [--golden]
+  profile                       profile registered models on the PJRT engine
+  serve   [--config file.cfg] [--chunks N]   drive the serverless demo app";
+
+fn run_config(args: &Args) -> Result<RunConfig> {
+    Ok(RunConfig {
+        wan_mbps: args.get_f64("wan", 15.0)?,
+        hitl_budget: args.get_f64("budget", 0.2)?,
+        drift: !args.flag("no-drift"),
+        golden: args.flag("golden"),
+        seed: args.get_u64("seed", 0xCAFE)?,
+        ..RunConfig::default()
+    })
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let id = args.get_or("id", "all");
+    let scale = args.get_f64("scale", figures::DEFAULT_SCALE)?;
+    let cfg = run_config(args)?;
+    let h = Harness::new()?;
+    let want = |name: &str| id == "all" || id == name;
+    if want("table1") {
+        println!("{}\n", figures::table1(scale));
+    }
+    if want("fig4") {
+        println!("{}\n", figures::fig4(&h)?);
+    }
+    if want("fig5") {
+        println!("{}\n", figures::fig5(&h)?);
+    }
+    if want("fig9") || want("fig10") {
+        let runs = figures::macro_runs(&h, scale, &RunConfig { golden: true, ..cfg.clone() })?;
+        if want("fig9") {
+            println!("{}\n", figures::fig9(&runs));
+        }
+        if want("fig10") {
+            println!("{}\n", figures::fig10(&runs));
+        }
+    }
+    if want("fig11") {
+        println!("{}\n", figures::fig11(&h, scale, &cfg)?);
+    }
+    if want("fig12") {
+        println!("{}\n", figures::fig12(&h, scale, &cfg)?);
+    }
+    if want("fig13a") {
+        println!("{}\n", figures::fig13a(&h, scale, &cfg)?);
+    }
+    if want("fig13b") {
+        println!("{}\n", figures::fig13b(&h, scale, &cfg)?);
+    }
+    if want("fig15") {
+        println!("{}\n", figures::fig15(&h, &cfg)?.0);
+    }
+    if want("fig16") {
+        println!("{}\n", figures::fig16(&h, &cfg)?);
+    }
+    if want("quality") {
+        println!("{}\n", figures::quality_operating_points(&h));
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let system = args.get("system").unwrap_or("vpaas");
+    let kind = SystemKind::parse(system)
+        .ok_or_else(|| anyhow::anyhow!("unknown system {system:?}"))?;
+    let dataset = args.get_or("dataset", "drone");
+    let scale = args.get_f64("scale", figures::DEFAULT_SCALE)?;
+    let cfg = run_config(args)?;
+    let h = Harness::new()?;
+    let ds = datasets::by_name(dataset, scale)?;
+    let m = h.run(kind, &ds, &cfg)?;
+    let s = m.latency.summary();
+    let rows = vec![
+        vec!["f1_true".into(), format!("{:.4}", m.f1_true.f1())],
+        vec!["f1_golden".into(), format!("{:.4}", m.f1_golden.f1())],
+        vec!["wan_bytes".into(), format!("{:.0}", m.bandwidth.bytes)],
+        vec!["bandwidth_mbps".into(), format!("{:.3}", m.bandwidth.bps() / 1e6)],
+        vec!["cloud_cost_units".into(), format!("{:.0}", m.cost.units())],
+        vec!["latency_p50_s".into(), format!("{:.3}", s.p50)],
+        vec!["latency_p99_s".into(), format!("{:.3}", s.p99)],
+        vec!["chunks".into(), m.chunks.to_string()],
+        vec!["fog_regions".into(), m.fog_regions.to_string()],
+        vec!["human_labels".into(), m.labels_used.to_string()],
+    ];
+    println!(
+        "{} on {dataset} (scale {scale})\n{}",
+        kind.name(),
+        table(&["metric", "value"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_profile() -> Result<()> {
+    let h = Harness::new()?;
+    println!("{}", figures::fig4(&h)?);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use vpaas::serverless::VideoApp;
+    use vpaas::sim::video::{scene::SceneConfig, Video};
+    let cfg = match args.get("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::parse("[app]\npolicy = fog_when_disconnected\n")?,
+    };
+    let chunks = args.get_usize("chunks", 8)?;
+    let mut app = VideoApp::from_config(&cfg)?;
+    app.deploy_standard()?;
+    let p = app.params.clone();
+    let mut video = Video::new(
+        0,
+        SceneConfig {
+            grid: p.grid,
+            num_classes: p.num_classes,
+            density: 3.0,
+            speed: 0.4,
+            size_range: (1.0, 2.5),
+            class_skew: 0.6,
+            seed: args.get_u64("seed", 42)?,
+        },
+        chunks as f64 * 7.5 + 8.0,
+    );
+    for _ in 0..chunks {
+        let Some(chunk) = video.next_chunk() else { break };
+        let out = app.process_chunk(&chunk, 0.0)?;
+        println!(
+            "chunk {:>3}  labels {:>3}  done {:>8.2}s  {}",
+            chunk.chunk_idx,
+            out.per_frame.iter().map(Vec::len).sum::<usize>(),
+            out.done,
+            if out.fallback_used { "fog-fallback" } else { "cloud" }
+        );
+    }
+    println!("monitor: {}", app.monitor.status_line());
+    Ok(())
+}

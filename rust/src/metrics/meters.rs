@@ -1,0 +1,153 @@
+//! Resource meters: bandwidth, cloud cost, freshness latency, plus the
+//! per-run aggregate every pipeline returns.
+
+use crate::metrics::f1::F1Counts;
+use crate::util::stats::{Series, Summary};
+
+/// WAN bandwidth accounting (§VI-A: `b = Σ v_i / t`, normalized against
+/// the original-quality stream).
+#[derive(Debug, Clone, Default)]
+pub struct BandwidthMeter {
+    pub bytes: f64,
+    pub video_seconds: f64,
+}
+
+impl BandwidthMeter {
+    pub fn add(&mut self, bytes: f64) {
+        self.bytes += bytes;
+    }
+
+    pub fn add_video_time(&mut self, seconds: f64) {
+        self.video_seconds += seconds;
+    }
+
+    /// Average bits per second of wall video.
+    pub fn bps(&self) -> f64 {
+        if self.video_seconds == 0.0 {
+            return 0.0;
+        }
+        self.bytes * 8.0 / self.video_seconds
+    }
+}
+
+/// Serverless cloud billing (§VI-A: `c_F = p_F · n*`, pay per frame
+/// processed by each cloud model).
+#[derive(Debug, Clone, Default)]
+pub struct CostMeter {
+    /// Frame-invocations per cloud model.
+    pub detector_frames: u64,
+    pub sr_frames: u64,
+    pub trainer_batches: u64,
+}
+
+impl CostMeter {
+    /// Total billed frame-equivalents (each cloud model invocation on a
+    /// frame costs one unit; training batches bill like one frame each —
+    /// they share the same GPU, Fig. 13b).
+    pub fn units(&self) -> f64 {
+        (self.detector_frames + self.sr_frames + self.trainer_batches) as f64
+    }
+}
+
+/// Freshness latency tracker (§VI-A: object appears → object labeled).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyMeter {
+    pub freshness: Series,
+}
+
+impl LatencyMeter {
+    pub fn record(&mut self, seconds: f64) {
+        self.freshness.push(seconds.max(0.0));
+    }
+
+    pub fn summary(&self) -> Summary {
+        self.freshness.summary()
+    }
+}
+
+/// Everything a pipeline run produces, per dataset.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub system: String,
+    pub dataset: String,
+    /// Accuracy vs simulator ground truth.
+    pub f1_true: F1Counts,
+    /// Accuracy vs golden-config pseudo-GT (the paper's accounting).
+    pub f1_golden: F1Counts,
+    pub bandwidth: BandwidthMeter,
+    pub cost: CostMeter,
+    pub latency: LatencyMeter,
+    /// Chunks processed (for sanity checks).
+    pub chunks: u64,
+    /// Regions classified at the fog (VPaaS only).
+    pub fog_regions: u64,
+    /// Human labels consumed (HITL only).
+    pub labels_used: u64,
+}
+
+impl RunMetrics {
+    pub fn new(system: &str, dataset: &str) -> Self {
+        RunMetrics {
+            system: system.to_string(),
+            dataset: dataset.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Bandwidth normalized against a reference meter (MPEG original).
+    pub fn normalized_bandwidth(&self, reference: &BandwidthMeter) -> f64 {
+        if reference.bytes == 0.0 {
+            return 0.0;
+        }
+        self.bandwidth.bytes / reference.bytes
+    }
+
+    /// Cloud cost normalized against a reference run.
+    pub fn normalized_cost(&self, reference: &CostMeter) -> f64 {
+        if reference.units() == 0.0 {
+            return 0.0;
+        }
+        self.cost.units() / reference.units()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_bps() {
+        let mut b = BandwidthMeter::default();
+        b.add(1000.0);
+        b.add(250.0);
+        b.add_video_time(10.0);
+        assert!((b.bps() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_units_sum_models() {
+        let c = CostMeter { detector_frames: 10, sr_frames: 10, trainer_batches: 2 };
+        assert_eq!(c.units(), 22.0);
+    }
+
+    #[test]
+    fn latency_records_clamp_negative() {
+        let mut l = LatencyMeter::default();
+        l.record(-0.5);
+        l.record(1.0);
+        assert_eq!(l.summary().count, 2);
+        assert!(l.summary().min >= 0.0);
+    }
+
+    #[test]
+    fn normalization() {
+        let mut reference = BandwidthMeter::default();
+        reference.add(200.0);
+        let mut m = RunMetrics::new("vpaas", "drone");
+        m.bandwidth.add(50.0);
+        assert!((m.normalized_bandwidth(&reference) - 0.25).abs() < 1e-12);
+        let ref_cost = CostMeter { detector_frames: 100, ..Default::default() };
+        m.cost.detector_frames = 50;
+        assert!((m.normalized_cost(&ref_cost) - 0.5).abs() < 1e-12);
+    }
+}

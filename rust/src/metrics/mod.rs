@@ -1,0 +1,9 @@
+//! Evaluation metrics (§VI-A): F1 accuracy, bandwidth usage, cloud cost,
+//! and freshness latency — plus the table/figure reporters.
+
+pub mod f1;
+pub mod meters;
+pub mod report;
+
+pub use f1::{f1_score, match_boxes, F1Counts};
+pub use meters::{BandwidthMeter, CostMeter, LatencyMeter, RunMetrics};

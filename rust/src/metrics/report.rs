@@ -1,0 +1,86 @@
+//! Figure/table reporters: fixed-width text tables matching the paper's
+//! figures, printed by the bench harness and the `vpaas figures` CLI.
+
+use crate::metrics::meters::RunMetrics;
+
+/// Render a simple aligned table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&head, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 9-style row for one system on one dataset.
+pub fn fig9_row(m: &RunMetrics, reference: &RunMetrics) -> Vec<String> {
+    vec![
+        m.dataset.clone(),
+        m.system.clone(),
+        format!("{:.3}", m.normalized_bandwidth(&reference.bandwidth)),
+        format!("{:.3}", m.f1_true.f1()),
+        format!("{:.3}", m.f1_golden.f1()),
+    ]
+}
+
+/// Fig. 10-style row: normalized cost + latency percentiles.
+pub fn fig10_row(m: &RunMetrics, reference: &RunMetrics) -> Vec<String> {
+    let s = m.latency.summary();
+    vec![
+        m.dataset.clone(),
+        m.system.clone(),
+        format!("{:.3}", m.normalized_cost(&reference.cost)),
+        format!("{:.2}", s.p50),
+        format!("{:.2}", s.p90),
+        format!("{:.2}", s.p99),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = table(
+            &["sys", "f1"],
+            &[vec!["vpaas".into(), "0.91".into()], vec!["dds".into(), "0.90".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("sys"));
+        assert!(lines[2].starts_with("vpaas"));
+    }
+
+    #[test]
+    fn fig9_row_normalizes_against_reference() {
+        let mut reference = RunMetrics::new("mpeg", "drone");
+        reference.bandwidth.add(100.0);
+        let mut m = RunMetrics::new("vpaas", "drone");
+        m.bandwidth.add(10.0);
+        let row = fig9_row(&m, &reference);
+        assert_eq!(row[2], "0.100");
+    }
+}

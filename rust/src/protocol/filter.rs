@@ -1,0 +1,151 @@
+//! The §IV-B uncertain-region filter.
+//!
+//! After the cloud detector runs on the LOW-quality stream, its regions are
+//! split into:
+//!
+//! * **confident** — class confidence ≥ θ_cls: shipped back as final labels;
+//! * **uncertain** — the rest, kept only when (1) location confidence
+//!   ≥ θ_loc, (2) IoU against every confident box < θ_iou (not a duplicate
+//!   of something already recognized), and (3) region area ≤ θ_back of the
+//!   frame (giant regions are background). Their *coordinates* (bytes, not
+//!   pixels) go back to the fog for high-quality crop classification.
+
+use crate::metrics::f1::PredBox;
+
+#[derive(Debug, Clone, Copy)]
+pub struct FilterConfig {
+    pub theta_loc: f64,
+    pub theta_iou: f64,
+    /// Maximum region area as a fraction of the frame.
+    pub theta_back: f64,
+}
+
+impl Default for FilterConfig {
+    fn default() -> Self {
+        FilterConfig { theta_loc: 0.5, theta_iou: 0.3, theta_back: 0.25 }
+    }
+}
+
+/// Split detector regions into (confident labels, uncertain regions).
+pub fn split_regions(
+    regions: &[PredBox],
+    theta_cls: f64,
+    cfg: &FilterConfig,
+    grid: usize,
+) -> (Vec<PredBox>, Vec<PredBox>) {
+    let frame_area = (grid * grid) as f64;
+    let confident: Vec<PredBox> = regions
+        .iter()
+        .filter(|r| r.cls_conf >= theta_cls)
+        .copied()
+        .collect();
+    let uncertain = regions
+        .iter()
+        .filter(|r| r.cls_conf < theta_cls)
+        .filter(|r| r.loc_conf >= cfg.theta_loc)
+        .filter(|r| {
+            confident
+                .iter()
+                .all(|c| r.rect.iou(&c.rect) < cfg.theta_iou)
+        })
+        .filter(|r| (r.rect.area() as f64) / frame_area <= cfg.theta_back)
+        .copied()
+        .collect();
+    (confident, uncertain)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::video::scene::GtBox;
+
+    fn region(x0: usize, size: usize, class: usize, cls_conf: f64, loc_conf: f64) -> PredBox {
+        PredBox {
+            rect: GtBox { x0, y0: x0, x1: x0 + size - 1, y1: x0 + size - 1, class, id: 0 },
+            class,
+            cls_conf,
+            loc_conf,
+        }
+    }
+
+    fn cfg() -> FilterConfig {
+        FilterConfig::default()
+    }
+
+    #[test]
+    fn confident_regions_become_labels() {
+        let regions = vec![region(1, 2, 3, 0.9, 0.9), region(6, 2, 1, 0.4, 0.9)];
+        let (conf, unc) = split_regions(&regions, 0.7, &cfg(), 16);
+        assert_eq!(conf.len(), 1);
+        assert_eq!(conf[0].class, 3);
+        assert_eq!(unc.len(), 1);
+        assert_eq!(unc[0].class, 1);
+    }
+
+    #[test]
+    fn low_loc_conf_uncertain_regions_drop() {
+        let regions = vec![region(1, 2, 3, 0.4, 0.3)];
+        let (conf, unc) = split_regions(&regions, 0.7, &cfg(), 16);
+        assert!(conf.is_empty());
+        assert!(unc.is_empty());
+    }
+
+    #[test]
+    fn duplicates_of_confident_boxes_drop() {
+        // uncertain region heavily overlapping a confident one
+        let mut dup = region(1, 3, 2, 0.5, 0.9);
+        dup.rect = GtBox { x0: 1, y0: 1, x1: 3, y1: 3, class: 2, id: 0 };
+        let confident = PredBox {
+            rect: GtBox { x0: 1, y0: 1, x1: 3, y1: 3, class: 5, id: 0 },
+            class: 5,
+            cls_conf: 0.95,
+            loc_conf: 0.9,
+        };
+        let (conf, unc) = split_regions(&[confident, dup], 0.7, &cfg(), 16);
+        assert_eq!(conf.len(), 1);
+        assert!(unc.is_empty(), "duplicate region must be filtered");
+    }
+
+    #[test]
+    fn background_sized_regions_drop() {
+        // 9x9 = 81 cells of a 16x16 frame (256) = 31.6% > 25%
+        let big = region(0, 9, 0, 0.4, 0.9);
+        let (_, unc) = split_regions(&[big], 0.7, &cfg(), 16);
+        assert!(unc.is_empty());
+        // 6x6 = 36/256 = 14% passes
+        let ok = region(0, 6, 0, 0.4, 0.9);
+        let (_, unc) = split_regions(&[ok], 0.7, &cfg(), 16);
+        assert_eq!(unc.len(), 1);
+    }
+
+    #[test]
+    fn prop_split_is_a_partition_of_kept_regions() {
+        crate::util::prop::prop_check(100, 21, |g| {
+            let regions: Vec<PredBox> = (0..g.usize_in(0, 12))
+                .map(|_| {
+                    let x = g.usize_in(0, 12);
+                    let s = g.usize_in(1, 4);
+                    region(x.min(12), s, g.usize_in(0, 7), g.f64_range(0.0, 1.0), g.f64_range(0.0, 1.0))
+                })
+                .collect();
+            let (conf, unc) = split_regions(&regions, 0.7, &cfg(), 16);
+            if conf.len() + unc.len() > regions.len() {
+                return Err("split invented regions".into());
+            }
+            for c in &conf {
+                if c.cls_conf < 0.7 {
+                    return Err("unconfident region in confident set".into());
+                }
+            }
+            for u in &unc {
+                if u.cls_conf >= 0.7 {
+                    return Err("confident region in uncertain set".into());
+                }
+                if u.loc_conf < 0.5 {
+                    return Err("low-loc region kept".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,49 @@
+//! The High-and-Low video streaming protocol (§IV) — the paper's core
+//! system contribution.
+//!
+//! * [`post`] — turn raw detector head outputs into region proposals
+//!   (connected components over location-confident anchors).
+//! * [`filter`] — split regions into *confident* boxes (final labels) and
+//!   *uncertain* regions forwarded to the fog (θ_loc / θ_iou / θ_back).
+//! * [`coordinator`] — the per-chunk cloud-fog state machine gluing the
+//!   two ends together over the network model.
+
+pub mod coordinator;
+pub mod filter;
+pub mod post;
+
+pub use filter::{split_regions, FilterConfig};
+pub use post::regions_from_heads;
+
+use crate::sim::video::codec::Quality;
+
+/// Full protocol configuration (§VI-B operating points as defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct ProtocolConfig {
+    /// Quality of the fog→cloud low stream (first round).
+    pub low_quality: Quality,
+    /// Quality the fog crops from (the cached high-quality stream).
+    pub crop_quality: Quality,
+    pub filter: FilterConfig,
+    /// Classification confidence above which a cloud box is a final label.
+    pub theta_cls: f64,
+    /// Fog classifier's accept threshold for region crops.
+    pub theta_fog: f64,
+    /// Dynamic batching: max regions per batch / max queue wait (s).
+    pub max_batch: usize,
+    pub max_wait_s: f64,
+}
+
+impl Default for ProtocolConfig {
+    fn default() -> Self {
+        ProtocolConfig {
+            low_quality: Quality::LOW,
+            crop_quality: Quality::ORIGINAL,
+            filter: FilterConfig::default(),
+            theta_cls: 0.70,
+            theta_fog: 0.50,
+            max_batch: 16,
+            max_wait_s: 0.05,
+        }
+    }
+}

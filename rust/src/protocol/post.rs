@@ -1,0 +1,307 @@
+//! Detector post-processing: anchor heads → region proposals.
+//!
+//! The AOT detector emits per-anchor (location confidence, class
+//! probabilities, energy). The coordinator forms regions as connected
+//! components (4-connectivity) of anchors above θ_loc, then assigns each
+//! region the energy-weighted class distribution of its member anchors —
+//! the "two-stage" behaviour of the FasterRCNN stand-in.
+
+use crate::metrics::f1::PredBox;
+use crate::sim::video::scene::GtBox;
+
+/// Per-anchor head outputs for one frame.
+pub struct FrameHeads<'a> {
+    pub loc_conf: &'a [f32],
+    /// Row-major `[A, K]`.
+    pub cls_prob: &'a [f32],
+    pub energy: &'a [f32],
+    pub grid: usize,
+    pub num_classes: usize,
+}
+
+/// Form region proposals from one frame's head outputs.
+pub fn regions_from_heads(h: &FrameHeads<'_>, theta_loc: f64) -> Vec<PredBox> {
+    let g = h.grid;
+    let a = g * g;
+    assert_eq!(h.loc_conf.len(), a);
+    assert_eq!(h.energy.len(), a);
+    assert_eq!(h.cls_prob.len(), a * h.num_classes);
+
+    let mut visited = vec![false; a];
+    let mut out = Vec::new();
+    for start in 0..a {
+        if visited[start] || (h.loc_conf[start] as f64) < theta_loc {
+            continue;
+        }
+        // BFS over location-confident neighbours.
+        let mut stack = vec![start];
+        visited[start] = true;
+        let mut cells = Vec::new();
+        while let Some(c) = stack.pop() {
+            cells.push(c);
+            let (x, y) = (c % g, c / g);
+            let mut push = |nc: usize| {
+                if !visited[nc] && (h.loc_conf[nc] as f64) >= theta_loc {
+                    visited[nc] = true;
+                    stack.push(nc);
+                }
+            };
+            if x > 0 {
+                push(c - 1);
+            }
+            if x + 1 < g {
+                push(c + 1);
+            }
+            if y > 0 {
+                push(c - g);
+            }
+            if y + 1 < g {
+                push(c + g);
+            }
+        }
+        // Dense scenes merge neighbouring objects into one connected
+        // component; split it by the per-anchor argmax class (a real
+        // two-stage detector separates proposals per class before NMS).
+        // Each object's cells share one appearance, so they agree on an
+        // argmax; neighbouring objects usually disagree.
+        for part in split_by_class(&cells, h) {
+            out.push(region_from_cells(&part, h));
+        }
+    }
+    out
+}
+
+/// Split a connected component into contiguous same-argmax-class groups,
+/// then absorb singleton fragments (per-cell noise flips) into an adjacent
+/// group.
+fn split_by_class(cells: &[usize], h: &FrameHeads<'_>) -> Vec<Vec<usize>> {
+    if cells.len() <= 1 {
+        return vec![cells.to_vec()];
+    }
+    let g = h.grid;
+    let k = h.num_classes;
+    let in_comp: std::collections::BTreeSet<usize> = cells.iter().copied().collect();
+    let argmax = |c: usize| -> usize {
+        let row = &h.cls_prob[c * k..(c + 1) * k];
+        let mut best = (0usize, f32::MIN);
+        for (j, &p) in row.iter().enumerate() {
+            if p > best.1 {
+                best = (j, p);
+            }
+        }
+        best.0
+    };
+    let neighbours = |c: usize| {
+        let (x, y) = (c % g, c / g);
+        let mut n = Vec::with_capacity(4);
+        if x > 0 {
+            n.push(c - 1);
+        }
+        if x + 1 < g {
+            n.push(c + 1);
+        }
+        if y > 0 {
+            n.push(c - g);
+        }
+        if y + 1 < g {
+            n.push(c + g);
+        }
+        n
+    };
+    // contiguous same-class flood fill within the component
+    let mut group_of: std::collections::BTreeMap<usize, usize> = std::collections::BTreeMap::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for &start in cells {
+        if group_of.contains_key(&start) {
+            continue;
+        }
+        let label = argmax(start);
+        let gi = groups.len();
+        let mut stack = vec![start];
+        group_of.insert(start, gi);
+        let mut members = Vec::new();
+        while let Some(c) = stack.pop() {
+            members.push(c);
+            for n in neighbours(c) {
+                if in_comp.contains(&n) && !group_of.contains_key(&n) && argmax(n) == label {
+                    group_of.insert(n, gi);
+                    stack.push(n);
+                }
+            }
+        }
+        groups.push(members);
+    }
+    if groups.len() <= 1 {
+        return groups;
+    }
+    // absorb singleton fragments into an adjacent larger group
+    let mut absorbed: Vec<Option<usize>> = vec![None; groups.len()];
+    for (gi, members) in groups.iter().enumerate() {
+        if members.len() == 1 {
+            let c = members[0];
+            if let Some(&n) = neighbours(c)
+                .iter()
+                .find(|n| in_comp.contains(n) && group_of[n] != gi && groups[group_of[n]].len() > 1)
+            {
+                absorbed[gi] = Some(group_of[&n]);
+            }
+        }
+    }
+    let mut merged: Vec<Vec<usize>> = vec![Vec::new(); groups.len()];
+    for (gi, members) in groups.into_iter().enumerate() {
+        let target = absorbed[gi].unwrap_or(gi);
+        merged[target].extend(members);
+    }
+    merged.into_iter().filter(|m| !m.is_empty()).collect()
+}
+
+fn region_from_cells(cells: &[usize], h: &FrameHeads<'_>) -> PredBox {
+    let g = h.grid;
+    let k = h.num_classes;
+    let (mut x0, mut y0, mut x1, mut y1) = (usize::MAX, usize::MAX, 0, 0);
+    let mut class_mass = vec![0.0f64; k];
+    let mut total_energy = 0.0f64;
+    let mut max_loc = 0.0f64;
+    for &c in cells {
+        let (x, y) = (c % g, c / g);
+        x0 = x0.min(x);
+        y0 = y0.min(y);
+        x1 = x1.max(x);
+        y1 = y1.max(y);
+        let e = h.energy[c].max(1e-6) as f64;
+        total_energy += e;
+        max_loc = max_loc.max(h.loc_conf[c] as f64);
+        for j in 0..k {
+            class_mass[j] += e * h.cls_prob[c * k + j] as f64;
+        }
+    }
+    let mut best = (0usize, f64::NEG_INFINITY);
+    for (j, &m) in class_mass.iter().enumerate() {
+        if m > best.1 {
+            best = (j, m);
+        }
+    }
+    let cls_conf = if total_energy > 0.0 { best.1 / total_energy } else { 0.0 };
+    PredBox {
+        rect: GtBox { x0, y0, x1, y1, class: best.0, id: 0 },
+        class: best.0,
+        cls_conf,
+        loc_conf: max_loc,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Owned {
+        loc: Vec<f32>,
+        cls: Vec<f32>,
+        energy: Vec<f32>,
+    }
+
+    fn empty(grid: usize, k: usize) -> Owned {
+        Owned {
+            loc: vec![0.0; grid * grid],
+            cls: vec![1.0 / k as f32; grid * grid * k],
+            energy: vec![0.01; grid * grid],
+        }
+    }
+
+    fn heads<'a>(o: &'a Owned, grid: usize, k: usize) -> FrameHeads<'a> {
+        FrameHeads { loc_conf: &o.loc, cls_prob: &o.cls, energy: &o.energy, grid, num_classes: k }
+    }
+
+    fn paint(o: &mut Owned, _grid: usize, k: usize, cells: &[usize], class: usize, conf: f32) {
+        for &c in cells {
+            o.loc[c] = 0.9;
+            o.energy[c] = 1.0;
+            for j in 0..k {
+                o.cls[c * k + j] = if j == class { conf } else { (1.0 - conf) / (k - 1) as f32 };
+            }
+        }
+    }
+
+    #[test]
+    fn empty_frame_yields_no_regions() {
+        let o = empty(8, 4);
+        assert!(regions_from_heads(&heads(&o, 8, 4), 0.5).is_empty());
+    }
+
+    #[test]
+    fn single_blob_forms_one_region() {
+        let (g, k) = (8, 4);
+        let mut o = empty(g, k);
+        // 2x2 blob at (2,2)..(3,3): cells 18,19,26,27
+        paint(&mut o, g, k, &[18, 19, 26, 27], 2, 0.8);
+        let regions = regions_from_heads(&heads(&o, g, k), 0.5);
+        assert_eq!(regions.len(), 1);
+        let r = &regions[0];
+        assert_eq!((r.rect.x0, r.rect.y0, r.rect.x1, r.rect.y1), (2, 2, 3, 3));
+        assert_eq!(r.class, 2);
+        assert!(r.cls_conf > 0.7);
+        // painted with 0.9f32, which sits just below 0.9 in f64
+        assert!(r.loc_conf >= 0.89);
+    }
+
+    #[test]
+    fn disjoint_blobs_form_separate_regions() {
+        let (g, k) = (8, 4);
+        let mut o = empty(g, k);
+        paint(&mut o, g, k, &[0], 1, 0.9);
+        paint(&mut o, g, k, &[63], 3, 0.9);
+        let mut regions = regions_from_heads(&heads(&o, g, k), 0.5);
+        regions.sort_by_key(|r| r.rect.x0);
+        assert_eq!(regions.len(), 2);
+        assert_eq!(regions[0].class, 1);
+        assert_eq!(regions[1].class, 3);
+    }
+
+    #[test]
+    fn diagonal_cells_are_not_connected() {
+        let (g, k) = (8, 4);
+        let mut o = empty(g, k);
+        paint(&mut o, g, k, &[0, 9], 1, 0.9); // (0,0) and (1,1)
+        let regions = regions_from_heads(&heads(&o, g, k), 0.5);
+        assert_eq!(regions.len(), 2);
+    }
+
+    #[test]
+    fn touching_blobs_of_different_class_are_split() {
+        // adjacent cells with different argmax classes form one connected
+        // component but must be split into two regions (two objects)
+        let (g, k) = (8, 4);
+        let mut o = empty(g, k);
+        paint(&mut o, g, k, &[10, 11], 1, 0.9);
+        paint(&mut o, g, k, &[12, 13], 2, 0.9);
+        let mut regions = regions_from_heads(&heads(&o, g, k), 0.5);
+        regions.sort_by_key(|r| r.rect.x0);
+        assert_eq!(regions.len(), 2);
+        assert_eq!(regions[0].class, 1);
+        assert_eq!(regions[1].class, 2);
+        assert_eq!((regions[0].rect.x0, regions[0].rect.x1), (2, 3));
+    }
+
+    #[test]
+    fn singleton_class_flip_is_absorbed() {
+        // one noisy cell inside a blob flips class; it must not become its
+        // own 1-cell region
+        let (g, k) = (8, 4);
+        let mut o = empty(g, k);
+        paint(&mut o, g, k, &[10, 11, 12, 18, 19, 20], 1, 0.9);
+        paint(&mut o, g, k, &[11], 3, 0.9); // flip the middle cell
+        let regions = regions_from_heads(&heads(&o, g, k), 0.5);
+        assert_eq!(regions.len(), 1, "{regions:?}");
+        assert_eq!(regions[0].class, 1);
+    }
+
+    #[test]
+    fn theta_loc_gates_regions() {
+        let (g, k) = (8, 4);
+        let mut o = empty(g, k);
+        paint(&mut o, g, k, &[20], 0, 0.9);
+        o.loc[20] = 0.4;
+        assert!(regions_from_heads(&heads(&o, g, k), 0.5).is_empty());
+        assert_eq!(regions_from_heads(&heads(&o, g, k), 0.3).len(), 1);
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT artifacts and execute them on the request path.
+//!
+//! * [`engine`] — single-threaded owner of the PJRT CPU client: parses HLO
+//!   text (`HloModuleProto::from_text_file`), compiles, caches executables,
+//!   executes with f32 tensors.
+//! * [`service`] — a dedicated inference thread + channel front-end, because
+//!   the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`). Every
+//!   simulated device (cloud executor, fog executor) holds a cheap clonable
+//!   [`service::InferenceHandle`].
+//!
+//! Python never appears here: artifacts were lowered once at build time.
+
+pub mod engine;
+pub mod service;
+
+pub use engine::Engine;
+pub use service::{InferenceHandle, InferenceService};

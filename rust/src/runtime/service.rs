@@ -1,0 +1,180 @@
+//! Threaded inference front-end.
+//!
+//! `PjRtClient` is `Rc`-based and cannot cross threads, so one dedicated
+//! thread owns the [`Engine`] and serves requests from an mpsc channel —
+//! the same shape as a real serving runtime's executor thread. Handles are
+//! cheap to clone and `Send`, so the cloud executor pool, the fog executor
+//! and the auto-trainer can all share one engine (the paper co-locates
+//! training and inference on the same accelerator — Fig. 13b).
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::interchange::Tensor;
+use crate::runtime::engine::{Engine, ModelStats};
+
+enum Request {
+    Infer {
+        model: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::SyncSender<Result<Vec<Tensor>>>,
+    },
+    Preload {
+        model: String,
+        reply: mpsc::SyncSender<Result<()>>,
+    },
+    Stats {
+        model: String,
+        reply: mpsc::SyncSender<ModelStats>,
+    },
+    Shutdown,
+}
+
+/// The owning service; keep it alive as long as handles are in use.
+pub struct InferenceService {
+    tx: mpsc::Sender<Request>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// Clonable, `Send` handle for submitting inference requests.
+#[derive(Clone)]
+pub struct InferenceHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl InferenceService {
+    /// Spawn the engine thread over the repo's artifacts.
+    pub fn start() -> Result<Self> {
+        // Build the engine on the caller thread first so startup errors
+        // (missing artifacts) surface synchronously...
+        let dir = crate::interchange::artifacts_dir()?;
+        let manifest = crate::interchange::Manifest::load(&dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let worker = std::thread::Builder::new()
+            .name("vpaas-inference".into())
+            .spawn(move || {
+                // ...but construct the non-Send PJRT client on its own thread.
+                let mut engine = match Engine::new(manifest) {
+                    Ok(e) => e,
+                    Err(err) => {
+                        // Fail every request with the construction error.
+                        for req in rx {
+                            match req {
+                                Request::Infer { reply, .. } => {
+                                    let _ = reply.send(Err(anyhow!("engine init failed: {err}")));
+                                }
+                                Request::Preload { reply, .. } => {
+                                    let _ = reply.send(Err(anyhow!("engine init failed: {err}")));
+                                }
+                                Request::Stats { reply, .. } => {
+                                    let _ = reply.send(ModelStats::default());
+                                }
+                                Request::Shutdown => break,
+                            }
+                        }
+                        return;
+                    }
+                };
+                for req in rx {
+                    match req {
+                        Request::Infer { model, inputs, reply } => {
+                            let _ = reply.send(engine.run(&model, &inputs));
+                        }
+                        Request::Preload { model, reply } => {
+                            let _ = reply.send(engine.load(&model));
+                        }
+                        Request::Stats { model, reply } => {
+                            let _ = reply.send(engine.stats(&model));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        Ok(InferenceService { tx, worker: Some(worker) })
+    }
+
+    pub fn handle(&self) -> InferenceHandle {
+        InferenceHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl InferenceHandle {
+    /// Synchronous inference (blocks the calling thread until done).
+    pub fn infer(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Infer { model: model.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("inference service is gone"))?;
+        rx.recv().map_err(|_| anyhow!("inference service dropped request"))?
+    }
+
+    /// Compile a model ahead of first use.
+    pub fn preload(&self, model: &str) -> Result<()> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Preload { model: model.to_string(), reply })
+            .map_err(|_| anyhow!("inference service is gone"))?;
+        rx.recv().map_err(|_| anyhow!("inference service dropped request"))?
+    }
+
+    pub fn stats(&self, model: &str) -> Result<ModelStats> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Stats { model: model.to_string(), reply })
+            .map_err(|_| anyhow!("inference service is gone"))?;
+        rx.recv().map_err(|_| anyhow!("inference service dropped request"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_inference_from_other_threads() {
+        let svc = InferenceService::start().unwrap();
+        let h = svc.handle();
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    let x = Tensor::zeros(vec![1, 256, 24]);
+                    h.infer("detector_b1", vec![x]).unwrap()
+                })
+            })
+            .collect();
+        for t in threads {
+            let out = t.join().unwrap();
+            assert_eq!(out.len(), 3);
+        }
+        assert_eq!(h.stats("detector_b1").unwrap().invocations, 4);
+    }
+
+    #[test]
+    fn preload_compiles() {
+        let svc = InferenceService::start().unwrap();
+        let h = svc.handle();
+        h.preload("sr_b4").unwrap();
+        let s = h.stats("sr_b4").unwrap();
+        assert!(s.compile_seconds > 0.0);
+        assert_eq!(s.invocations, 0);
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let svc = InferenceService::start().unwrap();
+        let h = svc.handle();
+        assert!(h.infer("nope", vec![]).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! The user-facing pipeline builder — the Rust equivalent of the paper's
+//! Fig. 14 Python snippet:
+//!
+//! ```text
+//! model_zoo.register(FaceReg, "face_reg_small")
+//! fog_service   = fog_server.dispatch(FaceRegService("face_reg_small"))
+//! cloud_service = cloud_server.dispatch(FaceRegService("face_reg_big"))
+//! client = client(config = "example.yml")
+//! client.run(cloud_service, fog_service)
+//! ```
+//!
+//! `VideoApp` wires the zoo, dispatcher, policy manager and coordinator
+//! into one object; `examples/retail_store.rs` walks the same start-to-
+//! finish flow the paper's usability case study describes.
+
+use anyhow::{anyhow, Result};
+
+use crate::cloud::{CloudConfig, CloudServer};
+use crate::fog::FogNode;
+use crate::hitl::IncrementalLearner;
+use crate::metrics::meters::RunMetrics;
+use crate::protocol::coordinator::{ChunkOutcome, Coordinator};
+use crate::protocol::ProtocolConfig;
+use crate::runtime::{InferenceHandle, InferenceService};
+use crate::serverless::dispatcher::Dispatcher;
+use crate::serverless::monitor::GlobalMonitor;
+use crate::serverless::policy::{PolicyInput, PolicyManager, Route};
+use crate::serverless::registry::FunctionRegistry;
+use crate::sim::human::{Annotator, AnnotatorConfig};
+use crate::sim::net::Topology;
+use crate::sim::params::SimParams;
+use crate::sim::video::Chunk;
+use crate::util::config::Config;
+use crate::zoo::ModelZoo;
+
+/// A fully wired video-analytics application.
+pub struct VideoApp {
+    pub params: std::sync::Arc<SimParams>,
+    pub zoo: ModelZoo,
+    pub functions: FunctionRegistry,
+    pub policies: PolicyManager,
+    pub monitor: GlobalMonitor,
+    pub metrics: RunMetrics,
+    svc: InferenceService,
+    coordinator: Coordinator,
+    cloud: CloudServer,
+    fog: FogNode,
+    topo: Topology,
+    annotator: Annotator,
+    policy_name: String,
+    chunks_processed: u64,
+}
+
+impl VideoApp {
+    /// Build an app from a policy/config file (Fig. 14's `example.yml`).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let svc = InferenceService::start()?;
+        let params = SimParams::load()?;
+        let protocol = ProtocolConfig {
+            theta_cls: cfg.f64_or("protocol", "theta_cls", 0.70)?,
+            theta_fog: cfg.f64_or("protocol", "theta_fog", 0.50)?,
+            ..ProtocolConfig::default()
+        };
+        let wan = cfg.f64_or("net", "wan_mbps", 15.0)?;
+        let budget = cfg.f64_or("hitl", "budget", 0.2)?;
+        let policy_name = cfg.str_or("app", "policy", "fog_when_disconnected").to_string();
+        let handle = svc.handle();
+        let learner = IncrementalLearner::new(
+            handle.clone(),
+            params.cls_last0.clone(),
+            params.il_batch,
+            params.num_classes,
+        );
+        let mut coordinator = Coordinator::new(protocol, learner);
+        coordinator.hitl_enabled = cfg.bool_or("hitl", "enabled", true)?;
+        let cloud = CloudServer::new(
+            handle.clone(),
+            CloudConfig { autoscale: cfg.bool_or("cloud", "autoscale", false)?, ..Default::default() },
+            params.grid,
+            params.num_classes,
+            params.feat_dim,
+        );
+        let fog = FogNode::new(handle, params.cls_last0.clone(), params.feat_dim, params.num_classes);
+        let annotator = Annotator::new(AnnotatorConfig {
+            budget_frac: budget,
+            num_classes: params.num_classes,
+            ..Default::default()
+        });
+        let policies = PolicyManager::with_standard_policies();
+        policies.get(&policy_name).map_err(|e| anyhow!("config [app] policy: {e}"))?;
+        Ok(VideoApp {
+            params,
+            zoo: ModelZoo::with_standard_models(),
+            functions: FunctionRegistry::with_standard_functions(),
+            policies,
+            monitor: GlobalMonitor::new(),
+            metrics: RunMetrics::new("vpaas", "app"),
+            svc,
+            coordinator,
+            cloud,
+            fog,
+            topo: Topology::new(wan, 0xA99),
+            annotator,
+            policy_name,
+            chunks_processed: 0,
+        })
+    }
+
+    pub fn handle(&self) -> InferenceHandle {
+        self.svc.handle()
+    }
+
+    /// Deploy the standard model set (detector → cloud; classifier +
+    /// fallback → fog), as the dashboard's "dispatch" step would.
+    pub fn deploy_standard(&mut self) -> Result<()> {
+        let d = Dispatcher::new(self.svc.handle());
+        d.deploy_cloud(&mut self.zoo, "faster_rcnn_101")?;
+        d.deploy_fog(&mut self.zoo, &mut self.fog.cache, "ova_classifier")?;
+        d.deploy_fog(&mut self.zoo, &mut self.fog.cache, "yolo_lite")?;
+        Ok(())
+    }
+
+    /// Inject a cloud outage (demo / fault-tolerance testing).
+    pub fn inject_cloud_outage(&mut self, start: f64, end: f64) {
+        self.topo.cloud_outage(start, end);
+    }
+
+    /// Process one chunk under the configured policy.
+    pub fn process_chunk(&mut self, chunk: &Chunk, t_offset: f64) -> Result<ChunkOutcome> {
+        let p = self.params.clone();
+        let phi = p.drift_phi(chunk.chunk_idx as f64);
+        let policy = self.policies.get(&self.policy_name)?;
+        let arrival = t_offset + chunk.t_capture + chunk.duration();
+        let input = PolicyInput {
+            wan_wait_s: 0.0,
+            wan_up: !self.topo.wan_up.is_down(arrival),
+            cloud_wait_s: self.cloud.queue_wait(),
+            fog_backlog_s: 0.0,
+        };
+        let outcome = match policy(input) {
+            Route::Cloud => self.coordinator.process_chunk(
+                chunk,
+                phi,
+                t_offset,
+                &p,
+                &mut self.topo,
+                &mut self.cloud,
+                &mut self.fog,
+                &mut self.annotator,
+                &mut self.metrics,
+            )?,
+            Route::Fog => self.coordinator.process_chunk_fog_only(
+                chunk,
+                phi,
+                t_offset,
+                &p,
+                &mut self.fog,
+                &mut self.metrics,
+                arrival,
+            )?,
+        };
+        self.chunks_processed += 1;
+        self.monitor.count("chunks", 1);
+        self.monitor.gauge("gpus", outcome.done, self.cloud.gpus() as f64);
+        self.monitor
+            .latency("freshness", outcome.done - arrival + chunk.duration());
+        Ok(outcome)
+    }
+
+    pub fn chunks_processed(&self) -> u64 {
+        self.chunks_processed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::video::{Video, scene::SceneConfig};
+
+    fn app() -> VideoApp {
+        let cfg = Config::parse("[app]\npolicy = fog_when_disconnected\n[hitl]\nbudget = 0.3\n").unwrap();
+        let mut app = VideoApp::from_config(&cfg).unwrap();
+        app.deploy_standard().unwrap();
+        app
+    }
+
+    fn video(p: &SimParams) -> Video {
+        Video::new(
+            0,
+            SceneConfig {
+                grid: p.grid,
+                num_classes: p.num_classes,
+                density: 3.0,
+                speed: 0.4,
+                size_range: (1.0, 2.0),
+                class_skew: 0.5,
+                seed: 77,
+            },
+            15.0,
+        )
+    }
+
+    #[test]
+    fn app_processes_chunks_end_to_end() {
+        let mut a = app();
+        let mut v = video(&a.params.clone());
+        let chunk = v.next_chunk().unwrap();
+        let out = a.process_chunk(&chunk, 0.0).unwrap();
+        assert!(!out.fallback_used);
+        assert!(!out.per_frame.is_empty());
+        assert_eq!(a.chunks_processed(), 1);
+        assert_eq!(a.monitor.counter("chunks"), 1);
+    }
+
+    #[test]
+    fn policy_routes_to_fog_during_outage() {
+        let mut a = app();
+        a.inject_cloud_outage(0.0, 1e9);
+        let mut v = video(&a.params.clone());
+        let chunk = v.next_chunk().unwrap();
+        let out = a.process_chunk(&chunk, 0.0).unwrap();
+        assert!(out.fallback_used);
+        assert_eq!(a.metrics.bandwidth.bytes, 0.0);
+    }
+
+    #[test]
+    fn bad_policy_in_config_is_rejected() {
+        let cfg = Config::parse("[app]\npolicy = nonexistent\n").unwrap();
+        assert!(VideoApp::from_config(&cfg).is_err());
+    }
+}

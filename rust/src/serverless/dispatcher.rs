@@ -1,0 +1,76 @@
+//! Dispatcher (§III-D): deploys registered models/functions to cloud and
+//! fog nodes — preloads artifacts into the shared engine, installs entries
+//! into the fog model cache, and records placements in the zoo.
+
+use anyhow::Result;
+
+use crate::fog::ModelCache;
+use crate::runtime::InferenceHandle;
+use crate::zoo::{ModelZoo, Placement};
+
+pub struct Dispatcher {
+    handle: InferenceHandle,
+}
+
+impl Dispatcher {
+    pub fn new(handle: InferenceHandle) -> Self {
+        Dispatcher { handle }
+    }
+
+    /// Deploy a zoo model to the cloud: compile all its batch buckets ahead
+    /// of traffic and record the placement.
+    pub fn deploy_cloud(&self, zoo: &mut ModelZoo, name: &str) -> Result<()> {
+        let entry = zoo.latest(name)?.clone();
+        for &b in &entry.batch_buckets {
+            self.handle.preload(&entry.artifact_for(b)?)?;
+        }
+        if entry.batch_buckets.is_empty() {
+            // single-shape artifact (e.g. il_step)
+            self.handle.preload(&entry.artifact_prefix)?;
+        }
+        zoo.place(name, Placement::Cloud)?;
+        Ok(())
+    }
+
+    /// Dispatch a zoo model to a fog node's model cache.
+    pub fn deploy_fog(&self, zoo: &mut ModelZoo, cache: &mut ModelCache, name: &str) -> Result<()> {
+        let entry = zoo.latest(name)?.clone();
+        for &b in &entry.batch_buckets {
+            self.handle.preload(&entry.artifact_for(b)?)?;
+        }
+        cache.install(&entry.name, entry.version as u64);
+        zoo.place(name, Placement::Fog)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::InferenceService;
+
+    #[test]
+    fn deploys_standard_models() {
+        let svc = InferenceService::start().unwrap();
+        let d = Dispatcher::new(svc.handle());
+        let mut zoo = ModelZoo::with_standard_models();
+        let mut cache = ModelCache::new(4);
+        d.deploy_cloud(&mut zoo, "faster_rcnn_101").unwrap();
+        d.deploy_fog(&mut zoo, &mut cache, "ova_classifier").unwrap();
+        d.deploy_fog(&mut zoo, &mut cache, "yolo_lite").unwrap();
+        assert!(cache.contains("ova_classifier"));
+        assert!(cache.contains("yolo_lite"));
+        assert_eq!(zoo.latest("faster_rcnn_101").unwrap().placements, vec![Placement::Cloud]);
+        // artifacts actually compiled
+        assert!(svc.handle().stats("detector_b16").unwrap().compile_seconds > 0.0);
+        assert!(svc.handle().stats("classifier_b4").unwrap().compile_seconds > 0.0);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let svc = InferenceService::start().unwrap();
+        let d = Dispatcher::new(svc.handle());
+        let mut zoo = ModelZoo::new();
+        assert!(d.deploy_cloud(&mut zoo, "ghost").is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! The serverless stateful backend (Fig. 3, §III-D): the platform surface
+//! users program against (Fig. 14).
+//!
+//! * [`registry`] — function manager: register video-processing functions
+//!   (decode, resize, inference, ...) with typed signatures.
+//! * [`policy`] — policy manager: named scheduling policies (e.g. "monitor
+//!   congestion, fall back to fog") selectable per deployment.
+//! * [`dispatcher`] — deploys functions/models to cloud or fog nodes and
+//!   records placements in the zoo.
+//! * [`monitor`] — the global monitor: runtime gauges every component
+//!   reports into; feeds the provisioner and the dashboards.
+//! * [`app`] — the user-facing pipeline builder: the Fig. 14 code example
+//!   maps 1:1 onto this API (see `examples/retail_store.rs`).
+
+pub mod app;
+pub mod dispatcher;
+pub mod monitor;
+pub mod policy;
+pub mod registry;
+
+pub use app::VideoApp;
+pub use dispatcher::Dispatcher;
+pub use monitor::GlobalMonitor;
+pub use policy::{Policy, PolicyManager};
+pub use registry::{FunctionKind, FunctionRegistry};

@@ -1,0 +1,144 @@
+//! Global monitor (§III-D): runtime gauges and counters every component
+//! reports into; the provisioner, the dashboard and Fig. 13b/16 read from
+//! here.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::{Ewma, Series};
+
+/// A timestamped gauge track (virtual time, value).
+#[derive(Debug, Clone, Default)]
+pub struct Track {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Track {
+    pub fn record(&mut self, t: f64, v: f64) {
+        self.points.push((t, v));
+    }
+
+    pub fn latest(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    /// Mean value within a time window.
+    pub fn window_mean(&self, from: f64, to: f64) -> Option<f64> {
+        let vals: Vec<f64> = self
+            .points
+            .iter()
+            .filter(|&&(t, _)| t >= from && t < to)
+            .map(|&(_, v)| v)
+            .collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct GlobalMonitor {
+    gauges: BTreeMap<String, Track>,
+    counters: BTreeMap<String, u64>,
+    latencies: BTreeMap<String, Series>,
+    load: Ewma,
+}
+
+impl GlobalMonitor {
+    pub fn new() -> Self {
+        GlobalMonitor { load: Ewma::new(0.2), ..Default::default() }
+    }
+
+    pub fn gauge(&mut self, name: &str, t: f64, v: f64) {
+        self.gauges.entry(name.to_string()).or_default().record(t, v);
+        if name == "load" {
+            self.load.update(v);
+        }
+    }
+
+    pub fn count(&mut self, name: &str, n: u64) {
+        *self.counters.entry(name.to_string()).or_default() += n;
+    }
+
+    pub fn latency(&mut self, name: &str, seconds: f64) {
+        self.latencies.entry(name.to_string()).or_default().push(seconds.max(0.0));
+    }
+
+    pub fn track(&self, name: &str) -> Option<&Track> {
+        self.gauges.get(name)
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn latency_summary(&self, name: &str) -> Option<crate::util::stats::Summary> {
+        self.latencies.get(name).map(|s| s.summary())
+    }
+
+    pub fn smoothed_load(&self) -> f64 {
+        self.load.get().unwrap_or(0.0)
+    }
+
+    /// Render a one-line status (the "dashboard").
+    pub fn status_line(&self) -> String {
+        let mut parts = Vec::new();
+        for (name, track) in &self.gauges {
+            if let Some(v) = track.latest() {
+                parts.push(format!("{name}={v:.3}"));
+            }
+        }
+        for (name, c) in &self.counters {
+            parts.push(format!("{name}={c}"));
+        }
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauges_and_counters() {
+        let mut m = GlobalMonitor::new();
+        m.gauge("gpu_util", 1.0, 0.5);
+        m.gauge("gpu_util", 2.0, 0.7);
+        m.count("chunks", 3);
+        m.count("chunks", 2);
+        assert_eq!(m.track("gpu_util").unwrap().latest(), Some(0.7));
+        assert_eq!(m.counter("chunks"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn window_mean() {
+        let mut t = Track::default();
+        t.record(0.0, 1.0);
+        t.record(1.0, 3.0);
+        t.record(5.0, 100.0);
+        assert_eq!(t.window_mean(0.0, 2.0), Some(2.0));
+        assert_eq!(t.window_mean(10.0, 20.0), None);
+    }
+
+    #[test]
+    fn latency_summaries() {
+        let mut m = GlobalMonitor::new();
+        for v in [0.1, 0.2, 0.3] {
+            m.latency("freshness", v);
+        }
+        let s = m.latency_summary("freshness").unwrap();
+        assert_eq!(s.count, 3);
+        assert!((s.mean - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn status_line_mentions_everything() {
+        let mut m = GlobalMonitor::new();
+        m.gauge("gpus", 0.0, 2.0);
+        m.count("chunks", 7);
+        let line = m.status_line();
+        assert!(line.contains("gpus=2.000") && line.contains("chunks=7"));
+    }
+}

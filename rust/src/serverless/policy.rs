@@ -1,0 +1,113 @@
+//! Policy manager (§III-D): named scheduling policies users register and
+//! select per deployment — e.g. "send to cloud unless the WAN is congested,
+//! else process at the fog" (the Fig. 14 usability example).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Inputs a policy decision sees each chunk.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyInput {
+    /// Smoothed WAN queue wait (seconds).
+    pub wan_wait_s: f64,
+    /// Is the WAN currently usable?
+    pub wan_up: bool,
+    /// Smoothed cloud queue wait (seconds).
+    pub cloud_wait_s: f64,
+    /// Fog GPU backlog (seconds).
+    pub fog_backlog_s: f64,
+}
+
+/// Where the next chunk should be processed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Full High-and-Low protocol via the cloud.
+    Cloud,
+    /// Process entirely at the fog (fallback / offload).
+    Fog,
+}
+
+/// A scheduling policy: chunk context -> route.
+pub type Policy = fn(PolicyInput) -> Route;
+
+/// Built-in policies.
+pub fn always_cloud(_: PolicyInput) -> Route {
+    Route::Cloud
+}
+
+pub fn fog_when_disconnected(i: PolicyInput) -> Route {
+    if i.wan_up {
+        Route::Cloud
+    } else {
+        Route::Fog
+    }
+}
+
+pub fn latency_aware(i: PolicyInput) -> Route {
+    if !i.wan_up || i.wan_wait_s + i.cloud_wait_s > 2.0 + i.fog_backlog_s {
+        Route::Fog
+    } else {
+        Route::Cloud
+    }
+}
+
+#[derive(Default)]
+pub struct PolicyManager {
+    policies: BTreeMap<String, Policy>,
+}
+
+impl PolicyManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, name: &str, policy: Policy) {
+        self.policies.insert(name.to_string(), policy);
+    }
+
+    pub fn get(&self, name: &str) -> Result<Policy> {
+        self.policies
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("policy {name:?} not registered"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.policies.keys().map(|s| s.as_str())
+    }
+
+    pub fn with_standard_policies() -> Self {
+        let mut m = Self::new();
+        m.register("always_cloud", always_cloud);
+        m.register("fog_when_disconnected", fog_when_disconnected);
+        m.register("latency_aware", latency_aware);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(wan_up: bool, wan_wait: f64) -> PolicyInput {
+        PolicyInput { wan_wait_s: wan_wait, wan_up, cloud_wait_s: 0.0, fog_backlog_s: 0.0 }
+    }
+
+    #[test]
+    fn builtin_policies_route_sensibly() {
+        assert_eq!(always_cloud(input(false, 9.0)), Route::Cloud);
+        assert_eq!(fog_when_disconnected(input(false, 0.0)), Route::Fog);
+        assert_eq!(fog_when_disconnected(input(true, 0.0)), Route::Cloud);
+        assert_eq!(latency_aware(input(true, 5.0)), Route::Fog);
+        assert_eq!(latency_aware(input(true, 0.1)), Route::Cloud);
+    }
+
+    #[test]
+    fn manager_register_and_lookup() {
+        let m = PolicyManager::with_standard_policies();
+        assert!(m.get("latency_aware").is_ok());
+        assert!(m.get("nope").is_err());
+        assert_eq!(m.names().count(), 3);
+    }
+}

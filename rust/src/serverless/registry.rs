@@ -1,0 +1,143 @@
+//! Function manager: fine-grained housekeeping for video-processing
+//! functions (§III-D). Functions are the serverless unit of deployment —
+//! a pipeline is an ordered composition of registered functions (Fig. 2).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// What a registered function does in the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FunctionKind {
+    Decode,
+    Encode,
+    PreProcess,
+    Inference,
+    PostProcess,
+    Training,
+}
+
+/// A registered function's metadata.
+#[derive(Debug, Clone)]
+pub struct FunctionEntry {
+    pub name: String,
+    pub kind: FunctionKind,
+    /// Free-form signature, e.g. "chunk -> frames" (documentation + basic
+    /// composition checking).
+    pub input_type: String,
+    pub output_type: String,
+    pub version: u32,
+}
+
+#[derive(Debug, Default)]
+pub struct FunctionRegistry {
+    functions: BTreeMap<String, FunctionEntry>,
+}
+
+impl FunctionRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or re-register, bumping the version) a function.
+    pub fn register(
+        &mut self,
+        name: &str,
+        kind: FunctionKind,
+        input_type: &str,
+        output_type: &str,
+    ) -> u32 {
+        let version = self.functions.get(name).map(|f| f.version + 1).unwrap_or(1);
+        self.functions.insert(
+            name.to_string(),
+            FunctionEntry {
+                name: name.to_string(),
+                kind,
+                input_type: input_type.to_string(),
+                output_type: output_type.to_string(),
+                version,
+            },
+        );
+        version
+    }
+
+    pub fn get(&self, name: &str) -> Result<&FunctionEntry> {
+        self.functions
+            .get(name)
+            .ok_or_else(|| anyhow!("function {name:?} not registered"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.functions.keys().map(|s| s.as_str())
+    }
+
+    /// Check a pipeline composes: each function's output type must match
+    /// the next one's input type.
+    pub fn validate_pipeline(&self, names: &[&str]) -> Result<()> {
+        if names.is_empty() {
+            bail!("empty pipeline");
+        }
+        for pair in names.windows(2) {
+            let a = self.get(pair[0])?;
+            let b = self.get(pair[1])?;
+            if a.output_type != b.input_type {
+                bail!(
+                    "pipeline type error: {}: {} -> {} but {} expects {}",
+                    a.name,
+                    a.input_type,
+                    a.output_type,
+                    b.name,
+                    b.input_type
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The standard function set every VPaaS deployment ships with.
+    pub fn with_standard_functions() -> Self {
+        let mut r = Self::new();
+        r.register("decode", FunctionKind::Decode, "chunk", "frames");
+        r.register("reencode_low", FunctionKind::Encode, "frames", "chunk");
+        r.register("resize", FunctionKind::PreProcess, "frames", "frames");
+        r.register("batch", FunctionKind::PreProcess, "frames", "batch");
+        r.register("detect", FunctionKind::Inference, "batch", "boxes");
+        r.register("classify_crops", FunctionKind::Inference, "crops", "labels");
+        r.register("draw_boxes", FunctionKind::PostProcess, "boxes", "frames");
+        r.register("il_update", FunctionKind::Training, "labeled_crops", "weights");
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_version() {
+        let mut r = FunctionRegistry::new();
+        assert_eq!(r.register("f", FunctionKind::Decode, "a", "b"), 1);
+        assert_eq!(r.register("f", FunctionKind::Decode, "a", "b"), 2);
+        assert_eq!(r.get("f").unwrap().version, 2);
+        assert!(r.get("g").is_err());
+    }
+
+    #[test]
+    fn standard_pipeline_composes() {
+        let r = FunctionRegistry::with_standard_functions();
+        r.validate_pipeline(&["decode", "resize", "batch", "detect"]).unwrap();
+    }
+
+    #[test]
+    fn type_mismatch_is_rejected() {
+        let r = FunctionRegistry::with_standard_functions();
+        let err = r.validate_pipeline(&["decode", "detect"]).unwrap_err();
+        assert!(err.to_string().contains("type error"), "{err}");
+    }
+
+    #[test]
+    fn empty_pipeline_rejected() {
+        let r = FunctionRegistry::with_standard_functions();
+        assert!(r.validate_pipeline(&[]).is_err());
+    }
+}

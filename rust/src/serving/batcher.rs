@@ -1,0 +1,272 @@
+//! Dynamic batching (§IV-B: "we implement the well-known dynamic batching
+//! [Clipper] and feed batched regions into the models").
+//!
+//! Two layers:
+//!
+//! * [`plan_batches`] / [`BatchPlanner`] — pure policy: split `n` pending
+//!   items into compiled batch buckets (artifacts exist for sizes 1/4/16;
+//!   padding waste is part of the trade-off the policy minimizes).
+//! * [`DynamicBatcher`] — the queueing front: accumulate requests, flush
+//!   when `max_batch` is reached or the oldest request exceeds
+//!   `max_wait_s` on the virtual clock (Clipper-style adaptive batching).
+
+/// Default batching-efficiency assumption for planning:
+/// `cost(batch b) = 1 + (b − 1)·gain` relative to a single-item call
+/// (matches [`crate::sim::device::DeviceProfile::batched`]).
+pub const DEFAULT_BATCH_GAIN: f64 = 0.30;
+
+/// Split `n` items into compiled bucket sizes minimizing total execution
+/// cost under the sub-linear batch cost model (dynamic programming; padding
+/// is allowed when one padded large batch beats several small batches):
+/// buckets [1,4,16]: n=21 → [16,4,1]; n=15 → [16]; n=5 → [4,1]; n=3 → [4].
+pub fn plan_batches(n: usize, buckets: &[usize]) -> Vec<usize> {
+    plan_batches_cost(n, buckets, DEFAULT_BATCH_GAIN)
+}
+
+/// [`plan_batches`] with an explicit batch-efficiency gain.
+pub fn plan_batches_cost(n: usize, buckets: &[usize], gain: f64) -> Vec<usize> {
+    assert!(!buckets.is_empty());
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut sorted = buckets.to_vec();
+    sorted.sort_unstable();
+    let max_b = *sorted.last().unwrap();
+    let cost = |b: usize| 1.0 + (b as f64 - 1.0) * gain;
+    // dp[i] = min cost to cover >= i items; covering more than n is fine
+    // (padding), so cap the index at n.
+    let mut dp = vec![f64::INFINITY; n + 1];
+    let mut choice = vec![0usize; n + 1];
+    dp[0] = 0.0;
+    for i in 1..=n {
+        for &b in &sorted {
+            let prev = i.saturating_sub(b);
+            let c = dp[prev] + cost(b);
+            if c < dp[i] - 1e-12 {
+                dp[i] = c;
+                choice[i] = b;
+            }
+        }
+    }
+    let mut plan = Vec::new();
+    let mut i = n;
+    while i > 0 {
+        let b = choice[i];
+        debug_assert!(b > 0 && b <= max_b);
+        plan.push(b);
+        i = i.saturating_sub(b);
+    }
+    plan.sort_unstable_by(|a, b| b.cmp(a));
+    plan
+}
+
+/// Stateful planner that also reports padding waste for the profiler.
+#[derive(Debug, Clone)]
+pub struct BatchPlanner {
+    buckets: Vec<usize>,
+    pub items_seen: u64,
+    pub slots_used: u64,
+}
+
+impl BatchPlanner {
+    pub fn new(mut buckets: Vec<usize>) -> Self {
+        assert!(!buckets.is_empty());
+        buckets.sort_unstable();
+        BatchPlanner { buckets, items_seen: 0, slots_used: 0 }
+    }
+
+    pub fn plan(&mut self, n: usize) -> Vec<usize> {
+        let plan = plan_batches(n, &self.buckets);
+        self.items_seen += n as u64;
+        self.slots_used += plan.iter().sum::<usize>() as u64;
+        plan
+    }
+
+    /// Fraction of executed slots that were padding.
+    pub fn padding_frac(&self) -> f64 {
+        if self.slots_used == 0 {
+            return 0.0;
+        }
+        1.0 - self.items_seen as f64 / self.slots_used as f64
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+}
+
+/// A queued request with its arrival time on the virtual clock.
+#[derive(Debug, Clone)]
+struct Pending<T> {
+    item: T,
+    arrived: f64,
+}
+
+/// Clipper-style dynamic batcher on the virtual clock: accumulates items
+/// and flushes either a full `max_batch` or everything older than
+/// `max_wait_s`.
+#[derive(Debug)]
+pub struct DynamicBatcher<T> {
+    queue: Vec<Pending<T>>,
+    pub max_batch: usize,
+    pub max_wait_s: f64,
+    /// Queue-time samples (seconds) for latency accounting.
+    pub queue_times: Vec<f64>,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(max_batch: usize, max_wait_s: f64) -> Self {
+        assert!(max_batch > 0 && max_wait_s >= 0.0);
+        DynamicBatcher { queue: Vec::new(), max_batch, max_wait_s, queue_times: Vec::new() }
+    }
+
+    pub fn push(&mut self, item: T, now: f64) {
+        self.queue.push(Pending { item, arrived: now });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Pop the next batch if the flush condition holds at time `now`.
+    pub fn pop_batch(&mut self, now: f64) -> Option<Vec<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest = self.queue[0].arrived;
+        if self.queue.len() >= self.max_batch || now - oldest >= self.max_wait_s {
+            let take = self.queue.len().min(self.max_batch);
+            let batch: Vec<Pending<T>> = self.queue.drain(..take).collect();
+            for p in &batch {
+                self.queue_times.push((now - p.arrived).max(0.0));
+            }
+            return Some(batch.into_iter().map(|p| p.item).collect());
+        }
+        None
+    }
+
+    /// Drain everything regardless of the flush condition (end of stream).
+    pub fn flush_all(&mut self, now: f64) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let take = self.queue.len().min(self.max_batch);
+            let batch: Vec<Pending<T>> = self.queue.drain(..take).collect();
+            for p in &batch {
+                self.queue_times.push((now - p.arrived).max(0.0));
+            }
+            out.push(batch.into_iter().map(|p| p.item).collect());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_prefers_large_buckets() {
+        assert_eq!(plan_batches(21, &[1, 4, 16]), vec![16, 4, 1]);
+        assert_eq!(plan_batches(16, &[1, 4, 16]), vec![16]);
+        assert_eq!(plan_batches(0, &[1, 4, 16]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn plan_pads_when_one_big_batch_is_cheaper() {
+        // cost(4) = 1.9 < 3 * cost(1): one padded 4-batch beats 3 singles
+        assert_eq!(plan_batches(3, &[1, 4, 16]), vec![4]);
+        // cost(16) = 5.5 < cost(4)*3 + cost(1)*3 = 8.7 for 15 items
+        assert_eq!(plan_batches(15, &[1, 4, 16]), vec![16]);
+        // but exact combos win when padding saves nothing
+        assert_eq!(plan_batches(5, &[1, 4, 16]), vec![4, 1]);
+        assert_eq!(plan_batches(2, &[4, 16]), vec![4]);
+    }
+
+    #[test]
+    fn plan_with_linear_cost_never_pads() {
+        // gain = 1.0 → batching saves nothing → exact cover with singles ok
+        let plan = plan_batches_cost(7, &[1, 4, 16], 1.0);
+        assert_eq!(plan.iter().sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn plan_covers_all_items() {
+        for n in 0..200 {
+            let plan = plan_batches(n, &[1, 4, 16]);
+            assert!(plan.iter().sum::<usize>() >= n);
+            // waste bounded by one largest bucket
+            assert!(plan.iter().sum::<usize>() < n + 16);
+        }
+    }
+
+    #[test]
+    fn planner_tracks_padding() {
+        let mut p = BatchPlanner::new(vec![4, 16]);
+        p.plan(2); // uses a 4-slot batch for 2 items
+        assert_eq!(p.items_seen, 2);
+        assert_eq!(p.slots_used, 4);
+        assert!((p.padding_frac() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batcher_flushes_on_full() {
+        let mut b = DynamicBatcher::new(4, 10.0);
+        for i in 0..4 {
+            b.push(i, 0.0);
+        }
+        let batch = b.pop_batch(0.0).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn batcher_flushes_on_timeout() {
+        let mut b = DynamicBatcher::new(8, 0.05);
+        b.push(1, 0.0);
+        b.push(2, 0.01);
+        assert!(b.pop_batch(0.02).is_none());
+        let batch = b.pop_batch(0.06).unwrap();
+        assert_eq!(batch, vec![1, 2]);
+        assert_eq!(b.queue_times.len(), 2);
+        assert!((b.queue_times[0] - 0.06).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flush_all_drains_in_batches() {
+        let mut b = DynamicBatcher::new(4, 100.0);
+        for i in 0..10 {
+            b.push(i, 0.0);
+        }
+        let batches = b.flush_all(1.0);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].len(), 4);
+        assert_eq!(batches[2].len(), 2);
+    }
+
+    #[test]
+    fn prop_plan_always_covers_and_bounds_waste() {
+        crate::util::prop::prop_check(200, 99, |g| {
+            let n = g.usize_in(0, 500);
+            let gain = g.f64_range(0.05, 1.0);
+            let plan = plan_batches_cost(n, &[1, 4, 16], gain);
+            let total: usize = plan.iter().sum();
+            if total < n {
+                return Err(format!("plan covers {total} < {n}"));
+            }
+            if total >= n + 16 {
+                return Err(format!("waste too high: {total} for {n}"));
+            }
+            // cost must never exceed the trivial all-singles plan
+            let cost =
+                |p: &[usize]| p.iter().map(|&b| 1.0 + (b as f64 - 1.0) * gain).sum::<f64>();
+            if cost(&plan) > n as f64 + 1e-9 {
+                return Err(format!("plan cost {} worse than singles {n}", cost(&plan)));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,5 @@
+//! Serving-layer building blocks: dynamic batching and batched model calls.
+
+pub mod batcher;
+
+pub use batcher::{plan_batches, BatchPlanner, DynamicBatcher};

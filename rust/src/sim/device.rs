@@ -1,0 +1,132 @@
+//! Device profiles calibrated to the paper's Fig. 4 measurements.
+//!
+//! Fig. 4a: the Raspberry Pi client cannot decode/re-encode in real time
+//! (≈6 fps); the Xavier fog does quality control comfortably (>100 fps);
+//! the V100 cloud is fastest. Fig. 4b: the fog cannot run the heavy
+//! detector in real time (≈5 fps) but runs classification far above real
+//! time; the cloud runs the heavy detector at ≈40 fps.
+//!
+//! Compute latency on the virtual clock = profile seconds (deterministic).
+//! Real PJRT wall time is benchmarked separately (EXPERIMENTS.md §Perf);
+//! these numbers set the *shape* of the latency figures, not the absolute
+//! scale of this host.
+
+/// Per-operation timing for one device class, in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Seconds to decode one frame.
+    pub decode_s: f64,
+    /// Seconds to re-encode one frame.
+    pub encode_s: f64,
+    /// Seconds for heavy object detection on one frame.
+    pub detect_s: f64,
+    /// Seconds for the *lite* fallback detector on one frame.
+    pub detect_lite_s: f64,
+    /// Seconds per crop classification at batch size 1.
+    pub classify_s: f64,
+    /// Seconds for super-resolution on one frame.
+    pub sr_s: f64,
+    /// Batching efficiency: time(batch b) = base · (1 + (b-1)·batch_gain).
+    pub batch_gain: f64,
+}
+
+/// Raspberry Pi 4B client (1080p camera).
+pub const CLIENT: DeviceProfile = DeviceProfile {
+    name: "client-rpi4",
+    decode_s: 1.0 / 6.0,
+    encode_s: 1.0 / 5.0,
+    detect_s: 4.0,
+    detect_lite_s: 0.9,
+    classify_s: 0.080,
+    sr_s: 6.0,
+    batch_gain: 0.9,
+};
+
+/// NVIDIA AGX Xavier fog node.
+pub const FOG: DeviceProfile = DeviceProfile {
+    name: "fog-xavier",
+    decode_s: 1.0 / 180.0,
+    encode_s: 1.0 / 120.0,
+    detect_s: 0.200,
+    detect_lite_s: 0.045,
+    classify_s: 0.008,
+    sr_s: 0.350,
+    batch_gain: 0.35,
+};
+
+/// V100 cloud server.
+pub const CLOUD: DeviceProfile = DeviceProfile {
+    name: "cloud-v100",
+    decode_s: 1.0 / 500.0,
+    encode_s: 1.0 / 400.0,
+    detect_s: 0.025,
+    detect_lite_s: 0.006,
+    classify_s: 0.002,
+    sr_s: 0.030,
+    batch_gain: 0.25,
+};
+
+impl DeviceProfile {
+    /// Time to run an op on a batch of `b` items given the per-item base.
+    pub fn batched(&self, base_s: f64, b: usize) -> f64 {
+        assert!(b > 0);
+        base_s * (1.0 + (b as f64 - 1.0) * self.batch_gain)
+    }
+
+    /// Quality-control time for a chunk of `frames`: decode + re-encode.
+    pub fn quality_control_s(&self, frames: usize) -> f64 {
+        frames as f64 * (self.decode_s + self.encode_s)
+    }
+}
+
+pub fn by_name(name: &str) -> Option<DeviceProfile> {
+    match name {
+        "client" => Some(CLIENT),
+        "fog" => Some(FOG),
+        "cloud" => Some(CLOUD),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4a_client_below_real_time_fog_cloud_above() {
+        // Real time at 30 fps needs decode+encode < 1/30 s.
+        let budget = 1.0 / 30.0;
+        assert!(CLIENT.decode_s + CLIENT.encode_s > budget);
+        assert!(FOG.decode_s + FOG.encode_s < budget);
+        assert!(CLOUD.decode_s + CLOUD.encode_s < budget);
+    }
+
+    #[test]
+    fn fig4b_fog_cannot_detect_but_classifies_in_real_time() {
+        let budget = 1.0 / 30.0;
+        assert!(FOG.detect_s > budget, "fog heavy detection must be slow");
+        assert!(FOG.classify_s < budget / 4.0, "fog classification is fast");
+        assert!(CLOUD.detect_s < budget, "cloud detects in real time");
+    }
+
+    #[test]
+    fn batching_is_sublinear() {
+        let single = FOG.batched(FOG.classify_s, 1);
+        let batch16 = FOG.batched(FOG.classify_s, 16);
+        assert!(batch16 < 16.0 * single);
+        assert!(batch16 > single);
+    }
+
+    #[test]
+    fn quality_control_sums_frames() {
+        let t = FOG.quality_control_s(15);
+        assert!((t - 15.0 * (FOG.decode_s + FOG.encode_s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("fog").unwrap().name, "fog-xavier");
+        assert!(by_name("mainframe").is_none());
+    }
+}

@@ -1,0 +1,156 @@
+//! Human annotator oracle — the HITL loop's label source (§V, Fig. 8).
+//!
+//! The paper employs human operators with a **labor budget**: only a
+//! fraction of uncertain crops get verified labels per time window. The
+//! oracle knows the simulator's true class (that is what a careful human
+//! produces) but charges budget and latency per label, and makes rare
+//! mistakes at a configurable rate (humans are good, not perfect).
+
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct AnnotatorConfig {
+    /// Fraction of offered crops that get labeled (the Fig. 13a budget axis).
+    pub budget_frac: f64,
+    /// Seconds of annotator time per label (cost accounting only; labels
+    /// arrive asynchronously and never block the serving path).
+    pub seconds_per_label: f64,
+    /// Probability a label is wrong.
+    pub error_rate: f64,
+    pub num_classes: usize,
+    pub seed: u64,
+}
+
+impl Default for AnnotatorConfig {
+    fn default() -> Self {
+        AnnotatorConfig {
+            budget_frac: 0.2,
+            seconds_per_label: 2.0,
+            error_rate: 0.02,
+            num_classes: 8,
+            seed: 0xA11,
+        }
+    }
+}
+
+/// One verified label emitted by the annotator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HumanLabel {
+    pub class: usize,
+    /// Whether the label matches ground truth (for analysis only — the
+    /// learner never sees this bit).
+    pub correct: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Annotator {
+    cfg: AnnotatorConfig,
+    rng: Pcg32,
+    offered: u64,
+    labeled: u64,
+    seconds_spent: f64,
+}
+
+impl Annotator {
+    pub fn new(cfg: AnnotatorConfig) -> Self {
+        assert!((0.0..=1.0).contains(&cfg.budget_frac));
+        assert!((0.0..=1.0).contains(&cfg.error_rate));
+        let seed = cfg.seed;
+        Annotator { cfg, rng: Pcg32::new(seed, 57), offered: 0, labeled: 0, seconds_spent: 0.0 }
+    }
+
+    /// Offer a crop whose true class is `gt_class`. Returns a label if the
+    /// budget admits this crop.
+    pub fn offer(&mut self, gt_class: usize) -> Option<HumanLabel> {
+        self.offered += 1;
+        if !self.rng.chance(self.cfg.budget_frac) {
+            return None;
+        }
+        self.labeled += 1;
+        self.seconds_spent += self.cfg.seconds_per_label;
+        if self.rng.chance(self.cfg.error_rate) {
+            let wrong = (gt_class + 1 + self.rng.index(self.cfg.num_classes - 1))
+                % self.cfg.num_classes;
+            Some(HumanLabel { class: wrong, correct: false })
+        } else {
+            Some(HumanLabel { class: gt_class, correct: true })
+        }
+    }
+
+    pub fn offered(&self) -> u64 {
+        self.offered
+    }
+
+    pub fn labeled(&self) -> u64 {
+        self.labeled
+    }
+
+    pub fn seconds_spent(&self) -> f64 {
+        self.seconds_spent
+    }
+
+    pub fn budget_frac(&self) -> f64 {
+        self.cfg.budget_frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn annotator(budget: f64, err: f64) -> Annotator {
+        Annotator::new(AnnotatorConfig {
+            budget_frac: budget,
+            error_rate: err,
+            ..AnnotatorConfig::default()
+        })
+    }
+
+    #[test]
+    fn budget_fraction_is_respected() {
+        let mut a = annotator(0.25, 0.0);
+        let labeled = (0..4000).filter(|_| a.offer(3).is_some()).count();
+        assert!((labeled as f64 / 4000.0 - 0.25).abs() < 0.03, "{labeled}");
+        assert_eq!(a.labeled() as usize, labeled);
+        assert_eq!(a.offered(), 4000);
+    }
+
+    #[test]
+    fn zero_budget_labels_nothing() {
+        let mut a = annotator(0.0, 0.0);
+        assert!((0..100).all(|_| a.offer(1).is_none()));
+    }
+
+    #[test]
+    fn full_budget_labels_everything_correctly() {
+        let mut a = annotator(1.0, 0.0);
+        for c in 0..8 {
+            let l = a.offer(c).unwrap();
+            assert_eq!(l.class, c);
+            assert!(l.correct);
+        }
+    }
+
+    #[test]
+    fn error_rate_produces_wrong_labels() {
+        let mut a = annotator(1.0, 0.3);
+        let mut wrong = 0;
+        for i in 0..2000 {
+            let l = a.offer(i % 8).unwrap();
+            if !l.correct {
+                assert_ne!(l.class, i % 8);
+                wrong += 1;
+            }
+        }
+        assert!((wrong as f64 / 2000.0 - 0.3).abs() < 0.05, "{wrong}");
+    }
+
+    #[test]
+    fn time_accounting() {
+        let mut a = annotator(1.0, 0.0);
+        for _ in 0..5 {
+            a.offer(0);
+        }
+        assert!((a.seconds_spent() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Testbed simulators — every substrate the paper's physical deployment
+//! provided, rebuilt so the full system and all baselines run end-to-end
+//! on one machine (DESIGN.md §2 lists each substitution and why it
+//! preserves the relevant behaviour).
+//!
+//! * [`video`] — scene model, frame renderer, codec model, dataset
+//!   generators matching Table I
+//! * [`net`] — LAN/WAN link model with congestion and outage injection
+//! * [`human`] — the annotator oracle behind the HITL loop (Fig. 13)
+//! * [`device`] — client/fog/cloud device profiles calibrated to Fig. 4
+//! * [`params`] — typed view over `artifacts/constants.txt`
+
+pub mod device;
+pub mod human;
+pub mod net;
+pub mod params;
+pub mod video;

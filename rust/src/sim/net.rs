@@ -1,0 +1,250 @@
+//! Network substrate: LAN/WAN links with serialization delay, propagation,
+//! jitter, congestion windows and outage injection.
+//!
+//! Replaces the paper's physical testbed network (10 Gbps switch between
+//! client and fog; WAN to the cloud). Fig. 11 sweeps WAN bandwidth over
+//! {10, 15, 20} Mbps; Fig. 15 shuts the cloud link down at t = 25 s — both
+//! are schedules on this model.
+
+use crate::util::rng::Pcg32;
+
+/// Static description of a link.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkSpec {
+    pub bandwidth_mbps: f64,
+    /// One-way propagation delay in seconds.
+    pub propagation_s: f64,
+    /// Multiplicative jitter spread (0 = deterministic).
+    pub jitter_frac: f64,
+}
+
+impl LinkSpec {
+    /// Client ↔ fog LAN (10 Gbps switch, §VI-A).
+    pub const LAN: LinkSpec =
+        LinkSpec { bandwidth_mbps: 10_000.0, propagation_s: 0.0002, jitter_frac: 0.02 };
+
+    /// Fog/client ↔ cloud WAN at a given bandwidth.
+    pub fn wan(bandwidth_mbps: f64) -> LinkSpec {
+        LinkSpec { bandwidth_mbps, propagation_s: 0.025, jitter_frac: 0.10 }
+    }
+}
+
+/// Error returned when the link is down (outage window).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkDown {
+    /// Virtual time at which the sender detects the failure.
+    pub detected_at: f64,
+}
+
+impl std::fmt::Display for LinkDown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "link down (detected at {:.3}s)", self.detected_at)
+    }
+}
+
+impl std::error::Error for LinkDown {}
+
+/// A simulated simplex link with a FIFO transmit queue.
+#[derive(Debug, Clone)]
+pub struct Link {
+    spec: LinkSpec,
+    rng: Pcg32,
+    /// Earliest time the transmitter is free (serialization queue).
+    next_free: f64,
+    /// (start, end, bandwidth multiplier) congestion windows.
+    congestion: Vec<(f64, f64, f64)>,
+    /// (start, end) hard outage windows.
+    outages: Vec<(f64, f64)>,
+    /// Total payload bytes accepted (bandwidth accounting).
+    bytes_sent: f64,
+}
+
+impl Link {
+    pub fn new(spec: LinkSpec, seed: u64) -> Self {
+        Link {
+            spec,
+            rng: Pcg32::new(seed, 41),
+            next_free: 0.0,
+            congestion: Vec::new(),
+            outages: Vec::new(),
+            bytes_sent: 0.0,
+        }
+    }
+
+    pub fn spec(&self) -> LinkSpec {
+        self.spec
+    }
+
+    /// Schedule a congestion window: bandwidth is multiplied by `factor`
+    /// (< 1) during [start, end).
+    pub fn add_congestion(&mut self, start: f64, end: f64, factor: f64) {
+        assert!(end > start && factor > 0.0);
+        self.congestion.push((start, end, factor));
+    }
+
+    /// Schedule a hard outage during [start, end).
+    pub fn add_outage(&mut self, start: f64, end: f64) {
+        assert!(end > start);
+        self.outages.push((start, end));
+    }
+
+    pub fn is_down(&self, t: f64) -> bool {
+        self.outages.iter().any(|&(s, e)| t >= s && t < e)
+    }
+
+    fn bandwidth_at(&self, t: f64) -> f64 {
+        let mut bw = self.spec.bandwidth_mbps;
+        for &(s, e, f) in &self.congestion {
+            if t >= s && t < e {
+                bw *= f;
+            }
+        }
+        bw
+    }
+
+    /// Transmit `bytes` starting no earlier than `now`; returns the arrival
+    /// time at the receiver, or [`LinkDown`] if an outage covers the send.
+    pub fn transfer(&mut self, bytes: f64, now: f64) -> Result<f64, LinkDown> {
+        assert!(bytes >= 0.0 && now >= 0.0);
+        if self.is_down(now) {
+            // Sender notices after a timeout of ~2 RTTs.
+            return Err(LinkDown { detected_at: now + 4.0 * self.spec.propagation_s + 0.05 });
+        }
+        let start = now.max(self.next_free);
+        let bw = self.bandwidth_at(start);
+        let serialize = bytes * 8.0 / (bw * 1e6);
+        let jitter = if self.spec.jitter_frac > 0.0 {
+            1.0 + self.spec.jitter_frac * self.rng.normal().clamp(-2.0, 2.0).abs()
+        } else {
+            1.0
+        };
+        let done_sending = start + serialize * jitter;
+        self.next_free = done_sending;
+        self.bytes_sent += bytes;
+        Ok(done_sending + self.spec.propagation_s)
+    }
+
+    pub fn bytes_sent(&self) -> f64 {
+        self.bytes_sent
+    }
+
+    pub fn reset_accounting(&mut self) {
+        self.bytes_sent = 0.0;
+    }
+}
+
+/// The deployment's three links (Fig. 1): client→fog LAN, fog→cloud WAN up,
+/// cloud→fog WAN down.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub lan: Link,
+    pub wan_up: Link,
+    pub wan_down: Link,
+}
+
+impl Topology {
+    pub fn new(wan_mbps: f64, seed: u64) -> Self {
+        Topology {
+            lan: Link::new(LinkSpec::LAN, seed ^ 0x1),
+            wan_up: Link::new(LinkSpec::wan(wan_mbps), seed ^ 0x2),
+            wan_down: Link::new(LinkSpec::wan(wan_mbps), seed ^ 0x3),
+        }
+    }
+
+    /// Total WAN bytes in both directions (the bandwidth-usage metric).
+    pub fn wan_bytes(&self) -> f64 {
+        self.wan_up.bytes_sent() + self.wan_down.bytes_sent()
+    }
+
+    /// Inject a cloud outage (both WAN directions) during [start, end).
+    pub fn cloud_outage(&mut self, start: f64, end: f64) {
+        self.wan_up.add_outage(start, end);
+        self.wan_down.add_outage(start, end);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det_link(mbps: f64) -> Link {
+        Link::new(
+            LinkSpec { bandwidth_mbps: mbps, propagation_s: 0.01, jitter_frac: 0.0 },
+            1,
+        )
+    }
+
+    #[test]
+    fn serialization_time_matches_bandwidth() {
+        let mut l = det_link(10.0); // 10 Mbps
+        let arrival = l.transfer(1_250_000.0, 0.0).unwrap(); // 10 Mbit
+        assert!((arrival - (1.0 + 0.01)).abs() < 1e-9, "arrival={arrival}");
+    }
+
+    #[test]
+    fn queueing_serializes_back_to_back_sends() {
+        let mut l = det_link(10.0);
+        let a = l.transfer(1_250_000.0, 0.0).unwrap();
+        let b = l.transfer(1_250_000.0, 0.0).unwrap();
+        assert!((b - a - 1.0).abs() < 1e-9, "a={a} b={b}");
+    }
+
+    #[test]
+    fn congestion_slows_transfer() {
+        let mut l = det_link(10.0);
+        l.add_congestion(0.0, 100.0, 0.5);
+        let arrival = l.transfer(1_250_000.0, 0.0).unwrap();
+        assert!((arrival - 2.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn outage_errors_with_detection_time() {
+        let mut l = det_link(10.0);
+        l.add_outage(5.0, 10.0);
+        assert!(l.transfer(100.0, 4.9).is_ok());
+        let err = l.transfer(100.0, 6.0).unwrap_err();
+        assert!(err.detected_at > 6.0);
+        assert!(l.transfer(100.0, 10.0).is_ok());
+    }
+
+    #[test]
+    fn bytes_are_accounted() {
+        let mut l = det_link(10.0);
+        l.transfer(1000.0, 0.0).unwrap();
+        l.transfer(500.0, 0.0).unwrap();
+        assert_eq!(l.bytes_sent(), 1500.0);
+        l.reset_accounting();
+        assert_eq!(l.bytes_sent(), 0.0);
+    }
+
+    #[test]
+    fn jitter_only_delays() {
+        let spec = LinkSpec { bandwidth_mbps: 10.0, propagation_s: 0.0, jitter_frac: 0.2 };
+        let base = 1.0; // 10 Mbit at 10 Mbps
+        let mut l = Link::new(spec, 7);
+        for i in 0..32 {
+            let arrival = l.transfer(1_250_000.0, i as f64 * 100.0).unwrap();
+            let dt = arrival - i as f64 * 100.0;
+            assert!(dt >= base - 1e-9, "jitter sped up the link: {dt}");
+            assert!(dt < base * 1.6);
+        }
+    }
+
+    #[test]
+    fn topology_accounts_wan_only() {
+        let mut t = Topology::new(15.0, 3);
+        t.lan.transfer(1e6, 0.0).unwrap();
+        t.wan_up.transfer(2000.0, 0.0).unwrap();
+        t.wan_down.transfer(300.0, 0.0).unwrap();
+        assert_eq!(t.wan_bytes(), 2300.0);
+    }
+
+    #[test]
+    fn cloud_outage_hits_both_directions() {
+        let mut t = Topology::new(15.0, 4);
+        t.cloud_outage(25.0, 60.0);
+        assert!(t.wan_up.transfer(10.0, 30.0).is_err());
+        assert!(t.wan_down.transfer(10.0, 30.0).is_err());
+        assert!(t.lan.transfer(10.0, 30.0).is_ok());
+    }
+}

@@ -1,0 +1,146 @@
+//! Typed view over the Python-exported interchange constants.
+//!
+//! The scene renderer, the codec model and the protocol heads all read from
+//! this one struct, guaranteeing Rust renders frames from exactly the
+//! distribution the AOT-compiled models were synthesized for.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::interchange::{artifacts_dir, Constants, Tensor};
+
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    // geometry
+    pub grid: usize,
+    pub anchors: usize,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    pub cls_hidden: usize,
+    pub cls_feat: usize,
+    pub il_batch: usize,
+    // codec model
+    pub q0: f64,
+    pub bpp0: f64,
+    pub src_w: f64,
+    pub src_h: f64,
+    pub alpha_r_exp: f64,
+    pub alpha_q_div: f64,
+    pub m_base: f64,
+    pub m_r: f64,
+    pub m_q: f64,
+    pub m_max: f64,
+    pub m_jitter: f64,
+    pub eps_base: f64,
+    pub eps_q: f64,
+    pub clutter: f64,
+    // drift
+    pub drift_rate: f64,
+    pub drift_max: f64,
+    // heads
+    pub obj_gain: f64,
+    pub obj_bias: f64,
+    pub cls_gain: f64,
+    // IL
+    pub il_lr: f64,
+    pub ensemble_ridge: f64,
+    // tensors
+    pub signatures: Tensor,   // [K, D] t=0 bank
+    pub drift_perm: Vec<usize>,
+    pub cls_last0: Tensor,    // [H+1, K] initial fog last layer
+    pub cls_backbone: Tensor, // [D, H] fog backbone (for reference/tests)
+}
+
+impl SimParams {
+    pub fn from_constants(c: &Constants) -> Result<Self> {
+        let perm_t = c.tensor("drift_perm")?;
+        let drift_perm = perm_t.data.iter().map(|&v| v as usize).collect();
+        Ok(SimParams {
+            grid: c.scalar_usize("grid")?,
+            anchors: c.scalar_usize("grid")? * c.scalar_usize("grid")?,
+            feat_dim: c.scalar_usize("feat_dim")?,
+            num_classes: c.scalar_usize("num_classes")?,
+            cls_hidden: c.scalar_usize("cls_hidden")?,
+            cls_feat: c.scalar_usize("cls_feat")?,
+            il_batch: c.scalar_usize("il_batch")?,
+            q0: c.scalar("q0")?,
+            bpp0: c.scalar("bpp0")?,
+            src_w: c.scalar("src_w")?,
+            src_h: c.scalar("src_h")?,
+            alpha_r_exp: c.scalar("alpha_r_exp")?,
+            alpha_q_div: c.scalar("alpha_q_div")?,
+            m_base: c.scalar("m_base")?,
+            m_r: c.scalar("m_r")?,
+            m_q: c.scalar("m_q")?,
+            m_max: c.scalar("m_max")?,
+            m_jitter: c.scalar("m_jitter")?,
+            eps_base: c.scalar("eps_base")?,
+            eps_q: c.scalar("eps_q")?,
+            clutter: c.scalar("clutter")?,
+            drift_rate: c.scalar("drift_rate")?,
+            drift_max: c.scalar("drift_max")?,
+            obj_gain: c.scalar("obj_gain")?,
+            obj_bias: c.scalar("obj_bias")?,
+            cls_gain: c.scalar("cls_gain")?,
+            il_lr: c.scalar("il_lr")?,
+            ensemble_ridge: c.scalar("ensemble_ridge")?,
+            signatures: c.tensor("signatures")?.clone(),
+            drift_perm,
+            cls_last0: c.tensor("cls_last")?.clone(),
+            cls_backbone: c.tensor("cls_backbone")?.clone(),
+        })
+    }
+
+    /// Load from the repo's `artifacts/` directory.
+    pub fn load() -> Result<Arc<Self>> {
+        let dir = artifacts_dir()?;
+        let c = Constants::load(&dir.join("constants.txt"))?;
+        Ok(Arc::new(Self::from_constants(&c)?))
+    }
+
+    /// Drift angle at stream time `t` (chunk index): saturating ramp.
+    pub fn drift_phi(&self, t: f64) -> f64 {
+        (self.drift_rate * t).min(self.drift_max)
+    }
+
+    /// Signature of class `k` under drift angle `phi`.
+    pub fn drifted_signature(&self, k: usize, phi: f64) -> Vec<f32> {
+        let s = self.signatures.row(k);
+        let sp = self.signatures.row(self.drift_perm[k]);
+        let (c, sn) = (phi.cos() as f32, phi.sin() as f32);
+        s.iter().zip(sp).map(|(&a, &b)| c * a + sn * b).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_artifacts() {
+        let p = SimParams::load().expect("run `make artifacts` first");
+        assert_eq!(p.grid, 16);
+        assert_eq!(p.anchors, 256);
+        assert_eq!(p.num_classes, 8);
+        assert_eq!(p.signatures.dims, vec![8, 24]);
+        assert_eq!(p.cls_last0.dims, vec![p.cls_feat, p.num_classes]);
+        assert_eq!(p.drift_perm.len(), 8);
+    }
+
+    #[test]
+    fn drift_saturates_and_preserves_norm() {
+        let p = SimParams::load().unwrap();
+        assert!(p.drift_phi(1e9) <= p.drift_max + 1e-12);
+        let s = p.drifted_signature(3, 0.4);
+        let norm: f32 = s.iter().map(|v| v * v).sum();
+        assert!((norm - 1.0).abs() < 1e-3, "norm={norm}");
+    }
+
+    #[test]
+    fn drift_zero_is_identity() {
+        let p = SimParams::load().unwrap();
+        let s = p.drifted_signature(2, 0.0);
+        assert_eq!(&s[..], p.signatures.row(2));
+    }
+}

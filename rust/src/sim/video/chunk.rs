@@ -1,0 +1,133 @@
+//! Videos and chunks: the transmission units of every pipeline.
+//!
+//! Following §VI-B: one keyframe is extracted every 15 frames (30 fps →
+//! 2 keyframes/s) and 15 keyframes are packed into one chunk, so a chunk
+//! covers 7.5 s of wall video. A [`Video`] generates chunks lazily from its
+//! seeded scene.
+
+use crate::sim::video::scene::{FrameTruth, Scene, SceneConfig};
+
+pub const FPS: f64 = 30.0;
+pub const KEYFRAME_EVERY: u64 = 15;
+pub const FRAMES_PER_CHUNK: usize = 15;
+
+/// One transmission unit: 15 keyframes of ground truth (rendered to pixels
+/// on demand, at whatever quality the protocol chooses).
+#[derive(Debug, Clone)]
+pub struct Chunk {
+    pub video_id: usize,
+    pub chunk_idx: u64,
+    pub frames: Vec<FrameTruth>,
+    /// Capture time (virtual seconds) of the chunk's FIRST keyframe.
+    pub t_capture: f64,
+}
+
+impl Chunk {
+    /// Wall-video seconds covered by this chunk.
+    pub fn duration(&self) -> f64 {
+        self.frames.len() as f64 * KEYFRAME_EVERY as f64 / FPS
+    }
+
+    /// Capture time of keyframe `i` within the chunk.
+    pub fn frame_time(&self, i: usize) -> f64 {
+        self.t_capture + i as f64 * KEYFRAME_EVERY as f64 / FPS
+    }
+
+    pub fn total_objects(&self) -> usize {
+        self.frames.iter().map(|f| f.objects.len()).sum()
+    }
+}
+
+/// A seeded synthetic video producing chunks on demand.
+pub struct Video {
+    pub id: usize,
+    scene: Scene,
+    chunks_total: u64,
+    next_chunk: u64,
+}
+
+impl Video {
+    /// `duration_s` of video at 30 fps with keyframe extraction.
+    pub fn new(id: usize, cfg: SceneConfig, duration_s: f64) -> Self {
+        let keyframes = (duration_s * FPS / KEYFRAME_EVERY as f64).floor() as u64;
+        let chunks_total = keyframes / FRAMES_PER_CHUNK as u64;
+        assert!(chunks_total > 0, "video shorter than one chunk ({duration_s}s)");
+        Video { id, scene: Scene::new(cfg), chunks_total, next_chunk: 0 }
+    }
+
+    pub fn chunks_total(&self) -> u64 {
+        self.chunks_total
+    }
+
+    /// Produce the next chunk, or None at end of video.
+    pub fn next_chunk(&mut self) -> Option<Chunk> {
+        if self.next_chunk >= self.chunks_total {
+            return None;
+        }
+        let idx = self.next_chunk;
+        self.next_chunk += 1;
+        let t_capture = idx as f64 * FRAMES_PER_CHUNK as f64 * KEYFRAME_EVERY as f64 / FPS;
+        let frames = (0..FRAMES_PER_CHUNK).map(|_| self.scene.step()).collect();
+        Some(Chunk { video_id: self.id, chunk_idx: idx, frames, t_capture })
+    }
+}
+
+impl Iterator for Video {
+    type Item = Chunk;
+    fn next(&mut self) -> Option<Chunk> {
+        self.next_chunk()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(seed: u64) -> SceneConfig {
+        SceneConfig {
+            grid: 16,
+            num_classes: 8,
+            density: 3.0,
+            speed: 0.5,
+            size_range: (1.0, 2.0),
+            class_skew: 0.5,
+            seed,
+        }
+    }
+
+    #[test]
+    fn chunk_count_matches_duration() {
+        // 60 s * 30 fps / 15 = 120 keyframes = 8 chunks
+        let v = Video::new(0, cfg(1), 60.0);
+        assert_eq!(v.chunks_total(), 8);
+        assert_eq!(v.count(), 8);
+    }
+
+    #[test]
+    fn chunks_have_fifteen_frames_and_monotone_time() {
+        let mut v = Video::new(0, cfg(2), 30.0);
+        let a = v.next_chunk().unwrap();
+        let b = v.next_chunk().unwrap();
+        assert_eq!(a.frames.len(), FRAMES_PER_CHUNK);
+        assert_eq!(a.t_capture, 0.0);
+        assert!((a.duration() - 7.5).abs() < 1e-9);
+        assert!((b.t_capture - 7.5).abs() < 1e-9);
+        assert!((a.frame_time(1) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frame_indices_are_continuous_across_chunks() {
+        let mut v = Video::new(0, cfg(3), 30.0);
+        let a = v.next_chunk().unwrap();
+        let b = v.next_chunk().unwrap();
+        let last_a = a.frames.last().unwrap().frame_idx;
+        let first_b = b.frames.first().unwrap().frame_idx;
+        assert_eq!(first_b, last_a + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "shorter than one chunk")]
+    fn too_short_video_panics() {
+        Video::new(0, cfg(4), 1.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Codec model: how resolution scale `r` and quantization parameter `q`
+//! trade bitstream size against analyzable signal.
+//!
+//! * **Size** follows the standard rate model (~ −6 dB per QP step):
+//!   `F_v(r, q) = bpp0 · pixels(r) · 2^(−(q − q0)/6)` bits per frame.
+//! * **Signal**: per-cell amplitude `alpha(r, q)` shrinks slowly
+//!   (localization evidence survives), while the class-confusion mix
+//!   `m(r, q)` grows fast (class margin collapses) — the paper's Key
+//!   Observation 2 / Fig. 5, made quantitative.
+
+use crate::sim::params::SimParams;
+
+/// One encoding setting: resolution scale (of 1920×1080) and QP.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quality {
+    pub r: f64,
+    pub qp: f64,
+}
+
+impl Quality {
+    pub const fn new(r: f64, qp: f64) -> Self {
+        Quality { r, qp }
+    }
+
+    /// The paper's "original video" (MPEG baseline reference quality).
+    pub const ORIGINAL: Quality = Quality::new(1.0, 20.0);
+    /// VPaaS / DDS first-round low quality (§VI-B: QP 36, RS 0.8).
+    pub const LOW: Quality = Quality::new(0.8, 36.0);
+    /// DDS second-round quality (§VI-B: QP 26, RS 0.8).
+    pub const HIGH_ROUND2: Quality = Quality::new(0.8, 26.0);
+    /// CloudSeg client-side downscale (§VI-B: QP 20, RS 0.35).
+    pub const CLOUDSEG_DOWN: Quality = Quality::new(0.35, 20.0);
+}
+
+/// Encoded size of one frame in **bits**.
+pub fn frame_bits(q: Quality, p: &SimParams) -> f64 {
+    let pixels = p.src_w * p.src_h * q.r * q.r;
+    p.bpp0 * pixels * (2.0f64).powf(-(q.qp - p.q0) / 6.0)
+}
+
+/// Encoded size of one frame in bytes.
+pub fn frame_bytes(q: Quality, p: &SimParams) -> f64 {
+    frame_bits(q, p) / 8.0
+}
+
+/// Size in bytes of re-sending a set of regions covering `area_frac` of the
+/// frame at quality `q` (DDS round 2). The 2× factor models the context
+/// padding DDS adds around each region plus per-region container overhead
+/// (tiny regions encode far less efficiently than full frames).
+pub fn region_bytes(area_frac: f64, q: Quality, p: &SimParams) -> f64 {
+    frame_bytes(q, p) * (area_frac * 2.0).clamp(0.0, 1.0)
+}
+
+/// Bytes for the coordinate/label feedback message for `n` regions
+/// (protocol overhead: 16 B per box + 64 B header).
+pub fn feedback_bytes(n_regions: usize) -> f64 {
+    64.0 + 16.0 * n_regions as f64
+}
+
+/// Signal amplitude retained at quality `q` (localization evidence).
+pub fn alpha(q: Quality, p: &SimParams) -> f64 {
+    q.r.powf(p.alpha_r_exp) * (2.0f64).powf(-(q.qp - p.q0) / p.alpha_q_div)
+}
+
+/// Mean class-confusion mix at quality `q` (class margin destroyer).
+pub fn mix(q: Quality, p: &SimParams) -> f64 {
+    (p.m_base + p.m_r * (1.0 - q.r) + p.m_q * (q.qp - p.q0)).clamp(0.0, p.m_max)
+}
+
+/// White-noise level on object cells at quality `q`.
+pub fn eps(q: Quality, p: &SimParams) -> f64 {
+    p.eps_base + p.eps_q * (q.qp - p.q0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::params::SimParams;
+
+    fn params() -> std::sync::Arc<SimParams> {
+        SimParams::load().unwrap()
+    }
+
+    #[test]
+    fn size_halves_every_six_qp() {
+        let p = params();
+        let a = frame_bits(Quality::new(1.0, 20.0), &p);
+        let b = frame_bits(Quality::new(1.0, 26.0), &p);
+        assert!((a / b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn size_scales_with_pixel_count() {
+        let p = params();
+        let full = frame_bits(Quality::new(1.0, 20.0), &p);
+        let half = frame_bits(Quality::new(0.5, 20.0), &p);
+        assert!((full / half - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_operating_points_are_ordered() {
+        // MPEG original ≫ DDS round-2 > VPaaS low; CloudSeg downscale small.
+        let p = params();
+        let orig = frame_bytes(Quality::ORIGINAL, &p);
+        let low = frame_bytes(Quality::LOW, &p);
+        let r2 = frame_bytes(Quality::HIGH_ROUND2, &p);
+        let cs = frame_bytes(Quality::CLOUDSEG_DOWN, &p);
+        assert!(orig > 4.0 * low, "orig={orig} low={low}");
+        assert!(r2 > low);
+        assert!(cs < orig && cs > 0.0);
+    }
+
+    #[test]
+    fn alpha_degrades_slower_than_mix_grows() {
+        let p = params();
+        let a_hi = alpha(Quality::ORIGINAL, &p);
+        let a_lo = alpha(Quality::LOW, &p);
+        let m_hi = mix(Quality::ORIGINAL, &p);
+        let m_lo = mix(Quality::LOW, &p);
+        // localization signal keeps > 45% of amplitude at the low setting...
+        assert!(a_lo / a_hi > 0.45, "alpha ratio {}", a_lo / a_hi);
+        // ...while the confusion mix grows several-fold.
+        assert!(m_lo > 3.0 * m_hi, "mix {m_hi} -> {m_lo}");
+    }
+
+    #[test]
+    fn mix_clamps_at_max() {
+        let p = params();
+        assert!(mix(Quality::new(0.05, 51.0), &p) <= p.m_max);
+    }
+
+    #[test]
+    fn region_bytes_scale_with_area_and_clamp() {
+        let p = params();
+        let a = region_bytes(0.1, Quality::HIGH_ROUND2, &p);
+        let b = region_bytes(0.2, Quality::HIGH_ROUND2, &p);
+        assert!((b / a - 2.0).abs() < 1e-9);
+        // padding factor can never exceed one whole frame
+        let full = frame_bytes(Quality::HIGH_ROUND2, &p);
+        assert!(region_bytes(3.0, Quality::HIGH_ROUND2, &p) <= full + 1e-9);
+    }
+
+    #[test]
+    fn feedback_is_tiny_relative_to_a_chunk() {
+        // The paper: coordinate feedback "only occupies several bytes" and
+        // its bandwidth can be ignored — check it is ~1% of a 15-frame chunk.
+        let p = params();
+        let chunk = 15.0 * frame_bytes(Quality::LOW, &p);
+        assert!(feedback_bytes(20) < 0.01 * chunk);
+    }
+}

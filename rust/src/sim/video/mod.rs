@@ -1,0 +1,19 @@
+//! Video substrate: scenes, rendering, codec model, datasets, chunking.
+//!
+//! A *video* is a seeded scene simulation producing keyframes; a *chunk* is
+//! the unit of transmission (the paper packs 15 keyframes per chunk,
+//! §VI-B). Frames are rendered **on demand at a given quality** — the same
+//! `FrameTruth` rendered at `(r=1.0, q=20)` and `(r=0.8, q=36)` shares all
+//! object-level randomness, exactly like re-encoding one captured frame at
+//! two qualities.
+
+pub mod chunk;
+pub mod codec;
+pub mod datasets;
+pub mod render;
+pub mod scene;
+
+pub use chunk::{Chunk, Video};
+pub use codec::Quality;
+pub use render::{render_crop, render_frame, render_region_crop};
+pub use scene::{FrameTruth, GtBox, Scene, SceneConfig};

@@ -1,0 +1,314 @@
+//! Frame rendering: `FrameTruth` × `Quality` × drift → cell feature tensor.
+//!
+//! This is the simulator's stand-in for "decode the bitstream and look at
+//! the pixels". An object of class `c` deposits
+//! `alpha(r,q) · ((1−m)·s_c(φ) + m·s_conf(φ) + eps(q)·n)` into each covered
+//! cell; empty cells carry clutter noise. All randomness comes from seeds
+//! stored in the truth, so renders are pure functions — the same frame
+//! rendered twice (or at two qualities) is consistent.
+
+use crate::interchange::Tensor;
+use crate::sim::params::SimParams;
+use crate::sim::video::codec::{self, Quality};
+use crate::sim::video::scene::{FrameObject, FrameTruth, GtBox};
+use crate::util::rng::Pcg32;
+
+/// Render a full frame to a `[A, D]` tensor (`A = grid²` anchors).
+pub fn render_frame(truth: &FrameTruth, q: Quality, phi: f64, p: &SimParams) -> Tensor {
+    let (a, d) = (p.anchors, p.feat_dim);
+    let mut data = vec![0.0f32; a * d];
+    // Background clutter: quality-independent texture in signature space.
+    let mut crng = Pcg32::new(truth.clutter_seed, 101);
+    for v in data.iter_mut() {
+        *v = (p.clutter * crng.normal()) as f32;
+    }
+    let alpha = codec::alpha(q, p) as f32;
+    let eps = codec::eps(q, p) as f32;
+    // drifted signatures are shared across objects of a class: compute the
+    // bank once per frame, not once per object (the render hot path)
+    let bank = DriftedBank::new(phi, p);
+    for obj in &truth.objects {
+        deposit_object(&mut data, obj, alpha, eps, q, &bank, p);
+    }
+    Tensor { dims: vec![a, d], data }
+}
+
+/// Per-render cache of the drift-rotated signature bank.
+pub struct DriftedBank {
+    rows: Vec<Vec<f32>>,
+}
+
+impl DriftedBank {
+    pub fn new(phi: f64, p: &SimParams) -> Self {
+        DriftedBank {
+            rows: (0..p.num_classes).map(|k| p.drifted_signature(k, phi)).collect(),
+        }
+    }
+
+    pub fn row(&self, k: usize) -> &[f32] {
+        &self.rows[k]
+    }
+}
+
+fn object_mix(obj: &FrameObject, q: Quality, p: &SimParams) -> f32 {
+    let m = codec::mix(q, p) + obj.m_jitter * p.m_jitter;
+    m.clamp(0.0, p.m_max) as f32
+}
+
+fn deposit_object(
+    data: &mut [f32],
+    obj: &FrameObject,
+    alpha: f32,
+    eps: f32,
+    q: Quality,
+    bank: &DriftedBank,
+    p: &SimParams,
+) {
+    let d = p.feat_dim;
+    let m = object_mix(obj, q, p);
+    let sig = bank.row(obj.gt.class);
+    let conf = bank.row(obj.conf_class);
+    for cell in obj.gt.cells(p.grid) {
+        let mut nrng = Pcg32::new(obj.noise_seed, cell as u64 + 7);
+        let base = cell * d;
+        for i in 0..d {
+            let n = nrng.normal() as f32;
+            data[base + i] += alpha * ((1.0 - m) * sig[i] + m * conf[i] + eps * n);
+        }
+    }
+}
+
+/// Render the **amplitude-normalized** crop feature for one object at
+/// quality `q` — what the fog classifier consumes after its preprocessing
+/// (the classifier normalizes crops, so its input is unit-scale).
+pub fn render_crop(obj: &FrameObject, q: Quality, phi: f64, p: &SimParams) -> Vec<f32> {
+    let d = p.feat_dim;
+    let m = object_mix(obj, q, p);
+    let eps = codec::eps(q, p) as f32;
+    let alpha = codec::alpha(q, p) as f32;
+    let sig = p.drifted_signature(obj.gt.class, phi);
+    let conf = p.drifted_signature(obj.conf_class, phi);
+    // Average over covered cells (noise averages down like a real crop
+    // resize), clutter enters scaled by 1/alpha from the normalization.
+    let cells = obj.gt.cells(p.grid);
+    let mut out = vec![0.0f32; d];
+    let mut crng = Pcg32::new(obj.noise_seed ^ 0xC2B2AE3D27D4EB4F, 3);
+    for &cell in &cells {
+        let mut nrng = Pcg32::new(obj.noise_seed, cell as u64 + 7);
+        for (i, o) in out.iter_mut().enumerate() {
+            let n = nrng.normal() as f32;
+            *o += (1.0 - m) * sig[i] + m * conf[i] + eps * n;
+        }
+    }
+    let inv = 1.0 / cells.len() as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    for o in out.iter_mut() {
+        *o += (p.clutter as f32 / alpha.max(1e-4)) * crng.normal() as f32;
+    }
+    out
+}
+
+/// Render a crop for an arbitrary region box (possibly containing no
+/// object): used when the cloud sends back coordinates of an *uncertain*
+/// region and the fog crops its cached high-quality frame. If the region
+/// overlaps an object, the crop is dominated by that object's signature;
+/// otherwise it is clutter and the classifier should reject it.
+pub fn render_region_crop(
+    truth: &FrameTruth,
+    region: &GtBox,
+    q: Quality,
+    phi: f64,
+    p: &SimParams,
+) -> Vec<f32> {
+    // Find the object with the highest overlap.
+    let best = truth
+        .objects
+        .iter()
+        .map(|o| (o, region.iou(&o.gt)))
+        .filter(|(_, iou)| *iou > 0.0)
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    match best {
+        Some((obj, iou)) => {
+            let mut crop = render_crop(obj, q, phi, p);
+            if iou < 0.999 {
+                // Partial overlap dilutes the signature with clutter.
+                let dilute = iou.max(0.25) as f32;
+                let mut rng = Pcg32::new(truth.clutter_seed ^ region_seed(region), 5);
+                for c in crop.iter_mut() {
+                    *c = *c * dilute
+                        + (1.0 - dilute) * (p.clutter as f32 * 2.0) * rng.normal() as f32;
+                }
+            }
+            crop
+        }
+        None => {
+            // Pure clutter crop at unit normalization: weak random feature.
+            let mut rng = Pcg32::new(truth.clutter_seed ^ region_seed(region), 5);
+            let alpha = codec::alpha(q, p) as f32;
+            (0..p.feat_dim)
+                .map(|_| (p.clutter as f32 * 2.0 / alpha.max(1e-4)) * rng.normal() as f32)
+                .collect()
+        }
+    }
+}
+
+fn region_seed(r: &GtBox) -> u64 {
+    (r.x0 as u64) | (r.y0 as u64) << 8 | (r.x1 as u64) << 16 | (r.y1 as u64) << 24
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::video::scene::{Scene, SceneConfig};
+
+    fn setup() -> (std::sync::Arc<SimParams>, FrameTruth) {
+        let p = SimParams::load().unwrap();
+        let mut s = Scene::new(SceneConfig {
+            grid: p.grid,
+            num_classes: p.num_classes,
+            density: 4.0,
+            speed: 0.5,
+            size_range: (1.0, 2.5),
+            class_skew: 0.5,
+            seed: 11,
+        });
+        let t = s.step();
+        (p, t)
+    }
+
+    fn cell_energy(frame: &Tensor, cell: usize, p: &SimParams) -> f32 {
+        // signature-subspace energy: sum_k |s_k . x|
+        let d = p.feat_dim;
+        let x = &frame.data[cell * d..(cell + 1) * d];
+        (0..p.num_classes)
+            .map(|k| {
+                p.signatures
+                    .row(k)
+                    .iter()
+                    .zip(x)
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+                    .abs()
+            })
+            .sum()
+    }
+
+    #[test]
+    fn render_is_deterministic() {
+        let (p, t) = setup();
+        let a = render_frame(&t, Quality::LOW, 0.1, &p);
+        let b = render_frame(&t, Quality::LOW, 0.1, &p);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn object_cells_have_energy_clutter_does_not() {
+        let (p, t) = setup();
+        let frame = render_frame(&t, Quality::LOW, 0.0, &p);
+        let object_cells: std::collections::BTreeSet<usize> = t
+            .objects
+            .iter()
+            .flat_map(|o| o.gt.cells(p.grid))
+            .collect();
+        let mut obj_e = Vec::new();
+        let mut bg_e = Vec::new();
+        for c in 0..p.anchors {
+            let e = cell_energy(&frame, c, &p);
+            if object_cells.contains(&c) {
+                obj_e.push(e);
+            } else {
+                bg_e.push(e);
+            }
+        }
+        let obj_min = obj_e.iter().cloned().fold(f32::INFINITY, f32::min);
+        let bg_mean = bg_e.iter().sum::<f32>() / bg_e.len() as f32;
+        assert!(
+            obj_min > 2.0 * bg_mean,
+            "obj_min={obj_min} bg_mean={bg_mean}"
+        );
+    }
+
+    #[test]
+    fn higher_quality_means_more_signal() {
+        let (p, t) = setup();
+        let hi = render_frame(&t, Quality::ORIGINAL, 0.0, &p);
+        let lo = render_frame(&t, Quality::LOW, 0.0, &p);
+        let cell = t.objects[0].gt.cells(p.grid)[0];
+        assert!(cell_energy(&hi, cell, &p) > cell_energy(&lo, cell, &p));
+    }
+
+    #[test]
+    fn crop_points_at_true_class_at_high_quality() {
+        let (p, t) = setup();
+        for obj in &t.objects {
+            let crop = render_crop(obj, Quality::ORIGINAL, 0.0, &p);
+            let mut best = (0, f32::NEG_INFINITY);
+            for k in 0..p.num_classes {
+                let proj: f32 = p
+                    .signatures
+                    .row(k)
+                    .iter()
+                    .zip(&crop)
+                    .map(|(a, b)| a * b)
+                    .sum();
+                if proj > best.1 {
+                    best = (k, proj);
+                }
+            }
+            assert_eq!(best.0, obj.gt.class);
+        }
+    }
+
+    #[test]
+    fn region_crop_without_object_is_weak() {
+        let (p, t) = setup();
+        let object_cells: std::collections::BTreeSet<usize> = t
+            .objects
+            .iter()
+            .flat_map(|o| o.gt.cells(p.grid))
+            .collect();
+        // find an empty 1x1 region
+        let empty = (0..p.anchors)
+            .find(|c| !object_cells.contains(c))
+            .unwrap();
+        let region = GtBox {
+            x0: empty % p.grid,
+            y0: empty / p.grid,
+            x1: empty % p.grid,
+            y1: empty / p.grid,
+            class: 0,
+            id: 999,
+        };
+        let crop = render_region_crop(&t, &region, Quality::ORIGINAL, 0.0, &p);
+        let norm: f32 = crop.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(norm < 0.5, "clutter crop norm {norm}");
+    }
+
+    #[test]
+    fn region_crop_with_object_matches_object_crop_direction() {
+        let (p, t) = setup();
+        let obj = &t.objects[0];
+        let crop = render_region_crop(&t, &obj.gt, Quality::ORIGINAL, 0.0, &p);
+        let proj: f32 = p
+            .signatures
+            .row(obj.gt.class)
+            .iter()
+            .zip(&crop)
+            .map(|(a, b)| a * b)
+            .sum();
+        assert!(proj > 0.5, "proj={proj}");
+    }
+
+    #[test]
+    fn drift_rotates_the_rendered_signature() {
+        let (p, t) = setup();
+        let obj = &t.objects[0];
+        let c0 = render_crop(obj, Quality::ORIGINAL, 0.0, &p);
+        let c1 = render_crop(obj, Quality::ORIGINAL, 0.5, &p);
+        let proj0: f32 = p.signatures.row(obj.gt.class).iter().zip(&c0).map(|(a, b)| a * b).sum();
+        let proj1: f32 = p.signatures.row(obj.gt.class).iter().zip(&c1).map(|(a, b)| a * b).sum();
+        assert!(proj1 < proj0 - 0.05, "drift did not reduce alignment: {proj0} -> {proj1}");
+    }
+}

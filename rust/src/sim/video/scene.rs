@@ -1,0 +1,363 @@
+//! Scene model: objects with class, position, velocity and size moving
+//! through a G×G cell world.
+//!
+//! The scene produces per-keyframe **ground truth** (`FrameTruth`): object
+//! boxes plus the per-object render parameters (confuser class, mix jitter,
+//! noise seed). Rendering at any quality is a pure function of the truth —
+//! see `render.rs` — so the same captured frame can be "re-encoded"
+//! consistently at several qualities, exactly like the physical pipeline.
+//!
+//! Unlike the paper (which had to use FasterRCNN output as pseudo ground
+//! truth), the simulator knows the *true* boxes, letting us report both
+//! true-GT F1 and golden-config F1 (Key Observation 4).
+
+use crate::util::rng::Pcg32;
+
+/// Scene generation parameters for one video.
+#[derive(Debug, Clone)]
+pub struct SceneConfig {
+    pub grid: usize,
+    pub num_classes: usize,
+    /// Average number of objects present per frame.
+    pub density: f64,
+    /// Object speed in cells per keyframe, uniformly in [0.2, 1.0]·speed.
+    pub speed: f64,
+    /// Object side length range in cells.
+    pub size_range: (f64, f64),
+    /// Skew of the class distribution (0 = uniform; higher = heavier head).
+    pub class_skew: f64,
+    pub seed: u64,
+}
+
+impl SceneConfig {
+    pub fn validate(&self) {
+        assert!(self.grid >= 4, "grid too small");
+        assert!(self.num_classes >= 2);
+        assert!(self.density > 0.0);
+        assert!(self.size_range.0 >= 1.0 && self.size_range.1 >= self.size_range.0);
+        assert!(self.size_range.1 <= self.grid as f64 / 2.0, "objects too large");
+    }
+}
+
+/// A live object in the scene.
+#[derive(Debug, Clone)]
+pub struct ObjectState {
+    pub id: u64,
+    pub class: usize,
+    pub cx: f64,
+    pub cy: f64,
+    pub vx: f64,
+    pub vy: f64,
+    pub size: f64,
+    /// Confuser class this object's appearance leans toward when encoded
+    /// at low quality (drawn once at spawn; persists for the object's life).
+    pub conf_class: usize,
+    /// Per-object offset on the mean confusion mix.
+    pub m_jitter: f64,
+    /// First keyframe index at which the object was visible (freshness).
+    pub born_frame: u64,
+}
+
+/// Ground-truth box in cell coordinates (inclusive cell rect).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GtBox {
+    pub x0: usize,
+    pub y0: usize,
+    pub x1: usize,
+    pub y1: usize,
+    pub class: usize,
+    pub id: u64,
+}
+
+impl GtBox {
+    pub fn cells(&self, grid: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        for y in self.y0..=self.y1 {
+            for x in self.x0..=self.x1 {
+                out.push(y * grid + x);
+            }
+        }
+        out
+    }
+
+    pub fn area(&self) -> usize {
+        (self.x1 - self.x0 + 1) * (self.y1 - self.y0 + 1)
+    }
+
+    /// Intersection-over-union with another box.
+    pub fn iou(&self, other: &GtBox) -> f64 {
+        let ix0 = self.x0.max(other.x0);
+        let iy0 = self.y0.max(other.y0);
+        let ix1 = self.x1.min(other.x1);
+        let iy1 = self.y1.min(other.y1);
+        if ix1 < ix0 || iy1 < iy0 {
+            return 0.0;
+        }
+        let inter = ((ix1 - ix0 + 1) * (iy1 - iy0 + 1)) as f64;
+        let union = (self.area() + other.area()) as f64 - inter;
+        inter / union
+    }
+}
+
+/// Everything needed to render one keyframe at any quality.
+#[derive(Debug, Clone)]
+pub struct FrameObject {
+    pub gt: GtBox,
+    pub conf_class: usize,
+    pub m_jitter: f64,
+    pub noise_seed: u64,
+    pub born_frame: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct FrameTruth {
+    pub frame_idx: u64,
+    pub clutter_seed: u64,
+    pub objects: Vec<FrameObject>,
+}
+
+impl FrameTruth {
+    pub fn gt_boxes(&self) -> Vec<GtBox> {
+        self.objects.iter().map(|o| o.gt).collect()
+    }
+}
+
+/// The evolving scene for one video.
+pub struct Scene {
+    cfg: SceneConfig,
+    rng: Pcg32,
+    objects: Vec<ObjectState>,
+    next_id: u64,
+    frame_idx: u64,
+    target_count: usize,
+}
+
+impl Scene {
+    pub fn new(cfg: SceneConfig) -> Self {
+        cfg.validate();
+        let mut rng = Pcg32::new(cfg.seed, 17);
+        // Per-video population target around the configured density.
+        let target = (cfg.density * rng.range(0.75, 1.25)).round().max(1.0) as usize;
+        let mut scene = Scene {
+            cfg,
+            rng,
+            objects: Vec::new(),
+            next_id: 0,
+            frame_idx: 0,
+            target_count: target,
+        };
+        for _ in 0..scene.target_count {
+            scene.spawn();
+        }
+        scene
+    }
+
+    fn sample_class(&mut self) -> usize {
+        // Zipf-ish skewed class distribution.
+        let k = self.cfg.num_classes;
+        if self.cfg.class_skew <= 0.0 {
+            return self.rng.index(k);
+        }
+        let weights: Vec<f64> = (0..k)
+            .map(|i| 1.0 / ((i + 1) as f64).powf(self.cfg.class_skew))
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut u = self.rng.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        k - 1
+    }
+
+    fn spawn(&mut self) {
+        let g = self.cfg.grid as f64;
+        let size = self.rng.range(self.cfg.size_range.0, self.cfg.size_range.1);
+        let margin = size / 2.0 + 0.01;
+        let class = self.sample_class();
+        let conf_class =
+            (class + 1 + self.rng.index(self.cfg.num_classes - 1)) % self.cfg.num_classes;
+        let speed = self.cfg.speed * self.rng.range(0.2, 1.0);
+        let dir = self.rng.range(0.0, std::f64::consts::TAU);
+        let obj = ObjectState {
+            id: self.next_id,
+            class,
+            cx: self.rng.range(margin, g - margin),
+            cy: self.rng.range(margin, g - margin),
+            vx: speed * dir.cos(),
+            vy: speed * dir.sin(),
+            size,
+            conf_class,
+            m_jitter: self.rng.range(-1.0, 1.0), // scaled by params.m_jitter at render
+            born_frame: self.frame_idx,
+        };
+        self.next_id += 1;
+        self.objects.push(obj);
+    }
+
+    /// Advance one keyframe and return its ground truth.
+    pub fn step(&mut self) -> FrameTruth {
+        let g = self.cfg.grid as f64;
+        // Move; objects leaving the world despawn and are replaced.
+        for o in &mut self.objects {
+            o.cx += o.vx;
+            o.cy += o.vy;
+        }
+        let grid = self.cfg.grid;
+        self.objects.retain(|o| {
+            let h = o.size / 2.0;
+            o.cx - h >= 0.0 && o.cy - h >= 0.0 && o.cx + h < g && o.cy + h < g
+        });
+        while self.objects.len() < self.target_count {
+            self.spawn();
+        }
+        let frame_idx = self.frame_idx;
+        let clutter_seed = self
+            .cfg
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(frame_idx);
+        let objects = self
+            .objects
+            .iter()
+            .map(|o| {
+                let h = o.size / 2.0;
+                let x0 = (o.cx - h).floor().max(0.0) as usize;
+                let y0 = (o.cy - h).floor().max(0.0) as usize;
+                let x1 = ((o.cx + h).ceil() as usize).min(grid - 1).max(x0);
+                let y1 = ((o.cy + h).ceil() as usize).min(grid - 1).max(y0);
+                let noise_seed = o.id.wrapping_mul(0xD1B54A32D192ED03) ^ frame_idx;
+                // per-frame encoding jitter: compression artifacts vary
+                // frame to frame, so the same object drifts in and out of
+                // the cloud's confident set over its lifetime
+                let mut jrng = Pcg32::new(noise_seed ^ 0x9E37_79B9, 9);
+                let m_jitter = 0.5 * o.m_jitter + 0.5 * jrng.range(-1.0, 1.0);
+                FrameObject {
+                    gt: GtBox { x0, y0, x1, y1, class: o.class, id: o.id },
+                    conf_class: o.conf_class,
+                    m_jitter,
+                    noise_seed,
+                    born_frame: o.born_frame,
+                }
+            })
+            .collect();
+        self.frame_idx += 1;
+        FrameTruth { frame_idx, clutter_seed, objects }
+    }
+
+    pub fn frame_index(&self) -> u64 {
+        self.frame_idx
+    }
+
+    pub fn population(&self) -> usize {
+        self.objects.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(seed: u64) -> SceneConfig {
+        SceneConfig {
+            grid: 16,
+            num_classes: 8,
+            density: 4.0,
+            speed: 0.6,
+            size_range: (1.0, 3.0),
+            class_skew: 0.8,
+            seed,
+        }
+    }
+
+    #[test]
+    fn population_stays_near_target() {
+        let mut s = Scene::new(cfg(1));
+        for _ in 0..100 {
+            let t = s.step();
+            assert!(!t.objects.is_empty());
+            assert!(t.objects.len() <= 8);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Scene::new(cfg(2));
+        let mut b = Scene::new(cfg(2));
+        for _ in 0..20 {
+            let ta = a.step();
+            let tb = b.step();
+            assert_eq!(ta.gt_boxes(), tb.gt_boxes());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Scene::new(cfg(3));
+        let mut b = Scene::new(cfg(4));
+        let same = (0..20)
+            .filter(|_| a.step().gt_boxes() == b.step().gt_boxes())
+            .count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn boxes_stay_in_bounds() {
+        let mut s = Scene::new(cfg(5));
+        for _ in 0..200 {
+            for b in s.step().gt_boxes() {
+                assert!(b.x1 < 16 && b.y1 < 16);
+                assert!(b.x0 <= b.x1 && b.y0 <= b.y1);
+            }
+        }
+    }
+
+    #[test]
+    fn objects_actually_move() {
+        let mut s = Scene::new(cfg(6));
+        let first = s.step();
+        let mut moved = false;
+        let mut later = first.clone();
+        for _ in 0..10 {
+            later = s.step();
+        }
+        for o in &first.objects {
+            if let Some(l) = later.objects.iter().find(|l| l.gt.id == o.gt.id) {
+                if l.gt != o.gt {
+                    moved = true;
+                }
+            }
+        }
+        assert!(moved, "no object moved in 10 keyframes");
+    }
+
+    #[test]
+    fn confuser_class_differs_from_class() {
+        let mut s = Scene::new(cfg(7));
+        for _ in 0..50 {
+            for o in &s.step().objects {
+                assert_ne!(o.gt.class, o.conf_class);
+            }
+        }
+    }
+
+    #[test]
+    fn iou_basics() {
+        let a = GtBox { x0: 0, y0: 0, x1: 1, y1: 1, class: 0, id: 0 };
+        let b = GtBox { x0: 0, y0: 0, x1: 1, y1: 1, class: 1, id: 1 };
+        assert!((a.iou(&b) - 1.0).abs() < 1e-12);
+        let c = GtBox { x0: 2, y0: 2, x1: 3, y1: 3, class: 0, id: 2 };
+        assert_eq!(a.iou(&c), 0.0);
+        let d = GtBox { x0: 1, y0: 1, x1: 2, y1: 2, class: 0, id: 3 };
+        assert!((a.iou(&d) - 1.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cells_enumerates_rect() {
+        let b = GtBox { x0: 1, y0: 2, x1: 2, y1: 3, class: 0, id: 0 };
+        assert_eq!(b.cells(16), vec![33, 34, 49, 50]);
+        assert_eq!(b.area(), 4);
+    }
+}

@@ -1,0 +1,140 @@
+//! Minimal argv parser for the `vpaas` binary, examples and benches.
+//!
+//! Supports `subcommand --flag --key value --key=value positional` forms.
+//! Deliberately tiny: the full clap surface is not vendored in this
+//! environment (see DESIGN.md §Installed-tooling substitutions).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process argv.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("figures fig9 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.positional, vec!["fig9", "extra"]);
+    }
+
+    #[test]
+    fn key_value_both_forms() {
+        let a = parse("run --dataset traffic --qp=36");
+        assert_eq!(a.get("dataset"), Some("traffic"));
+        assert_eq!(a.get("qp"), Some("36"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("run --verbose");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --fast --dataset drone");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("dataset"), Some("drone"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("x --n 4 --rate 2.5");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 4);
+        assert!((a.get_f64("rate", 0.0).unwrap() - 2.5).abs() < 1e-12);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_f64("n", 0.0).is_ok());
+    }
+
+    #[test]
+    fn typed_getter_error() {
+        let a = parse("x --n nope");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

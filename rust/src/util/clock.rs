@@ -1,0 +1,160 @@
+//! The hybrid clock driving the testbed emulator.
+//!
+//! The paper measures end-to-end "freshness" latency on a physical testbed.
+//! Our substitute is a **virtual clock**: network transfers and device-scaled
+//! compute advance simulated time deterministically, while real PJRT
+//! execution can be measured in wall time and folded in (scaled by a device
+//! profile factor). Every latency figure in EXPERIMENTS.md is reported in
+//! virtual seconds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Monotonic virtual clock, shared across simulated nodes.
+///
+/// Time is stored in integer nanoseconds for lock-free atomic advancement.
+#[derive(Debug, Clone)]
+pub struct SimClock {
+    ns: Arc<AtomicU64>,
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { ns: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Current virtual time in seconds.
+    pub fn now(&self) -> f64 {
+        self.ns.load(Ordering::Acquire) as f64 * 1e-9
+    }
+
+    /// Advance the clock by `dt` seconds (dt >= 0) and return the new time.
+    pub fn advance(&self, dt: f64) -> f64 {
+        assert!(dt >= 0.0, "clock cannot move backwards (dt={dt})");
+        let add = (dt * 1e9).round() as u64;
+        let new = self.ns.fetch_add(add, Ordering::AcqRel) + add;
+        new as f64 * 1e-9
+    }
+
+    /// Move the clock forward to at least `t` seconds (no-op if already past).
+    pub fn advance_to(&self, t: f64) -> f64 {
+        let target = (t * 1e9).round() as u64;
+        let mut cur = self.ns.load(Ordering::Acquire);
+        while cur < target {
+            match self.ns.compare_exchange(cur, target, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return t,
+                Err(actual) => cur = actual,
+            }
+        }
+        cur as f64 * 1e-9
+    }
+
+    pub fn reset(&self) {
+        self.ns.store(0, Ordering::Release);
+    }
+}
+
+/// Wall-clock stopwatch for measuring real PJRT execution.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed wall seconds since construction or last `lap`.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed seconds, then restart.
+    pub fn lap(&mut self) -> f64 {
+        let dt = self.elapsed();
+        self.start = Instant::now();
+        dt
+    }
+}
+
+/// A per-timeline event timestamp pair used for freshness accounting:
+/// the paper defines latency as "object appears on camera" -> "labeled".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Span {
+    pub fn new(start: f64, end: f64) -> Self {
+        assert!(end >= start, "span end {end} before start {start}");
+        Span { start, end }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero_and_advances() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.advance(0.25);
+        assert!((c.now() - 1.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_to_is_monotone() {
+        let c = SimClock::new();
+        c.advance_to(2.0);
+        assert!((c.now() - 2.0).abs() < 1e-9);
+        c.advance_to(1.0); // already past: no-op
+        assert!((c.now() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clones_share_time() {
+        let a = SimClock::new();
+        let b = a.clone();
+        a.advance(3.0);
+        assert!((b.now() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn negative_advance_panics() {
+        SimClock::new().advance(-1.0);
+    }
+
+    #[test]
+    fn span_duration() {
+        assert!((Span::new(1.0, 3.5).duration() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_measures_something() {
+        let sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.elapsed() >= 0.004);
+    }
+}

@@ -1,0 +1,171 @@
+//! Sectioned `key = value` configuration files.
+//!
+//! This is the runtime equivalent of the paper's policy/config file
+//! (Fig. 14 passes `config="example.yml"` to the client). Format:
+//!
+//! ```text
+//! # comment
+//! [section]
+//! key = value
+//! list = a, b, c
+//! ```
+//!
+//! Keys outside any section land in the "" (global) section. Values are
+//! strings; typed getters parse on access so error messages carry the
+//! section/key path.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section {raw:?}", lineno + 1))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`, got {raw:?}", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), v.trim().to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("[{section}] {key}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("[{section}] {key}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") | Some("on") => Ok(true),
+            Some("false") | Some("0") | Some("no") | Some("off") => Ok(false),
+            Some(v) => Err(anyhow!("[{section}] {key}: expected bool, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list value.
+    pub fn list(&self, section: &str, key: &str) -> Vec<String> {
+        self.get(section, key)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, value: &str) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\n# policy file\ntop = global\n[protocol]\nqp_low = 36\nrs_low = 0.8\nadaptive = true\n[fog]\nmodels = cls_small, yolo_lite\n";
+
+    #[test]
+    fn parses_sections_and_globals() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("", "top"), Some("global"));
+        assert_eq!(c.get("protocol", "qp_low"), Some("36"));
+        assert_eq!(c.f64_or("protocol", "rs_low", 0.0).unwrap(), 0.8);
+        assert!(c.bool_or("protocol", "adaptive", false).unwrap());
+    }
+
+    #[test]
+    fn lists_split_and_trim() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.list("fog", "models"), vec!["cls_small", "yolo_lite"]);
+        assert!(c.list("fog", "missing").is_empty());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize_or("protocol", "missing", 9).unwrap(), 9);
+        assert_eq!(c.str_or("x", "y", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn type_errors_name_the_key() {
+        let c = Config::parse("[a]\nk = notanumber\n").unwrap();
+        let err = c.f64_or("a", "k", 0.0).unwrap_err().to_string();
+        assert!(err.contains("[a] k"), "{err}");
+    }
+
+    #[test]
+    fn bad_lines_are_rejected() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("justakey\n").is_err());
+        assert!(Config::parse(" = v\n").is_err());
+    }
+
+    #[test]
+    fn set_roundtrips() {
+        let mut c = Config::default();
+        c.set("s", "k", "v");
+        assert_eq!(c.get("s", "k"), Some("v"));
+    }
+}

@@ -1,0 +1,25 @@
+//! Foundation utilities for the VPaaS coordinator.
+//!
+//! The build environment vendors only the `xla` crate and its transitive
+//! dependencies (no tokio / clap / serde / rand / criterion / proptest), so
+//! this module provides the substrates a production coordinator would
+//! normally pull from crates.io:
+//!
+//! * [`rng`] — deterministic PCG32 random numbers (simulation reproducibility)
+//! * [`clock`] — the virtual/wall hybrid clock driving the testbed emulator
+//! * [`stats`] — streaming summaries and percentiles for metrics
+//! * [`cli`] — a small argv parser for the `vpaas` binary and examples
+//! * [`config`] — sectioned `key = value` config files (the paper's
+//!   "policy file", Fig. 14's `example.yml` equivalent)
+//! * [`logging`] — leveled logger controlled by `VPAAS_LOG`
+//! * [`pool`] — a fixed thread pool + job handles (the async substrate)
+//! * [`prop`] — a mini property-testing framework used by the test suite
+
+pub mod cli;
+pub mod clock;
+pub mod config;
+pub mod logging;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

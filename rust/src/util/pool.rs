@@ -1,0 +1,200 @@
+//! Fixed-size thread pool — the async substrate for the serverless executors.
+//!
+//! tokio is not vendored in this environment, so the cloud/fog executors and
+//! the dynamic batcher run on this pool: submit a closure, get a [`JobHandle`]
+//! future-alike you can `join()`. Shutdown is graceful (drains the queue).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<PoolState>,
+    cond: Condvar,
+}
+
+struct PoolState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+    in_flight: usize,
+}
+
+/// A fixed pool of worker threads executing submitted jobs FIFO.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(PoolState { jobs: VecDeque::new(), shutdown: false, in_flight: 0 }),
+            cond: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("vpaas-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Submit a job returning a typed handle.
+    pub fn submit<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let slot: Arc<(Mutex<Option<T>>, Condvar)> = Arc::new((Mutex::new(None), Condvar::new()));
+        let slot2 = Arc::clone(&slot);
+        let job: Job = Box::new(move || {
+            let value = f();
+            let (lock, cond) = &*slot2;
+            *lock.lock().unwrap() = Some(value);
+            cond.notify_all();
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            assert!(!q.shutdown, "submit after shutdown");
+            q.jobs.push_back(job);
+        }
+        self.shared.cond.notify_one();
+        JobHandle { slot }
+    }
+
+    /// Block until the queue is empty and no job is running.
+    pub fn wait_idle(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !q.jobs.is_empty() || q.in_flight > 0 {
+            q = self.shared.cond.wait(q).unwrap();
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cond.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    q.in_flight += 1;
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.cond.wait(q).unwrap();
+            }
+        };
+        job();
+        let mut q = shared.queue.lock().unwrap();
+        q.in_flight -= 1;
+        if q.jobs.is_empty() && q.in_flight == 0 {
+            shared.cond.notify_all(); // wake wait_idle
+        }
+    }
+}
+
+/// Handle to a submitted job's result.
+pub struct JobHandle<T> {
+    slot: Arc<(Mutex<Option<T>>, Condvar)>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job finishes and take its result.
+    pub fn join(self) -> T {
+        let (lock, cond) = &*self.slot;
+        let mut guard = lock.lock().unwrap();
+        loop {
+            if let Some(v) = guard.take() {
+                return v;
+            }
+            guard = cond.wait(guard).unwrap();
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_take(&self) -> Option<T> {
+        self.slot.0.lock().unwrap().take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs_and_returns_values() {
+        let pool = ThreadPool::new(4);
+        let handles: Vec<_> = (0..32).map(|i| pool.submit(move || i * 2)).collect();
+        let mut sum = 0;
+        for h in handles {
+            sum += h.join();
+        }
+        assert_eq!(sum, (0..32).map(|i| i * 2).sum::<i32>());
+    }
+
+    #[test]
+    fn wait_idle_waits_for_everything() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn drop_drains_gracefully() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..8 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.wait_idle();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn try_take_polls() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit(|| 7usize);
+        pool.wait_idle();
+        assert_eq!(h.try_take(), Some(7));
+    }
+}

@@ -1,0 +1,162 @@
+//! Mini property-testing framework (proptest is not vendored here).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(100, 42, |g| {
+//!     let xs = g.vec(0..50, |g| g.f64_range(0.0, 10.0));
+//!     // ... assert invariant, return Result<(), String>
+//!     Ok(())
+//! });
+//! ```
+//! On failure the harness re-runs the case with the same seed and reports
+//! the case index + seed so the exact input is reproducible. Shrinking is
+//! "retry-lite": generators are asked for progressively smaller sizes on
+//! failure to find a smaller counterexample before reporting.
+
+use super::rng::Pcg32;
+
+/// Generator context handed to each property case.
+pub struct Gen {
+    rng: Pcg32,
+    /// Size hint in [0.0, 1.0]; shrink passes reduce it.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: u64, size: f64) -> Self {
+        Gen { rng: Pcg32::new(seed, case.wrapping_mul(2) + 1), size }
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    /// Range scaled by the current shrink size (upper bound contracts).
+    pub fn sized_usize(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_scaled = lo + (((hi - lo) as f64) * self.size).round() as usize;
+        self.usize_in(lo, hi_scaled.max(lo))
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.sized_usize(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` property cases. Panics with a reproducible report on failure.
+pub fn prop_check(cases: u64, seed: u64, mut property: impl FnMut(&mut Gen) -> CaseResult) {
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case, 1.0);
+        if let Err(msg) = property(&mut g) {
+            // shrink-lite: same case seed, progressively smaller size hints.
+            let mut best = (1.0, msg);
+            for &size in &[0.5, 0.25, 0.1, 0.02] {
+                let mut g = Gen::new(seed, case, size);
+                if let Err(msg) = property(&mut g) {
+                    best = (size, msg);
+                }
+            }
+            panic!(
+                "property failed (seed={seed} case={case} size={}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert helper producing `CaseResult` errors instead of panicking, so the
+/// shrinker can re-run the property.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check(50, 1, |g| {
+            let a = g.f64_range(0.0, 100.0);
+            let b = g.f64_range(0.0, 100.0);
+            if (a + b) >= a {
+                Ok(())
+            } else {
+                Err("sum smaller than part".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        prop_check(50, 2, |g| {
+            let v = g.vec(20, |g| g.usize_in(0, 10));
+            if v.len() < 15 {
+                Ok(())
+            } else {
+                Err(format!("len {}", v.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first = Vec::new();
+        prop_check(10, 3, |g| {
+            first.push(g.u32());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        prop_check(10, 3, |g| {
+            second.push(g.u32());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn sized_usize_respects_bounds() {
+        let mut g = Gen::new(9, 0, 0.0);
+        for _ in 0..32 {
+            assert_eq!(g.sized_usize(3, 100), 3);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Streaming metric summaries: mean/std/min/max and exact percentiles.
+//!
+//! Used by the global monitor, the latency tracker (Fig. 10b/11 report
+//! p50/p90/p99 "freshness"), and the bench harness.
+
+/// Collects samples and answers summary queries. Percentiles are exact
+/// (sorted copy) — sample counts here are small enough that a streaming
+/// sketch would be over-engineering.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    samples: Vec<f64>,
+}
+
+impl Series {
+    pub fn new() -> Self {
+        Series::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        assert!(x.is_finite(), "non-finite sample {x}");
+        self.samples.push(x);
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact percentile with linear interpolation; `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p), "percentile {p}");
+        assert!(!self.samples.is_empty(), "percentile of empty series");
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = p / 100.0 * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let w = rank - lo as f64;
+            sorted[lo] * (1.0 - w) + sorted[hi] * w
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary {
+            count: self.len(),
+            mean: self.mean(),
+            std: self.std(),
+            min: if self.is_empty() { 0.0 } else { self.min() },
+            p50: if self.is_empty() { 0.0 } else { self.percentile(50.0) },
+            p90: if self.is_empty() { 0.0 } else { self.percentile(90.0) },
+            p99: if self.is_empty() { 0.0 } else { self.percentile(99.0) },
+            max: if self.is_empty() { 0.0 } else { self.max() },
+        }
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Point-in-time summary of a [`Series`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.4} std={:.4} p50={:.4} p90={:.4} p99={:.4} max={:.4}",
+            self.count, self.mean, self.std, self.p50, self.p90, self.p99, self.max
+        )
+    }
+}
+
+/// Exponentially weighted moving average — the global monitor's smoothed
+/// load signal feeding the provisioner (Fig. 16). `Default` uses α = 0.2.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Default for Ewma {
+    fn default() -> Self {
+        Ewma::new(0.2)
+    }
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_of_known_data() {
+        let mut s = Series::new();
+        s.extend(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut s = Series::new();
+        s.extend(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 4.0).abs() < 1e-12);
+        assert!((s.median() - 2.5).abs() < 1e-12);
+        assert!((s.percentile(25.0) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_of_singleton() {
+        let mut s = Series::new();
+        s.push(3.0);
+        assert_eq!(s.percentile(99.0), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn rejects_nan() {
+        Series::new().push(f64::NAN);
+    }
+
+    #[test]
+    fn summary_display_is_stable() {
+        let mut s = Series::new();
+        s.extend(&[1.0, 2.0, 3.0]);
+        let text = format!("{}", s.summary());
+        assert!(text.contains("n=3"));
+        assert!(text.contains("mean=2.0000"));
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.update(10.0), 10.0);
+        for _ in 0..20 {
+            e.update(2.0);
+        }
+        assert!((e.get().unwrap() - 2.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,200 @@
+//! The model zoo + profiler (stateful backend, Fig. 3).
+//!
+//! Users register models (Fig. 14: `model_zoo.register(...)`); the zoo
+//! versions them, stores profiling results, and records where each model is
+//! deployed (cloud / fog model-cache). The paper backs this with MongoDB;
+//! here it is an in-memory store with the same interface role.
+
+pub mod profiler;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+pub use profiler::{ModelProfile, Profiler};
+
+/// What a model does — determines which pipeline stages may bind to it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Detection,
+    Classification,
+    SuperResolution,
+    IncrementalUpdate,
+}
+
+/// Where a model is deployed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    Cloud,
+    Fog,
+}
+
+/// A registered model version.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub version: u32,
+    pub task: Task,
+    /// Artifact name prefix; batch-bucket artifacts are `<prefix>_b<N>`.
+    pub artifact_prefix: String,
+    pub batch_buckets: Vec<usize>,
+    pub profile: Option<ModelProfile>,
+    pub placements: Vec<Placement>,
+}
+
+impl ModelEntry {
+    /// Artifact name for a batch bucket.
+    pub fn artifact_for(&self, bucket: usize) -> Result<String> {
+        if !self.batch_buckets.contains(&bucket) {
+            bail!(
+                "{} v{}: no artifact for batch {bucket} (buckets {:?})",
+                self.name,
+                self.version,
+                self.batch_buckets
+            );
+        }
+        Ok(format!("{}_b{bucket}", self.artifact_prefix))
+    }
+}
+
+/// Versioned model registry.
+#[derive(Debug, Default)]
+pub struct ModelZoo {
+    models: BTreeMap<String, Vec<ModelEntry>>,
+}
+
+impl ModelZoo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new version of `name`; returns the assigned version.
+    pub fn register(
+        &mut self,
+        name: &str,
+        task: Task,
+        artifact_prefix: &str,
+        batch_buckets: Vec<usize>,
+    ) -> u32 {
+        let versions = self.models.entry(name.to_string()).or_default();
+        let version = versions.last().map(|e| e.version + 1).unwrap_or(1);
+        versions.push(ModelEntry {
+            name: name.to_string(),
+            version,
+            task,
+            artifact_prefix: artifact_prefix.to_string(),
+            batch_buckets,
+            profile: None,
+            placements: Vec::new(),
+        });
+        version
+    }
+
+    /// Latest version of a model.
+    pub fn latest(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .and_then(|v| v.last())
+            .ok_or_else(|| anyhow!("model {name:?} not registered"))
+    }
+
+    pub fn get(&self, name: &str, version: u32) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .and_then(|v| v.iter().find(|e| e.version == version))
+            .ok_or_else(|| anyhow!("model {name:?} v{version} not registered"))
+    }
+
+    /// Record a deployment (the dispatcher calls this).
+    pub fn place(&mut self, name: &str, placement: Placement) -> Result<()> {
+        let entry = self
+            .models
+            .get_mut(name)
+            .and_then(|v| v.last_mut())
+            .ok_or_else(|| anyhow!("model {name:?} not registered"))?;
+        if !entry.placements.contains(&placement) {
+            entry.placements.push(placement);
+        }
+        Ok(())
+    }
+
+    pub fn attach_profile(&mut self, name: &str, profile: ModelProfile) -> Result<()> {
+        let entry = self
+            .models
+            .get_mut(name)
+            .and_then(|v| v.last_mut())
+            .ok_or_else(|| anyhow!("model {name:?} not registered"))?;
+        entry.profile = Some(profile);
+        Ok(())
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.models.keys().map(|s| s.as_str())
+    }
+
+    pub fn version_count(&self, name: &str) -> usize {
+        self.models.get(name).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Standard registrations for the paper's pipeline.
+    pub fn with_standard_models() -> Self {
+        let mut zoo = Self::new();
+        let buckets = vec![1, 4, 16];
+        zoo.register("faster_rcnn_101", Task::Detection, "detector", buckets.clone());
+        zoo.register("yolo_lite", Task::Detection, "detector_lite", buckets.clone());
+        zoo.register("ova_classifier", Task::Classification, "classifier", buckets.clone());
+        zoo.register("carn_sr", Task::SuperResolution, "sr", buckets);
+        zoo.register("il_step", Task::IncrementalUpdate, "il_step", vec![]);
+        zoo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_lookup() {
+        let mut z = ModelZoo::new();
+        let v = z.register("m", Task::Detection, "detector", vec![1, 4]);
+        assert_eq!(v, 1);
+        let e = z.latest("m").unwrap();
+        assert_eq!(e.artifact_for(4).unwrap(), "detector_b4");
+        assert!(e.artifact_for(16).is_err());
+    }
+
+    #[test]
+    fn versions_increment() {
+        let mut z = ModelZoo::new();
+        z.register("m", Task::Classification, "classifier", vec![1]);
+        let v2 = z.register("m", Task::Classification, "classifier_v2", vec![1]);
+        assert_eq!(v2, 2);
+        assert_eq!(z.version_count("m"), 2);
+        assert_eq!(z.latest("m").unwrap().artifact_prefix, "classifier_v2");
+        assert_eq!(z.get("m", 1).unwrap().artifact_prefix, "classifier");
+    }
+
+    #[test]
+    fn placements_dedupe() {
+        let mut z = ModelZoo::with_standard_models();
+        z.place("ova_classifier", Placement::Fog).unwrap();
+        z.place("ova_classifier", Placement::Fog).unwrap();
+        assert_eq!(z.latest("ova_classifier").unwrap().placements, vec![Placement::Fog]);
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let z = ModelZoo::new();
+        assert!(z.latest("ghost").is_err());
+        let mut z = z;
+        assert!(z.place("ghost", Placement::Cloud).is_err());
+    }
+
+    #[test]
+    fn standard_models_cover_pipeline() {
+        let z = ModelZoo::with_standard_models();
+        for name in ["faster_rcnn_101", "yolo_lite", "ova_classifier", "carn_sr", "il_step"] {
+            assert!(z.latest(name).is_ok(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Model profiler (stateful backend, §III-D): measures each registered
+//! model's real PJRT wall time per batch bucket and derives per-device
+//! virtual-time estimates via the Fig. 4 device profiles.
+//!
+//! Registration triggers profiling in the paper ("the model will be
+//! profiled; the model with the profiling information will be stored in the
+//! cloud model zoo") — `examples/retail_store.rs` shows the same flow.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::interchange::Tensor;
+use crate::runtime::InferenceHandle;
+use crate::sim::device::DeviceProfile;
+use crate::util::clock::Stopwatch;
+
+/// Wall-time measurements for one model across its batch buckets.
+#[derive(Debug, Clone, Default)]
+pub struct ModelProfile {
+    /// bucket -> mean wall seconds per invocation (this host, CPU PJRT).
+    pub wall_s: BTreeMap<usize, f64>,
+    /// bucket -> items/second throughput.
+    pub throughput: BTreeMap<usize, f64>,
+}
+
+impl ModelProfile {
+    /// Best (highest-throughput) bucket.
+    pub fn best_bucket(&self) -> Option<usize> {
+        self.throughput
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(&b, _)| b)
+    }
+}
+
+/// Profiles models through the shared inference service.
+pub struct Profiler {
+    handle: InferenceHandle,
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Profiler {
+    pub fn new(handle: InferenceHandle) -> Self {
+        Profiler { handle, warmup: 1, iters: 5 }
+    }
+
+    /// Build zero inputs matching the artifact's manifest shapes. The
+    /// caller provides them normally; zeros are fine for timing.
+    fn zero_inputs(&self, specs: &[Vec<usize>]) -> Vec<Tensor> {
+        specs.iter().map(|dims| Tensor::zeros(dims.clone())).collect()
+    }
+
+    /// Profile one artifact given its input shapes; returns mean seconds.
+    pub fn time_artifact(&self, artifact: &str, input_dims: &[Vec<usize>]) -> Result<f64> {
+        let inputs = self.zero_inputs(input_dims);
+        for _ in 0..self.warmup {
+            self.handle.infer(artifact, inputs.clone())?;
+        }
+        let sw = Stopwatch::new();
+        for _ in 0..self.iters {
+            self.handle.infer(artifact, inputs.clone())?;
+        }
+        Ok(sw.elapsed() / self.iters as f64)
+    }
+
+    /// Profile a model across its batch buckets. `make_dims(bucket)` maps a
+    /// bucket to the artifact input shapes.
+    pub fn profile_model(
+        &self,
+        prefix: &str,
+        buckets: &[usize],
+        make_dims: impl Fn(usize) -> Vec<Vec<usize>>,
+    ) -> Result<ModelProfile> {
+        let mut profile = ModelProfile::default();
+        for &b in buckets {
+            let artifact = format!("{prefix}_b{b}");
+            let wall = self.time_artifact(&artifact, &make_dims(b))?;
+            profile.wall_s.insert(b, wall);
+            profile.throughput.insert(b, b as f64 / wall.max(1e-9));
+        }
+        Ok(profile)
+    }
+}
+
+/// Fig. 4 numbers: virtual seconds for an op on a device, given batch size.
+/// (The real PJRT wall time above validates *relative* bucket scaling; the
+/// device profile sets the absolute scale of the paper's testbed.)
+pub fn device_op_seconds(device: &DeviceProfile, base_s: f64, batch: usize) -> f64 {
+    device.batched(base_s, batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::InferenceService;
+    use crate::sim::device;
+
+    #[test]
+    fn profiles_classifier_buckets() {
+        let svc = InferenceService::start().unwrap();
+        let prof = Profiler { handle: svc.handle(), warmup: 1, iters: 2 };
+        let p = prof
+            .profile_model("classifier", &[1, 4], |b| vec![vec![b, 24], vec![49, 8]])
+            .unwrap();
+        assert_eq!(p.wall_s.len(), 2);
+        assert!(p.wall_s[&1] > 0.0);
+        // batch-4 must be cheaper per item than 4 batch-1 calls
+        assert!(p.wall_s[&4] < 4.0 * p.wall_s[&1]);
+        assert!(p.best_bucket().is_some());
+    }
+
+    #[test]
+    fn device_scaling_matches_fig4_shape() {
+        // cloud detection per frame faster than fog by >= 5x
+        let cloud = device_op_seconds(&device::CLOUD, device::CLOUD.detect_s, 1);
+        let fog = device_op_seconds(&device::FOG, device::FOG.detect_s, 1);
+        assert!(fog / cloud >= 5.0);
+    }
+}
