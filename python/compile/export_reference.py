@@ -1,0 +1,78 @@
+"""Offline interchange export: manifest + constants without lowering HLO.
+
+``compile.aot`` needs a JAX/XLA toolchain to lower the L2 models to HLO
+text. This environment ships the Rust side with a pure-Rust *reference
+backend* (``rust/src/runtime/engine.rs``) that executes the same model
+math directly from ``constants.txt``, so the only build-time artifacts it
+needs are the two text files:
+
+* ``manifest.txt``  — artifact index (names + I/O shapes; the ``*.hlo.txt``
+  file names are recorded for the gated PJRT path but never read by the
+  reference backend)
+* ``constants.txt`` — scene/model interchange constants + weight tensors
+
+Shapes here mirror ``compile.aot.build_entries`` exactly, so a later
+``make artifacts`` with a real XLA toolchain produces a byte-compatible
+manifest.
+
+Usage: cd python && python -m compile.export_reference --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+from . import constants as C
+from . import weights as W
+
+
+def manifest_lines() -> list[str]:
+    a, d = C.ANCHORS, C.FEAT_DIM
+    hf, k = C.CLS_FEAT, C.NUM_CLASSES
+    bi = C.IL_BATCH
+
+    def shape(*dims: int) -> str:
+        return "f32:" + "x".join(str(v) for v in dims)
+
+    lines = []
+
+    def art(name: str, inputs: list[str], outputs: list[str]) -> None:
+        lines.append(
+            "artifact {} {}.hlo.txt inputs={} outputs={}".format(
+                name, name, ";".join(inputs), ";".join(outputs)
+            )
+        )
+
+    for b in C.BATCH_BUCKETS:
+        det_out = [shape(b, a), shape(b, a, k), shape(b, a)]
+        art(f"detector_b{b}", [shape(b, a, d)], det_out)
+        art(f"detector_lite_b{b}", [shape(b, a, d)], det_out)
+        art(
+            f"classifier_b{b}",
+            [shape(b, d), shape(hf, k)],
+            [shape(b, k), shape(b, hf)],
+        )
+        art(f"sr_b{b}", [shape(b, a, d)], [shape(b, a, d)])
+    art(
+        "il_step",
+        [shape(hf, k), shape(bi, hf), shape(bi, k), shape(bi)],
+        [shape(hf, k)],
+    )
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    lines = manifest_lines()
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    W.export_constants(os.path.join(args.out_dir, "constants.txt"))
+    print(f"wrote {len(lines)} manifest entries + constants to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

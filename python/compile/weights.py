@@ -167,6 +167,8 @@ _SCALARS = {
     "obj_gain": C.OBJ_GAIN,
     "obj_bias": C.OBJ_BIAS,
     "cls_gain": C.CLS_GAIN,
+    "sr_gamma": C.SR_GAMMA,
+    "sr_beta": C.SR_BETA,
     "il_lr": C.IL_LR,
     "ensemble_ridge": C.ENSEMBLE_RIDGE,
 }
@@ -183,7 +185,11 @@ def export_constants(path: str) -> None:
     lines = []
     for name, value in sorted(_SCALARS.items()):
         lines.append(f"scalar {name} {value!r}".replace("'", ""))
-    for name in ("signatures", "drift_perm", "cls_backbone", "cls_last"):
+    # lite_cls rides along so the Rust reference runtime backend (used when
+    # the PJRT/xla toolchain is not vendored) can rebuild the fog fallback
+    # detector's entangled class head bit-for-bit (numpy RNG is not
+    # reproducible from Rust).
+    for name in ("signatures", "drift_perm", "cls_backbone", "cls_last", "lite_cls"):
         arr = w[name]
         dims = "x".join(str(d) for d in arr.shape)
         vals = " ".join(f"{v:.8g}" for v in arr.reshape(-1))

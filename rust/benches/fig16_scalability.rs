@@ -1,4 +1,5 @@
-//! Bench: Fig. 16 — autoscaling under a camera-fleet ramp.
+//! Bench: Fig. 16 — autoscaling under a camera-fleet ramp, plus the
+//! multi-fog shard sweep (throughput at shard counts {1, 2, 4, 8}).
 #[path = "bench_support.rs"]
 mod bench_support;
 use bench_support::bench;
@@ -10,7 +11,13 @@ fn main() {
     let text = figures::fig16(&h, &cfg).unwrap();
     println!("{text}");
     assert!(text.contains("gpus"), "missing provisioning history");
+    let sweep = figures::fig16_shard_sweep(&h, &cfg).unwrap();
+    println!("{sweep}");
+    assert!(sweep.contains("throughput"), "missing shard-sweep throughput");
     bench("fig16/fleet_ramp", 3, || {
         figures::fig16(&h, &cfg).unwrap();
+    });
+    bench("fig16/shard_sweep", 3, || {
+        figures::fig16_shard_sweep(&h, &cfg).unwrap();
     });
 }

@@ -77,6 +77,13 @@ impl FogNode {
         (start, done)
     }
 
+    /// Seconds of queued GPU work still ahead of virtual time `now` — the
+    /// per-shard backlog signal the scheduler's routing policy and the
+    /// provisioner consume ([`crate::serverless::scheduler`]).
+    pub fn backlog_s(&self, now: f64) -> f64 {
+        (self.gpu_free - now).max(0.0)
+    }
+
     /// Quality control for a chunk at the fog (decode + re-encode), the
     /// step the paper moves off the weak client. Returns completion time.
     pub fn quality_control(&mut self, frames: usize, arrival: f64) -> f64 {

@@ -8,9 +8,43 @@
 //!   protocol, the serverless cloud/fog servers, HITL incremental learning,
 //!   the baselines it is evaluated against, and every substrate the paper's
 //!   testbed provided (scene/codec/network/human simulators).
-//! * **L2/L1 (python/, build-time only)** — JAX models + Pallas kernels,
-//!   AOT-lowered to HLO text artifacts loaded by [`runtime`] via PJRT.
-//!   Python never runs on the request path.
+//! * **L2/L1 (python/, build-time only)** — JAX models + Pallas kernels.
+//!   With an XLA toolchain they AOT-lower to HLO text artifacts executed
+//!   via PJRT; in this environment [`runtime`] instead runs a pure-Rust
+//!   reference implementation of the same math, driven by the exported
+//!   `artifacts/manifest.txt` + `constants.txt` (see
+//!   `python/compile/export_reference.py`). Python never runs on the
+//!   request path either way.
+//!
+//! ## Sharded multi-fog scale-out
+//!
+//! The request path scales across a pool of fog nodes
+//! ([`serverless::scheduler`]):
+//!
+//! * **Shard pool** — [`serverless::scheduler::FogShardPool`] owns N
+//!   [`fog::FogNode`] shards; each chunk routes to the least-backlog shard
+//!   over that shard's own LAN segment
+//!   ([`sim::net::Topology::fog_lans`]), and the deployment
+//!   [`serverless::Policy`] (fed the shard's `fog_backlog_s`) decides
+//!   cloud-protocol vs fog-only dispatch.
+//! * **Cross-camera waves** — [`pipeline::Harness::run`] streams all of a
+//!   dataset's videos concurrently, merges chunks in capture order and
+//!   groups them into dispatch waves through
+//!   [`serving::batcher::DynamicBatcher`]; each chunk's shard LAN is held
+//!   until its wave dispatches, so the wave wait is real virtual-clock
+//!   latency and the shared links/GPU queues see grouped arrivals.
+//! * **Provisioner** — the pool publishes `fog_backlog_s` /
+//!   `fog_shards` gauges into [`serverless::GlobalMonitor`]; a
+//!   backlog-threshold autoscaler grows/shrinks the pool (Fig. 16's
+//!   provisioner applied to the fog tier).
+//! * **Determinism** — every RNG stream (per-shard link jitter, routing
+//!   tie-breaks) derives from the run seed via [`util::rng::Pcg32`], so
+//!   sharded runs are bit-reproducible; `tests/scheduler.rs` asserts it.
+//!
+//! Run the scale-out benchmark with
+//! `cargo bench --bench fig16_scalability` (or
+//! `cargo run --release -- figures --id fig16`), which sweeps shard
+//! counts {1, 2, 4, 8} and reports virtual-time throughput.
 //!
 //! Start with `pipeline` for end-to-end drivers, or `examples/quickstart.rs`.
 

@@ -45,8 +45,8 @@ subcommands:
           [--scale 0.05] [--seed N]
   run     --system <vpaas|vpaas-nohitl|mpeg|dds|cloudseg|glimpse>
           --dataset <dashcam|drone|traffic> [--scale 0.05] [--wan 15]
-          [--budget 0.2] [--no-drift] [--golden]
-  profile                       profile registered models on the PJRT engine
+          [--budget 0.2] [--shards 1] [--no-drift] [--golden]
+  profile                       profile registered models on the shared inference engine
   serve   [--config file.cfg] [--chunks N]   drive the serverless demo app";
 
 fn run_config(args: &Args) -> Result<RunConfig> {
@@ -55,6 +55,7 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         hitl_budget: args.get_f64("budget", 0.2)?,
         drift: !args.flag("no-drift"),
         golden: args.flag("golden"),
+        shards: args.get_usize("shards", 1)?,
         seed: args.get_u64("seed", 0xCAFE)?,
         ..RunConfig::default()
     })
@@ -101,6 +102,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if want("fig16") {
         println!("{}\n", figures::fig16(&h, &cfg)?);
+        println!("{}\n", figures::fig16_shard_sweep(&h, &cfg)?);
     }
     if want("quality") {
         println!("{}\n", figures::quality_operating_points(&h));

@@ -83,6 +83,12 @@ pub struct RunMetrics {
     pub fog_regions: u64,
     /// Human labels consumed (HITL only).
     pub labels_used: u64,
+    /// Virtual time at which the last chunk finished — the scale-out
+    /// throughput denominator (chunks / makespan).
+    pub makespan: f64,
+    /// Chunk processing order as (video id, chunk index) pairs; the sharded
+    /// scheduler's determinism/interleaving tests read this.
+    pub chunk_log: Vec<(usize, u64)>,
 }
 
 impl RunMetrics {

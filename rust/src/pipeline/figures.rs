@@ -530,6 +530,38 @@ pub fn fig16(h: &Harness, cfg: &RunConfig) -> Result<String> {
     ))
 }
 
+// ------------------------------------------------------ Fig. 16b (shards)
+/// Sharded multi-fog scale-out sweep: fixed multi-camera workload, shard
+/// counts {1, 2, 4, 8}, reporting virtual-time throughput (chunks per
+/// second of makespan) and freshness latency. This is the §III-D
+/// dispatcher/provisioner scale story the shard pool exists for.
+pub fn fig16_shard_sweep(h: &Harness, cfg: &RunConfig) -> Result<String> {
+    let mut ds = datasets::drone(0.2);
+    ds.videos.truncate(6); // 6 cameras streaming concurrently
+    let mut rows = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let run_cfg = RunConfig { shards, golden: false, autoscale: false, ..cfg.clone() };
+        let m = h.run(SystemKind::Vpaas, &ds, &run_cfg)?;
+        let s = m.latency.summary();
+        let throughput = if m.makespan > 0.0 { m.chunks as f64 / m.makespan } else { 0.0 };
+        rows.push(vec![
+            shards.to_string(),
+            m.chunks.to_string(),
+            format!("{:.1}", m.makespan),
+            format!("{:.3}", throughput),
+            format!("{:.2}", s.p50),
+            format!("{:.2}", s.p99),
+        ]);
+    }
+    Ok(format!(
+        "Fig. 16b — multi-fog shard sweep (6 cameras; throughput in chunks/s of virtual time)\n{}",
+        table(
+            &["shards", "chunks", "makespan_s", "throughput", "lat_p50", "lat_p99"],
+            &rows
+        )
+    ))
+}
+
 // ---------------------------------------------------------------- codec aside
 /// Bandwidth table for the §VI-B operating points (context for Fig. 9).
 pub fn quality_operating_points(h: &Harness) -> String {

@@ -11,7 +11,6 @@ use anyhow::Result;
 
 use crate::baselines::{CloudSeg, Dds, Glimpse, Mpeg};
 use crate::cloud::{CloudConfig, CloudServer};
-use crate::fog::FogNode;
 use crate::hitl::IncrementalLearner;
 use crate::interchange::Tensor;
 use crate::metrics::f1::{match_boxes, PredBox};
@@ -20,9 +19,14 @@ use crate::protocol::coordinator::Coordinator;
 use crate::protocol::post::regions_from_heads;
 use crate::protocol::ProtocolConfig;
 use crate::runtime::{InferenceHandle, InferenceService};
+use crate::serverless::monitor::GlobalMonitor;
+use crate::serverless::policy::Route;
+use crate::serverless::scheduler::{FogShardPool, ShardConfig};
+use crate::serving::batcher::DynamicBatcher;
 use crate::sim::human::{Annotator, AnnotatorConfig};
 use crate::sim::net::Topology;
 use crate::sim::params::SimParams;
+use crate::sim::video::codec;
 use crate::sim::video::datasets::DatasetSpec;
 use crate::sim::video::scene::GtBox;
 use crate::sim::video::{render_frame, Chunk, Quality};
@@ -93,6 +97,10 @@ pub struct RunConfig {
     pub golden: bool,
     /// Cloud outage window on the run timeline (Fig. 15).
     pub outage: Option<(f64, f64)>,
+    /// Fog shard pool size for the VPaaS scheduler (Fig. 16b shard sweep).
+    /// 1 reproduces the single-fog deployment; `autoscale` additionally
+    /// lets the provisioner grow/shrink the pool at runtime.
+    pub shards: usize,
     pub seed: u64,
     pub protocol: ProtocolConfig,
 }
@@ -107,6 +115,7 @@ impl Default for RunConfig {
             autoscale: false,
             golden: true,
             outage: None,
+            shards: 1,
             seed: 0xCAFE,
             protocol: ProtocolConfig::default(),
         }
@@ -139,11 +148,6 @@ impl Harness {
             p.num_classes,
             p.feat_dim,
         )
-    }
-
-    fn make_fog(&self) -> FogNode {
-        let p = &self.params;
-        FogNode::new(self.handle(), p.cls_last0.clone(), p.feat_dim, p.num_classes)
     }
 
     fn make_coordinator(&self, cfg: &RunConfig, hitl: bool) -> Coordinator {
@@ -198,9 +202,252 @@ impl Harness {
         Ok(out)
     }
 
-    /// Run `kind` over a dataset; videos play sequentially on the shared
-    /// testbed (each shifted to its own slot on the run timeline).
+    /// Run `kind` over a dataset on the simulated testbed.
+    ///
+    /// VPaaS runs through the sharded scheduler: all of the dataset's
+    /// videos stream **concurrently** (multi-camera), chunks interleave in
+    /// capture order, form cross-camera dispatch waves, and route onto a
+    /// pool of `cfg.shards` fog shards. Baselines keep the paper's
+    /// sequential single-tenant layout (each video in its own slot on the
+    /// run timeline).
     pub fn run(&self, kind: SystemKind, dataset: &DatasetSpec, cfg: &RunConfig) -> Result<RunMetrics> {
+        match kind {
+            SystemKind::Vpaas | SystemKind::VpaasNoHitl => self.run_vpaas(kind, dataset, cfg),
+            _ => self.run_baseline(kind, dataset, cfg),
+        }
+    }
+
+    /// The sharded multi-fog VPaaS driver (tentpole of the scale-out
+    /// architecture; see `serverless::scheduler`). Deterministic for a
+    /// given seed: chunk merge order, wave formation, shard routing and
+    /// every RNG stream derive from `cfg.seed` alone.
+    fn run_vpaas(&self, kind: SystemKind, dataset: &DatasetSpec, cfg: &RunConfig) -> Result<RunMetrics> {
+        let p = self.params.clone();
+        let shards = cfg.shards.max(1);
+        let shard_cfg = ShardConfig {
+            initial_shards: shards,
+            max_shards: shards.max(8),
+            autoscale: cfg.autoscale,
+            ..ShardConfig::default()
+        };
+        let mut topo = Topology::new(cfg.wan_mbps, cfg.seed);
+        if let Some((s, e)) = cfg.outage {
+            topo.cloud_outage(s, e);
+        }
+        topo.ensure_fog_lans(shard_cfg.initial_shards);
+        let mut run = VpaasRun {
+            cfg: cfg.clone(),
+            metrics: RunMetrics::new(kind.name(), dataset.name),
+            topo,
+            cloud: self.make_cloud(cfg),
+            pool: FogShardPool::new(
+                self.handle(),
+                p.cls_last0.clone(),
+                p.feat_dim,
+                p.num_classes,
+                shard_cfg,
+                cfg.seed,
+            ),
+            annotator: Annotator::new(AnnotatorConfig {
+                budget_frac: cfg.hitl_budget,
+                num_classes: p.num_classes,
+                seed: cfg.seed ^ 0x5EED,
+                ..AnnotatorConfig::default()
+            }),
+            coordinator: self.make_coordinator(cfg, kind == SystemKind::Vpaas),
+            monitor: GlobalMonitor::new(),
+            p,
+            global_chunk: 0,
+            last_updates: 0,
+        };
+        run.last_updates = run.coordinator.learner.updates;
+
+        // Multi-camera concurrency: videos stream at once, staggered by
+        // 0.2 s so the shared links see causal arrivals; a k-way merge
+        // yields chunks in capture order and the wave batcher groups them
+        // into cross-camera dispatch waves. A wave dispatches when it fills
+        // (`wave_batch`) or when its oldest chunk ages past `wave_wait_s`;
+        // every member chunk's fog conveyor is held until that dispatch
+        // time, so the wave wait is real virtual-clock latency and shared
+        // links/GPUs see grouped arrivals.
+        let wave_batch = run.pool.cfg.wave_batch;
+        let mut videos = dataset.make_videos(&run.p);
+        // With a single camera (or degenerate wave size) no cross-camera
+        // wave can ever form — dispatch immediately instead of charging a
+        // pointless wave wait to every chunk's freshness latency.
+        let wave_wait = if videos.len() > 1 && wave_batch > 1 {
+            run.pool.cfg.wave_wait_s
+        } else {
+            0.0
+        };
+        let offsets: Vec<f64> = (0..videos.len()).map(|i| i as f64 * 0.2).collect();
+        let mut next: Vec<Option<Chunk>> = videos.iter_mut().map(|v| v.next_chunk()).collect();
+        let mut batcher: DynamicBatcher<(usize, Chunk)> =
+            DynamicBatcher::new(wave_batch, wave_wait);
+        let mut clock = 0.0f64;
+        loop {
+            // earliest fully-captured chunk across all cameras (ties break
+            // toward the lower video id — min_by keeps the first minimum)
+            let pick = next
+                .iter()
+                .enumerate()
+                .filter_map(|(i, c)| {
+                    c.as_ref().map(|c| (i, offsets[i] + c.t_capture + c.duration()))
+                })
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let horizon = pick.map(|(_, t)| t).unwrap_or(f64::INFINITY);
+            // dispatch every partial wave that comes due before the next
+            // chunk finishes capturing
+            while let Some(oldest) = batcher.oldest_arrival() {
+                let due = oldest + wave_wait;
+                if due > horizon {
+                    break;
+                }
+                // epsilon absorbs (oldest + wait) - oldest rounding
+                let Some(wave) = batcher.pop_batch(due + 1e-9) else { break };
+                clock = clock.max(due);
+                for (wvi, wchunk) in wave {
+                    self.process_chunk_sharded(&mut run, offsets[wvi], &wchunk, due)?;
+                }
+            }
+            let Some((vi, captured)) = pick else { break };
+            let chunk = next[vi].take().unwrap();
+            next[vi] = videos[vi].next_chunk();
+            batcher.push((vi, chunk), captured);
+            clock = clock.max(captured);
+            // a full wave dispatches immediately
+            while batcher.len() >= wave_batch {
+                let Some(wave) = batcher.pop_batch(captured) else { break };
+                for (wvi, wchunk) in wave {
+                    self.process_chunk_sharded(&mut run, offsets[wvi], &wchunk, captured)?;
+                }
+            }
+        }
+        // defensive: the due-time loop drains everything at end of stream,
+        // but nothing may ever be left behind
+        for wave in batcher.flush_all(clock + wave_wait) {
+            for (wvi, wchunk) in wave {
+                self.process_chunk_sharded(&mut run, offsets[wvi], &wchunk, clock + wave_wait)?;
+            }
+        }
+        let mut metrics = run.metrics;
+        metrics.cost = run.cloud.billing.clone();
+        Ok(metrics)
+    }
+
+    /// Process one chunk through the sharded scheduler: route (least
+    /// backlog + policy), dispatch over the shard's own LAN at the wave's
+    /// dispatch time, fan IL updates out to every shard, feed the
+    /// provisioner, score.
+    fn process_chunk_sharded(
+        &self,
+        run: &mut VpaasRun,
+        t_offset: f64,
+        chunk: &Chunk,
+        dispatch_at: f64,
+    ) -> Result<()> {
+        let phi = if run.cfg.drift {
+            run.p.drift_phi(run.global_chunk as f64 * run.cfg.drift_scale)
+        } else {
+            0.0
+        };
+        run.global_chunk += 1;
+        let captured = t_offset + chunk.t_capture + chunk.duration();
+        let dispatch_at = dispatch_at.max(captured);
+        let wan_up = !run.topo.wan_up.is_down(dispatch_at);
+        let cloud_wait = run.cloud.queue_wait();
+        let (shard, route) = run.pool.decide(dispatch_at, wan_up, cloud_wait);
+        let outcome = {
+            let VpaasRun { topo, cloud, pool, annotator, coordinator, metrics, p, .. } = run;
+            match route {
+                Route::Cloud => topo.with_fog_lan(shard, |topo| {
+                    // hold the shard's conveyor until the wave dispatches:
+                    // the coordinator's LAN transfer then starts no earlier
+                    // than dispatch_at (wave wait is real latency)
+                    let _ = topo.lan.transfer(0.0, dispatch_at);
+                    coordinator.process_chunk(
+                        chunk,
+                        phi,
+                        t_offset,
+                        p,
+                        topo,
+                        cloud,
+                        pool.shard_mut(shard),
+                        annotator,
+                        metrics,
+                    )
+                })?,
+                Route::Fog => {
+                    // a fog-routed chunk still crosses the client→fog LAN
+                    // and is re-encoded at the shard before the lite
+                    // detector runs (same steps 1-2 as the cloud path)
+                    let n = chunk.frames.len();
+                    let hi_bytes = n as f64 * codec::frame_bytes(Quality::ORIGINAL, p);
+                    let at_fog = topo.with_fog_lan(shard, |topo| {
+                        let _ = topo.lan.transfer(0.0, dispatch_at);
+                        topo.lan
+                            .transfer(hi_bytes, captured)
+                            .expect("LAN has no outage schedule")
+                    });
+                    let qc_done = pool.shard_mut(shard).quality_control(n, at_fog);
+                    coordinator.process_chunk_fog_only(
+                        chunk,
+                        phi,
+                        t_offset,
+                        p,
+                        pool.shard_mut(shard),
+                        metrics,
+                        qc_done,
+                    )?
+                }
+            }
+        };
+        // Fan the IL-updated last layer out to every shard (the routed
+        // shard already has it; the rest must not serve stale weights).
+        if run.coordinator.learner.updates != run.last_updates {
+            run.last_updates = run.coordinator.learner.updates;
+            let w = run.coordinator.learner.w_last.clone();
+            run.pool.sync_last_layer(&w);
+        }
+        run.pool.observe(outcome.done, &mut run.monitor);
+        run.pool.autoscale(outcome.done, &run.monitor);
+        self.score_chunk(&mut run.metrics, chunk, &outcome.per_frame, outcome.done, phi, &run.cfg)
+    }
+
+    /// Shared per-chunk scoring: true-GT F1 (and optionally golden
+    /// pseudo-GT), bandwidth video time, makespan, processing log. Both
+    /// drivers route through here so sharded and baseline metrics stay
+    /// comparable.
+    fn score_chunk(
+        &self,
+        metrics: &mut RunMetrics,
+        chunk: &Chunk,
+        per_frame: &[Vec<PredBox>],
+        done: f64,
+        phi: f64,
+        cfg: &RunConfig,
+    ) -> Result<()> {
+        let golden = if cfg.golden {
+            Some(self.golden_boxes(chunk, phi, cfg.protocol.filter.theta_loc)?)
+        } else {
+            None
+        };
+        for (fi, preds) in per_frame.iter().enumerate() {
+            let gt = chunk.frames[fi].gt_boxes();
+            metrics.f1_true.merge(match_boxes(preds, &gt, 0.5));
+            if let Some(g) = &golden {
+                metrics.f1_golden.merge(match_boxes(preds, &g[fi], 0.5));
+            }
+        }
+        metrics.bandwidth.add_video_time(chunk.duration());
+        metrics.makespan = metrics.makespan.max(done);
+        metrics.chunk_log.push((chunk.video_id, chunk.chunk_idx));
+        Ok(())
+    }
+
+    /// The baselines' sequential single-tenant driver (the paper's layout:
+    /// each video gets its own slot on the run timeline).
+    fn run_baseline(&self, kind: SystemKind, dataset: &DatasetSpec, cfg: &RunConfig) -> Result<RunMetrics> {
         let p = self.params.clone();
         let mut metrics = RunMetrics::new(kind.name(), dataset.name);
         let mut topo = Topology::new(cfg.wan_mbps, cfg.seed);
@@ -208,18 +455,6 @@ impl Harness {
             topo.cloud_outage(s, e);
         }
         let mut cloud = self.make_cloud(cfg);
-        let mut fog = self.make_fog();
-        let mut annotator = Annotator::new(AnnotatorConfig {
-            budget_frac: cfg.hitl_budget,
-            num_classes: p.num_classes,
-            seed: cfg.seed ^ 0x5EED,
-            ..AnnotatorConfig::default()
-        });
-        let mut coordinator = match kind {
-            SystemKind::Vpaas => Some(self.make_coordinator(cfg, true)),
-            SystemKind::VpaasNoHitl => Some(self.make_coordinator(cfg, false)),
-            _ => None,
-        };
         let mut mpeg = Mpeg::default();
         let mut dds = Dds::default();
         let mut cloudseg = CloudSeg::default();
@@ -238,48 +473,26 @@ impl Harness {
                     0.0
                 };
                 global_chunk += 1;
-                let per_frame: Vec<Vec<PredBox>> = match kind {
-                    SystemKind::Vpaas | SystemKind::VpaasNoHitl => {
-                        let c = coordinator.as_mut().unwrap();
-                        c.process_chunk(
-                            &chunk, phi, t_offset, &p, &mut topo, &mut cloud, &mut fog,
-                            &mut annotator, &mut metrics,
-                        )?
-                        .per_frame
-                    }
+                let outcome = match kind {
                     SystemKind::Mpeg => {
                         mpeg.process_chunk(&chunk, phi, t_offset, &p, &mut topo, &mut cloud, &mut metrics)?
-                            .per_frame
                     }
                     SystemKind::Dds => {
                         dds.process_chunk(&chunk, phi, t_offset, &p, &mut topo, &mut cloud, &mut metrics)?
-                            .per_frame
                     }
                     SystemKind::CloudSeg => {
                         cloudseg
                             .process_chunk(&chunk, phi, t_offset, &p, &mut topo, &mut cloud, &mut metrics)?
-                            .per_frame
                     }
                     SystemKind::Glimpse => {
                         glimpse
                             .process_chunk(&chunk, phi, t_offset, &p, &mut topo, &mut cloud, &mut metrics)?
-                            .per_frame
+                    }
+                    SystemKind::Vpaas | SystemKind::VpaasNoHitl => {
+                        unreachable!("vpaas runs through the sharded scheduler")
                     }
                 };
-                // Score against true GT (and optionally golden pseudo-GT).
-                let golden = if cfg.golden {
-                    Some(self.golden_boxes(&chunk, phi, cfg.protocol.filter.theta_loc)?)
-                } else {
-                    None
-                };
-                for (fi, preds) in per_frame.iter().enumerate() {
-                    let gt = chunk.frames[fi].gt_boxes();
-                    metrics.f1_true.merge(match_boxes(preds, &gt, 0.5));
-                    if let Some(g) = &golden {
-                        metrics.f1_golden.merge(match_boxes(preds, &g[fi], 0.5));
-                    }
-                }
-                metrics.bandwidth.add_video_time(chunk.duration());
+                self.score_chunk(&mut metrics, &chunk, &outcome.per_frame, outcome.done, phi, cfg)?;
                 video_len = video_len.max(chunk.t_capture + chunk.duration());
             }
             t_offset += video_len + 1.0;
@@ -287,6 +500,22 @@ impl Harness {
         metrics.cost = cloud.billing.clone();
         Ok(metrics)
     }
+}
+
+/// Mutable state of one sharded VPaaS run, bundled so the per-chunk step
+/// can borrow the pieces disjointly.
+struct VpaasRun {
+    p: Arc<SimParams>,
+    cfg: RunConfig,
+    topo: Topology,
+    cloud: CloudServer,
+    pool: FogShardPool,
+    annotator: Annotator,
+    coordinator: Coordinator,
+    monitor: GlobalMonitor,
+    metrics: RunMetrics,
+    global_chunk: u64,
+    last_updates: u64,
 }
 
 #[cfg(test)]

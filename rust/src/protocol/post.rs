@@ -296,6 +296,77 @@ mod tests {
     }
 
     #[test]
+    fn prop_painted_blobs_round_trip_through_region_extraction() {
+        // Round-trip invariant: painting disjoint, non-touching rectangular
+        // blobs and running extraction must recover exactly one region per
+        // blob, with the blob's bounds and class — all regions inside the
+        // frame, no duplicate and no dropped labels.
+        crate::util::prop::prop_check(120, 33, |g| {
+            let (grid, k) = (12usize, 5usize);
+            let mut o = empty(grid, k);
+            let mut used = vec![false; grid * grid];
+            let mut painted: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
+            for _ in 0..g.usize_in(1, 5) {
+                let w = g.usize_in(1, 3);
+                let hgt = g.usize_in(1, 3);
+                let x0 = g.usize_in(0, grid - w);
+                let y0 = g.usize_in(0, grid - hgt);
+                let (x1, y1) = (x0 + w - 1, y0 + hgt - 1);
+                // keep a 1-cell moat around every blob so none touch (not
+                // even diagonally) and same-class merging cannot occur
+                let mut clash = false;
+                for y in y0.saturating_sub(1)..=(y1 + 1).min(grid - 1) {
+                    for x in x0.saturating_sub(1)..=(x1 + 1).min(grid - 1) {
+                        clash |= used[y * grid + x];
+                    }
+                }
+                if clash {
+                    continue;
+                }
+                let class = g.usize_in(0, k - 1);
+                let mut cells = Vec::new();
+                for y in y0..=y1 {
+                    for x in x0..=x1 {
+                        used[y * grid + x] = true;
+                        cells.push(y * grid + x);
+                    }
+                }
+                paint(&mut o, grid, k, &cells, class, 0.9);
+                painted.push((x0, y0, x1, y1, class));
+            }
+            let regions = regions_from_heads(&heads(&o, grid, k), 0.5);
+            if regions.len() != painted.len() {
+                return Err(format!(
+                    "{} blobs -> {} regions: {painted:?}",
+                    painted.len(),
+                    regions.len()
+                ));
+            }
+            for r in &regions {
+                if r.rect.x1 >= grid || r.rect.y1 >= grid || r.rect.x0 > r.rect.x1 || r.rect.y0 > r.rect.y1 {
+                    return Err(format!("region out of frame bounds: {:?}", r.rect));
+                }
+            }
+            for &(x0, y0, x1, y1, class) in &painted {
+                let hits = regions
+                    .iter()
+                    .filter(|r| {
+                        (r.rect.x0, r.rect.y0, r.rect.x1, r.rect.y1) == (x0, y0, x1, y1)
+                            && r.class == class
+                    })
+                    .count();
+                if hits != 1 {
+                    return Err(format!(
+                        "blob {:?} recovered {hits} times (duplicate/dropped label)",
+                        (x0, y0, x1, y1, class)
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn theta_loc_gates_regions() {
         let (g, k) = (8, 4);
         let mut o = empty(g, k);

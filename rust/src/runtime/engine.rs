@@ -1,15 +1,28 @@
-//! The PJRT execution engine: HLO text → compiled executable → run.
+//! The execution engine: artifact name → compiled plan → run.
 //!
-//! Interchange format is HLO **text** (not serialized protos): jax ≥ 0.5
-//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see python/compile/aot.py and DESIGN.md).
+//! Two backends exist in the design; this build ships the second:
+//!
+//! * **PJRT** — parse the AOT-lowered HLO text (`*.hlo.txt`), compile with
+//!   the `xla` crate's CPU client, execute. Requires the XLA toolchain,
+//!   which is **not vendored in this environment** (see DESIGN.md), so the
+//!   PJRT path is gated out of the build.
+//! * **Reference** — a pure-Rust implementation of the exact model math the
+//!   artifacts encode (the L2 models are *constructed*, not trained — see
+//!   `python/compile/weights.py`). Weights are rebuilt from
+//!   `artifacts/constants.txt`; semantics are pinned to the JAX oracles in
+//!   `python/compile/kernels/ref.py` (verified to f32 precision at export
+//!   time). `manifest.txt` still drives name/shape validation, so swapping
+//!   the PJRT backend back in changes nothing above this layer.
+//!
+//! The engine keeps the PJRT-era surface: per-model compile/run statistics,
+//! an executable cache, strict manifest shape checking.
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::interchange::{Manifest, Tensor};
+use crate::interchange::{Constants, Manifest, Tensor};
 
 /// Per-model execution statistics (drives billing + the profiler).
 #[derive(Debug, Clone, Copy, Default)]
@@ -19,20 +32,138 @@ pub struct ModelStats {
     pub compile_seconds: f64,
 }
 
-/// Owns the PJRT CPU client and the executable cache. NOT `Send` — see
+/// Which reference kernel an artifact name binds to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ModelKind {
+    Detector,
+    DetectorLite,
+    Classifier,
+    SuperResolution,
+    IlStep,
+}
+
+impl ModelKind {
+    fn of(name: &str) -> Result<ModelKind> {
+        if name.starts_with("detector_lite_b") {
+            Ok(ModelKind::DetectorLite)
+        } else if name.starts_with("detector_b") {
+            Ok(ModelKind::Detector)
+        } else if name.starts_with("classifier_b") {
+            Ok(ModelKind::Classifier)
+        } else if name.starts_with("sr_b") {
+            Ok(ModelKind::SuperResolution)
+        } else if name == "il_step" {
+            Ok(ModelKind::IlStep)
+        } else {
+            Err(anyhow!("artifact {name:?} has no reference implementation"))
+        }
+    }
+}
+
+/// Model weights reconstructed from the interchange constants, mirroring
+/// `python/compile/weights.py` (closed-form where the construction is
+/// deterministic from the signature bank; exported tensors where numpy RNG
+/// is involved, e.g. the lite detector's entangled class head).
+struct RefWeights {
+    feat_dim: usize,
+    num_classes: usize,
+    det_hidden: usize,
+    cls_feat: usize,
+    /// `[K, D]` t = 0 signature bank.
+    signatures: Tensor,
+    /// `[D, 2K]` row-major: columns are +/- signature pairs.
+    det_embed: Vec<f32>,
+    /// `[2K, K]` row-major heavy-detector class head.
+    det_cls: Vec<f32>,
+    /// `[2K, K]` row-major lite (fog fallback) class head.
+    lite_cls: Vec<f32>,
+    /// `[D, H]` fog classifier backbone.
+    cls_backbone: Tensor,
+    obj_gain: f32,
+    obj_bias: f32,
+    cls_gain: f32,
+    sr_gamma: f32,
+    sr_beta: f32,
+    il_lr: f32,
+}
+
+impl RefWeights {
+    fn from_constants(c: &Constants) -> Result<Self> {
+        let d = c.scalar_usize("feat_dim")?;
+        let k = c.scalar_usize("num_classes")?;
+        let h2 = c.scalar_usize("det_hidden")?;
+        if h2 != 2 * k {
+            bail!("det_hidden {h2} != 2 * num_classes {k}");
+        }
+        let cls_feat = c.scalar_usize("cls_feat")?;
+        let signatures = c.tensor("signatures")?.clone();
+        if signatures.dims != vec![k, d] {
+            bail!("signatures shape {:?} != [{k}, {d}]", signatures.dims);
+        }
+        // detector embedding: h[2k] = relu(s_k . x), h[2k+1] = relu(-s_k . x)
+        let mut det_embed = vec![0.0f32; d * h2];
+        for kk in 0..k {
+            let s = signatures.row(kk);
+            for (i, &si) in s.iter().enumerate() {
+                det_embed[i * h2 + 2 * kk] = si;
+                det_embed[i * h2 + 2 * kk + 1] = -si;
+            }
+        }
+        // heavy class head: logit_k = h[2k] - h[2k+1] = s_k . x
+        let mut det_cls = vec![0.0f32; h2 * k];
+        for kk in 0..k {
+            det_cls[(2 * kk) * k + kk] = 1.0;
+            det_cls[(2 * kk + 1) * k + kk] = -1.0;
+        }
+        let lite = c.tensor("lite_cls")?;
+        if lite.dims != vec![h2, k] {
+            bail!("lite_cls shape {:?} != [{h2}, {k}]", lite.dims);
+        }
+        let backbone = c.tensor("cls_backbone")?.clone();
+        if backbone.dims.len() != 2 || backbone.dims[0] != d || backbone.dims[1] + 1 != cls_feat {
+            bail!("cls_backbone shape {:?} inconsistent with cls_feat {cls_feat}", backbone.dims);
+        }
+        Ok(RefWeights {
+            feat_dim: d,
+            num_classes: k,
+            det_hidden: h2,
+            cls_feat,
+            signatures,
+            det_embed,
+            det_cls,
+            lite_cls: lite.data.clone(),
+            cls_backbone: backbone,
+            obj_gain: c.scalar("obj_gain")? as f32,
+            obj_bias: c.scalar("obj_bias")? as f32,
+            cls_gain: c.scalar("cls_gain")? as f32,
+            sr_gamma: c.scalar("sr_gamma")? as f32,
+            sr_beta: c.scalar("sr_beta")? as f32,
+            il_lr: c.scalar("il_lr")? as f32,
+        })
+    }
+}
+
+fn sigmoid(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+/// Owns the reference backend and the compiled-plan cache. Kept `!Sync`-
+/// agnostic and single-threaded like the PJRT client it stands in for; see
 /// [`crate::runtime::service`] for the threaded front-end.
 pub struct Engine {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    weights: RefWeights,
+    compiled: HashMap<String, ModelKind>,
     stats: HashMap<String, ModelStats>,
 }
 
 impl Engine {
-    /// Create an engine over the given artifact manifest.
+    /// Create an engine over the given artifact manifest; model constants
+    /// are read from `constants.txt` next to it.
     pub fn new(manifest: Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Engine { client, manifest, executables: HashMap::new(), stats: HashMap::new() })
+        let consts = Constants::load(&manifest.dir.join("constants.txt"))?;
+        let weights = RefWeights::from_constants(&consts)?;
+        Ok(Engine { manifest, weights, compiled: HashMap::new(), stats: HashMap::new() })
     }
 
     /// Create an engine over the repo's `artifacts/` directory.
@@ -45,30 +176,24 @@ impl Engine {
         &self.manifest
     }
 
-    /// Compile (and cache) the named artifact.
+    /// Compile (and cache) the named artifact: validate it exists in the
+    /// manifest and bind it to its reference kernel.
     pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
+        if self.compiled.contains_key(name) {
             return Ok(());
         }
-        let entry = self.manifest.get(name)?.clone();
-        let path = self.manifest.path_of(&entry);
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-        let dt = t0.elapsed().as_secs_f64();
-        self.executables.insert(name.to_string(), exe);
+        self.manifest.get(name)?;
+        let kind = ModelKind::of(name)?;
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        self.compiled.insert(name.to_string(), kind);
         self.stats.entry(name.to_string()).or_default().compile_seconds += dt;
         Ok(())
     }
 
     /// Number of distinct compiled executables.
     pub fn loaded_count(&self) -> usize {
-        self.executables.len()
+        self.compiled.len()
     }
 
     /// Execute artifact `name` on f32 `inputs`; returns the output tensors.
@@ -87,50 +212,214 @@ impl Engine {
                 bail!("{name}: input {i} shape {:?} != manifest {:?}", t.dims, spec.dims);
             }
         }
-        let n_outputs = entry.outputs.len();
-        let out_specs = entry.outputs.clone();
+        let out_specs: Vec<Vec<usize>> = entry.outputs.iter().map(|s| s.dims.clone()).collect();
+        let kind = *self.compiled.get(name).expect("loaded above");
 
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("building literal: {e}"))
-            })
-            .collect::<Result<_>>()?;
-
-        let exe = self.executables.get(name).expect("loaded above");
         let t0 = Instant::now();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
-        let wall = t0.elapsed().as_secs_f64();
+        let raw = match kind {
+            ModelKind::Detector => self.run_detector(&inputs[0], false),
+            ModelKind::DetectorLite => self.run_detector(&inputs[0], true),
+            ModelKind::Classifier => self.run_classifier(&inputs[0], &inputs[1]),
+            ModelKind::SuperResolution => self.run_sr(&inputs[0]),
+            ModelKind::IlStep => {
+                self.run_il_step(&inputs[0], &inputs[1], &inputs[2], &inputs[3])
+            }
+        };
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
         let stats = self.stats.entry(name.to_string()).or_default();
         stats.invocations += 1;
         stats.wall_seconds += wall;
 
-        // aot.py lowers with return_tuple=True: always a tuple, even for 1.
-        let parts = tuple
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling result of {name}: {e}"))?;
-        if parts.len() != n_outputs {
-            bail!("{name}: manifest promises {n_outputs} outputs, got {}", parts.len());
+        if raw.len() != out_specs.len() {
+            bail!("{name}: manifest promises {} outputs, got {}", out_specs.len(), raw.len());
         }
-        parts
-            .into_iter()
+        raw.into_iter()
             .zip(out_specs)
-            .map(|(lit, spec)| {
-                let data = lit
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("reading output of {name}: {e}"))?;
-                Tensor::new(spec.dims.clone(), data)
-                    .context("output shape mismatch vs manifest")
+            .map(|(data, dims)| {
+                Tensor::new(dims, data).context("output shape mismatch vs manifest")
             })
             .collect()
+    }
+
+    /// Detector forward (see `models/detector.py`): per-anchor heads
+    /// `(loc_conf, cls_prob, energy)` over `x: [B, A, D]`.
+    fn run_detector(&self, x: &Tensor, lite: bool) -> Vec<Vec<f32>> {
+        let w = &self.weights;
+        let (d, k, h2) = (w.feat_dim, w.num_classes, w.det_hidden);
+        let w_cls = if lite { &w.lite_cls } else { &w.det_cls };
+        let cells = x.data.len() / d;
+        let mut loc = vec![0.0f32; cells];
+        let mut cls = vec![0.0f32; cells * k];
+        let mut energy = vec![0.0f32; cells];
+        let mut h = vec![0.0f32; h2];
+        for cell in 0..cells {
+            let xr = &x.data[cell * d..(cell + 1) * d];
+            h.iter_mut().for_each(|v| *v = 0.0);
+            for (i, &xi) in xr.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let er = &w.det_embed[i * h2..(i + 1) * h2];
+                for (hj, &ej) in h.iter_mut().zip(er) {
+                    *hj += xi * ej;
+                }
+            }
+            let mut e = 0.0f32;
+            for hj in h.iter_mut() {
+                if *hj < 0.0 {
+                    *hj = 0.0; // relu
+                }
+                e += *hj; // w_obj = ones: signature-subspace energy
+            }
+            energy[cell] = e;
+            loc[cell] = sigmoid(w.obj_gain * (e - w.obj_bias));
+            let out = &mut cls[cell * k..(cell + 1) * k];
+            for (j, &hj) in h.iter().enumerate() {
+                if hj == 0.0 {
+                    continue;
+                }
+                let wr = &w_cls[j * k..(j + 1) * k];
+                for (o, &wk) in out.iter_mut().zip(wr) {
+                    *o += hj * wk;
+                }
+            }
+            // energy-normalized softmax head (calibrated across qualities)
+            let norm = e.max(1e-4);
+            let mut mx = f32::NEG_INFINITY;
+            for o in out.iter_mut() {
+                *o = w.cls_gain * *o / norm;
+                mx = mx.max(*o);
+            }
+            let mut sum = 0.0f32;
+            for o in out.iter_mut() {
+                *o = (*o - mx).exp();
+                sum += *o;
+            }
+            for o in out.iter_mut() {
+                *o /= sum;
+            }
+        }
+        vec![loc, cls, energy]
+    }
+
+    /// Classifier forward (see `models/classifier.py`): one-vs-all sigmoid
+    /// probabilities + the bias-augmented feature vector.
+    fn run_classifier(&self, x: &Tensor, w_last: &Tensor) -> Vec<Vec<f32>> {
+        let w = &self.weights;
+        let (d, k, hf) = (w.feat_dim, w.num_classes, w.cls_feat);
+        let hid = hf - 1;
+        let b = x.data.len() / d;
+        let mut feats = vec![0.0f32; b * hf];
+        let mut prob = vec![0.0f32; b * k];
+        for bi in 0..b {
+            let xr = &x.data[bi * d..(bi + 1) * d];
+            let fr = &mut feats[bi * hf..(bi + 1) * hf];
+            for (i, &xi) in xr.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let br = self.weights.cls_backbone.row(i);
+                for (fj, &bj) in fr[..hid].iter_mut().zip(br) {
+                    *fj += xi * bj;
+                }
+            }
+            for fj in fr[..hid].iter_mut() {
+                if *fj < 0.0 {
+                    *fj = 0.0; // relu
+                }
+            }
+            fr[hid] = 1.0; // bias feature
+            let pr = &mut prob[bi * k..(bi + 1) * k];
+            for (j, &fj) in fr.iter().enumerate() {
+                if fj == 0.0 {
+                    continue;
+                }
+                let wr = w_last.row(j);
+                for (p, &wk) in pr.iter_mut().zip(wr) {
+                    *p += fj * wk;
+                }
+            }
+            for p in pr.iter_mut() {
+                *p = sigmoid(*p);
+            }
+        }
+        vec![prob, feats]
+    }
+
+    /// Eq. (8) online last-layer update (see `kernels/ref.py::il_update_ref`):
+    /// `W' = W + lr * feats^T ((y - sigmoid(feats W)) * mask)`.
+    fn run_il_step(
+        &self,
+        w_last: &Tensor,
+        feats: &Tensor,
+        labels: &Tensor,
+        mask: &Tensor,
+    ) -> Vec<Vec<f32>> {
+        let w = &self.weights;
+        let (hf, k) = (w.cls_feat, w.num_classes);
+        let b = mask.data.len();
+        let mut out = w_last.data.clone();
+        let mut err = vec![0.0f32; k];
+        for bi in 0..b {
+            let m = mask.data[bi];
+            let fr = &feats.data[bi * hf..(bi + 1) * hf];
+            for (kk, e) in err.iter_mut().enumerate() {
+                let mut s = 0.0f32;
+                for (j, &fj) in fr.iter().enumerate() {
+                    s += fj * w_last.data[j * k + kk];
+                }
+                *e = (labels.data[bi * k + kk] - sigmoid(s)) * m;
+            }
+            for (j, &fj) in fr.iter().enumerate() {
+                if fj == 0.0 {
+                    continue;
+                }
+                let or = &mut out[j * k..(j + 1) * k];
+                for (o, &e) in or.iter_mut().zip(&err) {
+                    *o += w.il_lr * fj * e;
+                }
+            }
+        }
+        vec![out]
+    }
+
+    /// Signature-attention SR (see `kernels/ref.py::sr_ref`).
+    fn run_sr(&self, x: &Tensor) -> Vec<Vec<f32>> {
+        let w = &self.weights;
+        let (d, k) = (w.feat_dim, w.num_classes);
+        let cells = x.data.len() / d;
+        let mut out = vec![0.0f32; x.data.len()];
+        let mut p = vec![0.0f32; k];
+        for cell in 0..cells {
+            let xr = &x.data[cell * d..(cell + 1) * d];
+            let mut e2 = 0.0f32;
+            for &v in xr {
+                e2 += v * v;
+            }
+            let energy = e2.sqrt();
+            let mut sum = 0.0f32;
+            for (kk, pk) in p.iter_mut().enumerate() {
+                let s = w.signatures.row(kk);
+                let mut proj = 0.0f32;
+                for (&xi, &si) in xr.iter().zip(s) {
+                    proj += xi * si;
+                }
+                *pk = (w.sr_beta * proj / (energy + 1e-6)).exp();
+                sum += *pk;
+            }
+            let or = &mut out[cell * d..(cell + 1) * d];
+            for (kk, &pk) in p.iter().enumerate() {
+                let gain = pk / sum * energy;
+                let s = w.signatures.row(kk);
+                for (o, &si) in or.iter_mut().zip(s) {
+                    *o += gain * si;
+                }
+            }
+            for (o, &xi) in or.iter_mut().zip(xr) {
+                *o = (1.0 - w.sr_gamma) * xi + w.sr_gamma * *o;
+            }
+        }
+        vec![out]
     }
 
     pub fn stats(&self, name: &str) -> ModelStats {
@@ -213,5 +502,72 @@ mod tests {
         e.load("sr_b1").unwrap();
         assert_eq!(e.stats("sr_b1").compile_seconds, c1);
         assert_eq!(e.loaded_count(), 1);
+    }
+
+    #[test]
+    fn detector_localizes_a_signature_cell() {
+        // a cell carrying exactly signature k must localize confidently and
+        // argmax to class k with most of the softmax mass
+        let mut e = engine();
+        let p = crate::sim::params::SimParams::load().unwrap();
+        let mut x = Tensor::zeros(vec![1, 256, 24]);
+        let k = 3usize;
+        x.data[5 * 24..6 * 24].copy_from_slice(p.signatures.row(k));
+        let out = e.run("detector_b1", &[x]).unwrap();
+        assert!(out[0].data[5] > 0.99, "loc {}", out[0].data[5]);
+        assert!((out[2].data[5] - 1.0).abs() < 1e-3, "energy {}", out[2].data[5]);
+        let row = &out[1].data[5 * 8..6 * 8];
+        let arg = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(arg, k);
+        assert!(row[k] > 0.9, "cls mass {}", row[k]);
+    }
+
+    #[test]
+    fn il_step_moves_toward_labels() {
+        // one masked example with a strong feature must raise the labeled
+        // class score and leave masked-out rows untouched
+        let mut e = engine();
+        let w0 = Tensor::zeros(vec![49, 8]);
+        let mut feats = Tensor::zeros(vec![16, 49]);
+        feats.data[0] = 2.0; // example 0, feature 0
+        feats.data[49] = 2.0; // example 1 (masked out), feature 0
+        let mut labels = Tensor::zeros(vec![16, 8]);
+        labels.data[2] = 1.0; // example 0 -> class 2
+        let mut mask = Tensor::zeros(vec![16]);
+        mask.data[0] = 1.0;
+        let out = e.run("il_step", &[w0, feats, labels, mask]).unwrap();
+        let w = &out[0];
+        assert!(w.data[2] > 0.0, "labeled class weight must grow: {}", w.data[2]);
+        assert!(w.data[0] < 0.0, "unlabeled class weight must shrink: {}", w.data[0]);
+    }
+
+    #[test]
+    fn sr_recovers_a_mixed_signature() {
+        // a cell that is 70/30 mixed between two signatures must move
+        // toward the dominant one after SR
+        let mut e = engine();
+        let p = crate::sim::params::SimParams::load().unwrap();
+        let mut x = Tensor::zeros(vec![1, 256, 24]);
+        let (a, b) = (1usize, 4usize);
+        for i in 0..24 {
+            x.data[7 * 24 + i] = 0.7 * p.signatures.row(a)[i] + 0.3 * p.signatures.row(b)[i];
+        }
+        let before: f32 = x.data[7 * 24..8 * 24]
+            .iter()
+            .zip(p.signatures.row(a))
+            .map(|(v, s)| v * s)
+            .sum();
+        let out = e.run("sr_b1", &[x]).unwrap();
+        let after: f32 = out[0].data[7 * 24..8 * 24]
+            .iter()
+            .zip(p.signatures.row(a))
+            .map(|(v, s)| v * s)
+            .sum();
+        assert!(after > before + 0.02, "SR did not sharpen: {before} -> {after}");
     }
 }

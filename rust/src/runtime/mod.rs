@@ -1,14 +1,17 @@
-//! PJRT runtime: load AOT artifacts and execute them on the request path.
+//! Model runtime: load the artifact manifest and execute models on the
+//! request path.
 //!
-//! * [`engine`] — single-threaded owner of the PJRT CPU client: parses HLO
-//!   text (`HloModuleProto::from_text_file`), compiles, caches executables,
-//!   executes with f32 tensors.
-//! * [`service`] — a dedicated inference thread + channel front-end, because
-//!   the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`). Every
-//!   simulated device (cloud executor, fog executor) holds a cheap clonable
-//!   [`service::InferenceHandle`].
+//! * [`engine`] — single-threaded executor over `artifacts/manifest.txt`.
+//!   The PJRT/HLO backend is gated out in this environment (the `xla`
+//!   crate is not vendored); the engine runs a pure-Rust reference
+//!   implementation of the same model math, pinned to the JAX oracles in
+//!   `python/compile/kernels/ref.py`.
+//! * [`service`] — a dedicated inference thread + channel front-end (the
+//!   same shape a PJRT client requires, since it is `Rc`-based). Every
+//!   simulated device (cloud executor, fog shard, auto-trainer) holds a
+//!   cheap clonable [`service::InferenceHandle`].
 //!
-//! Python never appears here: artifacts were lowered once at build time.
+//! Python never appears here: artifacts were exported once at build time.
 
 pub mod engine;
 pub mod service;

@@ -9,6 +9,9 @@
 //!   records placements in the zoo.
 //! * [`monitor`] — the global monitor: runtime gauges every component
 //!   reports into; feeds the provisioner and the dashboards.
+//! * [`scheduler`] — the sharded multi-fog scale-out: a pool of fog shards
+//!   with least-backlog routing, policy-driven cloud/fog dispatch, and a
+//!   backlog-threshold autoscaling provisioner.
 //! * [`app`] — the user-facing pipeline builder: the Fig. 14 code example
 //!   maps 1:1 onto this API (see `examples/retail_store.rs`).
 
@@ -17,9 +20,11 @@ pub mod dispatcher;
 pub mod monitor;
 pub mod policy;
 pub mod registry;
+pub mod scheduler;
 
 pub use app::VideoApp;
 pub use dispatcher::Dispatcher;
 pub use monitor::GlobalMonitor;
 pub use policy::{Policy, PolicyManager};
 pub use registry::{FunctionKind, FunctionRegistry};
+pub use scheduler::{FogShardPool, ShardConfig};

@@ -1,0 +1,369 @@
+//! Sharded multi-fog scheduler (§III-D dispatcher/provisioner, scaled out).
+//!
+//! The seed system drove exactly one [`FogNode`]; real deployments fan many
+//! cameras out across a *pool* of fog nodes behind one serverless control
+//! plane. This module owns that pool:
+//!
+//! * **Routing** — each chunk goes to the least-backlog shard; the
+//!   deployment's [`Policy`] then decides cloud-protocol vs fog-only using
+//!   a [`PolicyInput`] carrying that shard's `fog_backlog_s`.
+//! * **Provisioning** — a simple autoscaler grows/shrinks the shard pool
+//!   against a backlog threshold, driven by the `fog_backlog_s` gauge it
+//!   publishes into the [`GlobalMonitor`] (Fig. 16's provisioner, applied
+//!   to the fog tier).
+//! * **Determinism** — per-shard RNG streams (link jitter, tie-breaking)
+//!   derive from one seeded [`Pcg32`], so runs are bit-reproducible for a
+//!   given seed under any interleaving ([`crate::pipeline::Harness`] holds
+//!   the matching per-shard LAN links in
+//!   [`crate::sim::net::Topology::fog_lans`]).
+//!
+//! Cross-camera batch formation lives in the pipeline driver: chunks from
+//! all cameras merge in capture order into
+//! [`crate::serving::batcher::DynamicBatcher`] waves; a wave dispatches
+//! when it fills or ages past `wave_wait_s`, and each member chunk's
+//! shard LAN is held until that moment — so the wave wait is real
+//! virtual-clock latency and shared links/GPUs see grouped arrivals.
+
+use crate::fog::FogNode;
+use crate::interchange::Tensor;
+use crate::runtime::InferenceHandle;
+use crate::serverless::monitor::GlobalMonitor;
+use crate::serverless::policy::{self, Policy, PolicyInput, Route};
+use crate::util::rng::Pcg32;
+use crate::util::stats::Ewma;
+
+/// Shard-pool knobs (defaults match the paper-scale workloads).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardConfig {
+    pub initial_shards: usize,
+    pub max_shards: usize,
+    /// Let the provisioner grow/shrink the pool.
+    pub autoscale: bool,
+    /// Grow when the smoothed mean backlog exceeds this (seconds).
+    pub scale_up_backlog_s: f64,
+    /// Shrink when the smoothed mean backlog falls below this.
+    pub scale_down_backlog_s: f64,
+    /// Cross-camera wave formation: max chunks per wave / max wait (s) on
+    /// the virtual clock before a partial wave dispatches.
+    pub wave_batch: usize,
+    pub wave_wait_s: f64,
+    /// Route decision per chunk (sees the routed shard's backlog).
+    pub policy: Policy,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            initial_shards: 1,
+            max_shards: 8,
+            autoscale: false,
+            scale_up_backlog_s: 1.0,
+            scale_down_backlog_s: 0.05,
+            wave_batch: 8,
+            wave_wait_s: 0.25,
+            policy: policy::fog_when_disconnected,
+        }
+    }
+}
+
+/// A pool of fog shards with routing + provisioning state.
+pub struct FogShardPool {
+    handle: InferenceHandle,
+    w_last0: Tensor,
+    feat_dim: usize,
+    num_classes: usize,
+    pub cfg: ShardConfig,
+    shards: Vec<FogNode>,
+    /// Root stream for per-shard derivations and routing tie-breaks.
+    stream_rng: Pcg32,
+    backlog: Ewma,
+    /// (virtual time, shard count) provisioning history.
+    pub history: Vec<(f64, usize)>,
+    pub routed_chunks: u64,
+}
+
+impl FogShardPool {
+    pub fn new(
+        handle: InferenceHandle,
+        w_last0: Tensor,
+        feat_dim: usize,
+        num_classes: usize,
+        cfg: ShardConfig,
+        seed: u64,
+    ) -> Self {
+        assert!(cfg.initial_shards >= 1 && cfg.max_shards >= cfg.initial_shards);
+        assert!(cfg.wave_batch >= 1 && cfg.wave_wait_s >= 0.0);
+        let mut pool = FogShardPool {
+            handle,
+            w_last0,
+            feat_dim,
+            num_classes,
+            shards: Vec::new(),
+            stream_rng: Pcg32::new(seed, 0x5C4ED),
+            backlog: Ewma::new(0.3),
+            history: Vec::new(),
+            routed_chunks: 0,
+            cfg,
+        };
+        for _ in 0..pool.cfg.initial_shards {
+            pool.spawn_shard(0.0);
+        }
+        pool
+    }
+
+    fn spawn_shard(&mut self, now: f64) {
+        // a shard spawned mid-run inherits the current (IL-updated) last
+        // layer from shard 0, not the t = 0 weights
+        let w = self
+            .shards
+            .first()
+            .map(|s| s.last_layer().clone())
+            .unwrap_or_else(|| self.w_last0.clone());
+        self.shards.push(FogNode::new(
+            self.handle.clone(),
+            w,
+            self.feat_dim,
+            self.num_classes,
+        ));
+        self.history.push((now, self.shards.len()));
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn shard_mut(&mut self, i: usize) -> &mut FogNode {
+        &mut self.shards[i]
+    }
+
+    pub fn shard_backlog(&self, i: usize, now: f64) -> f64 {
+        self.shards[i].backlog_s(now)
+    }
+
+    pub fn mean_backlog(&self, now: f64) -> f64 {
+        let n = self.shards.len().max(1) as f64;
+        self.shards.iter().map(|s| s.backlog_s(now)).sum::<f64>() / n
+    }
+
+    /// Pick the least-backlog shard; exact ties break via the pool's RNG
+    /// stream so idle shards share load instead of all traffic pinning to
+    /// shard 0 (deterministic given the seed).
+    pub fn route(&mut self, now: f64) -> usize {
+        let backlogs: Vec<f64> = self.shards.iter().map(|s| s.backlog_s(now)).collect();
+        let best = backlogs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut ties = Vec::new();
+        for (i, &b) in backlogs.iter().enumerate() {
+            if (b - best).abs() < 1e-12 {
+                ties.push(i);
+            }
+        }
+        if ties.len() == 1 {
+            ties[0]
+        } else {
+            ties[self.stream_rng.index(ties.len())]
+        }
+    }
+
+    /// Route a chunk: least-backlog shard + the deployment policy's verdict
+    /// given that shard's backlog.
+    pub fn decide(&mut self, now: f64, wan_up: bool, cloud_wait_s: f64) -> (usize, Route) {
+        let shard = self.route(now);
+        let input = PolicyInput {
+            wan_wait_s: 0.0,
+            wan_up,
+            cloud_wait_s,
+            fog_backlog_s: self.shard_backlog(shard, now),
+        };
+        self.routed_chunks += 1;
+        (shard, (self.cfg.policy)(input))
+    }
+
+    /// Swap the IL-updated classifier last layer into every shard (the
+    /// paper's "almost negligible overhead" model refresh, fanned out).
+    pub fn sync_last_layer(&mut self, w: &Tensor) {
+        for s in &mut self.shards {
+            s.set_last_layer(w.clone());
+        }
+    }
+
+    /// Publish pool gauges into the global monitor and refresh the smoothed
+    /// backlog the provisioner acts on.
+    pub fn observe(&mut self, now: f64, monitor: &mut GlobalMonitor) {
+        let mean = self.mean_backlog(now);
+        self.backlog.update(mean);
+        monitor.gauge("fog_backlog_s", now, mean);
+        monitor.gauge("fog_shards", now, self.shards.len() as f64);
+    }
+
+    /// Grow/shrink the pool against the backlog thresholds. Reads the
+    /// `fog_backlog_s` gauge published via [`FogShardPool::observe`]; a
+    /// shard is only retired when it is idle (drained GPU horizon), and the
+    /// highest-indexed idle shard goes first so shard↔link mappings stay
+    /// stable.
+    pub fn autoscale(&mut self, now: f64, monitor: &GlobalMonitor) {
+        if !self.cfg.autoscale {
+            return;
+        }
+        if monitor.track("fog_backlog_s").and_then(|t| t.latest()).is_none() {
+            return; // provisioner runs off the published gauge
+        }
+        let smoothed = self.backlog.get().unwrap_or(0.0);
+        if smoothed > self.cfg.scale_up_backlog_s && self.shards.len() < self.cfg.max_shards {
+            self.spawn_shard(now);
+        } else if smoothed < self.cfg.scale_down_backlog_s && self.shards.len() > 1 {
+            // Retire only the tail shard, and only when it is idle: shard
+            // indices map onto per-shard LAN links
+            // (`Topology::fog_lans`), so removing an interior shard would
+            // remap every later shard onto a different link mid-run. A
+            // busy tail just postpones the shrink to a later tick.
+            let last = self.shards.len() - 1;
+            if self.shards[last].backlog_s(now) <= 0.0 {
+                self.shards.pop();
+                self.history.push((now, self.shards.len()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::InferenceService;
+    use crate::sim::params::SimParams;
+
+    fn pool_with(cfg: ShardConfig) -> (InferenceService, FogShardPool) {
+        let svc = InferenceService::start().unwrap();
+        let p = SimParams::load().unwrap();
+        let pool = FogShardPool::new(
+            svc.handle(),
+            p.cls_last0.clone(),
+            p.feat_dim,
+            p.num_classes,
+            cfg,
+            7,
+        );
+        (svc, pool)
+    }
+
+    #[test]
+    fn routes_to_the_least_backlog_shard() {
+        let (_svc, mut pool) =
+            pool_with(ShardConfig { initial_shards: 3, ..ShardConfig::default() });
+        pool.shard_mut(0).quality_control(500, 0.0);
+        pool.shard_mut(2).quality_control(200, 0.0);
+        let (shard, route) = pool.decide(0.0, true, 0.0);
+        assert_eq!(shard, 1);
+        assert_eq!(route, Route::Cloud);
+        assert_eq!(pool.routed_chunks, 1);
+    }
+
+    #[test]
+    fn idle_ties_spread_deterministically() {
+        let picks = |seed: u64| -> Vec<usize> {
+            let svc = InferenceService::start().unwrap();
+            let p = SimParams::load().unwrap();
+            let mut pool = FogShardPool::new(
+                svc.handle(),
+                p.cls_last0.clone(),
+                p.feat_dim,
+                p.num_classes,
+                ShardConfig { initial_shards: 4, ..ShardConfig::default() },
+                seed,
+            );
+            (0..16).map(|_| pool.route(0.0)).collect()
+        };
+        let a = picks(11);
+        let b = picks(11);
+        assert_eq!(a, b, "tie-breaking must be seed-deterministic");
+        let distinct: std::collections::BTreeSet<usize> = a.iter().copied().collect();
+        assert!(distinct.len() > 1, "idle shards must share load: {a:?}");
+    }
+
+    #[test]
+    fn policy_sees_per_shard_backlog_and_wan_state() {
+        let (_svc, mut pool) = pool_with(ShardConfig {
+            initial_shards: 2,
+            policy: policy::latency_aware,
+            ..ShardConfig::default()
+        });
+        let (_, route) = pool.decide(0.0, true, 0.0);
+        assert_eq!(route, Route::Cloud);
+        let (_, route) = pool.decide(0.0, false, 0.0);
+        assert_eq!(route, Route::Fog);
+        // a huge cloud queue with idle fog shards flips the route to fog
+        let (_, route) = pool.decide(0.0, true, 50.0);
+        assert_eq!(route, Route::Fog);
+    }
+
+    #[test]
+    fn provisioner_grows_and_shrinks_across_thresholds() {
+        let (_svc, mut pool) = pool_with(ShardConfig {
+            initial_shards: 1,
+            max_shards: 4,
+            autoscale: true,
+            scale_up_backlog_s: 0.5,
+            scale_down_backlog_s: 0.05,
+            ..ShardConfig::default()
+        });
+        let mut monitor = GlobalMonitor::new();
+        // sustained load on shard 0 drives the smoothed backlog over the
+        // grow threshold
+        for step in 0..20 {
+            let now = step as f64 * 0.01;
+            pool.shard_mut(0).quality_control(2_000, now);
+            pool.observe(now, &mut monitor);
+            pool.autoscale(now, &monitor);
+        }
+        let grown = pool.len();
+        assert!(grown > 1, "provisioner never grew: {:?}", pool.history);
+        assert_eq!(grown as f64, monitor.track("fog_shards").unwrap().latest().unwrap());
+        // far in the future every backlog has drained; the pool shrinks
+        // back to one shard
+        for step in 0..80 {
+            let now = 1e6 + step as f64;
+            pool.observe(now, &mut monitor);
+            pool.autoscale(now, &monitor);
+        }
+        assert_eq!(pool.len(), 1, "provisioner never shrank: {:?}", pool.history);
+        assert!(pool.history.len() >= 2 * grown - 1);
+    }
+
+    #[test]
+    fn sync_last_layer_reaches_every_shard() {
+        let (_svc, mut pool) =
+            pool_with(ShardConfig { initial_shards: 3, ..ShardConfig::default() });
+        let dims = pool.shard_mut(0).last_layer().dims.clone();
+        let zero = Tensor::zeros(dims);
+        pool.sync_last_layer(&zero);
+        for i in 0..pool.len() {
+            assert_eq!(pool.shard_mut(i).w_last_version, 1);
+            assert!(pool.shard_mut(i).last_layer().data.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn mid_run_spawn_inherits_updated_weights() {
+        let (_svc, mut pool) = pool_with(ShardConfig {
+            initial_shards: 1,
+            max_shards: 2,
+            autoscale: true,
+            scale_up_backlog_s: 0.1,
+            ..ShardConfig::default()
+        });
+        let dims = pool.shard_mut(0).last_layer().dims.clone();
+        pool.sync_last_layer(&Tensor::zeros(dims));
+        let mut monitor = GlobalMonitor::new();
+        for step in 0..10 {
+            let now = step as f64 * 0.01;
+            pool.shard_mut(0).quality_control(2_000, now);
+            pool.observe(now, &mut monitor);
+            pool.autoscale(now, &monitor);
+        }
+        assert_eq!(pool.len(), 2);
+        assert!(pool.shard_mut(1).last_layer().data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -132,6 +132,13 @@ impl<T> DynamicBatcher<T> {
         self.queue.is_empty()
     }
 
+    /// Arrival time of the oldest queued item (None when empty). The
+    /// sharded scheduler reads this to compute when the next cross-camera
+    /// wave comes due (`oldest_arrival + max_wait_s`).
+    pub fn oldest_arrival(&self) -> Option<f64> {
+        self.queue.first().map(|p| p.arrived)
+    }
+
     /// Pop the next batch if the flush condition holds at time `now`.
     pub fn pop_batch(&mut self, now: f64) -> Option<Vec<T>> {
         if self.queue.is_empty() {
@@ -233,6 +240,17 @@ mod tests {
         assert_eq!(batch, vec![1, 2]);
         assert_eq!(b.queue_times.len(), 2);
         assert!((b.queue_times[0] - 0.06).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oldest_arrival_tracks_head_of_queue() {
+        let mut b = DynamicBatcher::new(4, 1.0);
+        assert_eq!(b.oldest_arrival(), None);
+        b.push(1, 2.0);
+        b.push(2, 3.0);
+        assert_eq!(b.oldest_arrival(), Some(2.0));
+        b.pop_batch(10.0).unwrap();
+        assert_eq!(b.oldest_arrival(), None);
     }
 
     #[test]

@@ -133,13 +133,19 @@ impl Link {
     }
 }
 
-/// The deployment's three links (Fig. 1): client→fog LAN, fog→cloud WAN up,
-/// cloud→fog WAN down.
+/// The deployment's links (Fig. 1): client→fog LAN, fog→cloud WAN up,
+/// cloud→fog WAN down — plus optional per-shard fog LANs for the sharded
+/// multi-fog scheduler (each fog node sits on its own switch segment).
 #[derive(Debug, Clone)]
 pub struct Topology {
     pub lan: Link,
     pub wan_up: Link,
     pub wan_down: Link,
+    /// Per-shard client→fog LAN links; empty in single-fog layouts. Seeds
+    /// derive from a dedicated PCG stream so any shard count added in any
+    /// order yields the same per-shard jitter sequences.
+    pub fog_lans: Vec<Link>,
+    fog_lan_rng: Pcg32,
 }
 
 impl Topology {
@@ -148,7 +154,28 @@ impl Topology {
             lan: Link::new(LinkSpec::LAN, seed ^ 0x1),
             wan_up: Link::new(LinkSpec::wan(wan_mbps), seed ^ 0x2),
             wan_down: Link::new(LinkSpec::wan(wan_mbps), seed ^ 0x3),
+            fog_lans: Vec::new(),
+            fog_lan_rng: Pcg32::new(seed, 0xF09),
         }
+    }
+
+    /// Make sure at least `n` per-shard fog LAN links exist.
+    pub fn ensure_fog_lans(&mut self, n: usize) {
+        while self.fog_lans.len() < n {
+            let link_seed = self.fog_lan_rng.next_u64();
+            self.fog_lans.push(Link::new(LinkSpec::LAN, link_seed));
+        }
+    }
+
+    /// Run `f` with shard `i`'s LAN temporarily installed as the active
+    /// client→fog link, so single-fog code paths (the coordinator) route
+    /// over the correct per-shard segment.
+    pub fn with_fog_lan<T>(&mut self, shard: usize, f: impl FnOnce(&mut Topology) -> T) -> T {
+        self.ensure_fog_lans(shard + 1);
+        std::mem::swap(&mut self.lan, &mut self.fog_lans[shard]);
+        let out = f(self);
+        std::mem::swap(&mut self.lan, &mut self.fog_lans[shard]);
+        out
     }
 
     /// Total WAN bytes in both directions (the bandwidth-usage metric).
@@ -237,6 +264,30 @@ mod tests {
         t.wan_up.transfer(2000.0, 0.0).unwrap();
         t.wan_down.transfer(300.0, 0.0).unwrap();
         assert_eq!(t.wan_bytes(), 2300.0);
+    }
+
+    #[test]
+    fn fog_lans_are_independent_and_growth_order_stable() {
+        let mut t = Topology::new(15.0, 9);
+        t.ensure_fog_lans(2);
+        let mut u = Topology::new(15.0, 9);
+        u.ensure_fog_lans(1);
+        u.ensure_fog_lans(2); // grown in two steps: identical links
+        let a = t.fog_lans[1].clone().transfer(1e6, 0.0).unwrap();
+        let b = u.fog_lans[1].clone().transfer(1e6, 0.0).unwrap();
+        assert_eq!(a, b);
+        // distinct shards draw distinct jitter
+        let c = t.fog_lans[0].clone().transfer(1e6, 0.0).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn with_fog_lan_swaps_and_restores() {
+        let mut t = Topology::new(15.0, 10);
+        let before = t.lan.bytes_sent();
+        t.with_fog_lan(0, |t| t.lan.transfer(500.0, 0.0).unwrap());
+        assert_eq!(t.lan.bytes_sent(), before, "main LAN must be restored");
+        assert_eq!(t.fog_lans[0].bytes_sent(), 500.0);
     }
 
     #[test]

@@ -141,6 +141,52 @@ mod tests {
     }
 
     #[test]
+    fn prop_rate_and_signal_models_hold_over_the_quality_space() {
+        let p = params();
+        crate::util::prop::prop_check(200, 7, |g| {
+            let r = g.f64_range(0.05, 1.0);
+            let qp = g.f64_range(10.0, 51.0);
+            let q = Quality::new(r, qp);
+            let bits = frame_bits(q, &p);
+            if bits <= 0.0 || !bits.is_finite() {
+                return Err(format!("bad frame size {bits} at r={r} qp={qp}"));
+            }
+            // bits/bytes round-trip exactly
+            if (frame_bytes(q, &p) * 8.0 - bits).abs() > 1e-9 {
+                return Err("frame_bytes does not invert frame_bits".into());
+            }
+            // raising QP or shrinking resolution never grows the stream
+            let harder = Quality::new(r, qp + g.f64_range(0.0, 6.0));
+            if frame_bits(harder, &p) > bits + 1e-9 {
+                return Err("size grew with qp".into());
+            }
+            let smaller = Quality::new(r * g.f64_range(0.3, 1.0), qp);
+            if frame_bits(smaller, &p) > bits + 1e-9 {
+                return Err("size grew when downscaling".into());
+            }
+            // signal model stays inside its envelope
+            let a = alpha(q, &p);
+            let a_best = alpha(Quality::new(1.0, 10.0), &p);
+            if a <= 0.0 || a > a_best + 1e-9 {
+                return Err(format!("alpha {a} outside (0, {a_best}]"));
+            }
+            let m = mix(q, &p);
+            if !(0.0..=p.m_max + 1e-12).contains(&m) {
+                return Err(format!("mix {m} outside [0, {}]", p.m_max));
+            }
+            if eps(q, &p) <= 0.0 {
+                return Err("noise level must stay positive".into());
+            }
+            // a region re-send can never cost more than the whole frame
+            let area = g.f64_range(0.0, 3.0);
+            if region_bytes(area, q, &p) > frame_bytes(q, &p) + 1e-9 {
+                return Err(format!("region bytes exceed frame at area {area}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn feedback_is_tiny_relative_to_a_chunk() {
         // The paper: coordinate feedback "only occupies several bytes" and
         // its bandwidth can be ignored — check it is ~1% of a 15-frame chunk.

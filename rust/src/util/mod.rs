@@ -1,9 +1,9 @@
 //! Foundation utilities for the VPaaS coordinator.
 //!
-//! The build environment vendors only the `xla` crate and its transitive
-//! dependencies (no tokio / clap / serde / rand / criterion / proptest), so
-//! this module provides the substrates a production coordinator would
-//! normally pull from crates.io:
+//! The build environment has no crates.io access (a minimal `anyhow` shim
+//! is vendored under `vendor/`; no tokio / clap / serde / rand / criterion
+//! / proptest), so this module provides the substrates a production
+//! coordinator would normally pull from crates.io:
 //!
 //! * [`rng`] — deterministic PCG32 random numbers (simulation reproducibility)
 //! * [`clock`] — the virtual/wall hybrid clock driving the testbed emulator

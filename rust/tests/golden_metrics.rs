@@ -1,0 +1,89 @@
+//! Golden-metrics regression gate: snapshot `RunMetrics` headline numbers
+//! (F1, WAN bytes, freshness p50, billed units, chunk count) for a tiny
+//! fixed-seed dataset per `SystemKind`, and require future runs to match
+//! within tolerance.
+//!
+//! The snapshot lives at `tests/golden/metrics.txt`. On a host where it
+//! does not exist yet (fresh clones in environments that could not
+//! pre-generate it), the test bootstraps it from the current run — and
+//! *always* additionally asserts in-process run-to-run determinism, which
+//! guards the invariant even on a bootstrap run. Regenerate on purpose by
+//! deleting the file and re-running `cargo test`.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use vpaas::pipeline::{Harness, RunConfig, SystemKind};
+use vpaas::sim::video::datasets;
+
+const GOLDEN: &str = "tests/golden/metrics.txt";
+
+/// Column relative tolerances: f1, wan_bytes, p50 latency, cost units,
+/// chunks (exact).
+const REL_TOL: [f64; 5] = [0.08, 0.10, 0.30, 0.10, 0.0];
+
+fn measure(h: &Harness, kind: SystemKind) -> Vec<f64> {
+    let mut ds = datasets::drone(0.02);
+    ds.videos.truncate(1);
+    let cfg = RunConfig { golden: false, seed: 0x601D, ..RunConfig::default() };
+    let m = h.run(kind, &ds, &cfg).unwrap();
+    let s = m.latency.summary();
+    vec![
+        m.f1_true.f1(),
+        m.bandwidth.bytes,
+        s.p50,
+        m.cost.units(),
+        m.chunks as f64,
+    ]
+}
+
+#[test]
+fn golden_metrics_match_snapshot_within_tolerance() {
+    let h = Harness::new().unwrap();
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for kind in SystemKind::all() {
+        let a = measure(&h, kind);
+        let b = measure(&h, kind);
+        assert_eq!(a, b, "{}: run-to-run nondeterminism", kind.name());
+        rows.push((kind.name().to_string(), a));
+    }
+    let path = PathBuf::from(GOLDEN);
+    match std::fs::read_to_string(&path) {
+        Ok(text) => {
+            for (name, vals) in &rows {
+                let line = text
+                    .lines()
+                    .find(|l| l.split_whitespace().next() == Some(name.as_str()))
+                    .unwrap_or_else(|| panic!("{name} missing from {GOLDEN}"));
+                let want: Vec<f64> = line
+                    .split_whitespace()
+                    .skip(1)
+                    .map(|v| v.parse().expect("golden value"))
+                    .collect();
+                assert_eq!(want.len(), vals.len(), "{name}: golden column count");
+                for (i, (&got, &exp)) in vals.iter().zip(&want).enumerate() {
+                    let tol = REL_TOL[i] * exp.abs() + 1e-9;
+                    assert!(
+                        (got - exp).abs() <= tol,
+                        "{name} metric {i}: got {got}, golden {exp} (tol {tol})"
+                    );
+                }
+            }
+        }
+        Err(_) => {
+            // Bootstrap the snapshot for all subsequent runs on this host.
+            let mut out = String::from(
+                "# system f1_true wan_bytes latency_p50_s cost_units chunks\n",
+            );
+            for (name, vals) in &rows {
+                write!(out, "{name}").unwrap();
+                for v in vals {
+                    write!(out, " {v:.6}").unwrap();
+                }
+                out.push('\n');
+            }
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, out).unwrap();
+        }
+    }
+}

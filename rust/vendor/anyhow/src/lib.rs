@@ -1,0 +1,161 @@
+//! Minimal vendored stand-in for the `anyhow` crate.
+//!
+//! This build environment has no crates.io access, so the repository
+//! vendors the exact `anyhow` surface it uses: [`Error`], [`Result`],
+//! [`Context`], and the `anyhow!` / `bail!` macros. Errors are flattened to
+//! a single message string (no backtraces, no source chains) — every caller
+//! in this codebase formats errors for humans, so nothing is lost.
+//!
+//! The `Context` / `From` impl structure mirrors the real crate's coherence
+//! trick: a helper trait implemented for both `Error` itself and every
+//! `std::error::Error`, which is accepted because `Error` deliberately does
+//! NOT implement `std::error::Error`.
+
+use std::fmt;
+
+/// A flattened error message, API-compatible with `anyhow::Error` for the
+/// operations this repository performs (`Display`, `Debug`, `to_string`,
+/// `{e:#}` formatting, `?` conversions from std errors).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — plain `Result` defaulting the error to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::Error;
+    use std::fmt;
+
+    /// Sealed helper: anything that can absorb a context message and become
+    /// an [`Error`]. Implemented for `Error` and for std errors; the two
+    /// impls do not overlap because `Error: !std::error::Error`.
+    pub trait ContextError {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error;
+    }
+
+    impl ContextError for Error {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            self.wrap(context)
+        }
+    }
+
+    impl<E> ContextError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            Error::msg(format!("{context}: {self}"))
+        }
+    }
+}
+
+/// Attach human context to an error while propagating it.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::ContextError,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn macros_and_context_compose() {
+        let base: Result<()> = Err(anyhow!("base {}", 7));
+        let err = base.context("outer").unwrap_err();
+        assert_eq!(err.to_string(), "outer: base 7");
+        let with: Result<(), std::num::ParseIntError> = "x".parse::<i32>().map(|_| ());
+        let err = with.with_context(|| "parsing x").unwrap_err();
+        assert!(err.to_string().starts_with("parsing x: "));
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged {flag}");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged true");
+    }
+}
