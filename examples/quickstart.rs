@@ -1,19 +1,26 @@
 //! Quickstart: run the VPaaS High-and-Low protocol end to end on a small
-//! synthetic workload and print every §VI metric.
+//! synthetic workload, print every §VI metric, then demonstrate the
+//! function-override API: registered functions are the unit of execution,
+//! so rebinding `detect` changes what the pipeline runs.
 //!
 //! ```bash
 //! make artifacts            # once: AOT-compile the models (python, build time)
 //! cargo run --release --example quickstart
 //! ```
 
+use std::sync::Arc;
+
+use vpaas::cloud::CloudServer;
+use vpaas::interchange::Tensor;
 use vpaas::metrics::report::table;
 use vpaas::pipeline::{Harness, RunConfig, SystemKind};
+use vpaas::serverless::registry::StageBody;
 use vpaas::sim::video::datasets;
 
 fn main() -> anyhow::Result<()> {
     // The harness owns the shared PJRT engine; artifacts are loaded from
     // the repo's artifacts/ directory (built once by `make artifacts`).
-    let harness = Harness::new()?;
+    let mut harness = Harness::new()?;
 
     // A scaled-down copy of the paper's drone dataset (Table I).
     let dataset = datasets::drone(0.04);
@@ -46,6 +53,26 @@ fn main() -> anyhow::Result<()> {
         "MPEG reference: F1={:.3}, latency p50={:.2}s",
         mpeg.f1_true.f1(),
         mpeg.latency.summary().p50
+    );
+
+    // ---- what you register is what runs -------------------------------
+    // Rebind the deployment's `detect` function to the lite artifact; the
+    // executor resolves stages from the registry, so the very next run
+    // detects with the lite model — no pipeline code changes.
+    let v = harness.functions.bind(
+        "detect",
+        StageBody::Detect(Arc::new(|cloud: &mut CloudServer, frames: &[Tensor], at: f64| {
+            cloud.detect_chunk(frames, at, "detector_lite")
+        })),
+    )?;
+    println!("\nrebound function `detect` -> detector_lite (v{v})");
+    let lite = harness.run(SystemKind::Vpaas, &dataset, &cfg)?;
+    println!(
+        "override observably changes the pipeline: F1 {:.3} -> {:.3}, fog regions {} -> {}",
+        vpaas.f1_true.f1(),
+        lite.f1_true.f1(),
+        vpaas.fog_regions,
+        lite.fog_regions,
     );
     Ok(())
 }

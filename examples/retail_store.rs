@@ -8,7 +8,10 @@
 //! cargo run --release --example retail_store
 //! ```
 
-use vpaas::serverless::registry::FunctionKind;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use vpaas::serverless::registry::{FunctionKind, StageBody};
 use vpaas::serverless::VideoApp;
 use vpaas::sim::video::{scene::SceneConfig, Video};
 use vpaas::util::config::Config;
@@ -40,11 +43,27 @@ fn main() -> anyhow::Result<()> {
     );
     app.zoo.attach_profile("face_reg_small", profile)?;
 
-    // 2. register a custom pipeline function and validate the composition
-    app.functions.register("blur_faces", FunctionKind::PostProcess, "boxes", "frames");
+    // 2. register a custom pipeline function — with an executable body, so
+    //    the executor actually runs it on every chunk's final boxes — and
+    //    validate the composition
+    let blurred = Arc::new(AtomicU64::new(0));
+    let counter = blurred.clone();
+    app.functions.register_impl(
+        "blur_faces",
+        FunctionKind::PostProcess,
+        "boxes",
+        "frames",
+        StageBody::Post(Arc::new(
+            move |_frame_idx: usize, boxes: &mut Vec<vpaas::metrics::f1::PredBox>| {
+                // a real deployment would redact pixels here; the simulator
+                // just accounts for every face box the function processed
+                counter.fetch_add(boxes.len() as u64, Ordering::Relaxed);
+            },
+        )),
+    );
     app.functions
         .validate_pipeline(&["decode", "resize", "batch", "detect", "blur_faces"])?;
-    println!("pipeline decode→resize→batch→detect→blur_faces composes OK");
+    println!("pipeline decode→resize→batch→detect→blur_faces composes OK (and blur_faces runs)");
 
     // 3. dispatch the standard models (detector→cloud, classifier+fallback→fog)
     app.deploy_standard()?;
@@ -83,6 +102,10 @@ fn main() -> anyhow::Result<()> {
         app.chunks_processed(),
         app.metrics.bandwidth.bytes as u64,
         app.monitor.status_line()
+    );
+    println!(
+        "custom blur_faces function ran inside the pipeline on {} boxes",
+        blurred.load(Ordering::Relaxed)
     );
     Ok(())
 }

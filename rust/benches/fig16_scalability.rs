@@ -1,5 +1,7 @@
-//! Bench: Fig. 16 — autoscaling under a camera-fleet ramp, plus the
-//! multi-fog shard sweep (throughput at shard counts {1, 2, 4, 8}).
+//! Bench: Fig. 16 — autoscaling under a camera-fleet ramp, the multi-fog
+//! shard sweep (throughput at shard counts {1, 2, 4, 8}), and the
+//! event-driven vs sequential dispatch comparison, whose makespans are
+//! written to `BENCH_overlap.json` so the perf trajectory is tracked.
 #[path = "bench_support.rs"]
 mod bench_support;
 use bench_support::bench;
@@ -14,6 +16,35 @@ fn main() {
     let sweep = figures::fig16_shard_sweep(&h, &cfg).unwrap();
     println!("{sweep}");
     assert!(sweep.contains("throughput"), "missing shard-sweep throughput");
+
+    // event-driven overlap vs the sequential state machine, as JSON
+    let (overlap, rows) = figures::fig16_overlap(&h, &cfg).unwrap();
+    println!("{overlap}");
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|(shards, event, seq)| {
+            format!(
+                "{{\"shards\":{shards},\"event_makespan_s\":{event:.6},\
+                 \"sequential_makespan_s\":{seq:.6},\"speedup\":{:.6}}}",
+                seq / event.max(1e-12)
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\"bench\":\"fig16_overlap\",\"workload\":\"drone x6 cameras\",\"rows\":[{}]}}\n",
+        entries.join(",")
+    );
+    std::fs::write("BENCH_overlap.json", &json).expect("write BENCH_overlap.json");
+    println!("wrote BENCH_overlap.json: {json}");
+    // tiny tolerance: earliest-ready-first can, in principle, delay one
+    // long-tailed chunk behind a quicker one on an unlucky seed
+    for &(shards, event, seq) in &rows {
+        assert!(
+            event <= seq * 1.05 + 1e-6,
+            "event dispatch slowed the fleet at {shards} shards: {event} vs {seq}"
+        );
+    }
+
     bench("fig16/fleet_ramp", 3, || {
         figures::fig16(&h, &cfg).unwrap();
     });

@@ -7,13 +7,9 @@
 
 use anyhow::Result;
 
-use crate::baselines::BaselineOutcome;
-use crate::cloud::CloudServer;
-use crate::metrics::meters::RunMetrics;
+use crate::baselines::{ChunkEnv, ChunkOutcome};
 use crate::protocol::post::regions_from_heads;
 use crate::sim::device::CLIENT;
-use crate::sim::net::Topology;
-use crate::sim::params::SimParams;
 use crate::sim::video::{codec, render_frame, Chunk, Quality};
 
 pub struct CloudSeg {
@@ -29,17 +25,13 @@ impl Default for CloudSeg {
 }
 
 impl CloudSeg {
-    #[allow(clippy::too_many_arguments)]
     pub fn process_chunk(
         &mut self,
         chunk: &Chunk,
         phi: f64,
         t_offset: f64,
-        p: &SimParams,
-        topo: &mut Topology,
-        cloud: &mut CloudServer,
-        metrics: &mut RunMetrics,
-    ) -> Result<BaselineOutcome> {
+        env: &mut ChunkEnv,
+    ) -> Result<ChunkOutcome> {
         let n = chunk.frames.len();
         let captured = t_offset + chunk.t_capture + chunk.duration();
 
@@ -48,32 +40,33 @@ impl CloudSeg {
         let qc_done = qc_start + CLIENT.quality_control_s(n);
         self.client_free = qc_done;
 
-        let bytes = n as f64 * codec::frame_bytes(self.down, p);
-        let at_cloud = topo
+        let bytes = n as f64 * codec::frame_bytes(self.down, env.p);
+        let at_cloud = env
+            .topo
             .wan_up
             .transfer(bytes, qc_done)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
-        metrics.bandwidth.add(bytes);
+        env.metrics.bandwidth.add(bytes);
 
         // Cloud: SR recovery, then detection on the recovered frames.
         let down_frames: Vec<_> = chunk
             .frames
             .iter()
-            .map(|f| render_frame(f, self.down, phi, p))
+            .map(|f| render_frame(f, self.down, phi, env.p))
             .collect();
-        let (recovered, sr_t) = cloud.sr_chunk(&down_frames, at_cloud)?;
-        let (heads, det_t) = cloud.detect_chunk(&recovered, sr_t.done, "detector")?;
+        let (recovered, sr_t) = env.cloud.sr_chunk(&down_frames, at_cloud)?;
+        let (heads, det_t) = env.cloud.detect_chunk(&recovered, sr_t.done, "detector")?;
         let per_frame = heads
             .iter()
             .map(|h| regions_from_heads(&h.as_heads(), self.theta_loc))
             .collect();
 
         for i in 0..n {
-            metrics
+            env.metrics
                 .latency
                 .record(det_t.done - (t_offset + chunk.frame_time(i)));
         }
-        metrics.chunks += 1;
-        Ok(BaselineOutcome { per_frame, done: det_t.done })
+        env.metrics.chunks += 1;
+        Ok(ChunkOutcome { per_frame, done: det_t.done, uncertain_regions: 0, fallback_used: false })
     }
 }

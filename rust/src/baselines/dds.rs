@@ -12,15 +12,11 @@
 
 use anyhow::Result;
 
-use crate::baselines::BaselineOutcome;
-use crate::cloud::CloudServer;
+use crate::baselines::{ChunkEnv, ChunkOutcome};
 use crate::metrics::f1::PredBox;
-use crate::metrics::meters::RunMetrics;
 use crate::protocol::post::regions_from_heads;
 use crate::protocol::{split_regions, FilterConfig};
 use crate::sim::device::CLIENT;
-use crate::sim::net::Topology;
-use crate::sim::params::SimParams;
 use crate::sim::video::{codec, render_frame, Chunk, Quality};
 
 pub struct Dds {
@@ -45,17 +41,14 @@ impl Default for Dds {
 }
 
 impl Dds {
-    #[allow(clippy::too_many_arguments)]
     pub fn process_chunk(
         &mut self,
         chunk: &Chunk,
         phi: f64,
         t_offset: f64,
-        p: &SimParams,
-        topo: &mut Topology,
-        cloud: &mut CloudServer,
-        metrics: &mut RunMetrics,
-    ) -> Result<BaselineOutcome> {
+        env: &mut ChunkEnv,
+    ) -> Result<ChunkOutcome> {
+        let p = env.p;
         let n = chunk.frames.len();
         let captured = t_offset + chunk.t_capture + chunk.duration();
 
@@ -64,18 +57,19 @@ impl Dds {
         let qc_done = qc_start + CLIENT.quality_control_s(n);
         self.client_free = qc_done;
         let low_bytes = n as f64 * codec::frame_bytes(self.low, p);
-        let at_cloud = topo
+        let at_cloud = env
+            .topo
             .wan_up
             .transfer(low_bytes, qc_done)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
-        metrics.bandwidth.add(low_bytes);
+        env.metrics.bandwidth.add(low_bytes);
 
         let low_frames: Vec<_> = chunk
             .frames
             .iter()
             .map(|f| render_frame(f, self.low, phi, p))
             .collect();
-        let (heads, t1) = cloud.detect_chunk(&low_frames, at_cloud, "detector")?;
+        let (heads, t1) = env.cloud.detect_chunk(&low_frames, at_cloud, "detector")?;
 
         let mut per_frame: Vec<Vec<PredBox>> = Vec::with_capacity(n);
         let mut round2_frames: Vec<usize> = Vec::new();
@@ -100,11 +94,12 @@ impl Dds {
         let n_regions: usize = per_frame.iter().map(Vec::len).sum::<usize>()
             + uncertain_per_frame.iter().map(Vec::len).sum::<usize>();
         let fb = codec::feedback_bytes(n_regions);
-        let at_client = topo
+        let at_client = env
+            .topo
             .wan_down
             .transfer(fb, t1.done)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
-        metrics.bandwidth.add(fb);
+        env.metrics.bandwidth.add(fb);
 
         let mut done = t1.done;
         if !round2_frames.is_empty() {
@@ -114,18 +109,19 @@ impl Dds {
                 enc_start + CLIENT.encode_s * round2_frames.len() as f64 * 0.5;
             self.client_free = enc_done;
             let r2_bytes = codec::region_bytes(round2_area, self.round2, p);
-            let at_cloud2 = topo
+            let at_cloud2 = env
+                .topo
                 .wan_up
                 .transfer(r2_bytes, enc_done)
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
-            metrics.bandwidth.add(r2_bytes);
+            env.metrics.bandwidth.add(r2_bytes);
 
             // Cloud round 2: detector on the high-quality re-sends.
             let hi_frames: Vec<_> = round2_frames
                 .iter()
                 .map(|&fi| render_frame(&chunk.frames[fi], self.round2, phi, p))
                 .collect();
-            let (heads2, t2) = cloud.detect_chunk(&hi_frames, at_cloud2, "detector")?;
+            let (heads2, t2) = env.cloud.detect_chunk(&hi_frames, at_cloud2, "detector")?;
             done = t2.done;
             for (k, &fi) in round2_frames.iter().enumerate() {
                 let regions = regions_from_heads(&heads2[k].as_heads(), self.filter.theta_loc);
@@ -142,11 +138,11 @@ impl Dds {
         }
 
         for i in 0..n {
-            metrics
+            env.metrics
                 .latency
                 .record(done - (t_offset + chunk.frame_time(i)));
         }
-        metrics.chunks += 1;
-        Ok(BaselineOutcome { per_frame, done })
+        env.metrics.chunks += 1;
+        Ok(ChunkOutcome { per_frame, done, uncertain_regions: 0, fallback_used: false })
     }
 }

@@ -9,14 +9,10 @@
 
 use anyhow::Result;
 
-use crate::baselines::BaselineOutcome;
-use crate::cloud::CloudServer;
+use crate::baselines::{ChunkEnv, ChunkOutcome};
 use crate::interchange::Tensor;
 use crate::metrics::f1::PredBox;
-use crate::metrics::meters::RunMetrics;
 use crate::protocol::post::regions_from_heads;
-use crate::sim::net::Topology;
-use crate::sim::params::SimParams;
 use crate::sim::video::{codec, render_frame, Chunk, Quality};
 
 pub struct Glimpse {
@@ -60,22 +56,18 @@ fn mean_abs_diff(a: &Tensor, b: &Tensor) -> f64 {
 }
 
 impl Glimpse {
-    #[allow(clippy::too_many_arguments)]
     pub fn process_chunk(
         &mut self,
         chunk: &Chunk,
         phi: f64,
         t_offset: f64,
-        p: &SimParams,
-        topo: &mut Topology,
-        cloud: &mut CloudServer,
-        metrics: &mut RunMetrics,
-    ) -> Result<BaselineOutcome> {
+        env: &mut ChunkEnv,
+    ) -> Result<ChunkOutcome> {
         let mut per_frame = Vec::with_capacity(chunk.frames.len());
         let mut done = t_offset + chunk.t_capture;
         for (i, truth) in chunk.frames.iter().enumerate() {
             let t_frame = t_offset + chunk.frame_time(i);
-            let frame = render_frame(truth, Quality::ORIGINAL, phi, p);
+            let frame = render_frame(truth, Quality::ORIGINAL, phi, env.p);
             let trigger = match &self.last_sent {
                 None => true,
                 Some(prev) => {
@@ -85,32 +77,33 @@ impl Glimpse {
             };
             if trigger {
                 // ship one original-quality frame, detect on the cloud
-                let bytes = codec::frame_bytes(Quality::ORIGINAL, p);
-                let at_cloud = topo
+                let bytes = codec::frame_bytes(Quality::ORIGINAL, env.p);
+                let at_cloud = env
+                    .topo
                     .wan_up
                     .transfer(bytes, t_frame + 0.005)
                     .map_err(|e| anyhow::anyhow!("{e}"))?;
-                metrics.bandwidth.add(bytes);
+                env.metrics.bandwidth.add(bytes);
                 let (heads, timing) =
-                    cloud.detect_chunk(std::slice::from_ref(&frame), at_cloud, "detector")?;
+                    env.cloud.detect_chunk(std::slice::from_ref(&frame), at_cloud, "detector")?;
                 self.last_boxes =
                     regions_from_heads(&heads[0].as_heads(), self.theta_loc);
                 self.last_sent = Some(frame);
                 self.frames_sent += 1;
                 self.tracked_since_send = 0;
                 done = done.max(timing.done);
-                metrics.latency.record(timing.done - t_frame);
+                env.metrics.latency.record(timing.done - t_frame);
             } else {
                 // tracker re-uses stale boxes; ~10 ms of client CPU
                 self.frames_tracked += 1;
                 self.tracked_since_send += 1;
                 let t_done = t_frame + 0.010;
                 done = done.max(t_done);
-                metrics.latency.record(0.010);
+                env.metrics.latency.record(0.010);
             }
             per_frame.push(self.last_boxes.clone());
         }
-        metrics.chunks += 1;
-        Ok(BaselineOutcome { per_frame, done })
+        env.metrics.chunks += 1;
+        Ok(ChunkOutcome { per_frame, done, uncertain_regions: 0, fallback_used: false })
     }
 }

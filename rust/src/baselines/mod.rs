@@ -5,6 +5,12 @@
 //! * [`glimpse`] — client-driven frame differencing + stale-box tracking.
 //! * [`dds`] — server-driven two-round streaming (low first, high regions).
 //! * [`cloudseg`] — client downscale + cloud super-resolution recovery.
+//!
+//! Every baseline exposes the same small per-chunk entry point —
+//! `process_chunk(&mut self, chunk, phi, t_offset, env)` over a shared
+//! [`ChunkEnv`] of testbed borrows — and returns the same
+//! [`ChunkOutcome`] the VPaaS executor produces, so the pipeline scores
+//! every system through one `score_chunk` path.
 
 pub mod cloudseg;
 pub mod dds;
@@ -16,12 +22,18 @@ pub use dds::Dds;
 pub use glimpse::Glimpse;
 pub use mpeg::Mpeg;
 
-use crate::metrics::f1::PredBox;
+pub use crate::protocol::coordinator::ChunkOutcome;
 
-/// Per-chunk output every system produces (same shape as the VPaaS
-/// coordinator's outcome so pipelines can score them uniformly).
-#[derive(Debug, Clone)]
-pub struct BaselineOutcome {
-    pub per_frame: Vec<Vec<PredBox>>,
-    pub done: f64,
+use crate::cloud::CloudServer;
+use crate::metrics::meters::RunMetrics;
+use crate::sim::net::Topology;
+use crate::sim::params::SimParams;
+
+/// The shared-testbed borrows every baseline's per-chunk step needs — the
+/// context-struct replacement for the old many-argument signatures.
+pub struct ChunkEnv<'a> {
+    pub p: &'a SimParams,
+    pub topo: &'a mut Topology,
+    pub cloud: &'a mut CloudServer,
+    pub metrics: &'a mut RunMetrics,
 }

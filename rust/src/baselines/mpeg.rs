@@ -4,12 +4,8 @@
 
 use anyhow::Result;
 
-use crate::baselines::BaselineOutcome;
-use crate::cloud::CloudServer;
-use crate::metrics::meters::RunMetrics;
+use crate::baselines::{ChunkEnv, ChunkOutcome};
 use crate::protocol::post::regions_from_heads;
-use crate::sim::net::Topology;
-use crate::sim::params::SimParams;
 use crate::sim::video::{codec, render_frame, Chunk, Quality};
 
 pub struct Mpeg {
@@ -28,37 +24,40 @@ impl Mpeg {
         chunk: &Chunk,
         phi: f64,
         t_offset: f64,
-        p: &SimParams,
-        topo: &mut Topology,
-        cloud: &mut CloudServer,
-        metrics: &mut RunMetrics,
-    ) -> Result<BaselineOutcome> {
+        env: &mut ChunkEnv,
+    ) -> Result<ChunkOutcome> {
         let n = chunk.frames.len();
         let captured = t_offset + chunk.t_capture + chunk.duration();
         // Client streams the original chunk straight over the WAN (no QC).
-        let bytes = n as f64 * codec::frame_bytes(Quality::ORIGINAL, p);
-        let at_cloud = topo
+        let bytes = n as f64 * codec::frame_bytes(Quality::ORIGINAL, env.p);
+        let at_cloud = env
+            .topo
             .wan_up
             .transfer(bytes, captured)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
-        metrics.bandwidth.add(bytes);
+        env.metrics.bandwidth.add(bytes);
 
         let frames: Vec<_> = chunk
             .frames
             .iter()
-            .map(|f| render_frame(f, Quality::ORIGINAL, phi, p))
+            .map(|f| render_frame(f, Quality::ORIGINAL, phi, env.p))
             .collect();
-        let (heads, timing) = cloud.detect_chunk(&frames, at_cloud, "detector")?;
+        let (heads, timing) = env.cloud.detect_chunk(&frames, at_cloud, "detector")?;
         let per_frame = heads
             .iter()
             .map(|h| regions_from_heads(&h.as_heads(), self.theta_loc))
             .collect();
         for i in 0..n {
-            metrics
+            env.metrics
                 .latency
                 .record(timing.done - (t_offset + chunk.frame_time(i)));
         }
-        metrics.chunks += 1;
-        Ok(BaselineOutcome { per_frame, done: timing.done })
+        env.metrics.chunks += 1;
+        Ok(ChunkOutcome {
+            per_frame,
+            done: timing.done,
+            uncertain_regions: 0,
+            fallback_used: false,
+        })
     }
 }

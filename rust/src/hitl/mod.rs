@@ -9,7 +9,9 @@
 pub mod collector;
 pub mod ensemble;
 pub mod learner;
+pub mod session;
 
 pub use collector::DataCollector;
 pub use ensemble::{ensemble_weights, solve_ridge};
 pub use learner::IncrementalLearner;
+pub use session::CameraSession;

@@ -1,0 +1,81 @@
+//! Per-camera HITL session state (§V, Fig. 8, scaled to multi-camera).
+//!
+//! The seed system kept one [`DataCollector`] for the whole deployment, so
+//! a training batch could mix crops from unrelated cameras and one noisy
+//! camera could flush another camera's half-full batch. A [`CameraSession`]
+//! scopes the collector (and its batch trigger) to one camera: a batch
+//! always comes from a single stream. The [`IncrementalLearner`] itself
+//! stays **global** — every camera's labels improve the one shared
+//! classifier, exactly the paper's deployment shape.
+//!
+//! [`IncrementalLearner`]: crate::hitl::IncrementalLearner
+
+use crate::hitl::collector::{DataCollector, LabeledCrop};
+
+/// Labeled-crop count that triggers one Eq. (8) training step (the paper
+/// trains with batch size 4, §VI-C "HITL Overhead").
+pub const BATCH_TRIGGER: usize = 4;
+
+/// One camera's HITL state: its own label buffer and counters.
+#[derive(Debug)]
+pub struct CameraSession {
+    pub camera: usize,
+    pub collector: DataCollector,
+    /// Training batches this camera's labels have triggered.
+    pub batches_trained: u64,
+}
+
+impl CameraSession {
+    pub fn new(camera: usize) -> Self {
+        CameraSession {
+            camera,
+            collector: DataCollector::new(BATCH_TRIGGER),
+            batches_trained: 0,
+        }
+    }
+
+    /// Buffer one human-labeled crop from this camera.
+    pub fn submit(&mut self, feats: Vec<f32>, label: usize) {
+        self.collector.submit(feats, label);
+    }
+
+    /// Labeled crops waiting for a full batch.
+    pub fn pending(&self) -> usize {
+        self.collector.pending()
+    }
+
+    /// Take a full training batch if this camera alone has buffered enough
+    /// labels. The batch is single-camera by construction.
+    pub fn take_batch(&mut self) -> Option<Vec<LabeledCrop>> {
+        let batch = self.collector.take_batch();
+        if batch.is_some() {
+            self.batches_trained += 1;
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_per_camera() {
+        let mut a = CameraSession::new(0);
+        let mut b = CameraSession::new(1);
+        for _ in 0..3 {
+            a.submit(vec![0.0], 0);
+            b.submit(vec![1.0], 1);
+        }
+        // 6 labels exist across cameras, but no single camera has a batch
+        assert!(a.take_batch().is_none());
+        assert!(b.take_batch().is_none());
+        a.submit(vec![0.0], 0);
+        let batch = a.take_batch().expect("camera 0 reached the trigger");
+        assert_eq!(batch.len(), BATCH_TRIGGER);
+        assert!(batch.iter().all(|ex| ex.feats == [0.0]), "foreign crops in batch");
+        assert_eq!(a.batches_trained, 1);
+        assert_eq!(b.batches_trained, 0);
+        assert_eq!(b.pending(), 3);
+    }
+}

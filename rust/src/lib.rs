@@ -16,6 +16,39 @@
 //!   `python/compile/export_reference.py`). Python never runs on the
 //!   request path either way.
 //!
+//! ## Event-driven pipeline execution
+//!
+//! A video pipeline is "a set of functions … orchestrated" (Fig. 2), and
+//! that is literally how the request path runs
+//! ([`serverless::executor`]):
+//!
+//! * **Stages as events** — each Fig. 6 step (client→fog LAN, fog QC,
+//!   WAN uplink, cloud detect, coordinate downlink, fog crop-classify,
+//!   HITL) is a discrete [`serverless::executor::Stage`] event on a
+//!   virtual-clock queue. Within a dispatch wave the globally earliest
+//!   event runs first, so chunk *k+1*'s WAN uplink overlaps chunk *k*'s
+//!   cloud GPU phase and shared resources serve in virtual-arrival order
+//!   ([`serverless::executor::DispatchMode::Sequential`] reproduces the
+//!   old per-chunk state machine for A/B makespan comparisons —
+//!   `BENCH_overlap.json` from `cargo bench --bench fig16_scalability`
+//!   tracks the gap).
+//! * **Functions are the unit of execution** — every executable stage is
+//!   bound to a [`serverless::registry::FunctionRegistry`] entry
+//!   (`reencode_low`, `detect`, `classify_crops`, `il_update`, plus any
+//!   bound `PostProcess` functions). Overriding an entry with
+//!   [`serverless::registry::FunctionRegistry::bind`] changes what the
+//!   pipeline runs — `examples/quickstart.rs` rebinds `detect` to the
+//!   lite artifact and watches the output move.
+//! * **Context-struct API** — per-chunk entry points take a
+//!   [`serverless::executor::ChunkJob`] plus a
+//!   [`serverless::executor::StageCtx`] of testbed borrows; the old
+//!   9-argument `process_chunk` signature is gone everywhere (baselines
+//!   use the analogous [`baselines::ChunkEnv`]).
+//! * **Per-camera HITL sessions** — the coordinator keeps one
+//!   [`hitl::CameraSession`] per camera, so a training batch never mixes
+//!   cameras, while the [`hitl::IncrementalLearner`] stays global and its
+//!   updates fan out to every fog shard.
+//!
 //! ## Sharded multi-fog scale-out
 //!
 //! The request path scales across a pool of fog nodes

@@ -103,6 +103,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if want("fig16") {
         println!("{}\n", figures::fig16(&h, &cfg)?);
         println!("{}\n", figures::fig16_shard_sweep(&h, &cfg)?);
+        println!("{}\n", figures::fig16_overlap(&h, &cfg)?.0);
     }
     if want("quality") {
         println!("{}\n", figures::quality_operating_points(&h));

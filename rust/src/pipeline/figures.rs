@@ -15,6 +15,7 @@ use crate::metrics::meters::RunMetrics;
 use crate::metrics::report::table;
 use crate::pipeline::{Harness, RunConfig, SystemKind};
 use crate::protocol::coordinator::Coordinator;
+use crate::serverless::executor::{ChunkJob, DispatchMode, Executor, StageCtx};
 use crate::sim::device;
 use crate::sim::human::{Annotator, AnnotatorConfig};
 use crate::sim::net::Topology;
@@ -286,6 +287,7 @@ pub fn fig13b(h: &Harness, _scale: f64, cfg: &RunConfig) -> Result<String> {
     // the latency spike Fig. 13b measures. Run the identical workload with
     // HITL on and off and compare the freshness distributions.
     let p = h.params.clone();
+    let ex = Executor::from_registry(&h.functions, DispatchMode::EventDriven)?;
     let run = |hitl: bool| -> Result<(crate::util::stats::Summary, u64)> {
         let mut topo = Topology::new(cfg.wan_mbps, cfg.seed);
         let mut cloud = crate::cloud::CloudServer::new(
@@ -335,10 +337,16 @@ pub fn fig13b(h: &Harness, _scale: f64, cfg: &RunConfig) -> Result<String> {
                     any = true;
                     let phi = p.drift_phi(chunk_counter as f64 * 30.0);
                     chunk_counter += 1;
-                    coord.process_chunk(
-                        &chunk, phi, *offset, &p, &mut topo, &mut cloud, fog, &mut annotator,
-                        &mut metrics,
-                    )?;
+                    let mut ctx = StageCtx {
+                        p: p.as_ref(),
+                        coord,
+                        topo: &mut topo,
+                        cloud: &mut cloud,
+                        fogs: std::slice::from_mut(fog),
+                        annotator: &mut annotator,
+                        metrics: &mut metrics,
+                    };
+                    ex.run_chunk(ChunkJob::new(chunk, phi, *offset), &mut ctx)?;
                 }
             }
             if !any {
@@ -407,17 +415,27 @@ pub fn fig15(h: &Harness, cfg: &RunConfig) -> Result<(String, FaultTrace)> {
     let learner =
         IncrementalLearner::new(h.handle(), p.cls_last0.clone(), p.il_batch, p.num_classes);
     let mut coordinator = Coordinator::new(cfg.protocol, learner);
+    let ex = Executor::from_registry(&h.functions, DispatchMode::EventDriven)?;
     let mut trace = FaultTrace { rows: Vec::new() };
     let mut metrics = RunMetrics::new("vpaas", "traffic");
     while let Some(chunk) = video.next_chunk() {
         let phi = p.drift_phi(chunk.chunk_idx as f64);
         let before = metrics.latency.freshness.len();
-        let outcome = coordinator.process_chunk(
-            &chunk, phi, 0.0, &p, &mut topo, &mut cloud, &mut fog, &mut annotator, &mut metrics,
-        )?;
+        let (job, outcome) = {
+            let mut ctx = StageCtx {
+                p: p.as_ref(),
+                coord: &mut coordinator,
+                topo: &mut topo,
+                cloud: &mut cloud,
+                fogs: std::slice::from_mut(&mut fog),
+                annotator: &mut annotator,
+                metrics: &mut metrics,
+            };
+            ex.run_chunk(ChunkJob::new(chunk, phi, 0.0), &mut ctx)?
+        };
         let mut f1 = F1Counts::default();
         for (fi, preds) in outcome.per_frame.iter().enumerate() {
-            f1.merge(match_boxes(preds, &chunk.frames[fi].gt_boxes(), 0.5));
+            f1.merge(match_boxes(preds, &job.chunk.frames[fi].gt_boxes(), 0.5));
         }
         let lat: f64 = metrics.latency.freshness.values()[before..]
             .iter()
@@ -425,7 +443,7 @@ pub fn fig15(h: &Harness, cfg: &RunConfig) -> Result<(String, FaultTrace)> {
             / (metrics.latency.freshness.len() - before).max(1) as f64;
         trace
             .rows
-            .push((chunk.t_capture, f1.f1(), lat, outcome.fallback_used));
+            .push((job.chunk.t_capture, f1.f1(), lat, outcome.fallback_used));
     }
     let rows: Vec<Vec<String>> = trace
         .rows
@@ -497,6 +515,7 @@ pub fn fig16(h: &Harness, cfg: &RunConfig) -> Result<String> {
         })
         .collect();
     // k-way merge on absolute capture time
+    let ex = Executor::from_registry(&h.functions, DispatchMode::EventDriven)?;
     let mut next: Vec<Option<crate::sim::video::Chunk>> =
         streams.iter_mut().map(|(_, v, _, _)| v.next_chunk()).collect();
     loop {
@@ -508,9 +527,16 @@ pub fn fig16(h: &Harness, cfg: &RunConfig) -> Result<String> {
         let Some((i, _)) = pick else { break };
         let chunk = next[i].take().unwrap();
         let (offset, video, fog, coord) = &mut streams[i];
-        coord.process_chunk(
-            &chunk, 0.0, *offset, &p, &mut topo, &mut cloud, fog, &mut annotator, &mut metrics,
-        )?;
+        let mut ctx = StageCtx {
+            p: p.as_ref(),
+            coord,
+            topo: &mut topo,
+            cloud: &mut cloud,
+            fogs: std::slice::from_mut(fog),
+            annotator: &mut annotator,
+            metrics: &mut metrics,
+        };
+        ex.run_chunk(ChunkJob::new(chunk, 0.0, *offset), &mut ctx)?;
         next[i] = video.next_chunk();
     }
     let rows: Vec<Vec<String>> = cloud
@@ -560,6 +586,45 @@ pub fn fig16_shard_sweep(h: &Harness, cfg: &RunConfig) -> Result<String> {
             &rows
         )
     ))
+}
+
+// ------------------------------------------------------ Fig. 16c (overlap)
+/// Event-driven executor vs the old synchronous per-chunk state machine:
+/// the same seed, workload and labels, differing only in how stage events
+/// interleave within a dispatch wave. Event dispatch lets chunk *k+1*'s
+/// WAN uplink overlap chunk *k*'s cloud GPU phase, so the makespan
+/// shrinks. Returns the printable table plus raw
+/// `(shards, event_makespan, sequential_makespan)` rows — the bench writes
+/// them to `BENCH_overlap.json` so the perf trajectory is tracked.
+pub fn fig16_overlap(h: &Harness, cfg: &RunConfig) -> Result<(String, Vec<(usize, f64, f64)>)> {
+    let mut ds = datasets::drone(0.2);
+    ds.videos.truncate(6); // 6 cameras streaming concurrently
+    let mut rows = Vec::new();
+    let mut raw = Vec::new();
+    for shards in [2usize, 4, 8] {
+        let event_cfg = RunConfig {
+            shards,
+            golden: false,
+            autoscale: false,
+            dispatch: DispatchMode::EventDriven,
+            ..cfg.clone()
+        };
+        let seq_cfg = RunConfig { dispatch: DispatchMode::Sequential, ..event_cfg.clone() };
+        let event = h.run(SystemKind::Vpaas, &ds, &event_cfg)?;
+        let seq = h.run(SystemKind::Vpaas, &ds, &seq_cfg)?;
+        raw.push((shards, event.makespan, seq.makespan));
+        rows.push(vec![
+            shards.to_string(),
+            format!("{:.2}", seq.makespan),
+            format!("{:.2}", event.makespan),
+            format!("{:.4}", seq.makespan / event.makespan.max(1e-12)),
+        ]);
+    }
+    let text = format!(
+        "Fig. 16c — event-driven wave dispatch vs sequential state machine (6 cameras)\n{}",
+        table(&["shards", "seq_makespan_s", "event_makespan_s", "speedup"], &rows)
+    );
+    Ok((text, raw))
 }
 
 // ---------------------------------------------------------------- codec aside

@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::baselines::{CloudSeg, Dds, Glimpse, Mpeg};
+use crate::baselines::{ChunkEnv, CloudSeg, Dds, Glimpse, Mpeg};
 use crate::cloud::{CloudConfig, CloudServer};
 use crate::hitl::IncrementalLearner;
 use crate::interchange::Tensor;
@@ -19,14 +19,14 @@ use crate::protocol::coordinator::Coordinator;
 use crate::protocol::post::regions_from_heads;
 use crate::protocol::ProtocolConfig;
 use crate::runtime::{InferenceHandle, InferenceService};
+use crate::serverless::executor::{ChunkJob, DispatchMode, Executor, StageCtx};
 use crate::serverless::monitor::GlobalMonitor;
-use crate::serverless::policy::Route;
+use crate::serverless::registry::FunctionRegistry;
 use crate::serverless::scheduler::{FogShardPool, ShardConfig};
 use crate::serving::batcher::DynamicBatcher;
 use crate::sim::human::{Annotator, AnnotatorConfig};
 use crate::sim::net::Topology;
 use crate::sim::params::SimParams;
-use crate::sim::video::codec;
 use crate::sim::video::datasets::DatasetSpec;
 use crate::sim::video::scene::GtBox;
 use crate::sim::video::{render_frame, Chunk, Quality};
@@ -101,6 +101,10 @@ pub struct RunConfig {
     /// 1 reproduces the single-fog deployment; `autoscale` additionally
     /// lets the provisioner grow/shrink the pool at runtime.
     pub shards: usize,
+    /// How the executor interleaves stage events within a dispatch wave
+    /// (`Sequential` reproduces the old per-chunk state machine for A/B
+    /// makespan comparisons; labels are identical in both modes).
+    pub dispatch: DispatchMode,
     pub seed: u64,
     pub protocol: ProtocolConfig,
 }
@@ -116,23 +120,28 @@ impl Default for RunConfig {
             golden: true,
             outage: None,
             shards: 1,
+            dispatch: DispatchMode::default(),
             seed: 0xCAFE,
             protocol: ProtocolConfig::default(),
         }
     }
 }
 
-/// Shared engine + params, reusable across runs.
+/// Shared engine + params + function registry, reusable across runs.
 pub struct Harness {
     svc: InferenceService,
     pub params: Arc<SimParams>,
+    /// The deployment's registered functions. VPaaS runs execute whatever
+    /// is bound here — override with [`FunctionRegistry::bind`] (e.g. bind
+    /// `detect` to the lite artifact) to change what the pipeline runs.
+    pub functions: FunctionRegistry,
 }
 
 impl Harness {
     pub fn new() -> Result<Self> {
         let svc = InferenceService::start()?;
         let params = SimParams::load()?;
-        Ok(Harness { svc, params })
+        Ok(Harness { svc, params, functions: FunctionRegistry::with_standard_functions() })
     }
 
     pub fn handle(&self) -> InferenceHandle {
@@ -217,12 +226,15 @@ impl Harness {
         }
     }
 
-    /// The sharded multi-fog VPaaS driver (tentpole of the scale-out
-    /// architecture; see `serverless::scheduler`). Deterministic for a
-    /// given seed: chunk merge order, wave formation, shard routing and
-    /// every RNG stream derive from `cfg.seed` alone.
+    /// The sharded multi-fog VPaaS driver: cross-camera waves routed onto
+    /// fog shards (`serverless::scheduler`) and executed by the
+    /// event-driven `serverless::executor`, so WAN and GPU phases of
+    /// different chunks overlap within a wave. Deterministic for a given
+    /// seed: chunk merge order, wave formation, shard routing, event
+    /// interleaving and every RNG stream derive from `cfg.seed` alone.
     fn run_vpaas(&self, kind: SystemKind, dataset: &DatasetSpec, cfg: &RunConfig) -> Result<RunMetrics> {
         let p = self.params.clone();
+        let executor = Executor::from_registry(&self.functions, cfg.dispatch)?;
         let shards = cfg.shards.max(1);
         let shard_cfg = ShardConfig {
             initial_shards: shards,
@@ -258,9 +270,7 @@ impl Harness {
             monitor: GlobalMonitor::new(),
             p,
             global_chunk: 0,
-            last_updates: 0,
         };
-        run.last_updates = run.coordinator.learner.updates;
 
         // Multi-camera concurrency: videos stream at once, staggered by
         // 0.2 s so the shared links see causal arrivals; a k-way merge
@@ -306,9 +316,7 @@ impl Harness {
                 // epsilon absorbs (oldest + wait) - oldest rounding
                 let Some(wave) = batcher.pop_batch(due + 1e-9) else { break };
                 clock = clock.max(due);
-                for (wvi, wchunk) in wave {
-                    self.process_chunk_sharded(&mut run, offsets[wvi], &wchunk, due)?;
-                }
+                self.process_wave(&executor, &mut run, &offsets, wave, due)?;
             }
             let Some((vi, captured)) = pick else { break };
             let chunk = next[vi].take().unwrap();
@@ -318,106 +326,82 @@ impl Harness {
             // a full wave dispatches immediately
             while batcher.len() >= wave_batch {
                 let Some(wave) = batcher.pop_batch(captured) else { break };
-                for (wvi, wchunk) in wave {
-                    self.process_chunk_sharded(&mut run, offsets[wvi], &wchunk, captured)?;
-                }
+                self.process_wave(&executor, &mut run, &offsets, wave, captured)?;
             }
         }
         // defensive: the due-time loop drains everything at end of stream,
         // but nothing may ever be left behind
         for wave in batcher.flush_all(clock + wave_wait) {
-            for (wvi, wchunk) in wave {
-                self.process_chunk_sharded(&mut run, offsets[wvi], &wchunk, clock + wave_wait)?;
-            }
+            self.process_wave(&executor, &mut run, &offsets, wave, clock + wave_wait)?;
         }
         let mut metrics = run.metrics;
         metrics.cost = run.cloud.billing.clone();
         Ok(metrics)
     }
 
-    /// Process one chunk through the sharded scheduler: route (least
-    /// backlog + policy), dispatch over the shard's own LAN at the wave's
-    /// dispatch time, fan IL updates out to every shard, feed the
-    /// provisioner, score.
-    fn process_chunk_sharded(
+    /// Dispatch one cross-camera wave through the event-driven executor:
+    /// route each member (least backlog + policy, in capture order), run
+    /// all stage events on the shared virtual clock — chunk *k+1*'s WAN
+    /// uplink overlapping chunk *k*'s GPU phase — then feed the
+    /// provisioner and score, again in capture order.
+    fn process_wave(
         &self,
+        executor: &Executor,
         run: &mut VpaasRun,
-        t_offset: f64,
-        chunk: &Chunk,
+        offsets: &[f64],
+        wave: Vec<(usize, Chunk)>,
         dispatch_at: f64,
     ) -> Result<()> {
-        let phi = if run.cfg.drift {
-            run.p.drift_phi(run.global_chunk as f64 * run.cfg.drift_scale)
-        } else {
-            0.0
-        };
-        run.global_chunk += 1;
-        let captured = t_offset + chunk.t_capture + chunk.duration();
-        let dispatch_at = dispatch_at.max(captured);
-        let wan_up = !run.topo.wan_up.is_down(dispatch_at);
-        let cloud_wait = run.cloud.queue_wait();
-        let (shard, route) = run.pool.decide(dispatch_at, wan_up, cloud_wait);
-        let outcome = {
-            let VpaasRun { topo, cloud, pool, annotator, coordinator, metrics, p, .. } = run;
-            match route {
-                Route::Cloud => topo.with_fog_lan(shard, |topo| {
-                    // hold the shard's conveyor until the wave dispatches:
-                    // the coordinator's LAN transfer then starts no earlier
-                    // than dispatch_at (wave wait is real latency)
-                    let _ = topo.lan.transfer(0.0, dispatch_at);
-                    coordinator.process_chunk(
-                        chunk,
-                        phi,
-                        t_offset,
-                        p,
-                        topo,
-                        cloud,
-                        pool.shard_mut(shard),
-                        annotator,
-                        metrics,
-                    )
-                })?,
-                Route::Fog => {
-                    // a fog-routed chunk still crosses the client→fog LAN
-                    // and is re-encoded at the shard before the lite
-                    // detector runs (same steps 1-2 as the cloud path)
-                    let n = chunk.frames.len();
-                    let hi_bytes = n as f64 * codec::frame_bytes(Quality::ORIGINAL, p);
-                    let at_fog = topo.with_fog_lan(shard, |topo| {
-                        let _ = topo.lan.transfer(0.0, dispatch_at);
-                        topo.lan
-                            .transfer(hi_bytes, captured)
-                            .expect("LAN has no outage schedule")
-                    });
-                    let qc_done = pool.shard_mut(shard).quality_control(n, at_fog);
-                    coordinator.process_chunk_fog_only(
-                        chunk,
-                        phi,
-                        t_offset,
-                        p,
-                        pool.shard_mut(shard),
-                        metrics,
-                        qc_done,
-                    )?
-                }
-            }
-        };
-        // Fan the IL-updated last layer out to every shard (the routed
-        // shard already has it; the rest must not serve stale weights).
-        if run.coordinator.learner.updates != run.last_updates {
-            run.last_updates = run.coordinator.learner.updates;
-            let w = run.coordinator.learner.w_last.clone();
-            run.pool.sync_last_layer(&w);
+        let mut jobs = Vec::with_capacity(wave.len());
+        for (vi, chunk) in wave {
+            let phi = if run.cfg.drift {
+                run.p.drift_phi(run.global_chunk as f64 * run.cfg.drift_scale)
+            } else {
+                0.0
+            };
+            run.global_chunk += 1;
+            let mut job = ChunkJob::new(chunk, phi, offsets[vi]);
+            job.dispatch_at = dispatch_at.max(job.captured());
+            let wan_up = !run.topo.wan_up.is_down(job.dispatch_at);
+            let cloud_wait = run.cloud.queue_wait();
+            let (shard, route) = run.pool.decide(job.dispatch_at, wan_up, cloud_wait);
+            job.shard = shard;
+            job.route = route;
+            jobs.push(job);
         }
-        run.pool.observe(outcome.done, &mut run.monitor);
-        run.pool.autoscale(outcome.done, &run.monitor);
-        self.score_chunk(&mut run.metrics, chunk, &outcome.per_frame, outcome.done, phi, &run.cfg)
+        let completed = {
+            let VpaasRun { topo, cloud, pool, annotator, coordinator, metrics, p, .. } = run;
+            topo.ensure_fog_lans(pool.len());
+            let mut ctx = StageCtx {
+                p: p.as_ref(),
+                coord: coordinator,
+                topo,
+                cloud,
+                fogs: pool.shards_mut(),
+                annotator,
+                metrics,
+            };
+            executor.run_wave(jobs, &mut ctx)?
+        };
+        for (job, outcome) in &completed {
+            run.pool.observe(outcome.done, &mut run.monitor);
+            run.pool.autoscale(outcome.done, &run.monitor);
+            self.score_chunk(
+                &mut run.metrics,
+                &job.chunk,
+                &outcome.per_frame,
+                outcome.done,
+                job.phi,
+                &run.cfg,
+            )?;
+        }
+        Ok(())
     }
 
     /// Shared per-chunk scoring: true-GT F1 (and optionally golden
-    /// pseudo-GT), bandwidth video time, makespan, processing log. Both
-    /// drivers route through here so sharded and baseline metrics stay
-    /// comparable.
+    /// pseudo-GT), bandwidth video time, makespan, processing log. Every
+    /// system's `ChunkOutcome` — executor waves and baselines alike —
+    /// routes through here so metrics stay comparable.
     fn score_chunk(
         &self,
         metrics: &mut RunMetrics,
@@ -446,7 +430,9 @@ impl Harness {
     }
 
     /// The baselines' sequential single-tenant driver (the paper's layout:
-    /// each video gets its own slot on the run timeline).
+    /// each video gets its own slot on the run timeline). Baselines share
+    /// the executor's outcome type and the [`Harness::score_chunk`] path,
+    /// over a [`ChunkEnv`] of testbed borrows.
     fn run_baseline(&self, kind: SystemKind, dataset: &DatasetSpec, cfg: &RunConfig) -> Result<RunMetrics> {
         let p = self.params.clone();
         let mut metrics = RunMetrics::new(kind.name(), dataset.name);
@@ -473,20 +459,20 @@ impl Harness {
                     0.0
                 };
                 global_chunk += 1;
+                let mut env = ChunkEnv {
+                    p: p.as_ref(),
+                    topo: &mut topo,
+                    cloud: &mut cloud,
+                    metrics: &mut metrics,
+                };
                 let outcome = match kind {
-                    SystemKind::Mpeg => {
-                        mpeg.process_chunk(&chunk, phi, t_offset, &p, &mut topo, &mut cloud, &mut metrics)?
-                    }
-                    SystemKind::Dds => {
-                        dds.process_chunk(&chunk, phi, t_offset, &p, &mut topo, &mut cloud, &mut metrics)?
-                    }
+                    SystemKind::Mpeg => mpeg.process_chunk(&chunk, phi, t_offset, &mut env)?,
+                    SystemKind::Dds => dds.process_chunk(&chunk, phi, t_offset, &mut env)?,
                     SystemKind::CloudSeg => {
-                        cloudseg
-                            .process_chunk(&chunk, phi, t_offset, &p, &mut topo, &mut cloud, &mut metrics)?
+                        cloudseg.process_chunk(&chunk, phi, t_offset, &mut env)?
                     }
                     SystemKind::Glimpse => {
-                        glimpse
-                            .process_chunk(&chunk, phi, t_offset, &p, &mut topo, &mut cloud, &mut metrics)?
+                        glimpse.process_chunk(&chunk, phi, t_offset, &mut env)?
                     }
                     SystemKind::Vpaas | SystemKind::VpaasNoHitl => {
                         unreachable!("vpaas runs through the sharded scheduler")
@@ -502,7 +488,7 @@ impl Harness {
     }
 }
 
-/// Mutable state of one sharded VPaaS run, bundled so the per-chunk step
+/// Mutable state of one sharded VPaaS run, bundled so the per-wave step
 /// can borrow the pieces disjointly.
 struct VpaasRun {
     p: Arc<SimParams>,
@@ -515,7 +501,6 @@ struct VpaasRun {
     monitor: GlobalMonitor,
     metrics: RunMetrics,
     global_chunk: u64,
-    last_updates: u64,
 }
 
 #[cfg(test)]

@@ -1,37 +1,24 @@
-//! The cloud-fog coordinator: the per-chunk High-and-Low streaming state
-//! machine (Fig. 6), plus the HITL hook (Fig. 8) and the outage fallback
-//! (Fig. 15).
+//! Cloud-fog pipeline state: protocol configuration, the global
+//! incremental learner, and per-camera HITL sessions.
 //!
-//! Per chunk:
-//! 1. client → fog over the LAN (high quality; negligible cost, co-located)
-//! 2. fog re-encodes to LOW and ships to the cloud over the WAN
-//! 3. cloud runs the heavy detector on the LOW stream
-//! 4. confident boxes become final labels; filtered uncertain-region
-//!    *coordinates* go back to the fog (bytes, not pixels)
-//! 5. fog crops its cached high-quality frames and classifies the crops
-//!    under dynamic batching
-//! 6. a budgeted fraction of crops gets human labels; full batches trigger
-//!    the Eq. (8) auto-trainer which swaps the fog classifier's last layer
-//!
-//! If the WAN is down at step 2 the fog falls back to its lite detector and
-//! keeps serving (reduced accuracy), exactly Fig. 15.
+//! The per-chunk High-and-Low state machine (Fig. 6) that used to live
+//! here as a 9-argument synchronous function is now the event-driven
+//! [`crate::serverless::executor`]: each protocol step is a discrete
+//! [`Stage`](crate::serverless::executor::Stage) event on a virtual-clock
+//! queue, bound to a registered function in the
+//! [`FunctionRegistry`](crate::serverless::registry::FunctionRegistry).
+//! The [`Coordinator`] is the state the executor drives: thresholds and
+//! qualities ([`ProtocolConfig`]), the Eq. (8)/(9) learner shared by every
+//! camera, and one [`CameraSession`] of HITL label state per camera.
 
-use anyhow::Result;
+use std::collections::BTreeMap;
 
-use crate::cloud::CloudServer;
-use crate::fog::FogNode;
-use crate::hitl::{DataCollector, IncrementalLearner};
+use crate::hitl::{CameraSession, IncrementalLearner};
 use crate::metrics::f1::PredBox;
-use crate::metrics::meters::RunMetrics;
-use crate::protocol::post::regions_from_heads;
-use crate::protocol::{split_regions, ProtocolConfig};
-use crate::sim::human::Annotator;
-use crate::sim::net::Topology;
-use crate::sim::params::SimParams;
-use crate::sim::video::codec;
-use crate::sim::video::{render_frame, render_region_crop, Chunk, Quality};
+use crate::protocol::ProtocolConfig;
 
-/// Result of coordinating one chunk.
+/// Result of coordinating one chunk (every system produces this shape so
+/// pipelines can score uniformly).
 #[derive(Debug, Clone)]
 pub struct ChunkOutcome {
     /// Final labels per keyframe.
@@ -42,11 +29,14 @@ pub struct ChunkOutcome {
     pub fallback_used: bool,
 }
 
-/// The VPaaS coordinator with its HITL state.
+/// The VPaaS pipeline state the executor drives.
 pub struct Coordinator {
     pub cfg: ProtocolConfig,
-    pub collector: DataCollector,
+    /// The global incremental learner — one classifier shared by every
+    /// camera (its last layer fans out to all fog shards on update).
     pub learner: IncrementalLearner,
+    /// Per-camera HITL sessions; a training batch never mixes cameras.
+    sessions: BTreeMap<usize, CameraSession>,
     /// Enable the HITL loop (Fig. 13 ablates this).
     pub hitl_enabled: bool,
     /// Train on the cloud GPU co-located with inference (Fig. 13b).
@@ -60,210 +50,43 @@ impl Coordinator {
     pub fn new(cfg: ProtocolConfig, learner: IncrementalLearner) -> Self {
         Coordinator {
             cfg,
-            collector: DataCollector::new(learner_batch_trigger()),
             learner,
+            sessions: BTreeMap::new(),
             hitl_enabled: true,
             colocate_training: true,
             use_ensemble: true,
         }
     }
 
-    /// Process one chunk end to end. `t_offset` shifts the video's local
-    /// capture clock into the global run timeline; `phi` is the drift angle.
-    #[allow(clippy::too_many_arguments)]
-    pub fn process_chunk(
-        &mut self,
-        chunk: &Chunk,
-        phi: f64,
-        t_offset: f64,
-        p: &SimParams,
-        topo: &mut Topology,
-        cloud: &mut CloudServer,
-        fog: &mut FogNode,
-        annotator: &mut Annotator,
-        metrics: &mut RunMetrics,
-    ) -> Result<ChunkOutcome> {
-        let n = chunk.frames.len();
-        let captured = t_offset + chunk.t_capture + chunk.duration();
-
-        // 1. client → fog LAN (high quality). Co-located: cheap, not WAN.
-        let hi_bytes = n as f64 * codec::frame_bytes(Quality::ORIGINAL, p);
-        let at_fog = topo
-            .lan
-            .transfer(hi_bytes, captured)
-            .expect("LAN has no outage schedule");
-
-        // 2. fog quality control: re-encode to LOW.
-        let qc_done = fog.quality_control(n, at_fog);
-
-        // 3. ship LOW stream to the cloud.
-        let low_bytes = n as f64 * codec::frame_bytes(self.cfg.low_quality, p);
-        let at_cloud = match topo.wan_up.transfer(low_bytes, qc_done) {
-            Ok(t) => t,
-            Err(down) => {
-                // Fallback: fog lite detector on the cached high stream.
-                return self.process_chunk_fog_only(chunk, phi, t_offset, p, fog, metrics, down.detected_at);
-            }
-        };
-        metrics.bandwidth.add(low_bytes);
-
-        // 4. cloud detection on the LOW stream.
-        let low_frames: Vec<_> = chunk
-            .frames
-            .iter()
-            .map(|f| render_frame(f, self.cfg.low_quality, phi, p))
-            .collect();
-        let (heads, det_timing) = cloud.detect_chunk(&low_frames, at_cloud, "detector")?;
-
-        // 5. split into confident labels + uncertain region coordinates.
-        let mut per_frame: Vec<Vec<PredBox>> = Vec::with_capacity(n);
-        let mut uncertain_per_frame: Vec<Vec<PredBox>> = Vec::with_capacity(n);
-        let mut total_regions = 0usize;
-        for h in &heads {
-            let regions = regions_from_heads(&h.as_heads(), self.cfg.filter.theta_loc);
-            let (confident, uncertain) =
-                split_regions(&regions, self.cfg.theta_cls, &self.cfg.filter, p.grid);
-            total_regions += confident.len() + uncertain.len();
-            per_frame.push(confident);
-            uncertain_per_frame.push(uncertain);
-        }
-
-        // 6. coordinates (bytes) back to the fog.
-        let fb_bytes = codec::feedback_bytes(total_regions);
-        let at_fog_again = match topo.wan_down.transfer(fb_bytes, det_timing.done) {
-            Ok(t) => t,
-            Err(down) => {
-                return self.process_chunk_fog_only(chunk, phi, t_offset, p, fog, metrics, down.detected_at);
-            }
-        };
-        metrics.bandwidth.add(fb_bytes);
-
-        // 7. fog crops the cached HIGH-quality frames and classifies.
-        let mut crops = Vec::new();
-        let mut crop_ref = Vec::new(); // (frame idx, region)
-        for (fi, regions) in uncertain_per_frame.iter().enumerate() {
-            for r in regions {
-                crops.push(render_region_crop(
-                    &chunk.frames[fi],
-                    &r.rect,
-                    self.cfg.crop_quality,
-                    phi,
-                    p,
-                ));
-                crop_ref.push((fi, *r));
-            }
-        }
-        let (results, feats, cls_done) = fog.classify_crops(&crops, at_fog_again)?;
-        metrics.fog_regions += crops.len() as u64;
-
-        for (((fi, region), res), f) in crop_ref.iter().zip(&results).zip(&feats) {
-            if res.prob >= self.cfg.theta_fog {
-                per_frame[*fi].push(PredBox {
-                    rect: region.rect,
-                    class: res.class,
-                    cls_conf: res.prob,
-                    loc_conf: region.loc_conf,
-                });
-            } else if self.use_ensemble {
-                // Eq. (9): the snapshot ensemble votes on borderline crops.
-                if let Some((class, score)) = self.learner.ensemble_classify(f) {
-                    if score > 0.0 {
-                        per_frame[*fi].push(PredBox {
-                            rect: region.rect,
-                            class,
-                            cls_conf: self.cfg.theta_fog, // borderline accept
-                            loc_conf: region.loc_conf,
-                        });
-                    }
-                }
-            }
-        }
-
-        // 8. HITL: offer crops to the annotator, train on full batches.
-        if self.hitl_enabled {
-            for ((fi, region), f) in crop_ref.iter().zip(&feats) {
-                // the human looks at the crop; their label is the dominant
-                // true object under the region (skip pure-background crops)
-                let truth = &chunk.frames[*fi];
-                let gt = truth
-                    .objects
-                    .iter()
-                    .map(|o| (o, region.rect.iou(&o.gt)))
-                    .filter(|(_, iou)| *iou >= 0.2)
-                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-                if let Some((obj, _)) = gt {
-                    if let Some(label) = annotator.offer(obj.gt.class) {
-                        metrics.labels_used += 1;
-                        self.collector.submit(f.clone(), label.class);
-                    }
-                }
-            }
-            while let Some(batch) = self.collector.take_batch() {
-                self.learner.update(&batch)?;
-                fog.set_last_layer(self.learner.w_last.clone());
-                if self.colocate_training {
-                    cloud.train_burst(cls_done, 1);
-                }
-            }
-        }
-
-        let done = cls_done.max(det_timing.done);
-        for (i, _) in chunk.frames.iter().enumerate() {
-            metrics
-                .latency
-                .record(done - (t_offset + chunk.frame_time(i)));
-        }
-        metrics.chunks += 1;
-
-        Ok(ChunkOutcome {
-            per_frame,
-            done,
-            uncertain_regions: crops.len() as u64,
-            fallback_used: false,
-        })
+    /// This camera's HITL session, created on first use.
+    pub fn session_mut(&mut self, camera: usize) -> &mut CameraSession {
+        self.sessions.entry(camera).or_insert_with(|| CameraSession::new(camera))
     }
 
-    /// Serve a chunk entirely at the fog with the lite detector — used when
-    /// the cloud is unreachable (Fig. 15) or a policy routes to the fog.
-    #[allow(clippy::too_many_arguments)]
-    pub fn process_chunk_fog_only(
-        &mut self,
-        chunk: &Chunk,
-        phi: f64,
-        t_offset: f64,
-        p: &SimParams,
-        fog: &mut FogNode,
-        metrics: &mut RunMetrics,
-        detected_at: f64,
-    ) -> Result<ChunkOutcome> {
-        let hi_frames: Vec<_> = chunk
-            .frames
-            .iter()
-            .map(|f| render_frame(f, Quality::ORIGINAL, phi, p))
-            .collect();
-        let (heads, done) = fog.fallback_detect(&hi_frames, detected_at, p.grid)?;
-        let mut per_frame = Vec::with_capacity(heads.len());
-        for h in &heads {
-            let regions = regions_from_heads(&h.as_heads(), self.cfg.filter.theta_loc);
-            // single-stage fallback: take argmax labels directly
-            per_frame.push(regions);
-        }
-        for (i, _) in chunk.frames.iter().enumerate() {
-            metrics
-                .latency
-                .record(done - (t_offset + chunk.frame_time(i)));
-        }
-        metrics.chunks += 1;
-        Ok(ChunkOutcome {
-            per_frame,
-            done,
-            uncertain_regions: 0,
-            fallback_used: true,
-        })
+    /// All sessions created so far, in camera order.
+    pub fn sessions(&self) -> impl Iterator<Item = &CameraSession> {
+        self.sessions.values()
     }
 }
 
-fn learner_batch_trigger() -> usize {
-    // The paper trains with batch size 4 (§VI-C "HITL Overhead").
-    4
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::InferenceService;
+    use crate::sim::params::SimParams;
+
+    #[test]
+    fn sessions_are_created_per_camera_and_learner_is_shared() {
+        let svc = InferenceService::start().unwrap();
+        let p = SimParams::load().unwrap();
+        let learner =
+            IncrementalLearner::new(svc.handle(), p.cls_last0.clone(), p.il_batch, p.num_classes);
+        let mut c = Coordinator::new(ProtocolConfig::default(), learner);
+        c.session_mut(3).submit(vec![0.0; p.cls_feat], 0);
+        c.session_mut(7).submit(vec![1.0; p.cls_feat], 1);
+        assert_eq!(c.sessions().count(), 2);
+        assert_eq!(c.session_mut(3).pending(), 1);
+        assert_eq!(c.session_mut(7).pending(), 1);
+        assert_eq!(c.learner.updates, 0);
+    }
 }

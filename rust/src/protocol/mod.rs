@@ -5,8 +5,9 @@
 //!   (connected components over location-confident anchors).
 //! * [`filter`] — split regions into *confident* boxes (final labels) and
 //!   *uncertain* regions forwarded to the fog (θ_loc / θ_iou / θ_back).
-//! * [`coordinator`] — the per-chunk cloud-fog state machine gluing the
-//!   two ends together over the network model.
+//! * [`coordinator`] — the pipeline state the event-driven executor
+//!   ([`crate::serverless::executor`]) drives: protocol thresholds, the
+//!   global incremental learner, and per-camera HITL sessions.
 
 pub mod coordinator;
 pub mod filter;

@@ -9,9 +9,12 @@
 //! client.run(cloud_service, fog_service)
 //! ```
 //!
-//! `VideoApp` wires the zoo, dispatcher, policy manager and coordinator
-//! into one object; `examples/retail_store.rs` walks the same start-to-
-//! finish flow the paper's usability case study describes.
+//! `VideoApp` wires the zoo, dispatcher, policy manager and the
+//! event-driven executor into one object. Its per-chunk entry point builds
+//! the executor from the app's own [`FunctionRegistry`] on every call, so
+//! functions registered or overridden through [`VideoApp::functions`] are
+//! what actually runs — `examples/retail_store.rs` walks the same
+//! start-to-finish flow the paper's usability case study describes.
 
 use anyhow::{anyhow, Result};
 
@@ -23,8 +26,9 @@ use crate::protocol::coordinator::{ChunkOutcome, Coordinator};
 use crate::protocol::ProtocolConfig;
 use crate::runtime::{InferenceHandle, InferenceService};
 use crate::serverless::dispatcher::Dispatcher;
+use crate::serverless::executor::{ChunkJob, DispatchMode, Executor, StageCtx};
 use crate::serverless::monitor::GlobalMonitor;
-use crate::serverless::policy::{PolicyInput, PolicyManager, Route};
+use crate::serverless::policy::{PolicyInput, PolicyManager};
 use crate::serverless::registry::FunctionRegistry;
 use crate::sim::human::{Annotator, AnnotatorConfig};
 use crate::sim::net::Topology;
@@ -37,6 +41,8 @@ use crate::zoo::ModelZoo;
 pub struct VideoApp {
     pub params: std::sync::Arc<SimParams>,
     pub zoo: ModelZoo,
+    /// Registered functions — the executable unit of deployment. Rebinding
+    /// an entry (e.g. `detect`) changes what the next chunk runs.
     pub functions: FunctionRegistry,
     pub policies: PolicyManager,
     pub monitor: GlobalMonitor,
@@ -63,6 +69,8 @@ impl VideoApp {
         };
         let wan = cfg.f64_or("net", "wan_mbps", 15.0)?;
         let budget = cfg.f64_or("hitl", "budget", 0.2)?;
+        // one deployment seed drives every RNG stream (links, annotator)
+        let seed = cfg.usize_or("app", "seed", 0xA99)? as u64;
         let policy_name = cfg.str_or("app", "policy", "fog_when_disconnected").to_string();
         let handle = svc.handle();
         let learner = IncrementalLearner::new(
@@ -84,6 +92,7 @@ impl VideoApp {
         let annotator = Annotator::new(AnnotatorConfig {
             budget_frac: budget,
             num_classes: params.num_classes,
+            seed: seed ^ 0x5EED,
             ..Default::default()
         });
         let policies = PolicyManager::with_standard_policies();
@@ -99,7 +108,7 @@ impl VideoApp {
             coordinator,
             cloud,
             fog,
-            topo: Topology::new(wan, 0xA99),
+            topo: Topology::new(wan, seed),
             annotator,
             policy_name,
             chunks_processed: 0,
@@ -125,43 +134,41 @@ impl VideoApp {
         self.topo.cloud_outage(start, end);
     }
 
-    /// Process one chunk under the configured policy.
+    /// Process one chunk under the configured policy, through the
+    /// event-driven executor built from this app's function registry.
     pub fn process_chunk(&mut self, chunk: &Chunk, t_offset: f64) -> Result<ChunkOutcome> {
+        let executor = Executor::from_registry(&self.functions, DispatchMode::EventDriven)?;
         let p = self.params.clone();
-        let phi = p.drift_phi(chunk.chunk_idx as f64);
+        // environmental-time drift: the world drifts over the deployment's
+        // whole stream, not per camera — use the global chunk counter
+        let phi = p.drift_phi(self.chunks_processed as f64);
         let policy = self.policies.get(&self.policy_name)?;
         let arrival = t_offset + chunk.t_capture + chunk.duration();
         let input = PolicyInput {
             wan_wait_s: 0.0,
             wan_up: !self.topo.wan_up.is_down(arrival),
             cloud_wait_s: self.cloud.queue_wait(),
-            fog_backlog_s: 0.0,
+            // report the real fog backlog, like the sharded scheduler does
+            fog_backlog_s: self.fog.backlog_s(arrival),
         };
-        let outcome = match policy(input) {
-            Route::Cloud => self.coordinator.process_chunk(
-                chunk,
-                phi,
-                t_offset,
-                &p,
-                &mut self.topo,
-                &mut self.cloud,
-                &mut self.fog,
-                &mut self.annotator,
-                &mut self.metrics,
-            )?,
-            Route::Fog => self.coordinator.process_chunk_fog_only(
-                chunk,
-                phi,
-                t_offset,
-                &p,
-                &mut self.fog,
-                &mut self.metrics,
-                arrival,
-            )?,
+        let mut job = ChunkJob::new(chunk.clone(), phi, t_offset);
+        job.route = policy(input);
+        let (_, outcome) = {
+            let mut ctx = StageCtx {
+                p: p.as_ref(),
+                coord: &mut self.coordinator,
+                topo: &mut self.topo,
+                cloud: &mut self.cloud,
+                fogs: std::slice::from_mut(&mut self.fog),
+                annotator: &mut self.annotator,
+                metrics: &mut self.metrics,
+            };
+            executor.run_chunk(job, &mut ctx)?
         };
         self.chunks_processed += 1;
         self.monitor.count("chunks", 1);
         self.monitor.gauge("gpus", outcome.done, self.cloud.gpus() as f64);
+        self.monitor.gauge("fog_backlog_s", outcome.done, self.fog.backlog_s(outcome.done));
         self.monitor
             .latency("freshness", outcome.done - arrival + chunk.duration());
         Ok(outcome)
@@ -175,7 +182,9 @@ impl VideoApp {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serverless::registry::StageBody;
     use crate::sim::video::{Video, scene::SceneConfig};
+    use std::sync::Arc;
 
     fn app() -> VideoApp {
         let cfg = Config::parse("[app]\npolicy = fog_when_disconnected\n[hitl]\nbudget = 0.3\n").unwrap();
@@ -227,5 +236,53 @@ mod tests {
     fn bad_policy_in_config_is_rejected() {
         let cfg = Config::parse("[app]\npolicy = nonexistent\n").unwrap();
         assert!(VideoApp::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn config_seed_is_plumbed_and_reproducible() {
+        let run = |seed: &str| {
+            let cfg = Config::parse(&format!(
+                "[app]\npolicy = fog_when_disconnected\nseed = {seed}\n[hitl]\nbudget = 0.5\n"
+            ))
+            .unwrap();
+            let mut app = VideoApp::from_config(&cfg).unwrap();
+            app.deploy_standard().unwrap();
+            let mut v = video(&app.params.clone());
+            while let Some(chunk) = v.next_chunk() {
+                app.process_chunk(&chunk, 0.0).unwrap();
+            }
+            (app.metrics.labels_used, app.metrics.latency.summary().mean.to_bits())
+        };
+        assert_eq!(run("7"), run("7"), "same seed must reproduce bit-exactly");
+        // a different seed draws different link jitter (and an independent
+        // annotator stream), so the timing fingerprint must move
+        assert_ne!(run("7").1, run("8").1, "config seed is not reaching the RNG streams");
+    }
+
+    #[test]
+    fn overriding_a_registered_function_changes_what_runs() {
+        let mut a = app();
+        let hits = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let seen = hits.clone();
+        a.functions
+            .bind(
+                "draw_boxes",
+                StageBody::Post(Arc::new(
+                    move |_fi: usize, boxes: &mut Vec<crate::metrics::f1::PredBox>| {
+                        seen.fetch_add(boxes.len() as u64, std::sync::atomic::Ordering::Relaxed);
+                    },
+                )),
+            )
+            .unwrap();
+        let mut v = video(&a.params.clone());
+        let chunk = v.next_chunk().unwrap();
+        let out = a.process_chunk(&chunk, 0.0).unwrap();
+        let labels: u64 = out.per_frame.iter().map(|f| f.len() as u64).sum();
+        assert!(labels > 0);
+        assert_eq!(
+            hits.load(std::sync::atomic::Ordering::Relaxed),
+            labels,
+            "the bound post function must see every final box"
+        );
     }
 }

@@ -1,0 +1,698 @@
+//! Event-driven pipeline executor: the Fig. 6 High-and-Low protocol as
+//! discrete [`Stage`] events on a virtual-clock event queue, with each
+//! stage bound to a registered function in the [`FunctionRegistry`].
+//!
+//! ## Why events
+//!
+//! The seed system drove each chunk through a synchronous per-chunk state
+//! machine: chunk *k*'s WAN uplink, cloud detection and fog classification
+//! all completed (in code order) before chunk *k+1* touched any resource.
+//! Virtual-time resource horizons hid most of that serialization, but the
+//! *acquisition order* was still code order: a chunk whose upload finished
+//! early still queued behind an earlier-coded chunk on the cloud GPU. The
+//! executor instead pops the globally earliest stage event, so within a
+//! dispatch wave chunk *k+1*'s WAN uplink overlaps chunk *k*'s GPU phase
+//! and shared resources serve requests in virtual-arrival order —
+//! measurably shrinking multi-camera makespan (see `BENCH_overlap.json`
+//! from `cargo bench --bench fig16_scalability`).
+//! [`DispatchMode::Sequential`] preserves the old one-chunk-at-a-time
+//! acquisition order for comparison; both modes compute identical labels.
+//!
+//! ## Functions are the unit of execution
+//!
+//! Each executable stage resolves its body from the registry at
+//! construction: `reencode_low` (uplink quality), `detect` (cloud
+//! detector), `classify_crops` (fog classifier), `il_update` (Eq. 8
+//! trainer), plus every bound `PostProcess` function in name order.
+//! Overriding a function with [`FunctionRegistry::bind`] changes what the
+//! pipeline runs — see `examples/quickstart.rs`.
+//!
+//! ## Determinism
+//!
+//! Event order is (time, push-sequence); all content-bearing decisions
+//! (what is detected, classified, labeled, trained) happen either in pure
+//! stages or in wave-input order at the wave barrier, so runs are
+//! bit-reproducible per seed and label content is invariant to shard
+//! count and dispatch mode.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::Result;
+
+use crate::cloud::CloudServer;
+use crate::fog::FogNode;
+use crate::metrics::f1::PredBox;
+use crate::metrics::meters::RunMetrics;
+use crate::protocol::coordinator::{ChunkOutcome, Coordinator};
+use crate::protocol::post::regions_from_heads;
+use crate::protocol::split_regions;
+use crate::serverless::policy::Route;
+use crate::serverless::registry::{
+    ClassifyFn, DetectFn, EncodeFn, FunctionRegistry, PostFn, StageBody, TrainFn,
+};
+use crate::sim::human::Annotator;
+use crate::sim::net::{Link, Topology};
+use crate::sim::params::SimParams;
+use crate::sim::video::codec;
+use crate::sim::video::{render_frame, render_region_crop, Chunk, Quality};
+
+/// One step of the Fig. 6 protocol, as an event on the virtual clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Client → fog over the (per-shard) LAN, high quality.
+    ClientUplink,
+    /// Fog re-encode; the `reencode_low` function picks the uplink quality.
+    QualityControl,
+    /// Fog → cloud WAN transfer of the low stream.
+    WanUplink,
+    /// The `detect` function on the cloud GPU pool.
+    CloudDetect,
+    /// Uncertain-region *coordinates* (bytes, not pixels) back to the fog.
+    Downlink,
+    /// The `classify_crops` function on the routed fog shard, plus the
+    /// Eq. (9) ensemble second opinion.
+    FogClassify,
+    /// Fog lite-detector fallback (WAN outage or a fog-routed chunk).
+    FogFallback,
+}
+
+/// How stage events are interleaved across the chunks of a wave.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchMode {
+    /// Pop the globally earliest event: WAN and GPU phases of different
+    /// chunks overlap and resources serve in virtual-arrival order.
+    #[default]
+    EventDriven,
+    /// Drain each chunk's events before starting the next (the seed
+    /// system's per-chunk state machine), for A/B comparison.
+    Sequential,
+}
+
+/// One chunk's dispatch ticket through the executor.
+#[derive(Debug, Clone)]
+pub struct ChunkJob {
+    pub chunk: Chunk,
+    /// Drift angle for this chunk's renders.
+    pub phi: f64,
+    /// Shift of the video's local capture clock into the run timeline.
+    pub t_offset: f64,
+    /// Wave dispatch time (never before the chunk finishes capturing).
+    pub dispatch_at: f64,
+    /// Fog shard serving this chunk.
+    pub shard: usize,
+    /// Cloud protocol vs fog-only, as decided by the deployment policy.
+    pub route: Route,
+}
+
+impl ChunkJob {
+    pub fn new(chunk: Chunk, phi: f64, t_offset: f64) -> Self {
+        let dispatch_at = t_offset + chunk.t_capture + chunk.duration();
+        ChunkJob { chunk, phi, t_offset, dispatch_at, shard: 0, route: Route::Cloud }
+    }
+
+    /// Virtual time at which the chunk's last frame is captured.
+    pub fn captured(&self) -> f64 {
+        self.t_offset + self.chunk.t_capture + self.chunk.duration()
+    }
+
+    /// The camera this chunk belongs to (keys the HITL session).
+    pub fn camera(&self) -> usize {
+        self.chunk.video_id
+    }
+}
+
+/// Borrows of everything a stage may touch — the context-struct API that
+/// replaces the old 9-argument `process_chunk` signature.
+pub struct StageCtx<'a> {
+    pub p: &'a SimParams,
+    /// Protocol thresholds, global learner, per-camera HITL sessions.
+    pub coord: &'a mut Coordinator,
+    pub topo: &'a mut Topology,
+    pub cloud: &'a mut CloudServer,
+    /// The fog shard pool (a single-fog deployment passes a 1-slice).
+    pub fogs: &'a mut [FogNode],
+    pub annotator: &'a mut Annotator,
+    pub metrics: &'a mut RunMetrics,
+}
+
+/// Per-job runtime state while its events are in flight.
+struct JobState {
+    job: ChunkJob,
+    /// Uplink quality chosen by the `reencode_low` function.
+    quality: Quality,
+    det_done: f64,
+    /// WAN payload this chunk moved; accumulated into the run meter at the
+    /// wave barrier so the float sum's order is event-schedule invariant.
+    wan_bytes: f64,
+    total_regions: usize,
+    per_frame: Vec<Vec<PredBox>>,
+    uncertain: Vec<Vec<PredBox>>,
+    crop_refs: Vec<(usize, PredBox)>,
+    feats: Vec<Vec<f32>>,
+    cls_done: f64,
+    done: f64,
+    fallback: bool,
+}
+
+impl JobState {
+    fn new(job: ChunkJob) -> Self {
+        JobState {
+            quality: Quality::LOW,
+            job,
+            det_done: 0.0,
+            wan_bytes: 0.0,
+            total_regions: 0,
+            per_frame: Vec::new(),
+            uncertain: Vec::new(),
+            crop_refs: Vec::new(),
+            feats: Vec::new(),
+            cls_done: 0.0,
+            done: 0.0,
+            fallback: false,
+        }
+    }
+
+    fn into_pair(self) -> (ChunkJob, ChunkOutcome) {
+        let outcome = ChunkOutcome {
+            uncertain_regions: self.crop_refs.len() as u64,
+            per_frame: self.per_frame,
+            done: self.done,
+            fallback_used: self.fallback,
+        };
+        (self.job, outcome)
+    }
+}
+
+/// A queued stage event; ordered by (time, push sequence) so equal-time
+/// events resolve in deterministic push order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Event {
+    t: f64,
+    seq: u64,
+    job: usize,
+    stage: Stage,
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// The event-driven pipeline executor: stage bodies resolved from a
+/// [`FunctionRegistry`] plus a dispatch mode.
+pub struct Executor {
+    encode: EncodeFn,
+    detect: DetectFn,
+    classify: ClassifyFn,
+    train: TrainFn,
+    /// Every bound PostProcess function, applied in registry (name) order.
+    post: Vec<PostFn>,
+    pub mode: DispatchMode,
+}
+
+impl Executor {
+    /// Resolve the Fig. 6 stage bindings from a registry. Fails with a
+    /// named error if a core stage has no executable body.
+    pub fn from_registry(reg: &FunctionRegistry, mode: DispatchMode) -> Result<Self> {
+        fn want<'r, T>(
+            reg: &'r FunctionRegistry,
+            name: &str,
+            pick: impl Fn(&'r StageBody) -> Option<&'r T>,
+        ) -> Result<&'r T> {
+            match reg.body(name) {
+                Some(body) => pick(body).ok_or_else(|| {
+                    anyhow::anyhow!("function {name:?} is bound to an incompatible body shape")
+                }),
+                None => anyhow::bail!(
+                    "function {name:?} has no executable body; bind one with \
+                     FunctionRegistry::bind (or start from with_standard_functions)"
+                ),
+            }
+        }
+        let encode = want(reg, "reencode_low", |b| match b {
+            StageBody::Encode(f) => Some(f),
+            _ => None,
+        })?
+        .clone();
+        let detect = want(reg, "detect", |b| match b {
+            StageBody::Detect(f) => Some(f),
+            _ => None,
+        })?
+        .clone();
+        let classify = want(reg, "classify_crops", |b| match b {
+            StageBody::Classify(f) => Some(f),
+            _ => None,
+        })?
+        .clone();
+        let train = want(reg, "il_update", |b| match b {
+            StageBody::Train(f) => Some(f),
+            _ => None,
+        })?
+        .clone();
+        let post: Vec<PostFn> = reg
+            .entries()
+            .filter_map(|e| match &e.body {
+                Some(StageBody::Post(f)) => Some(f.clone()),
+                _ => None,
+            })
+            .collect();
+        Ok(Executor { encode, detect, classify, train, post, mode })
+    }
+
+    /// Drive one dispatch wave of chunks end to end. Events interleave
+    /// according to [`DispatchMode`]; HITL collection/training then runs at
+    /// the wave barrier in wave-input order (labels are asynchronous and
+    /// never block the serving path), so label content is identical in both
+    /// modes. Returns each job with its outcome, in input order.
+    pub fn run_wave(
+        &self,
+        jobs: Vec<ChunkJob>,
+        ctx: &mut StageCtx,
+    ) -> Result<Vec<(ChunkJob, ChunkOutcome)>> {
+        let mut states: Vec<JobState> = jobs.into_iter().map(JobState::new).collect();
+        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        match self.mode {
+            DispatchMode::EventDriven => {
+                for (i, s) in states.iter().enumerate() {
+                    let t0 = s.job.dispatch_at.max(s.job.captured());
+                    heap.push(Reverse(Event { t: t0, seq, job: i, stage: Stage::ClientUplink }));
+                    seq += 1;
+                }
+                self.drain(&mut heap, &mut seq, &mut states, ctx)?;
+            }
+            DispatchMode::Sequential => {
+                for i in 0..states.len() {
+                    let t0 = states[i].job.dispatch_at.max(states[i].job.captured());
+                    heap.push(Reverse(Event { t: t0, seq, job: i, stage: Stage::ClientUplink }));
+                    seq += 1;
+                    self.drain(&mut heap, &mut seq, &mut states, ctx)?;
+                }
+            }
+        }
+        self.finish_wave(&mut states, ctx)?;
+        Ok(states.into_iter().map(JobState::into_pair).collect())
+    }
+
+    /// Convenience: one chunk as its own wave.
+    pub fn run_chunk(
+        &self,
+        job: ChunkJob,
+        ctx: &mut StageCtx,
+    ) -> Result<(ChunkJob, ChunkOutcome)> {
+        let mut out = self.run_wave(vec![job], ctx)?;
+        Ok(out.pop().expect("one job in, one outcome out"))
+    }
+
+    fn drain(
+        &self,
+        heap: &mut BinaryHeap<Reverse<Event>>,
+        seq: &mut u64,
+        states: &mut [JobState],
+        ctx: &mut StageCtx,
+    ) -> Result<()> {
+        while let Some(Reverse(ev)) = heap.pop() {
+            if let Some((t, stage)) = self.step(ev, states, ctx)? {
+                heap.push(Reverse(Event { t, seq: *seq, job: ev.job, stage }));
+                *seq += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one stage event; returns the job's next event, if any.
+    fn step(
+        &self,
+        ev: Event,
+        states: &mut [JobState],
+        ctx: &mut StageCtx,
+    ) -> Result<Option<(f64, Stage)>> {
+        let s = &mut states[ev.job];
+        let n = s.job.chunk.frames.len();
+        match ev.stage {
+            Stage::ClientUplink => {
+                let hi_bytes = n as f64 * codec::frame_bytes(Quality::ORIGINAL, ctx.p);
+                let at_fog = shard_lan(ctx.topo, s.job.shard)
+                    .transfer(hi_bytes, ev.t)
+                    .expect("LAN has no outage schedule");
+                Ok(Some((at_fog, Stage::QualityControl)))
+            }
+            Stage::QualityControl => {
+                let qc_done = ctx.fogs[s.job.shard].quality_control(n, ev.t);
+                s.quality = (self.encode)(&ctx.coord.cfg);
+                match s.job.route {
+                    Route::Cloud => Ok(Some((qc_done, Stage::WanUplink))),
+                    Route::Fog => Ok(Some((qc_done, Stage::FogFallback))),
+                }
+            }
+            Stage::WanUplink => {
+                let low_bytes = n as f64 * codec::frame_bytes(s.quality, ctx.p);
+                match ctx.topo.wan_up.transfer(low_bytes, ev.t) {
+                    Ok(at_cloud) => {
+                        s.wan_bytes += low_bytes;
+                        Ok(Some((at_cloud, Stage::CloudDetect)))
+                    }
+                    Err(down) => Ok(Some((down.detected_at, Stage::FogFallback))),
+                }
+            }
+            Stage::CloudDetect => {
+                let frames: Vec<_> = s
+                    .job
+                    .chunk
+                    .frames
+                    .iter()
+                    .map(|f| render_frame(f, s.quality, s.job.phi, ctx.p))
+                    .collect();
+                let (heads, timing) = (self.detect)(ctx.cloud, &frames, ev.t)?;
+                let mut per_frame: Vec<Vec<PredBox>> = Vec::with_capacity(n);
+                let mut uncertain: Vec<Vec<PredBox>> = Vec::with_capacity(n);
+                let mut total = 0usize;
+                let cfg = &ctx.coord.cfg;
+                for h in &heads {
+                    let regions = regions_from_heads(&h.as_heads(), cfg.filter.theta_loc);
+                    let (confident, unc) =
+                        split_regions(&regions, cfg.theta_cls, &cfg.filter, ctx.p.grid);
+                    total += confident.len() + unc.len();
+                    per_frame.push(confident);
+                    uncertain.push(unc);
+                }
+                s.per_frame = per_frame;
+                s.uncertain = uncertain;
+                s.total_regions = total;
+                s.det_done = timing.done;
+                Ok(Some((timing.done, Stage::Downlink)))
+            }
+            Stage::Downlink => {
+                let fb_bytes = codec::feedback_bytes(s.total_regions);
+                match ctx.topo.wan_down.transfer(fb_bytes, ev.t) {
+                    Ok(at_fog) => {
+                        s.wan_bytes += fb_bytes;
+                        Ok(Some((at_fog, Stage::FogClassify)))
+                    }
+                    Err(down) => {
+                        // the cloud round is lost; serve the chunk from the
+                        // fog's cached high stream instead
+                        s.per_frame.clear();
+                        s.uncertain.clear();
+                        Ok(Some((down.detected_at, Stage::FogFallback)))
+                    }
+                }
+            }
+            Stage::FogClassify => {
+                let cfg = ctx.coord.cfg;
+                let mut crops = Vec::new();
+                let mut crop_refs: Vec<(usize, PredBox)> = Vec::new();
+                for (fi, regions) in s.uncertain.iter().enumerate() {
+                    for r in regions {
+                        crops.push(render_region_crop(
+                            &s.job.chunk.frames[fi],
+                            &r.rect,
+                            cfg.crop_quality,
+                            s.job.phi,
+                            ctx.p,
+                        ));
+                        crop_refs.push((fi, *r));
+                    }
+                }
+                let (results, feats, cls_done) =
+                    (self.classify)(&mut ctx.fogs[s.job.shard], &crops, ev.t)?;
+                ctx.metrics.fog_regions += crops.len() as u64;
+                let use_ensemble = ctx.coord.use_ensemble;
+                for (((fi, region), res), f) in crop_refs.iter().zip(&results).zip(&feats) {
+                    if res.prob >= cfg.theta_fog {
+                        s.per_frame[*fi].push(PredBox {
+                            rect: region.rect,
+                            class: res.class,
+                            cls_conf: res.prob,
+                            loc_conf: region.loc_conf,
+                        });
+                    } else if use_ensemble {
+                        // Eq. (9): the snapshot ensemble votes on borderline
+                        // crops
+                        if let Some((class, score)) = ctx.coord.learner.ensemble_classify(f) {
+                            if score > 0.0 {
+                                s.per_frame[*fi].push(PredBox {
+                                    rect: region.rect,
+                                    class,
+                                    cls_conf: cfg.theta_fog, // borderline accept
+                                    loc_conf: region.loc_conf,
+                                });
+                            }
+                        }
+                    }
+                }
+                s.crop_refs = crop_refs;
+                s.feats = feats;
+                s.cls_done = cls_done;
+                s.done = cls_done.max(s.det_done);
+                for pf in &self.post {
+                    for (fi, boxes) in s.per_frame.iter_mut().enumerate() {
+                        pf(fi, boxes);
+                    }
+                }
+                Ok(None)
+            }
+            Stage::FogFallback => {
+                let hi_frames: Vec<_> = s
+                    .job
+                    .chunk
+                    .frames
+                    .iter()
+                    .map(|f| render_frame(f, Quality::ORIGINAL, s.job.phi, ctx.p))
+                    .collect();
+                let (heads, done) =
+                    ctx.fogs[s.job.shard].fallback_detect(&hi_frames, ev.t, ctx.p.grid)?;
+                let theta_loc = ctx.coord.cfg.filter.theta_loc;
+                // single-stage fallback: take argmax labels directly
+                s.per_frame =
+                    heads.iter().map(|h| regions_from_heads(&h.as_heads(), theta_loc)).collect();
+                for pf in &self.post {
+                    for (fi, boxes) in s.per_frame.iter_mut().enumerate() {
+                        pf(fi, boxes);
+                    }
+                }
+                s.done = done;
+                s.fallback = true;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Wave barrier, in wave-input (capture) order: offer crops to the
+    /// annotator, buffer labels into the chunk's per-camera session, train
+    /// on full single-camera batches, fan the updated last layer out to
+    /// every fog shard, and record freshness latency.
+    fn finish_wave(&self, states: &mut [JobState], ctx: &mut StageCtx) -> Result<()> {
+        for s in states.iter_mut() {
+            if ctx.coord.hitl_enabled && !s.fallback {
+                for ((fi, region), f) in s.crop_refs.iter().zip(&s.feats) {
+                    // the human looks at the crop; their label is the
+                    // dominant true object under the region (skip
+                    // pure-background crops)
+                    let truth = &s.job.chunk.frames[*fi];
+                    let gt = truth
+                        .objects
+                        .iter()
+                        .map(|o| (o, region.rect.iou(&o.gt)))
+                        .filter(|(_, iou)| *iou >= 0.2)
+                        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                    if let Some((obj, _)) = gt {
+                        if let Some(label) = ctx.annotator.offer(obj.gt.class) {
+                            ctx.metrics.labels_used += 1;
+                            ctx.coord.session_mut(s.job.camera()).submit(f.clone(), label.class);
+                        }
+                    }
+                }
+                let camera = s.job.camera();
+                while let Some(batch) = ctx.coord.session_mut(camera).take_batch() {
+                    let w = (self.train)(&mut ctx.coord.learner, &batch)?;
+                    for fog in ctx.fogs.iter_mut() {
+                        fog.set_last_layer(w.clone());
+                    }
+                    if ctx.coord.colocate_training {
+                        ctx.cloud.train_burst(s.cls_done, 1);
+                    }
+                }
+            }
+            ctx.metrics.bandwidth.add(s.wan_bytes);
+            for i in 0..s.job.chunk.frames.len() {
+                ctx.metrics
+                    .latency
+                    .record(s.done - (s.job.t_offset + s.job.chunk.frame_time(i)));
+            }
+            ctx.metrics.chunks += 1;
+        }
+        Ok(())
+    }
+}
+
+/// The client→fog LAN serving `shard`: its own segment when the topology
+/// is sharded, the deployment LAN otherwise.
+fn shard_lan(topo: &mut Topology, shard: usize) -> &mut Link {
+    if shard < topo.fog_lans.len() {
+        &mut topo.fog_lans[shard]
+    } else {
+        &mut topo.lan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::CloudConfig;
+    use crate::hitl::IncrementalLearner;
+    use crate::protocol::ProtocolConfig;
+    use crate::runtime::InferenceService;
+    use crate::serverless::registry::FunctionKind;
+    use crate::sim::human::AnnotatorConfig;
+    use crate::sim::video::scene::SceneConfig;
+    use crate::sim::video::Video;
+
+    struct Rig {
+        _svc: InferenceService,
+        p: std::sync::Arc<SimParams>,
+        coord: Coordinator,
+        topo: Topology,
+        cloud: CloudServer,
+        fog: FogNode,
+        annotator: Annotator,
+        metrics: RunMetrics,
+    }
+
+    impl Rig {
+        fn new() -> Self {
+            let svc = InferenceService::start().unwrap();
+            let p = SimParams::load().unwrap();
+            let h = svc.handle();
+            let learner =
+                IncrementalLearner::new(h.clone(), p.cls_last0.clone(), p.il_batch, p.num_classes);
+            let coord = Coordinator::new(ProtocolConfig::default(), learner);
+            let cloud = CloudServer::new(
+                h.clone(),
+                CloudConfig::default(),
+                p.grid,
+                p.num_classes,
+                p.feat_dim,
+            );
+            let fog = FogNode::new(h, p.cls_last0.clone(), p.feat_dim, p.num_classes);
+            let annotator = Annotator::new(AnnotatorConfig {
+                budget_frac: 0.5,
+                num_classes: p.num_classes,
+                ..AnnotatorConfig::default()
+            });
+            Rig {
+                _svc: svc,
+                p,
+                coord,
+                topo: Topology::new(15.0, 7),
+                cloud,
+                fog,
+                annotator,
+                metrics: RunMetrics::new("vpaas", "test"),
+            }
+        }
+
+        fn ctx(&mut self) -> StageCtx<'_> {
+            StageCtx {
+                p: self.p.as_ref(),
+                coord: &mut self.coord,
+                topo: &mut self.topo,
+                cloud: &mut self.cloud,
+                fogs: std::slice::from_mut(&mut self.fog),
+                annotator: &mut self.annotator,
+                metrics: &mut self.metrics,
+            }
+        }
+    }
+
+    fn chunk(seed: u64) -> Chunk {
+        let p = SimParams::load().unwrap();
+        Video::new(
+            0,
+            SceneConfig {
+                grid: p.grid,
+                num_classes: p.num_classes,
+                density: 3.0,
+                speed: 0.4,
+                size_range: (1.0, 2.0),
+                class_skew: 0.5,
+                seed,
+            },
+            15.0,
+        )
+        .next_chunk()
+        .unwrap()
+    }
+
+    fn executor(mode: DispatchMode) -> Executor {
+        Executor::from_registry(&FunctionRegistry::with_standard_functions(), mode).unwrap()
+    }
+
+    #[test]
+    fn cloud_route_produces_labels_and_advances_the_clock() {
+        let mut rig = Rig::new();
+        let ex = executor(DispatchMode::EventDriven);
+        let job = ChunkJob::new(chunk(5), 0.0, 0.0);
+        let captured = job.captured();
+        let (_, out) = ex.run_chunk(job, &mut rig.ctx()).unwrap();
+        assert!(!out.fallback_used);
+        assert!(out.done > captured);
+        assert!(out.per_frame.iter().map(Vec::len).sum::<usize>() > 0, "no labels");
+        assert_eq!(rig.metrics.chunks, 1);
+        assert!(rig.metrics.bandwidth.bytes > 0.0);
+    }
+
+    #[test]
+    fn fog_route_and_outage_both_fall_back() {
+        let mut rig = Rig::new();
+        rig.topo.cloud_outage(0.0, 1e9);
+        let ex = executor(DispatchMode::EventDriven);
+        let (_, out) = ex.run_chunk(ChunkJob::new(chunk(6), 0.0, 0.0), &mut rig.ctx()).unwrap();
+        assert!(out.fallback_used, "outage must fall back");
+        assert_eq!(rig.metrics.bandwidth.bytes, 0.0);
+
+        let mut rig2 = Rig::new();
+        let mut job = ChunkJob::new(chunk(6), 0.0, 0.0);
+        job.route = Route::Fog;
+        let (_, out2) = ex.run_chunk(job, &mut rig2.ctx()).unwrap();
+        assert!(out2.fallback_used, "fog route serves locally");
+        assert_eq!(rig2.metrics.bandwidth.bytes, 0.0, "fog route must not touch the WAN");
+    }
+
+    #[test]
+    fn missing_binding_is_a_named_error() {
+        let mut reg = FunctionRegistry::new();
+        reg.register("detect", FunctionKind::Inference, "batch", "boxes");
+        let err = Executor::from_registry(&reg, DispatchMode::EventDriven).unwrap_err();
+        assert!(err.to_string().contains("reencode_low"), "{err}");
+    }
+
+    #[test]
+    fn sequential_and_event_modes_agree_on_content() {
+        let run = |mode| {
+            let mut rig = Rig::new();
+            let ex = executor(mode);
+            let jobs: Vec<ChunkJob> = (0..3)
+                .map(|i| ChunkJob::new(chunk(10 + i as u64), 0.0, i as f64 * 0.2))
+                .collect();
+            let out = ex.run_wave(jobs, &mut rig.ctx()).unwrap();
+            (
+                out.iter()
+                    .map(|(_, o)| o.per_frame.iter().map(Vec::len).sum::<usize>())
+                    .collect::<Vec<_>>(),
+                rig.metrics.labels_used,
+            )
+        };
+        assert_eq!(run(DispatchMode::EventDriven), run(DispatchMode::Sequential));
+    }
+}

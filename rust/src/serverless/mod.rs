@@ -2,7 +2,11 @@
 //! users program against (Fig. 14).
 //!
 //! * [`registry`] — function manager: register video-processing functions
-//!   (decode, resize, inference, ...) with typed signatures.
+//!   (decode, resize, inference, ...) with typed signatures **and
+//!   executable bodies** — what you register is what runs.
+//! * [`executor`] — the event-driven pipeline executor: the Fig. 6 steps
+//!   as discrete [`executor::Stage`] events on a virtual-clock queue, each
+//!   bound to a registry entry; waves of chunks overlap WAN and GPU phases.
 //! * [`policy`] — policy manager: named scheduling policies (e.g. "monitor
 //!   congestion, fall back to fog") selectable per deployment.
 //! * [`dispatcher`] — deploys functions/models to cloud or fog nodes and
@@ -17,6 +21,7 @@
 
 pub mod app;
 pub mod dispatcher;
+pub mod executor;
 pub mod monitor;
 pub mod policy;
 pub mod registry;
@@ -24,7 +29,8 @@ pub mod scheduler;
 
 pub use app::VideoApp;
 pub use dispatcher::Dispatcher;
+pub use executor::{ChunkJob, DispatchMode, Executor, Stage, StageCtx};
 pub use monitor::GlobalMonitor;
 pub use policy::{Policy, PolicyManager};
-pub use registry::{FunctionKind, FunctionRegistry};
+pub use registry::{FunctionKind, FunctionRegistry, StageBody};
 pub use scheduler::{FogShardPool, ShardConfig};

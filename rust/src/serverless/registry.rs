@@ -1,10 +1,32 @@
-//! Function manager: fine-grained housekeeping for video-processing
-//! functions (§III-D). Functions are the serverless unit of deployment —
-//! a pipeline is an ordered composition of registered functions (Fig. 2).
+//! Function manager (§III-D): registered functions are the serverless unit
+//! of deployment — a pipeline is an ordered composition of registered
+//! functions (Fig. 2), and the [`executor`](crate::serverless::executor)
+//! *executes the registry*: each Fig. 6 stage resolves its body from here
+//! at dispatch time, so registering or overriding a function changes what
+//! actually runs, not just what is documented.
+//!
+//! Two registration levels:
+//!
+//! * [`FunctionRegistry::register`] — declare a function's typed signature
+//!   (composition checking via [`FunctionRegistry::validate_pipeline`]).
+//!   Re-registering metadata keeps any existing body.
+//! * [`FunctionRegistry::register_impl`] / [`FunctionRegistry::bind`] —
+//!   attach an executable [`StageBody`]. `bind` overrides the body of an
+//!   already-registered function and bumps its version.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
+
+use crate::cloud::{CloudServer, ExecTiming, HeadsOwned};
+use crate::fog::{CropResult, FogNode};
+use crate::hitl::collector::LabeledCrop;
+use crate::hitl::IncrementalLearner;
+use crate::interchange::Tensor;
+use crate::metrics::f1::PredBox;
+use crate::protocol::ProtocolConfig;
+use crate::sim::video::Quality;
 
 /// What a registered function does in the pipeline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -17,7 +39,67 @@ pub enum FunctionKind {
     Training,
 }
 
-/// A registered function's metadata.
+/// Encode stage: pick the uplink quality for the fog→cloud low stream.
+pub type EncodeFn = Arc<dyn Fn(&ProtocolConfig) -> Quality + Send + Sync>;
+/// Detection stage: run a detector over rendered frames on the cloud GPU
+/// pool at a virtual arrival time.
+pub type DetectFn =
+    Arc<dyn Fn(&mut CloudServer, &[Tensor], f64) -> Result<(Vec<HeadsOwned>, ExecTiming)> + Send + Sync>;
+/// Crop-classification stage on a fog node (results, features, done time).
+pub type ClassifyFn = Arc<
+    dyn Fn(&mut FogNode, &[Vec<f32>], f64) -> Result<(Vec<CropResult>, Vec<Vec<f32>>, f64)>
+        + Send
+        + Sync,
+>;
+/// Training stage: one incremental-learning step, returning the new last
+/// layer to fan out to the fog shards.
+pub type TrainFn =
+    Arc<dyn Fn(&mut IncrementalLearner, &[LabeledCrop]) -> Result<Tensor> + Send + Sync>;
+/// Post-processing stage: transform one frame's final boxes in place
+/// (frame index, boxes).
+pub type PostFn = Arc<dyn Fn(usize, &mut Vec<PredBox>) + Send + Sync>;
+
+/// The executable body of a registered function. Each variant corresponds
+/// to one pipeline stage shape the executor knows how to drive.
+#[derive(Clone)]
+pub enum StageBody {
+    Encode(EncodeFn),
+    Detect(DetectFn),
+    Classify(ClassifyFn),
+    Train(TrainFn),
+    Post(PostFn),
+}
+
+impl StageBody {
+    fn kind_ok(&self, kind: FunctionKind) -> bool {
+        matches!(
+            (self, kind),
+            (StageBody::Encode(_), FunctionKind::Encode)
+                | (StageBody::Detect(_), FunctionKind::Inference)
+                | (StageBody::Classify(_), FunctionKind::Inference)
+                | (StageBody::Train(_), FunctionKind::Training)
+                | (StageBody::Post(_), FunctionKind::PostProcess)
+        )
+    }
+
+    fn shape(&self) -> &'static str {
+        match self {
+            StageBody::Encode(_) => "encode",
+            StageBody::Detect(_) => "detect",
+            StageBody::Classify(_) => "classify",
+            StageBody::Train(_) => "train",
+            StageBody::Post(_) => "post",
+        }
+    }
+}
+
+impl std::fmt::Debug for StageBody {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "StageBody::{}(..)", self.shape())
+    }
+}
+
+/// A registered function's metadata plus its (optional) executable body.
 #[derive(Debug, Clone)]
 pub struct FunctionEntry {
     pub name: String,
@@ -27,9 +109,11 @@ pub struct FunctionEntry {
     pub input_type: String,
     pub output_type: String,
     pub version: u32,
+    /// Executable body; `None` for declared-only functions.
+    pub body: Option<StageBody>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct FunctionRegistry {
     functions: BTreeMap<String, FunctionEntry>,
 }
@@ -39,7 +123,9 @@ impl FunctionRegistry {
         Self::default()
     }
 
-    /// Register (or re-register, bumping the version) a function.
+    /// Register (or re-register, bumping the version) a function's
+    /// metadata. An existing executable body is preserved; use
+    /// [`FunctionRegistry::bind`] to replace the body.
     pub fn register(
         &mut self,
         name: &str,
@@ -47,7 +133,9 @@ impl FunctionRegistry {
         input_type: &str,
         output_type: &str,
     ) -> u32 {
-        let version = self.functions.get(name).map(|f| f.version + 1).unwrap_or(1);
+        let prev = self.functions.get(name);
+        let version = prev.map(|f| f.version + 1).unwrap_or(1);
+        let body = prev.and_then(|f| f.body.clone());
         self.functions.insert(
             name.to_string(),
             FunctionEntry {
@@ -56,9 +144,54 @@ impl FunctionRegistry {
                 input_type: input_type.to_string(),
                 output_type: output_type.to_string(),
                 version,
+                body,
             },
         );
         version
+    }
+
+    /// Register a function together with its executable body.
+    ///
+    /// # Panics
+    /// Panics if `body`'s shape cannot implement `kind` (a programming
+    /// error at registration time; the dynamic-override path
+    /// [`FunctionRegistry::bind`] returns an error instead).
+    pub fn register_impl(
+        &mut self,
+        name: &str,
+        kind: FunctionKind,
+        input_type: &str,
+        output_type: &str,
+        body: StageBody,
+    ) -> u32 {
+        assert!(
+            body.kind_ok(kind),
+            "{name}: a {} body cannot implement a {kind:?} function",
+            body.shape()
+        );
+        let version = self.register(name, kind, input_type, output_type);
+        self.functions.get_mut(name).expect("just registered").body = Some(body);
+        version
+    }
+
+    /// Override the executable body of an already-registered function,
+    /// bumping its version. This is the deployment-time hook the paper's
+    /// Fig. 14 flow implies: what you register is what runs.
+    pub fn bind(&mut self, name: &str, body: StageBody) -> Result<u32> {
+        let entry = self
+            .functions
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("function {name:?} not registered"))?;
+        if !body.kind_ok(entry.kind) {
+            bail!(
+                "function {name:?} is {:?}; a {} body cannot implement it",
+                entry.kind,
+                body.shape()
+            );
+        }
+        entry.version += 1;
+        entry.body = Some(body);
+        Ok(entry.version)
     }
 
     pub fn get(&self, name: &str) -> Result<&FunctionEntry> {
@@ -67,8 +200,17 @@ impl FunctionRegistry {
             .ok_or_else(|| anyhow!("function {name:?} not registered"))
     }
 
+    /// The executable body of `name`, if one is bound.
+    pub fn body(&self, name: &str) -> Option<&StageBody> {
+        self.functions.get(name).and_then(|f| f.body.as_ref())
+    }
+
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.functions.keys().map(|s| s.as_str())
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &FunctionEntry> {
+        self.functions.values()
     }
 
     /// Check a pipeline composes: each function's output type must match
@@ -94,17 +236,59 @@ impl FunctionRegistry {
         Ok(())
     }
 
-    /// The standard function set every VPaaS deployment ships with.
+    /// The standard function set every VPaaS deployment ships with. The
+    /// Fig. 6 stages come pre-bound to their reference implementations;
+    /// `decode`/`resize`/`batch` are declared-only (their work is implicit
+    /// in the renderer and the dynamic batcher).
     pub fn with_standard_functions() -> Self {
         let mut r = Self::new();
         r.register("decode", FunctionKind::Decode, "chunk", "frames");
-        r.register("reencode_low", FunctionKind::Encode, "frames", "chunk");
+        r.register_impl(
+            "reencode_low",
+            FunctionKind::Encode,
+            "frames",
+            "chunk",
+            StageBody::Encode(Arc::new(|cfg: &ProtocolConfig| cfg.low_quality)),
+        );
         r.register("resize", FunctionKind::PreProcess, "frames", "frames");
         r.register("batch", FunctionKind::PreProcess, "frames", "batch");
-        r.register("detect", FunctionKind::Inference, "batch", "boxes");
-        r.register("classify_crops", FunctionKind::Inference, "crops", "labels");
-        r.register("draw_boxes", FunctionKind::PostProcess, "boxes", "frames");
-        r.register("il_update", FunctionKind::Training, "labeled_crops", "weights");
+        r.register_impl(
+            "detect",
+            FunctionKind::Inference,
+            "batch",
+            "boxes",
+            StageBody::Detect(Arc::new(|cloud: &mut CloudServer, frames: &[Tensor], at: f64| {
+                cloud.detect_chunk(frames, at, "detector")
+            })),
+        );
+        r.register_impl(
+            "classify_crops",
+            FunctionKind::Inference,
+            "crops",
+            "labels",
+            StageBody::Classify(Arc::new(|fog: &mut FogNode, crops: &[Vec<f32>], at: f64| {
+                fog.classify_crops(crops, at)
+            })),
+        );
+        r.register_impl(
+            "draw_boxes",
+            FunctionKind::PostProcess,
+            "boxes",
+            "frames",
+            // reference body: boxes pass through unchanged (rendering is a
+            // display concern the simulator does not model)
+            StageBody::Post(Arc::new(|_fi: usize, _boxes: &mut Vec<PredBox>| {})),
+        );
+        r.register_impl(
+            "il_update",
+            FunctionKind::Training,
+            "labeled_crops",
+            "weights",
+            StageBody::Train(Arc::new(|learner: &mut IncrementalLearner, batch: &[LabeledCrop]| {
+                let w = learner.update(batch)?;
+                Ok(w.clone())
+            })),
+        );
         r
     }
 }
@@ -139,5 +323,44 @@ mod tests {
     fn empty_pipeline_rejected() {
         let r = FunctionRegistry::with_standard_functions();
         assert!(r.validate_pipeline(&[]).is_err());
+    }
+
+    #[test]
+    fn standard_stages_are_bound() {
+        let r = FunctionRegistry::with_standard_functions();
+        for name in ["reencode_low", "detect", "classify_crops", "il_update", "draw_boxes"] {
+            assert!(r.body(name).is_some(), "{name} must ship with a body");
+        }
+        assert!(r.body("decode").is_none(), "decode is declared-only");
+    }
+
+    #[test]
+    fn bind_overrides_and_bumps_version() {
+        let mut r = FunctionRegistry::with_standard_functions();
+        let v0 = r.get("detect").unwrap().version;
+        let v1 = r
+            .bind(
+                "detect",
+                StageBody::Detect(Arc::new(|cloud, frames, at| {
+                    cloud.detect_chunk(frames, at, "detector_lite")
+                })),
+            )
+            .unwrap();
+        assert_eq!(v1, v0 + 1);
+        assert!(r.bind("nonexistent", StageBody::Post(Arc::new(|_, _| {}))).is_err());
+    }
+
+    #[test]
+    fn bind_rejects_kind_mismatch() {
+        let mut r = FunctionRegistry::with_standard_functions();
+        let err = r.bind("detect", StageBody::Post(Arc::new(|_, _| {}))).unwrap_err();
+        assert!(err.to_string().contains("Inference"), "{err}");
+    }
+
+    #[test]
+    fn metadata_reregistration_keeps_body() {
+        let mut r = FunctionRegistry::with_standard_functions();
+        r.register("detect", FunctionKind::Inference, "batch", "boxes");
+        assert!(r.body("detect").is_some(), "re-register must not unbind");
     }
 }

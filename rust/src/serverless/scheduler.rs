@@ -140,6 +140,13 @@ impl FogShardPool {
         &mut self.shards[i]
     }
 
+    /// The whole pool as a slice — the executor's [`StageCtx::fogs`] view.
+    ///
+    /// [`StageCtx::fogs`]: crate::serverless::executor::StageCtx
+    pub fn shards_mut(&mut self) -> &mut [FogNode] {
+        &mut self.shards
+    }
+
     pub fn shard_backlog(&self, i: usize, now: f64) -> f64 {
         self.shards[i].backlog_s(now)
     }
