@@ -29,7 +29,12 @@ fn main() -> anyhow::Result<()> {
     let mut app = VideoApp::from_config(&cfg)?;
 
     // 1. register a model in the zoo (it is profiled on registration)
-    let version = app.zoo.register("face_reg_small", Task::Classification, "classifier", vec![1, 4, 16]);
+    let version = app.zoo.register(
+        "face_reg_small",
+        Task::Classification,
+        "classifier",
+        vec![1, 4, 16],
+    );
     println!("registered face_reg_small v{version}");
     let profiler = Profiler::new(app.handle());
     let p = app.params.clone();

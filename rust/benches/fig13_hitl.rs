@@ -12,7 +12,8 @@ fn main() {
     println!("{}", figures::fig13b(&h, bench_scale(), &cfg).unwrap());
     // the headline: IL must beat the no-HITL ablation under drift
     let ds = datasets::traffic(bench_scale());
-    let drift = RunConfig { drift: true, drift_scale: 12.0, golden: false, hitl_budget: 0.4, ..cfg };
+    let drift =
+        RunConfig { drift: true, drift_scale: 12.0, golden: false, hitl_budget: 0.4, ..cfg };
     let with = h.run(SystemKind::Vpaas, &ds, &drift).unwrap();
     let without = h.run(SystemKind::VpaasNoHitl, &ds, &drift).unwrap();
     assert!(

@@ -214,10 +214,7 @@ impl CloudServer {
             offset += take;
         }
         self.billing.detector_frames += frames.len() as u64;
-        Ok((
-            heads,
-            ExecTiming { start: t_start, done: t_done, queue_wait: wait_total },
-        ))
+        Ok((heads, ExecTiming { start: t_start, done: t_done, queue_wait: wait_total }))
     }
 
     /// CloudSeg's extra stage: super-resolve a chunk's frames, billing one
@@ -312,7 +309,13 @@ mod tests {
     #[test]
     fn detect_chunk_returns_per_frame_heads_and_bills() {
         let (svc, p, frames) = setup();
-        let mut cloud = CloudServer::new(svc.handle(), CloudConfig::default(), p.grid, p.num_classes, p.feat_dim);
+        let mut cloud = CloudServer::new(
+            svc.handle(),
+            CloudConfig::default(),
+            p.grid,
+            p.num_classes,
+            p.feat_dim,
+        );
         let (heads, timing) = cloud.detect_chunk(&frames, 1.0, "detector").unwrap();
         assert_eq!(heads.len(), 5);
         assert!(timing.done > 1.0);
@@ -329,7 +332,13 @@ mod tests {
     #[test]
     fn sr_chunk_bills_separately() {
         let (svc, p, frames) = setup();
-        let mut cloud = CloudServer::new(svc.handle(), CloudConfig::default(), p.grid, p.num_classes, p.feat_dim);
+        let mut cloud = CloudServer::new(
+            svc.handle(),
+            CloudConfig::default(),
+            p.grid,
+            p.num_classes,
+            p.feat_dim,
+        );
         let (rec, _) = cloud.sr_chunk(&frames, 0.0).unwrap();
         assert_eq!(rec.len(), 5);
         assert_eq!(cloud.billing.sr_frames, 5);
@@ -339,7 +348,12 @@ mod tests {
     #[test]
     fn autoscaling_adds_gpus_under_load() {
         let (svc, p, frames) = setup();
-        let cfg = CloudConfig { autoscale: true, max_gpus: 4, scale_up_wait_s: 0.01, ..Default::default() };
+        let cfg = CloudConfig {
+            autoscale: true,
+            max_gpus: 4,
+            scale_up_wait_s: 0.01,
+            ..Default::default()
+        };
         let mut cloud = CloudServer::new(svc.handle(), cfg, p.grid, p.num_classes, p.feat_dim);
         // hammer it with chunks all arriving at t=0
         for _ in 0..8 {
@@ -352,9 +366,21 @@ mod tests {
     #[test]
     fn training_window_slows_colocated_inference() {
         let (svc, p, frames) = setup();
-        let mut a = CloudServer::new(svc.handle(), CloudConfig::default(), p.grid, p.num_classes, p.feat_dim);
+        let mut a = CloudServer::new(
+            svc.handle(),
+            CloudConfig::default(),
+            p.grid,
+            p.num_classes,
+            p.feat_dim,
+        );
         let (_, clean) = a.detect_chunk(&frames, 0.0, "detector").unwrap();
-        let mut b = CloudServer::new(svc.handle(), CloudConfig::default(), p.grid, p.num_classes, p.feat_dim);
+        let mut b = CloudServer::new(
+            svc.handle(),
+            CloudConfig::default(),
+            p.grid,
+            p.num_classes,
+            p.feat_dim,
+        );
         let train_end = b.train_burst(0.0, 100); // occupies GPU 0 for 25 s
         let (_, contended) = b.detect_chunk(&frames, 0.0, "detector").unwrap();
         // inference queues behind the co-located trainer

@@ -34,11 +34,7 @@ impl ModelCache {
     pub fn install(&mut self, name: &str, version: u64) -> Option<CachedModel> {
         self.entries.retain(|e| e.name != name);
         self.entries.push_front(CachedModel { name: name.to_string(), version });
-        if self.entries.len() > self.capacity {
-            self.entries.pop_back()
-        } else {
-            None
-        }
+        if self.entries.len() > self.capacity { self.entries.pop_back() } else { None }
     }
 
     /// Touch a model for serving. Hit → bump recency; miss → recorded.

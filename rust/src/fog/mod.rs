@@ -193,9 +193,9 @@ mod tests {
     use super::*;
     use crate::runtime::InferenceService;
     use crate::sim::params::SimParams;
-    use crate::sim::video::{render_crop, render_frame, Quality, Scene, SceneConfig};
+    use crate::sim::video::{render_crop, render_frame, FrameTruth, Quality, Scene, SceneConfig};
 
-    fn fog_and_scene() -> (InferenceService, std::sync::Arc<SimParams>, crate::sim::video::FrameTruth) {
+    fn fog_and_scene() -> (InferenceService, std::sync::Arc<SimParams>, FrameTruth) {
         let svc = InferenceService::start().unwrap();
         let p = SimParams::load().unwrap();
         let mut scene = Scene::new(SceneConfig {
@@ -229,11 +229,7 @@ mod tests {
             .zip(&truth.objects)
             .filter(|(r, o)| r.class == o.gt.class)
             .count();
-        assert!(
-            correct as f64 / results.len() as f64 > 0.8,
-            "{correct}/{} correct",
-            results.len()
-        );
+        assert!(correct as f64 / results.len() as f64 > 0.8, "{correct}/{} correct", results.len());
     }
 
     #[test]

@@ -280,11 +280,7 @@ mod tests {
                 ok += usize::from(c == ex.label);
             }
         }
-        assert!(
-            ok as f64 / eval.len() as f64 > 0.6,
-            "ensemble accuracy {ok}/{}",
-            eval.len()
-        );
+        assert!(ok as f64 / eval.len() as f64 > 0.6, "ensemble accuracy {ok}/{}", eval.len());
     }
 
     #[test]

@@ -27,11 +27,7 @@ pub struct CameraSession {
 
 impl CameraSession {
     pub fn new(camera: usize) -> Self {
-        CameraSession {
-            camera,
-            collector: DataCollector::new(BATCH_TRIGGER),
-            batches_trained: 0,
-        }
+        CameraSession { camera, collector: DataCollector::new(BATCH_TRIGGER), batches_trained: 0 }
     }
 
     /// Buffer one human-labeled crop from this camera.

@@ -32,6 +32,15 @@
 //!   old per-chunk state machine for A/B makespan comparisons —
 //!   `BENCH_overlap.json` from `cargo bench --bench fig16_scalability`
 //!   tracks the gap).
+//! * **Run-scoped streaming** — under
+//!   [`serverless::executor::DispatchMode::Streaming`] the queue spans
+//!   the whole run: the pipeline admits each dispatch wave into one
+//!   [`serverless::executor::StreamingSession`], consecutive waves
+//!   overlap, and the HITL wave barrier survives as an explicit
+//!   [`serverless::executor::Stage::Barrier`] event, so labels stay
+//!   bit-identical across all dispatch modes. `BENCH_stream.json`
+//!   compares the three modes across uniform / bursty / churn workload
+//!   profiles ([`sim::video::WorkloadProfile`]).
 //! * **Functions are the unit of execution** — every executable stage is
 //!   bound to a [`serverless::registry::FunctionRegistry`] entry
 //!   (`reencode_low`, `detect`, `classify_crops`, `il_update`, plus any

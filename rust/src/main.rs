@@ -14,6 +14,7 @@ use anyhow::{bail, Result};
 use vpaas::metrics::report::table;
 use vpaas::pipeline::{figures, Harness, RunConfig, SystemKind};
 use vpaas::sim::video::datasets;
+use vpaas::sim::video::WorkloadProfile;
 use vpaas::util::cli::Args;
 use vpaas::util::config::Config;
 
@@ -46,10 +47,15 @@ subcommands:
   run     --system <vpaas|vpaas-nohitl|mpeg|dds|cloudseg|glimpse>
           --dataset <dashcam|drone|traffic> [--scale 0.05] [--wan 15]
           [--budget 0.2] [--shards 1] [--no-drift] [--golden]
+          [--workload uniform|bursty|churn]
   profile                       profile registered models on the shared inference engine
   serve   [--config file.cfg] [--chunks N]   drive the serverless demo app";
 
 fn run_config(args: &Args) -> Result<RunConfig> {
+    let workload_name = args.get_or("workload", "uniform");
+    let workload = WorkloadProfile::parse(workload_name).ok_or_else(|| {
+        anyhow::anyhow!("unknown workload {workload_name:?} (uniform|bursty|churn)")
+    })?;
     Ok(RunConfig {
         wan_mbps: args.get_f64("wan", 15.0)?,
         hitl_budget: args.get_f64("budget", 0.2)?,
@@ -57,6 +63,7 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         golden: args.flag("golden"),
         shards: args.get_usize("shards", 1)?,
         seed: args.get_u64("seed", 0xCAFE)?,
+        workload,
         ..RunConfig::default()
     })
 }
@@ -103,7 +110,8 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if want("fig16") {
         println!("{}\n", figures::fig16(&h, &cfg)?);
         println!("{}\n", figures::fig16_shard_sweep(&h, &cfg)?);
-        println!("{}\n", figures::fig16_overlap(&h, &cfg)?.0);
+        println!("{}\n", figures::fig16_overlap(&h, &cfg, 6, 0.2, &[2, 4, 8])?.0);
+        println!("{}\n", figures::fig16_stream(&h, &cfg, 6, 0.2)?.0);
     }
     if want("quality") {
         println!("{}\n", figures::quality_operating_points(&h));

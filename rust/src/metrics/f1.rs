@@ -188,7 +188,14 @@ mod tests {
                 .map(|i| {
                     let x = g.usize_in(0, 12);
                     let y = g.usize_in(0, 12);
-                    GtBox { x0: x, y0: y, x1: x + g.usize_in(0, 3), y1: y + g.usize_in(0, 3), class: g.usize_in(0, 3), id: i as u64 }
+                    GtBox {
+                        x0: x,
+                        y0: y,
+                        x1: x + g.usize_in(0, 3),
+                        y1: y + g.usize_in(0, 3),
+                        class: g.usize_in(0, 3),
+                        id: i as u64,
+                    }
                 })
                 .collect();
             let preds: Vec<PredBox> = (0..n_pred)
@@ -196,7 +203,14 @@ mod tests {
                     let x = g.usize_in(0, 12);
                     let y = g.usize_in(0, 12);
                     PredBox {
-                        rect: GtBox { x0: x, y0: y, x1: x + g.usize_in(0, 3), y1: y + g.usize_in(0, 3), class: g.usize_in(0, 3), id: 0 },
+                        rect: GtBox {
+                            x0: x,
+                            y0: y,
+                            x1: x + g.usize_in(0, 3),
+                            y1: y + g.usize_in(0, 3),
+                            class: g.usize_in(0, 3),
+                            id: 0,
+                        },
                         class: g.usize_in(0, 3),
                         cls_conf: g.f64_range(0.0, 1.0),
                         loc_conf: 1.0,

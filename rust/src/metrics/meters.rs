@@ -89,6 +89,9 @@ pub struct RunMetrics {
     /// Chunk processing order as (video id, chunk index) pairs; the sharded
     /// scheduler's determinism/interleaving tests read this.
     pub chunk_log: Vec<(usize, u64)>,
+    /// Per-camera HITL sessions retired at end of run (every camera that
+    /// contributed labels; churned cameras must not leave orphans behind).
+    pub sessions_retired: u64,
 }
 
 impl RunMetrics {

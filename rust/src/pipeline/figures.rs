@@ -20,7 +20,7 @@ use crate::sim::device;
 use crate::sim::human::{Annotator, AnnotatorConfig};
 use crate::sim::net::Topology;
 use crate::sim::video::datasets::{self, DatasetSpec};
-use crate::sim::video::{codec, render_frame, Quality};
+use crate::sim::video::{codec, render_frame, Quality, WorkloadProfile};
 use crate::zoo::Profiler;
 
 /// Default dataset scale for interactive regeneration. Full-scale runs
@@ -73,7 +73,8 @@ pub fn fig4(h: &Harness) -> Result<String> {
     // real PJRT wall-times per batch bucket on this host (relative scaling)
     let prof = Profiler::new(h.handle());
     let p = &h.params;
-    let det = prof.profile_model("detector", &[1, 4, 16], |b| vec![vec![b, p.anchors, p.feat_dim]])?;
+    let det =
+        prof.profile_model("detector", &[1, 4, 16], |b| vec![vec![b, p.anchors, p.feat_dim]])?;
     let cls = prof.profile_model("classifier", &[1, 4, 16], |b| {
         vec![vec![b, p.feat_dim], vec![p.cls_feat, p.num_classes]]
     })?;
@@ -103,7 +104,8 @@ pub fn fig5(h: &Harness) -> Result<String> {
     let chunk = videos[0].next_chunk().unwrap();
     let golden = h.golden_boxes(&chunk, 0.0, 0.5)?;
     let mut rows = Vec::new();
-    for (label, q) in [("high (r=1.0 qp=20)", Quality::ORIGINAL), ("low (r=0.8 qp=36)", Quality::LOW)] {
+    let points = [("high (r=1.0 qp=20)", Quality::ORIGINAL), ("low (r=0.8 qp=36)", Quality::LOW)];
+    for (label, q) in points {
         let mut confident = 0usize;
         let mut located_only = 0usize;
         let mut eng = crate::runtime::Engine::from_artifacts()?;
@@ -126,11 +128,7 @@ pub fn fig5(h: &Harness) -> Result<String> {
             confident += conf.len();
             located_only += unc.len();
         }
-        rows.push(vec![
-            label.to_string(),
-            confident.to_string(),
-            located_only.to_string(),
-        ]);
+        rows.push(vec![label.to_string(), confident.to_string(), located_only.to_string()]);
     }
     let gt: usize = chunk.frames.iter().map(|f| f.objects.len()).sum();
     let golden_count: usize = golden.iter().map(Vec::len).sum();
@@ -237,7 +235,11 @@ pub fn fig12(h: &Harness, scale: f64, cfg: &RunConfig) -> Result<String> {
             let run_cfg = RunConfig { golden: false, ..cfg.clone() };
             let vp = h.run(SystemKind::Vpaas, &single, &run_cfg)?;
             let dd = h.run(SystemKind::Dds, &single, &run_cfg)?;
-            let norm = if dd.bandwidth.bytes > 0.0 { vp.bandwidth.bytes / dd.bandwidth.bytes } else { 0.0 };
+            let norm = if dd.bandwidth.bytes > 0.0 {
+                vp.bandwidth.bytes / dd.bandwidth.bytes
+            } else {
+                0.0
+            };
             rows.push(vec![
                 format!("{}-v{vi}", ds.name),
                 format!("{:.3}", norm),
@@ -581,10 +583,7 @@ pub fn fig16_shard_sweep(h: &Harness, cfg: &RunConfig) -> Result<String> {
     }
     Ok(format!(
         "Fig. 16b — multi-fog shard sweep (6 cameras; throughput in chunks/s of virtual time)\n{}",
-        table(
-            &["shards", "chunks", "makespan_s", "throughput", "lat_p50", "lat_p99"],
-            &rows
-        )
+        table(&["shards", "chunks", "makespan_s", "throughput", "lat_p50", "lat_p99"], &rows)
     ))
 }
 
@@ -596,12 +595,18 @@ pub fn fig16_shard_sweep(h: &Harness, cfg: &RunConfig) -> Result<String> {
 /// shrinks. Returns the printable table plus raw
 /// `(shards, event_makespan, sequential_makespan)` rows — the bench writes
 /// them to `BENCH_overlap.json` so the perf trajectory is tracked.
-pub fn fig16_overlap(h: &Harness, cfg: &RunConfig) -> Result<(String, Vec<(usize, f64, f64)>)> {
-    let mut ds = datasets::drone(0.2);
-    ds.videos.truncate(6); // 6 cameras streaming concurrently
+pub fn fig16_overlap(
+    h: &Harness,
+    cfg: &RunConfig,
+    cameras: usize,
+    scale: f64,
+    shard_counts: &[usize],
+) -> Result<(String, Vec<(usize, f64, f64)>)> {
+    let mut ds = datasets::drone(scale);
+    ds.videos.truncate(cameras); // cameras streaming concurrently
     let mut rows = Vec::new();
     let mut raw = Vec::new();
-    for shards in [2usize, 4, 8] {
+    for &shards in shard_counts {
         let event_cfg = RunConfig {
             shards,
             golden: false,
@@ -621,8 +626,87 @@ pub fn fig16_overlap(h: &Harness, cfg: &RunConfig) -> Result<(String, Vec<(usize
         ]);
     }
     let text = format!(
-        "Fig. 16c — event-driven wave dispatch vs sequential state machine (6 cameras)\n{}",
+        "Fig. 16c — event-driven wave dispatch vs sequential state machine ({cameras} cameras)\n{}",
         table(&["shards", "seq_makespan_s", "event_makespan_s", "speedup"], &rows)
+    );
+    Ok((text, raw))
+}
+
+// ------------------------------------------------------ Fig. 16d (stream)
+/// One `fig16_stream` measurement: the three dispatch-mode makespans for
+/// a workload profile (same seed, same wave formation, identical labels).
+#[derive(Debug, Clone, Copy)]
+pub struct StreamRow {
+    pub workload: &'static str,
+    pub chunks: u64,
+    pub streaming_s: f64,
+    pub wave_s: f64,
+    pub sequential_s: f64,
+}
+
+/// Run-scoped streaming vs wave-barrier vs sequential dispatch across
+/// workload profiles (uniform stagger / bursty Poisson-like arrivals /
+/// camera churn), on a multi-camera multi-shard run. All three modes see
+/// the identical wave formation and compute identical labels — only the
+/// event interleaving differs — so the makespan gap is pure scheduling.
+/// Returns the printable table plus raw [`StreamRow`]s; the bench writes
+/// them to `BENCH_stream.json` so the perf trajectory is tracked per PR.
+pub fn fig16_stream(
+    h: &Harness,
+    cfg: &RunConfig,
+    cameras: usize,
+    scale: f64,
+) -> Result<(String, Vec<StreamRow>)> {
+    let mut ds = datasets::drone(scale);
+    ds.videos.truncate(cameras);
+    let mut rows = Vec::new();
+    let mut raw = Vec::new();
+    for profile in WorkloadProfile::all() {
+        let run = |dispatch: DispatchMode| -> Result<RunMetrics> {
+            let run_cfg = RunConfig {
+                shards: 4,
+                golden: false,
+                autoscale: false,
+                dispatch,
+                workload: profile,
+                ..cfg.clone()
+            };
+            h.run(SystemKind::Vpaas, &ds, &run_cfg)
+        };
+        let streaming = run(DispatchMode::Streaming)?;
+        let wave = run(DispatchMode::EventDriven)?;
+        let seq = run(DispatchMode::Sequential)?;
+        // content must be dispatch-mode invariant for the same seed
+        anyhow::ensure!(
+            streaming.f1_true == wave.f1_true && wave.f1_true == seq.f1_true,
+            "{}: dispatch mode changed detections",
+            profile.name()
+        );
+        anyhow::ensure!(
+            streaming.labels_used == wave.labels_used && wave.labels_used == seq.labels_used,
+            "{}: dispatch mode changed HITL labels",
+            profile.name()
+        );
+        raw.push(StreamRow {
+            workload: profile.name(),
+            chunks: streaming.chunks,
+            streaming_s: streaming.makespan,
+            wave_s: wave.makespan,
+            sequential_s: seq.makespan,
+        });
+        rows.push(vec![
+            profile.name().to_string(),
+            streaming.chunks.to_string(),
+            format!("{:.2}", seq.makespan),
+            format!("{:.2}", wave.makespan),
+            format!("{:.2}", streaming.makespan),
+            format!("{:.4}", wave.makespan / streaming.makespan.max(1e-12)),
+        ]);
+    }
+    let text = format!(
+        "Fig. 16d — run-scoped streaming vs wave-barrier vs sequential \
+         ({cameras} cameras, 4 shards)\n{}",
+        table(&["workload", "chunks", "seq_s", "wave_s", "stream_s", "wave/stream"], &rows)
     );
     Ok((text, raw))
 }

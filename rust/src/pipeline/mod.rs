@@ -4,6 +4,15 @@
 //! The [`Harness`] owns the shared PJRT inference service (one engine, as
 //! in the paper's single-cluster testbed) and is reused across runs so
 //! executable compilation is amortized.
+//!
+//! VPaaS runs form cross-camera dispatch waves from the fleet's arrival
+//! plan ([`WorkloadProfile`]: uniform / bursty / churn) with a pure
+//! formation pass ([`form_waves`]), then execute them per
+//! [`DispatchMode`]: wave-at-a-time (`EventDriven`/`Sequential`) or as an
+//! **admission loop** into one run-scoped streaming event queue
+//! (`Streaming`), where wave *w+1*'s uplink stages overlap wave *w*'s GPU
+//! and classify phases while the HITL wave barrier survives as an
+//! explicit event — label content is identical in all three modes.
 
 use std::sync::Arc;
 
@@ -19,7 +28,7 @@ use crate::protocol::coordinator::Coordinator;
 use crate::protocol::post::regions_from_heads;
 use crate::protocol::ProtocolConfig;
 use crate::runtime::{InferenceHandle, InferenceService};
-use crate::serverless::executor::{ChunkJob, DispatchMode, Executor, StageCtx};
+use crate::serverless::executor::{ChunkJob, DispatchMode, Executor, StageCtx, StreamingSession};
 use crate::serverless::monitor::GlobalMonitor;
 use crate::serverless::registry::FunctionRegistry;
 use crate::serverless::scheduler::{FogShardPool, ShardConfig};
@@ -29,7 +38,7 @@ use crate::sim::net::Topology;
 use crate::sim::params::SimParams;
 use crate::sim::video::datasets::DatasetSpec;
 use crate::sim::video::scene::GtBox;
-use crate::sim::video::{render_frame, Chunk, Quality};
+use crate::sim::video::{render_frame, CameraArrival, Chunk, Quality, Video, WorkloadProfile};
 
 pub mod figures;
 
@@ -101,10 +110,16 @@ pub struct RunConfig {
     /// 1 reproduces the single-fog deployment; `autoscale` additionally
     /// lets the provisioner grow/shrink the pool at runtime.
     pub shards: usize,
-    /// How the executor interleaves stage events within a dispatch wave
-    /// (`Sequential` reproduces the old per-chunk state machine for A/B
-    /// makespan comparisons; labels are identical in both modes).
+    /// How the executor interleaves stage events: within a dispatch wave
+    /// (`EventDriven`), one chunk at a time (`Sequential`, the seed
+    /// system's state machine, for A/B makespan comparisons), or across
+    /// the whole run (`Streaming`, one run-scoped queue where consecutive
+    /// waves overlap). Labels are identical in all three modes.
     pub dispatch: DispatchMode,
+    /// How the camera fleet arrives on the run timeline: uniform stagger,
+    /// Poisson-like bursts, or mid-run churn (`fig16_stream` sweeps all
+    /// three against the dispatch modes).
+    pub workload: WorkloadProfile,
     pub seed: u64,
     pub protocol: ProtocolConfig,
 }
@@ -121,6 +136,7 @@ impl Default for RunConfig {
             outage: None,
             shards: 1,
             dispatch: DispatchMode::default(),
+            workload: WorkloadProfile::default(),
             seed: 0xCAFE,
             protocol: ProtocolConfig::default(),
         }
@@ -219,7 +235,12 @@ impl Harness {
     /// pool of `cfg.shards` fog shards. Baselines keep the paper's
     /// sequential single-tenant layout (each video in its own slot on the
     /// run timeline).
-    pub fn run(&self, kind: SystemKind, dataset: &DatasetSpec, cfg: &RunConfig) -> Result<RunMetrics> {
+    pub fn run(
+        &self,
+        kind: SystemKind,
+        dataset: &DatasetSpec,
+        cfg: &RunConfig,
+    ) -> Result<RunMetrics> {
         match kind {
             SystemKind::Vpaas | SystemKind::VpaasNoHitl => self.run_vpaas(kind, dataset, cfg),
             _ => self.run_baseline(kind, dataset, cfg),
@@ -229,10 +250,18 @@ impl Harness {
     /// The sharded multi-fog VPaaS driver: cross-camera waves routed onto
     /// fog shards (`serverless::scheduler`) and executed by the
     /// event-driven `serverless::executor`, so WAN and GPU phases of
-    /// different chunks overlap within a wave. Deterministic for a given
-    /// seed: chunk merge order, wave formation, shard routing, event
-    /// interleaving and every RNG stream derive from `cfg.seed` alone.
-    fn run_vpaas(&self, kind: SystemKind, dataset: &DatasetSpec, cfg: &RunConfig) -> Result<RunMetrics> {
+    /// different chunks overlap within a wave — and, under
+    /// [`DispatchMode::Streaming`], across consecutive waves through one
+    /// run-scoped event queue (the wave loop becomes an *admission*
+    /// loop). Deterministic for a given seed: arrival plan, chunk merge
+    /// order, wave formation, shard routing, event interleaving and every
+    /// RNG stream derive from `cfg.seed` alone.
+    fn run_vpaas(
+        &self,
+        kind: SystemKind,
+        dataset: &DatasetSpec,
+        cfg: &RunConfig,
+    ) -> Result<RunMetrics> {
         let p = self.params.clone();
         let executor = Executor::from_registry(&self.functions, cfg.dispatch)?;
         let shards = cfg.shards.max(1);
@@ -270,18 +299,26 @@ impl Harness {
             monitor: GlobalMonitor::new(),
             p,
             global_chunk: 0,
+            remaining_chunks: Vec::new(),
         };
 
-        // Multi-camera concurrency: videos stream at once, staggered by
-        // 0.2 s so the shared links see causal arrivals; a k-way merge
-        // yields chunks in capture order and the wave batcher groups them
-        // into cross-camera dispatch waves. A wave dispatches when it fills
-        // (`wave_batch`) or when its oldest chunk ages past `wave_wait_s`;
-        // every member chunk's fog conveyor is held until that dispatch
-        // time, so the wave wait is real virtual-clock latency and shared
-        // links/GPUs see grouped arrivals.
+        // Multi-camera concurrency: videos stream at once, offset on the
+        // run timeline by the workload profile's arrival plan (uniform
+        // 0.2 s stagger / bursty clusters / churn joins-and-drops); a
+        // k-way merge yields chunks in capture order and the wave batcher
+        // groups them into cross-camera dispatch waves. A wave dispatches
+        // when it fills (`wave_batch`) or when its oldest chunk ages past
+        // `wave_wait_s`; every member chunk's fog conveyor is held until
+        // that dispatch time, so the wave wait is real virtual-clock
+        // latency and shared links/GPUs see grouped arrivals. Formation is
+        // a pure function of the capture schedule, so every dispatch mode
+        // sees the identical wave sequence — the modes differ only in how
+        // the waves *execute*: to completion one wave at a time
+        // (`EventDriven`/`Sequential`), or admitted into one run-scoped
+        // streaming queue where consecutive waves overlap (`Streaming`).
         let wave_batch = run.pool.cfg.wave_batch;
         let mut videos = dataset.make_videos(&run.p);
+        let arrivals = cfg.workload.plan(videos.len(), cfg.seed);
         // With a single camera (or degenerate wave size) no cross-camera
         // wave can ever form — dispatch immediately instead of charging a
         // pointless wave wait to every chunk's freshness latency.
@@ -290,68 +327,108 @@ impl Harness {
         } else {
             0.0
         };
-        let offsets: Vec<f64> = (0..videos.len()).map(|i| i as f64 * 0.2).collect();
-        let mut next: Vec<Option<Chunk>> = videos.iter_mut().map(|v| v.next_chunk()).collect();
-        let mut batcher: DynamicBatcher<(usize, Chunk)> =
-            DynamicBatcher::new(wave_batch, wave_wait);
-        let mut clock = 0.0f64;
-        loop {
-            // earliest fully-captured chunk across all cameras (ties break
-            // toward the lower video id — min_by keeps the first minimum)
-            let pick = next
-                .iter()
-                .enumerate()
-                .filter_map(|(i, c)| {
-                    c.as_ref().map(|c| (i, offsets[i] + c.t_capture + c.duration()))
-                })
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-            let horizon = pick.map(|(_, t)| t).unwrap_or(f64::INFINITY);
-            // dispatch every partial wave that comes due before the next
-            // chunk finishes capturing
-            while let Some(oldest) = batcher.oldest_arrival() {
-                let due = oldest + wave_wait;
-                if due > horizon {
-                    break;
+        let offsets: Vec<f64> = arrivals.iter().map(|a| a.offset_s).collect();
+        let waves = form_waves(&mut videos, &arrivals, wave_batch, wave_wait);
+        // per-camera admitted-chunk budget, counted from the formed waves
+        // so it is definitionally consistent with admission: a camera's
+        // HITL session retires the moment its last admitted chunk is
+        // scored (see [`VpaasRun::note_chunk_done`]), so churned cameras
+        // never leave an orphaned `CameraSession` behind
+        run.remaining_chunks = vec![0u64; videos.len()];
+        for (_, wave) in &waves {
+            for (vi, _) in wave {
+                run.remaining_chunks[*vi] += 1;
+            }
+        }
+        match cfg.dispatch {
+            DispatchMode::Streaming => {
+                self.stream_waves(&executor, &mut run, &offsets, waves)?
+            }
+            _ => {
+                for (dispatch_at, wave) in waves {
+                    self.process_wave(&executor, &mut run, &offsets, wave, dispatch_at)?;
                 }
-                // epsilon absorbs (oldest + wait) - oldest rounding
-                let Some(wave) = batcher.pop_batch(due + 1e-9) else { break };
-                clock = clock.max(due);
-                self.process_wave(&executor, &mut run, &offsets, wave, due)?;
-            }
-            let Some((vi, captured)) = pick else { break };
-            let chunk = next[vi].take().unwrap();
-            next[vi] = videos[vi].next_chunk();
-            batcher.push((vi, chunk), captured);
-            clock = clock.max(captured);
-            // a full wave dispatches immediately
-            while batcher.len() >= wave_batch {
-                let Some(wave) = batcher.pop_batch(captured) else { break };
-                self.process_wave(&executor, &mut run, &offsets, wave, captured)?;
             }
         }
-        // defensive: the due-time loop drains everything at end of stream,
-        // but nothing may ever be left behind
-        for wave in batcher.flush_all(clock + wave_wait) {
-            self.process_wave(&executor, &mut run, &offsets, wave, clock + wave_wait)?;
-        }
+        // defensive end-of-run sweep: every session should already have
+        // retired with its camera's last chunk, so this finds nothing
+        run.metrics.sessions_retired += run.coordinator.retire_all();
         let mut metrics = run.metrics;
         metrics.cost = run.cloud.billing.clone();
         Ok(metrics)
     }
 
-    /// Dispatch one cross-camera wave through the event-driven executor:
-    /// route each member (least backlog + policy, in capture order), run
-    /// all stage events on the shared virtual clock — chunk *k+1*'s WAN
-    /// uplink overlapping chunk *k*'s GPU phase — then feed the
-    /// provisioner and score, again in capture order.
-    fn process_wave(
+    /// The run-scoped streaming driver: pump the global event queue to
+    /// each wave's admission time, absorb waves whose barrier fired, route
+    /// the new wave against **mid-stream** shard backlogs, and admit it.
+    /// The queue spans the whole run, so wave *w+1*'s uplink stages
+    /// execute while wave *w*'s GPU and classify phases are in flight.
+    fn stream_waves(
         &self,
         executor: &Executor,
         run: &mut VpaasRun,
         offsets: &[f64],
+        waves: Vec<(f64, Vec<(usize, Chunk)>)>,
+    ) -> Result<()> {
+        let mut sess = executor.start_stream();
+        for (dispatch_at, wave) in waves {
+            self.pump_stream(executor, &mut sess, run, dispatch_at)?;
+            let jobs = self.build_jobs(run, offsets, wave, dispatch_at);
+            executor.admit_wave(&mut sess, jobs);
+        }
+        self.pump_stream(executor, &mut sess, run, f64::INFINITY)
+    }
+
+    /// Advance the streaming session to `horizon`, then feed the
+    /// provisioner and score every wave whose barrier fired, in (wave,
+    /// wave-input) order — the same order the wave-scoped drivers use, so
+    /// metric accumulation is dispatch-mode invariant. The autoscaler is
+    /// floored at the in-flight shard span: a shard with queued stage
+    /// events is never retired under a live chunk.
+    fn pump_stream(
+        &self,
+        executor: &Executor,
+        sess: &mut StreamingSession,
+        run: &mut VpaasRun,
+        horizon: f64,
+    ) -> Result<()> {
+        let completed = run.with_ctx(|ctx| {
+            if horizon.is_finite() {
+                executor.run_until(sess, horizon, ctx)
+            } else {
+                executor.finish_stream(sess, ctx)
+            }
+        })?;
+        let floor = sess.min_live_shards();
+        for (job, outcome) in &completed {
+            run.pool.observe(outcome.done, &mut run.monitor);
+            run.pool.autoscale_bounded(outcome.done, &run.monitor, floor);
+            self.score_chunk(
+                &mut run.metrics,
+                &job.chunk,
+                &outcome.per_frame,
+                outcome.done,
+                job.phi,
+                &run.cfg,
+            )?;
+            run.note_chunk_done(job.camera());
+        }
+        Ok(())
+    }
+
+    /// Stamp one wave's chunks into routed [`ChunkJob`]s, in capture
+    /// order: assign the global drift angle, then the least-backlog shard
+    /// and the deployment policy's route at the wave's dispatch time.
+    /// Shared by the wave-scoped and streaming drivers; under streaming
+    /// the backlogs read here are mid-stream (earlier waves still in
+    /// flight).
+    fn build_jobs(
+        &self,
+        run: &mut VpaasRun,
+        offsets: &[f64],
         wave: Vec<(usize, Chunk)>,
         dispatch_at: f64,
-    ) -> Result<()> {
+    ) -> Vec<ChunkJob> {
         let mut jobs = Vec::with_capacity(wave.len());
         for (vi, chunk) in wave {
             let phi = if run.cfg.drift {
@@ -369,20 +446,24 @@ impl Harness {
             job.route = route;
             jobs.push(job);
         }
-        let completed = {
-            let VpaasRun { topo, cloud, pool, annotator, coordinator, metrics, p, .. } = run;
-            topo.ensure_fog_lans(pool.len());
-            let mut ctx = StageCtx {
-                p: p.as_ref(),
-                coord: coordinator,
-                topo,
-                cloud,
-                fogs: pool.shards_mut(),
-                annotator,
-                metrics,
-            };
-            executor.run_wave(jobs, &mut ctx)?
-        };
+        jobs
+    }
+
+    /// Dispatch one cross-camera wave through the event-driven executor:
+    /// route each member (least backlog + policy, in capture order), run
+    /// all stage events on the shared virtual clock — chunk *k+1*'s WAN
+    /// uplink overlapping chunk *k*'s GPU phase — then feed the
+    /// provisioner and score, again in capture order.
+    fn process_wave(
+        &self,
+        executor: &Executor,
+        run: &mut VpaasRun,
+        offsets: &[f64],
+        wave: Vec<(usize, Chunk)>,
+        dispatch_at: f64,
+    ) -> Result<()> {
+        let jobs = self.build_jobs(run, offsets, wave, dispatch_at);
+        let completed = run.with_ctx(|ctx| executor.run_wave(jobs, ctx))?;
         for (job, outcome) in &completed {
             run.pool.observe(outcome.done, &mut run.monitor);
             run.pool.autoscale(outcome.done, &run.monitor);
@@ -394,6 +475,7 @@ impl Harness {
                 job.phi,
                 &run.cfg,
             )?;
+            run.note_chunk_done(job.camera());
         }
         Ok(())
     }
@@ -433,7 +515,12 @@ impl Harness {
     /// each video gets its own slot on the run timeline). Baselines share
     /// the executor's outcome type and the [`Harness::score_chunk`] path,
     /// over a [`ChunkEnv`] of testbed borrows.
-    fn run_baseline(&self, kind: SystemKind, dataset: &DatasetSpec, cfg: &RunConfig) -> Result<RunMetrics> {
+    fn run_baseline(
+        &self,
+        kind: SystemKind,
+        dataset: &DatasetSpec,
+        cfg: &RunConfig,
+    ) -> Result<RunMetrics> {
         let p = self.params.clone();
         let mut metrics = RunMetrics::new(kind.name(), dataset.name);
         let mut topo = Topology::new(cfg.wan_mbps, cfg.seed);
@@ -488,6 +575,71 @@ impl Harness {
     }
 }
 
+/// Form every cross-camera dispatch wave of a run up front. Wave
+/// membership and dispatch times are a pure function of the capture
+/// schedule (arrival offsets + chunk durations) — execution never feeds
+/// back into formation — so one formation pass serves every
+/// [`DispatchMode`] identically; only *when* a wave's stage events run
+/// differs. A camera with `max_chunks` set (churn) drops out after that
+/// many chunks.
+fn form_waves(
+    videos: &mut [Video],
+    arrivals: &[CameraArrival],
+    wave_batch: usize,
+    wave_wait: f64,
+) -> Vec<(f64, Vec<(usize, Chunk)>)> {
+    let pull = |videos: &mut [Video], i: usize| -> Option<Chunk> {
+        let chunk = videos[i].next_chunk()?;
+        match arrivals[i].max_chunks {
+            Some(m) if chunk.chunk_idx >= m => None, // camera dropped mid-run
+            _ => Some(chunk),
+        }
+    };
+    let mut next: Vec<Option<Chunk>> = (0..videos.len()).map(|i| pull(videos, i)).collect();
+    let mut batcher: DynamicBatcher<(usize, Chunk)> = DynamicBatcher::new(wave_batch, wave_wait);
+    let mut waves = Vec::new();
+    let mut clock = 0.0f64;
+    loop {
+        // earliest fully-captured chunk across all cameras (ties break
+        // toward the lower video id — min_by keeps the first minimum)
+        let pick = next
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                c.as_ref().map(|c| (i, arrivals[i].offset_s + c.t_capture + c.duration()))
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let horizon = pick.map(|(_, t)| t).unwrap_or(f64::INFINITY);
+        // a partial wave comes due when its oldest member ages out; emit
+        // every wave due before the next chunk finishes capturing
+        while let Some(due) = batcher.due_at() {
+            if due > horizon {
+                break;
+            }
+            // epsilon absorbs (oldest + wait) - oldest rounding
+            let Some(wave) = batcher.pop_batch(due + 1e-9) else { break };
+            clock = clock.max(due);
+            waves.push((due, wave));
+        }
+        let Some((vi, captured)) = pick else { break };
+        let chunk = next[vi].take().unwrap();
+        next[vi] = pull(videos, vi);
+        batcher.push((vi, chunk), captured);
+        clock = clock.max(captured);
+        // a full wave dispatches immediately
+        while batcher.len() >= wave_batch {
+            let Some(wave) = batcher.pop_batch(captured) else { break };
+            waves.push((captured, wave));
+        }
+    }
+    // defensive: the due-time loop drains everything at end of stream, but
+    // nothing may ever be left behind
+    for wave in batcher.flush_all(clock + wave_wait) {
+        waves.push((clock + wave_wait, wave));
+    }
+    waves
+}
+
 /// Mutable state of one sharded VPaaS run, bundled so the per-wave step
 /// can borrow the pieces disjointly.
 struct VpaasRun {
@@ -501,6 +653,43 @@ struct VpaasRun {
     monitor: GlobalMonitor,
     metrics: RunMetrics,
     global_chunk: u64,
+    /// Admitted chunks still outstanding per camera (index = video id);
+    /// hits zero when the camera's stream ends — the churn drop point.
+    remaining_chunks: Vec<u64>,
+}
+
+impl VpaasRun {
+    /// Borrow the run's testbed pieces disjointly as one [`StageCtx`] and
+    /// run `f` with it — the single place the ctx wiring (including the
+    /// per-shard LAN top-up) lives, shared by the wave-scoped and
+    /// streaming drivers.
+    fn with_ctx<T>(&mut self, f: impl FnOnce(&mut StageCtx) -> Result<T>) -> Result<T> {
+        let VpaasRun { topo, cloud, pool, annotator, coordinator, metrics, p, .. } = self;
+        topo.ensure_fog_lans(pool.len());
+        let mut ctx = StageCtx {
+            p: p.as_ref(),
+            coord: coordinator,
+            topo,
+            cloud,
+            fogs: pool.shards_mut(),
+            annotator,
+            metrics,
+        };
+        f(&mut ctx)
+    }
+
+    /// Mark one of `camera`'s chunks scored; once the camera's stream has
+    /// no admitted chunks left, retire its HITL session immediately —
+    /// sub-batch leftovers never trained, so dropping them changes
+    /// nothing, and a churned camera must not leave an orphaned
+    /// [`CameraSession`](crate::hitl::CameraSession) behind.
+    fn note_chunk_done(&mut self, camera: usize) {
+        let left = &mut self.remaining_chunks[camera];
+        *left = left.saturating_sub(1);
+        if *left == 0 && self.coordinator.retire_session(camera).is_some() {
+            self.metrics.sessions_retired += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -515,6 +704,36 @@ mod tests {
     }
 
     #[test]
+    fn form_waves_is_pure_and_honors_churn_caps() {
+        let p = SimParams::load().unwrap();
+        let mut ds = datasets::drone(0.1);
+        ds.videos.truncate(3);
+        let arrivals = WorkloadProfile::Uniform.plan(3, 1);
+        let chunks_of = |waves: &[(f64, Vec<(usize, Chunk)>)], cam: usize| -> usize {
+            waves.iter().flat_map(|(_, w)| w).filter(|(vi, _)| *vi == cam).count()
+        };
+        let waves_a = form_waves(&mut ds.make_videos(&p), &arrivals, 8, 0.25);
+        let waves_b = form_waves(&mut ds.make_videos(&p), &arrivals, 8, 0.25);
+        // pure: identical membership and dispatch times on re-formation
+        assert_eq!(waves_a.len(), waves_b.len());
+        for ((ta, wa), (tb, wb)) in waves_a.iter().zip(&waves_b) {
+            assert_eq!(ta.to_bits(), tb.to_bits());
+            let ids = |w: &[(usize, Chunk)]| {
+                w.iter().map(|(vi, c)| (*vi, c.chunk_idx)).collect::<Vec<_>>()
+            };
+            assert_eq!(ids(wa), ids(wb));
+        }
+        assert!(chunks_of(&waves_a, 1) > 1, "camera 1 should stream several chunks");
+        // churn: camera 1 drops after one chunk; nobody else is affected
+        let mut capped = arrivals.clone();
+        capped[1].max_chunks = Some(1);
+        let waves_c = form_waves(&mut ds.make_videos(&p), &capped, 8, 0.25);
+        assert_eq!(chunks_of(&waves_c, 1), 1, "dropped camera kept streaming");
+        assert_eq!(chunks_of(&waves_c, 0), chunks_of(&waves_a, 0));
+        assert_eq!(chunks_of(&waves_c, 2), chunks_of(&waves_a, 2));
+    }
+
+    #[test]
     fn vpaas_beats_glimpse_on_accuracy_and_mpeg_on_bandwidth() {
         let h = Harness::new().unwrap();
         let cfg = RunConfig { golden: false, ..Default::default() };
@@ -522,7 +741,12 @@ mod tests {
         let vpaas = h.run(SystemKind::Vpaas, &ds, &cfg).unwrap();
         let mpeg = h.run(SystemKind::Mpeg, &ds, &cfg).unwrap();
         let glimpse = h.run(SystemKind::Glimpse, &ds, &cfg).unwrap();
-        assert!(vpaas.f1_true.f1() > glimpse.f1_true.f1(), "vpaas {} vs glimpse {}", vpaas.f1_true.f1(), glimpse.f1_true.f1());
+        assert!(
+            vpaas.f1_true.f1() > glimpse.f1_true.f1(),
+            "vpaas {} vs glimpse {}",
+            vpaas.f1_true.f1(),
+            glimpse.f1_true.f1()
+        );
         assert!(vpaas.bandwidth.bytes < 0.5 * mpeg.bandwidth.bytes);
         assert!(vpaas.f1_true.f1() > 0.6, "vpaas f1 {}", vpaas.f1_true.f1());
         assert!(vpaas.fog_regions > 0, "no regions reached the fog");

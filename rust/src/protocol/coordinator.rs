@@ -13,6 +13,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::hitl::collector::LabeledCrop;
 use crate::hitl::{CameraSession, IncrementalLearner};
 use crate::metrics::f1::PredBox;
 use crate::protocol::ProtocolConfig;
@@ -63,9 +64,38 @@ impl Coordinator {
         self.sessions.entry(camera).or_insert_with(|| CameraSession::new(camera))
     }
 
+    /// Take a full training batch from `camera`'s session if it has one —
+    /// without creating a session for a camera that never buffered a
+    /// label (sessions exist only for label-contributing cameras, which
+    /// is what [`crate::metrics::meters::RunMetrics::sessions_retired`]
+    /// counts).
+    pub fn take_batch(&mut self, camera: usize) -> Option<Vec<LabeledCrop>> {
+        self.sessions.get_mut(&camera).and_then(CameraSession::take_batch)
+    }
+
     /// All sessions created so far, in camera order.
     pub fn sessions(&self) -> impl Iterator<Item = &CameraSession> {
         self.sessions.values()
+    }
+
+    /// Sessions currently held (cameras that have contributed HITL state).
+    pub fn active_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Retire one camera's session (the camera left the fleet). Any
+    /// sub-batch leftover labels are dropped — they never trained, so
+    /// retiring cannot change what the learner saw.
+    pub fn retire_session(&mut self, camera: usize) -> Option<CameraSession> {
+        self.sessions.remove(&camera)
+    }
+
+    /// Retire every session at end of run so no camera's state outlives
+    /// its stream; returns how many sessions were retired.
+    pub fn retire_all(&mut self) -> u64 {
+        let n = self.sessions.len() as u64;
+        self.sessions.clear();
+        n
     }
 }
 
@@ -88,5 +118,16 @@ mod tests {
         assert_eq!(c.session_mut(3).pending(), 1);
         assert_eq!(c.session_mut(7).pending(), 1);
         assert_eq!(c.learner.updates, 0);
+        // draining a camera that never buffered a label must not create a
+        // session for it
+        assert!(c.take_batch(99).is_none());
+        assert_eq!(c.active_sessions(), 2);
+        // a churned camera's session retires with its leftovers
+        let gone = c.retire_session(3).expect("session 3 existed");
+        assert_eq!(gone.pending(), 1);
+        assert_eq!(c.active_sessions(), 1);
+        assert!(c.retire_session(3).is_none());
+        assert_eq!(c.retire_all(), 1);
+        assert_eq!(c.active_sessions(), 0);
     }
 }

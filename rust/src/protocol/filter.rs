@@ -125,7 +125,8 @@ mod tests {
                 .map(|_| {
                     let x = g.usize_in(0, 12);
                     let s = g.usize_in(1, 4);
-                    region(x.min(12), s, g.usize_in(0, 7), g.f64_range(0.0, 1.0), g.f64_range(0.0, 1.0))
+                    let (c1, c2) = (g.f64_range(0.0, 1.0), g.f64_range(0.0, 1.0));
+                    region(x.min(12), s, g.usize_in(0, 7), c1, c2)
                 })
                 .collect();
             let (conf, unc) = split_regions(&regions, 0.7, &cfg(), 16);

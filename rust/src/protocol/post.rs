@@ -343,7 +343,8 @@ mod tests {
                 ));
             }
             for r in &regions {
-                if r.rect.x1 >= grid || r.rect.y1 >= grid || r.rect.x0 > r.rect.x1 || r.rect.y0 > r.rect.y1 {
+                let rect = &r.rect;
+                if rect.x1 >= grid || rect.y1 >= grid || rect.x0 > rect.x1 || rect.y0 > rect.y1 {
                     return Err(format!("region out of frame bounds: {:?}", r.rect));
                 }
             }

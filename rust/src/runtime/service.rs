@@ -16,19 +16,9 @@ use crate::interchange::Tensor;
 use crate::runtime::engine::{Engine, ModelStats};
 
 enum Request {
-    Infer {
-        model: String,
-        inputs: Vec<Tensor>,
-        reply: mpsc::SyncSender<Result<Vec<Tensor>>>,
-    },
-    Preload {
-        model: String,
-        reply: mpsc::SyncSender<Result<()>>,
-    },
-    Stats {
-        model: String,
-        reply: mpsc::SyncSender<ModelStats>,
-    },
+    Infer { model: String, inputs: Vec<Tensor>, reply: mpsc::SyncSender<Result<Vec<Tensor>>> },
+    Preload { model: String, reply: mpsc::SyncSender<Result<()>> },
+    Stats { model: String, reply: mpsc::SyncSender<ModelStats> },
     Shutdown,
 }
 

@@ -54,6 +54,11 @@ pub struct VideoApp {
     topo: Topology,
     annotator: Annotator,
     policy_name: String,
+    /// Stage interleaving for the per-chunk executor (`[app] dispatch`:
+    /// `event` or `sequential`; run-scoped `streaming` is rejected at
+    /// config time because this app executes one chunk at a time — use
+    /// [`crate::pipeline::RunConfig`] for run-scoped streaming).
+    dispatch: DispatchMode,
     chunks_processed: u64,
 }
 
@@ -72,6 +77,16 @@ impl VideoApp {
         // one deployment seed drives every RNG stream (links, annotator)
         let seed = cfg.usize_or("app", "seed", 0xA99)? as u64;
         let policy_name = cfg.str_or("app", "policy", "fog_when_disconnected").to_string();
+        let dispatch_name = cfg.str_or("app", "dispatch", "event").to_string();
+        let dispatch = DispatchMode::parse(&dispatch_name)
+            .ok_or_else(|| anyhow!("config [app] dispatch: unknown mode {dispatch_name:?}"))?;
+        if dispatch == DispatchMode::Streaming {
+            return Err(anyhow!(
+                "config [app] dispatch: `streaming` is run-scoped, but VideoApp executes \
+                 one chunk at a time — drive a run-scoped stream through \
+                 pipeline::RunConfig::dispatch instead"
+            ));
+        }
         let handle = svc.handle();
         let learner = IncrementalLearner::new(
             handle.clone(),
@@ -83,12 +98,16 @@ impl VideoApp {
         coordinator.hitl_enabled = cfg.bool_or("hitl", "enabled", true)?;
         let cloud = CloudServer::new(
             handle.clone(),
-            CloudConfig { autoscale: cfg.bool_or("cloud", "autoscale", false)?, ..Default::default() },
+            CloudConfig {
+                autoscale: cfg.bool_or("cloud", "autoscale", false)?,
+                ..Default::default()
+            },
             params.grid,
             params.num_classes,
             params.feat_dim,
         );
-        let fog = FogNode::new(handle, params.cls_last0.clone(), params.feat_dim, params.num_classes);
+        let fog =
+            FogNode::new(handle, params.cls_last0.clone(), params.feat_dim, params.num_classes);
         let annotator = Annotator::new(AnnotatorConfig {
             budget_frac: budget,
             num_classes: params.num_classes,
@@ -111,6 +130,7 @@ impl VideoApp {
             topo: Topology::new(wan, seed),
             annotator,
             policy_name,
+            dispatch,
             chunks_processed: 0,
         })
     }
@@ -137,7 +157,7 @@ impl VideoApp {
     /// Process one chunk under the configured policy, through the
     /// event-driven executor built from this app's function registry.
     pub fn process_chunk(&mut self, chunk: &Chunk, t_offset: f64) -> Result<ChunkOutcome> {
-        let executor = Executor::from_registry(&self.functions, DispatchMode::EventDriven)?;
+        let executor = Executor::from_registry(&self.functions, self.dispatch)?;
         let p = self.params.clone();
         // environmental-time drift: the world drifts over the deployment's
         // whole stream, not per camera — use the global chunk counter
@@ -183,11 +203,12 @@ impl VideoApp {
 mod tests {
     use super::*;
     use crate::serverless::registry::StageBody;
-    use crate::sim::video::{Video, scene::SceneConfig};
+    use crate::sim::video::{scene::SceneConfig, Video};
     use std::sync::Arc;
 
     fn app() -> VideoApp {
-        let cfg = Config::parse("[app]\npolicy = fog_when_disconnected\n[hitl]\nbudget = 0.3\n").unwrap();
+        let cfg =
+            Config::parse("[app]\npolicy = fog_when_disconnected\n[hitl]\nbudget = 0.3\n").unwrap();
         let mut app = VideoApp::from_config(&cfg).unwrap();
         app.deploy_standard().unwrap();
         app
@@ -236,6 +257,20 @@ mod tests {
     fn bad_policy_in_config_is_rejected() {
         let cfg = Config::parse("[app]\npolicy = nonexistent\n").unwrap();
         assert!(VideoApp::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn dispatch_mode_is_config_selectable_and_validated() {
+        let cfg = Config::parse("[app]\ndispatch = sequential\n").unwrap();
+        let a = VideoApp::from_config(&cfg).unwrap();
+        assert_eq!(a.dispatch, DispatchMode::Sequential);
+        // run-scoped streaming makes no sense for a chunk-at-a-time app:
+        // rejected loudly instead of silently doing nothing
+        let cfg = Config::parse("[app]\ndispatch = streaming\n").unwrap();
+        let err = VideoApp::from_config(&cfg).unwrap_err();
+        assert!(err.to_string().contains("run-scoped"), "{err}");
+        let bad = Config::parse("[app]\ndispatch = warp\n").unwrap();
+        assert!(VideoApp::from_config(&bad).is_err());
     }
 
     #[test]

@@ -18,6 +18,23 @@
 //! [`DispatchMode::Sequential`] preserves the old one-chunk-at-a-time
 //! acquisition order for comparison; both modes compute identical labels.
 //!
+//! ## Run-scoped streaming
+//!
+//! [`DispatchMode::Streaming`] promotes the queue from wave-scoped to
+//! run-scoped: the pipeline *admits* each dispatch wave into one
+//! [`StreamingSession`] as its capture time arrives, so consecutive waves
+//! overlap — wave *w+1*'s client/WAN uplink and cloud detect phases
+//! interleave with wave *w*'s GPU and fog classify phases instead of
+//! idling behind the wave boundary. The HITL wave barrier survives as an
+//! explicit [`Stage::Barrier`] event: a wave's barrier fires once all of
+//! its jobs complete, barriers fire strictly in wave order, and a later
+//! wave's [`Stage::FogClassify`] events are *gated* until every earlier
+//! barrier has fired (classification must see exactly the incremental-
+//! learning weights those barriers train). Annotator offers, per-camera
+//! [`CameraSession`](crate::hitl::CameraSession) training batches and
+//! metric accumulation all happen at the barrier in wave-input order, so
+//! label content is bit-identical across all three dispatch modes.
+//!
 //! ## Functions are the unit of execution
 //!
 //! Each executable stage resolves its body from the registry at
@@ -75,9 +92,15 @@ pub enum Stage {
     FogClassify,
     /// Fog lite-detector fallback (WAN outage or a fog-routed chunk).
     FogFallback,
+    /// End-of-wave barrier in a run-scoped [`StreamingSession`]: HITL
+    /// label collection and incremental training for one wave, fired in
+    /// wave order once all of the wave's jobs complete. The event's `job`
+    /// field carries the *wave* index.
+    Barrier,
 }
 
-/// How stage events are interleaved across the chunks of a wave.
+/// How stage events are interleaved across the chunks of a wave (and, for
+/// [`DispatchMode::Streaming`], across consecutive waves).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum DispatchMode {
     /// Pop the globally earliest event: WAN and GPU phases of different
@@ -87,6 +110,30 @@ pub enum DispatchMode {
     /// Drain each chunk's events before starting the next (the seed
     /// system's per-chunk state machine), for A/B comparison.
     Sequential,
+    /// One run-scoped queue across every dispatch wave: waves overlap and
+    /// the HITL barrier becomes an explicit [`Stage::Barrier`] event (see
+    /// [`StreamingSession`]). Within a single wave this is identical to
+    /// [`DispatchMode::EventDriven`].
+    Streaming,
+}
+
+impl DispatchMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchMode::EventDriven => "event",
+            DispatchMode::Sequential => "sequential",
+            DispatchMode::Streaming => "streaming",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DispatchMode> {
+        match s {
+            "event" | "event-driven" => Some(DispatchMode::EventDriven),
+            "sequential" => Some(DispatchMode::Sequential),
+            "streaming" => Some(DispatchMode::Streaming),
+            _ => None,
+        }
+    }
 }
 
 /// One chunk's dispatch ticket through the executor.
@@ -283,7 +330,9 @@ impl Executor {
         let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
         let mut seq = 0u64;
         match self.mode {
-            DispatchMode::EventDriven => {
+            // a run-scoped streaming queue restricted to one wave is the
+            // in-wave event queue
+            DispatchMode::EventDriven | DispatchMode::Streaming => {
                 for (i, s) in states.iter().enumerate() {
                     let t0 = s.job.dispatch_at.max(s.job.captured());
                     heap.push(Reverse(Event { t: t0, seq, job: i, stage: Stage::ClientUplink }));
@@ -322,7 +371,7 @@ impl Executor {
         ctx: &mut StageCtx,
     ) -> Result<()> {
         while let Some(Reverse(ev)) = heap.pop() {
-            if let Some((t, stage)) = self.step(ev, states, ctx)? {
+            if let Some((t, stage)) = self.step(ev.t, ev.stage, &mut states[ev.job], ctx)? {
                 heap.push(Reverse(Event { t, seq: *seq, job: ev.job, stage }));
                 *seq += 1;
             }
@@ -333,22 +382,22 @@ impl Executor {
     /// Execute one stage event; returns the job's next event, if any.
     fn step(
         &self,
-        ev: Event,
-        states: &mut [JobState],
+        at: f64,
+        stage: Stage,
+        s: &mut JobState,
         ctx: &mut StageCtx,
     ) -> Result<Option<(f64, Stage)>> {
-        let s = &mut states[ev.job];
         let n = s.job.chunk.frames.len();
-        match ev.stage {
+        match stage {
             Stage::ClientUplink => {
                 let hi_bytes = n as f64 * codec::frame_bytes(Quality::ORIGINAL, ctx.p);
                 let at_fog = shard_lan(ctx.topo, s.job.shard)
-                    .transfer(hi_bytes, ev.t)
+                    .transfer(hi_bytes, at)
                     .expect("LAN has no outage schedule");
                 Ok(Some((at_fog, Stage::QualityControl)))
             }
             Stage::QualityControl => {
-                let qc_done = ctx.fogs[s.job.shard].quality_control(n, ev.t);
+                let qc_done = ctx.fogs[s.job.shard].quality_control(n, at);
                 s.quality = (self.encode)(&ctx.coord.cfg);
                 match s.job.route {
                     Route::Cloud => Ok(Some((qc_done, Stage::WanUplink))),
@@ -357,7 +406,7 @@ impl Executor {
             }
             Stage::WanUplink => {
                 let low_bytes = n as f64 * codec::frame_bytes(s.quality, ctx.p);
-                match ctx.topo.wan_up.transfer(low_bytes, ev.t) {
+                match ctx.topo.wan_up.transfer(low_bytes, at) {
                     Ok(at_cloud) => {
                         s.wan_bytes += low_bytes;
                         Ok(Some((at_cloud, Stage::CloudDetect)))
@@ -373,7 +422,7 @@ impl Executor {
                     .iter()
                     .map(|f| render_frame(f, s.quality, s.job.phi, ctx.p))
                     .collect();
-                let (heads, timing) = (self.detect)(ctx.cloud, &frames, ev.t)?;
+                let (heads, timing) = (self.detect)(ctx.cloud, &frames, at)?;
                 let mut per_frame: Vec<Vec<PredBox>> = Vec::with_capacity(n);
                 let mut uncertain: Vec<Vec<PredBox>> = Vec::with_capacity(n);
                 let mut total = 0usize;
@@ -394,7 +443,7 @@ impl Executor {
             }
             Stage::Downlink => {
                 let fb_bytes = codec::feedback_bytes(s.total_regions);
-                match ctx.topo.wan_down.transfer(fb_bytes, ev.t) {
+                match ctx.topo.wan_down.transfer(fb_bytes, at) {
                     Ok(at_fog) => {
                         s.wan_bytes += fb_bytes;
                         Ok(Some((at_fog, Stage::FogClassify)))
@@ -425,7 +474,7 @@ impl Executor {
                     }
                 }
                 let (results, feats, cls_done) =
-                    (self.classify)(&mut ctx.fogs[s.job.shard], &crops, ev.t)?;
+                    (self.classify)(&mut ctx.fogs[s.job.shard], &crops, at)?;
                 ctx.metrics.fog_regions += crops.len() as u64;
                 let use_ensemble = ctx.coord.use_ensemble;
                 for (((fi, region), res), f) in crop_refs.iter().zip(&results).zip(&feats) {
@@ -471,7 +520,7 @@ impl Executor {
                     .map(|f| render_frame(f, Quality::ORIGINAL, s.job.phi, ctx.p))
                     .collect();
                 let (heads, done) =
-                    ctx.fogs[s.job.shard].fallback_detect(&hi_frames, ev.t, ctx.p.grid)?;
+                    ctx.fogs[s.job.shard].fallback_detect(&hi_frames, at, ctx.p.grid)?;
                 let theta_loc = ctx.coord.cfg.filter.theta_loc;
                 // single-stage fallback: take argmax labels directly
                 s.per_frame =
@@ -485,6 +534,10 @@ impl Executor {
                 s.fallback = true;
                 Ok(None)
             }
+            Stage::Barrier => unreachable!(
+                "Barrier events exist only inside a StreamingSession and are \
+                 handled by stream_step, never by the per-job step"
+            ),
         }
     }
 
@@ -494,56 +547,261 @@ impl Executor {
     /// every fog shard, and record freshness latency.
     fn finish_wave(&self, states: &mut [JobState], ctx: &mut StageCtx) -> Result<()> {
         for s in states.iter_mut() {
-            if ctx.coord.hitl_enabled && !s.fallback {
-                for ((fi, region), f) in s.crop_refs.iter().zip(&s.feats) {
-                    // the human looks at the crop; their label is the
-                    // dominant true object under the region (skip
-                    // pure-background crops)
-                    let truth = &s.job.chunk.frames[*fi];
-                    let gt = truth
-                        .objects
-                        .iter()
-                        .map(|o| (o, region.rect.iou(&o.gt)))
-                        .filter(|(_, iou)| *iou >= 0.2)
-                        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-                    if let Some((obj, _)) = gt {
-                        if let Some(label) = ctx.annotator.offer(obj.gt.class) {
-                            ctx.metrics.labels_used += 1;
-                            ctx.coord.session_mut(s.job.camera()).submit(f.clone(), label.class);
-                        }
-                    }
-                }
-                let camera = s.job.camera();
-                while let Some(batch) = ctx.coord.session_mut(camera).take_batch() {
-                    let w = (self.train)(&mut ctx.coord.learner, &batch)?;
-                    for fog in ctx.fogs.iter_mut() {
-                        fog.set_last_layer(w.clone());
-                    }
-                    if ctx.coord.colocate_training {
-                        ctx.cloud.train_burst(s.cls_done, 1);
-                    }
-                }
-            }
-            ctx.metrics.bandwidth.add(s.wan_bytes);
-            for i in 0..s.job.chunk.frames.len() {
-                ctx.metrics
-                    .latency
-                    .record(s.done - (s.job.t_offset + s.job.chunk.frame_time(i)));
-            }
-            ctx.metrics.chunks += 1;
+            self.finish_job(s, ctx)?;
         }
         Ok(())
+    }
+
+    /// One job's share of the wave barrier. Called in wave-input order in
+    /// every dispatch mode so label content and metric accumulation order
+    /// are mode-invariant.
+    fn finish_job(&self, s: &mut JobState, ctx: &mut StageCtx) -> Result<()> {
+        if ctx.coord.hitl_enabled && !s.fallback {
+            for ((fi, region), f) in s.crop_refs.iter().zip(&s.feats) {
+                // the human looks at the crop; their label is the dominant
+                // true object under the region (skip pure-background crops)
+                let truth = &s.job.chunk.frames[*fi];
+                let gt = truth
+                    .objects
+                    .iter()
+                    .map(|o| (o, region.rect.iou(&o.gt)))
+                    .filter(|(_, iou)| *iou >= 0.2)
+                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                if let Some((obj, _)) = gt {
+                    if let Some(label) = ctx.annotator.offer(obj.gt.class) {
+                        ctx.metrics.labels_used += 1;
+                        ctx.coord.session_mut(s.job.camera()).submit(f.clone(), label.class);
+                    }
+                }
+            }
+            let camera = s.job.camera();
+            while let Some(batch) = ctx.coord.take_batch(camera) {
+                let w = (self.train)(&mut ctx.coord.learner, &batch)?;
+                for fog in ctx.fogs.iter_mut() {
+                    fog.set_last_layer(w.clone());
+                }
+                if ctx.coord.colocate_training {
+                    ctx.cloud.train_burst(s.cls_done, 1);
+                }
+            }
+        }
+        ctx.metrics.bandwidth.add(s.wan_bytes);
+        for i in 0..s.job.chunk.frames.len() {
+            ctx.metrics
+                .latency
+                .record(s.done - (s.job.t_offset + s.job.chunk.frame_time(i)));
+        }
+        ctx.metrics.chunks += 1;
+        Ok(())
+    }
+
+    // ------------------------------------------------------- streaming API
+
+    /// Open a run-scoped streaming session (one global event queue that
+    /// every admitted wave shares).
+    pub fn start_stream(&self) -> StreamingSession {
+        StreamingSession {
+            states: Vec::new(),
+            job_wave: Vec::new(),
+            waves: Vec::new(),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            next_barrier: 0,
+            completed: Vec::new(),
+        }
+    }
+
+    /// Admit one dispatch wave into the session: every member's
+    /// `ClientUplink` enters the global queue at its dispatch time, and
+    /// the wave gets a [`Stage::Barrier`] that will fire — in wave order —
+    /// once all members complete. Returns the wave index.
+    pub fn admit_wave(&self, sess: &mut StreamingSession, jobs: Vec<ChunkJob>) -> usize {
+        assert!(!jobs.is_empty(), "cannot admit an empty wave");
+        let wave = sess.waves.len();
+        let mut members = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let t0 = job.dispatch_at.max(job.captured());
+            let idx = sess.states.len();
+            sess.states.push(Some(JobState::new(job)));
+            sess.job_wave.push(wave);
+            sess.push_event(t0, idx, Stage::ClientUplink);
+            members.push(idx);
+        }
+        sess.waves.push(WaveState {
+            remaining: members.len(),
+            jobs: members,
+            barrier_t: 0.0,
+            gated: Vec::new(),
+        });
+        wave
+    }
+
+    /// Process every queued event with `t <= horizon` (the next wave's
+    /// admission time, typically). Returns the jobs of every wave whose
+    /// barrier fired, flattened in (wave, wave-input) order — the order
+    /// the wave-scoped modes hand outcomes back in.
+    pub fn run_until(
+        &self,
+        sess: &mut StreamingSession,
+        horizon: f64,
+        ctx: &mut StageCtx,
+    ) -> Result<Vec<(ChunkJob, ChunkOutcome)>> {
+        while let Some(&Reverse(ev)) = sess.heap.peek() {
+            if ev.t > horizon {
+                break;
+            }
+            sess.heap.pop();
+            self.stream_step(sess, ev, ctx)?;
+        }
+        Ok(std::mem::take(&mut sess.completed))
+    }
+
+    /// Drain the session to the end of the stream; every barrier fires.
+    pub fn finish_stream(
+        &self,
+        sess: &mut StreamingSession,
+        ctx: &mut StageCtx,
+    ) -> Result<Vec<(ChunkJob, ChunkOutcome)>> {
+        let out = self.run_until(sess, f64::INFINITY, ctx)?;
+        debug_assert_eq!(sess.next_barrier, sess.waves.len(), "unfired barrier left behind");
+        debug_assert!(sess.states.iter().all(Option::is_none), "orphaned in-flight job");
+        Ok(out)
+    }
+
+    /// One event of the run-scoped queue: a protocol stage (with
+    /// [`Stage::FogClassify`] gated on every earlier wave's barrier) or a
+    /// [`Stage::Barrier`] itself.
+    fn stream_step(
+        &self,
+        sess: &mut StreamingSession,
+        ev: Event,
+        ctx: &mut StageCtx,
+    ) -> Result<()> {
+        if ev.stage == Stage::Barrier {
+            return self.fire_barrier(sess, ev.job, ev.t, ctx);
+        }
+        let wave = sess.job_wave[ev.job];
+        if ev.stage == Stage::FogClassify && wave > sess.next_barrier {
+            // Classification reads the IL-updated classifier, so it must
+            // wait for every earlier wave's training barrier; the event is
+            // parked and re-queued when its gate opens.
+            sess.waves[wave].gated.push((ev.t, ev.job));
+            return Ok(());
+        }
+        let s = sess.states[ev.job].as_mut().expect("event for a completed job");
+        match self.step(ev.t, ev.stage, s, ctx)? {
+            Some((t, stage)) => sess.push_event(t, ev.job, stage),
+            None => {
+                let done = s.done;
+                let w = &mut sess.waves[wave];
+                w.remaining -= 1;
+                w.barrier_t = w.barrier_t.max(done);
+                if w.remaining == 0 && wave == sess.next_barrier {
+                    let at = w.barrier_t;
+                    sess.push_event(at, wave, Stage::Barrier);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fire wave `wave`'s barrier: run the HITL/metrics barrier for its
+    /// jobs in wave-input order, open the next wave's classify gate, and
+    /// cascade if that wave already finished its serving stages.
+    fn fire_barrier(
+        &self,
+        sess: &mut StreamingSession,
+        wave: usize,
+        at: f64,
+        ctx: &mut StageCtx,
+    ) -> Result<()> {
+        debug_assert_eq!(wave, sess.next_barrier, "barriers must fire in wave order");
+        let members = sess.waves[wave].jobs.clone();
+        for ji in members {
+            let mut s = sess.states[ji].take().expect("barrier for an in-flight job");
+            self.finish_job(&mut s, ctx)?;
+            sess.completed.push(s.into_pair());
+        }
+        sess.next_barrier += 1;
+        let next = sess.next_barrier;
+        if next < sess.waves.len() {
+            // release classify events parked on this barrier — never
+            // before the barrier itself (the weights they must see)
+            let gated = std::mem::take(&mut sess.waves[next].gated);
+            for (t, job) in gated {
+                sess.push_event(t.max(at), job, Stage::FogClassify);
+            }
+            if sess.waves[next].remaining == 0 {
+                let t = sess.waves[next].barrier_t.max(at);
+                sess.push_event(t, next, Stage::Barrier);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Bookkeeping for one admitted wave inside a [`StreamingSession`].
+#[derive(Debug)]
+struct WaveState {
+    /// Member job indices, in wave-input (capture) order.
+    jobs: Vec<usize>,
+    /// Members that have not finished their serving stages yet.
+    remaining: usize,
+    /// Latest member completion time — when the barrier fires.
+    barrier_t: f64,
+    /// `FogClassify` events parked until every earlier barrier fires.
+    gated: Vec<(f64, usize)>,
+}
+
+/// A run-scoped streaming execution: one virtual-clock event queue shared
+/// by every admitted dispatch wave, so waves overlap while each wave's
+/// HITL barrier still fires as an explicit in-order [`Stage::Barrier`]
+/// event. Built by [`Executor::start_stream`]; driven by
+/// [`Executor::admit_wave`] / [`Executor::run_until`] /
+/// [`Executor::finish_stream`].
+pub struct StreamingSession {
+    /// In-flight job state; `None` once the job's barrier has fired.
+    states: Vec<Option<JobState>>,
+    /// Wave index of each admitted job.
+    job_wave: Vec<usize>,
+    waves: Vec<WaveState>,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    /// First wave whose barrier has not fired yet.
+    next_barrier: usize,
+    /// Finished jobs awaiting pickup, in (wave, wave-input) order.
+    completed: Vec<(ChunkJob, ChunkOutcome)>,
+}
+
+impl StreamingSession {
+    fn push_event(&mut self, t: f64, job: usize, stage: Stage) {
+        self.heap.push(Reverse(Event { t, seq: self.seq, job, stage }));
+        self.seq += 1;
+    }
+
+    /// Jobs admitted but not yet released by their barrier.
+    pub fn in_flight(&self) -> usize {
+        self.states.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// One more than the highest fog shard index any in-flight job
+    /// targets — the floor below which the provisioner must not shrink
+    /// the pool while this stream is live (a retired shard would strand
+    /// the job's queued stage events).
+    pub fn min_live_shards(&self) -> usize {
+        self.states
+            .iter()
+            .flatten()
+            .map(|s| s.job.shard + 1)
+            .max()
+            .unwrap_or(1)
     }
 }
 
 /// The client→fog LAN serving `shard`: its own segment when the topology
 /// is sharded, the deployment LAN otherwise.
 fn shard_lan(topo: &mut Topology, shard: usize) -> &mut Link {
-    if shard < topo.fog_lans.len() {
-        &mut topo.fog_lans[shard]
-    } else {
-        &mut topo.lan
-    }
+    if shard < topo.fog_lans.len() { &mut topo.fog_lans[shard] } else { &mut topo.lan }
 }
 
 #[cfg(test)]
@@ -694,5 +952,64 @@ mod tests {
             )
         };
         assert_eq!(run(DispatchMode::EventDriven), run(DispatchMode::Sequential));
+    }
+
+    /// Content fingerprint of a run: per-chunk label counts plus the HITL
+    /// label/traffic counters that must be dispatch-mode invariant.
+    fn fingerprint(out: &[(ChunkJob, ChunkOutcome)], rig: &Rig) -> (Vec<usize>, u64, u64) {
+        (
+            out.iter()
+                .map(|(_, o)| o.per_frame.iter().map(Vec::len).sum::<usize>())
+                .collect(),
+            rig.metrics.labels_used,
+            rig.metrics.bandwidth.bytes.to_bits(),
+        )
+    }
+
+    #[test]
+    fn streaming_session_matches_wave_barrier_content() {
+        let waves = |i: u64| -> Vec<ChunkJob> {
+            (0..2)
+                .map(|j| ChunkJob::new(chunk(20 + 2 * i + j), 0.0, (2 * i + j) as f64 * 0.2))
+                .collect()
+        };
+        // (a) wave-scoped: two successive run_wave calls
+        let mut rig_a = Rig::new();
+        let ex = executor(DispatchMode::EventDriven);
+        let mut out_a = ex.run_wave(waves(0), &mut rig_a.ctx()).unwrap();
+        out_a.extend(ex.run_wave(waves(1), &mut rig_a.ctx()).unwrap());
+        // (b) run-scoped: both waves admitted into one streaming session
+        let mut rig_b = Rig::new();
+        let ex_s = executor(DispatchMode::Streaming);
+        let mut sess = ex_s.start_stream();
+        ex_s.admit_wave(&mut sess, waves(0));
+        // pump to the second wave's admission horizon, then admit it
+        let horizon = waves(1)[0].dispatch_at;
+        let mut out_b = ex_s.run_until(&mut sess, horizon, &mut rig_b.ctx()).unwrap();
+        ex_s.admit_wave(&mut sess, waves(1));
+        out_b.extend(ex_s.finish_stream(&mut sess, &mut rig_b.ctx()).unwrap());
+        assert_eq!(out_a.len(), 4);
+        assert_eq!(out_b.len(), 4);
+        // the per-chunk label-count vector is order-sensitive, so this
+        // also checks outcomes return in (wave, wave-input) order
+        assert_eq!(fingerprint(&out_a, &rig_a), fingerprint(&out_b, &rig_b));
+    }
+
+    #[test]
+    fn streaming_barriers_fire_in_wave_order_and_leave_nothing_in_flight() {
+        let mut rig = Rig::new();
+        let ex = executor(DispatchMode::Streaming);
+        let mut sess = ex.start_stream();
+        for w in 0..3u64 {
+            let jobs: Vec<ChunkJob> =
+                (0..2).map(|j| ChunkJob::new(chunk(40 + 2 * w + j), 0.0, w as f64 * 0.3)).collect();
+            ex.admit_wave(&mut sess, jobs);
+        }
+        assert_eq!(sess.in_flight(), 6);
+        let out = ex.finish_stream(&mut sess, &mut rig.ctx()).unwrap();
+        assert_eq!(out.len(), 6);
+        assert_eq!(sess.in_flight(), 0);
+        assert_eq!(rig.metrics.chunks, 6);
+        assert!(sess.min_live_shards() >= 1, "empty session still reports a shard floor");
     }
 }

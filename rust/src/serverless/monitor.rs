@@ -29,11 +29,7 @@ impl Track {
             .filter(|&&(t, _)| t >= from && t < to)
             .map(|&(_, v)| v)
             .collect();
-        if vals.is_empty() {
-            None
-        } else {
-            Some(vals.iter().sum::<f64>() / vals.len() as f64)
-        }
+        if vals.is_empty() { None } else { Some(vals.iter().sum::<f64>() / vals.len() as f64) }
     }
 }
 

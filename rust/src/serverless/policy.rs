@@ -37,11 +37,7 @@ pub fn always_cloud(_: PolicyInput) -> Route {
 }
 
 pub fn fog_when_disconnected(i: PolicyInput) -> Route {
-    if i.wan_up {
-        Route::Cloud
-    } else {
-        Route::Fog
-    }
+    if i.wan_up { Route::Cloud } else { Route::Fog }
 }
 
 pub fn latency_aware(i: PolicyInput) -> Route {

@@ -43,8 +43,9 @@ pub enum FunctionKind {
 pub type EncodeFn = Arc<dyn Fn(&ProtocolConfig) -> Quality + Send + Sync>;
 /// Detection stage: run a detector over rendered frames on the cloud GPU
 /// pool at a virtual arrival time.
-pub type DetectFn =
-    Arc<dyn Fn(&mut CloudServer, &[Tensor], f64) -> Result<(Vec<HeadsOwned>, ExecTiming)> + Send + Sync>;
+pub type DetectFn = Arc<
+    dyn Fn(&mut CloudServer, &[Tensor], f64) -> Result<(Vec<HeadsOwned>, ExecTiming)> + Send + Sync,
+>;
 /// Crop-classification stage on a fog node (results, features, done time).
 pub type ClassifyFn = Arc<
     dyn Fn(&mut FogNode, &[Vec<f32>], f64) -> Result<(Vec<CropResult>, Vec<Vec<f32>>, f64)>

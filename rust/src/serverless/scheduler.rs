@@ -23,6 +23,14 @@
 //! when it fills or ages past `wave_wait_s`, and each member chunk's
 //! shard LAN is held until that moment — so the wave wait is real
 //! virtual-clock latency and shared links/GPUs see grouped arrivals.
+//!
+//! Shard backlog is observable **mid-stream**: under
+//! [`DispatchMode::Streaming`](crate::serverless::executor::DispatchMode)
+//! earlier waves are still in flight when the next wave routes, so
+//! [`FogShardPool::decide`] sees partially-drained backlogs and the
+//! provisioner runs between admissions via
+//! [`FogShardPool::autoscale_bounded`] (floored so a shard with queued
+//! stage events is never retired under an in-flight chunk).
 
 use crate::fog::FogNode;
 use crate::interchange::Tensor;
@@ -119,12 +127,7 @@ impl FogShardPool {
             .first()
             .map(|s| s.last_layer().clone())
             .unwrap_or_else(|| self.w_last0.clone());
-        self.shards.push(FogNode::new(
-            self.handle.clone(),
-            w,
-            self.feat_dim,
-            self.num_classes,
-        ));
+        self.shards.push(FogNode::new(self.handle.clone(), w, self.feat_dim, self.num_classes));
         self.history.push((now, self.shards.len()));
     }
 
@@ -168,11 +171,7 @@ impl FogShardPool {
                 ties.push(i);
             }
         }
-        if ties.len() == 1 {
-            ties[0]
-        } else {
-            ties[self.stream_rng.index(ties.len())]
-        }
+        if ties.len() == 1 { ties[0] } else { ties[self.stream_rng.index(ties.len())] }
     }
 
     /// Route a chunk: least-backlog shard + the deployment policy's verdict
@@ -212,6 +211,16 @@ impl FogShardPool {
     /// highest-indexed idle shard goes first so shard↔link mappings stay
     /// stable.
     pub fn autoscale(&mut self, now: f64, monitor: &GlobalMonitor) {
+        self.autoscale_bounded(now, monitor, 1);
+    }
+
+    /// [`FogShardPool::autoscale`] with a shrink floor: the pool never
+    /// drops below `min_keep` shards. The streaming pipeline passes the
+    /// highest shard index any in-flight chunk targets (its mid-stream
+    /// backlog is observable, but retiring the shard under a queued stage
+    /// event would strand the chunk); the wave-scoped drivers have no
+    /// in-flight jobs between waves and use the plain floor of 1.
+    pub fn autoscale_bounded(&mut self, now: f64, monitor: &GlobalMonitor, min_keep: usize) {
         if !self.cfg.autoscale {
             return;
         }
@@ -219,9 +228,10 @@ impl FogShardPool {
             return; // provisioner runs off the published gauge
         }
         let smoothed = self.backlog.get().unwrap_or(0.0);
+        let floor = min_keep.max(1);
         if smoothed > self.cfg.scale_up_backlog_s && self.shards.len() < self.cfg.max_shards {
             self.spawn_shard(now);
-        } else if smoothed < self.cfg.scale_down_backlog_s && self.shards.len() > 1 {
+        } else if smoothed < self.cfg.scale_down_backlog_s && self.shards.len() > floor {
             // Retire only the tail shard, and only when it is idle: shard
             // indices map onto per-shard LAN links
             // (`Topology::fog_lans`), so removing an interior shard would
@@ -337,6 +347,34 @@ mod tests {
         }
         assert_eq!(pool.len(), 1, "provisioner never shrank: {:?}", pool.history);
         assert!(pool.history.len() >= 2 * grown - 1);
+    }
+
+    #[test]
+    fn bounded_autoscale_respects_the_in_flight_floor() {
+        let (_svc, mut pool) = pool_with(ShardConfig {
+            initial_shards: 3,
+            max_shards: 4,
+            autoscale: true,
+            scale_up_backlog_s: 1e9, // never grow
+            scale_down_backlog_s: 0.05,
+            ..ShardConfig::default()
+        });
+        let mut monitor = GlobalMonitor::new();
+        // everything idle: an unbounded shrink would drain toward 1, but a
+        // streaming run with a chunk in flight on shard 2 floors at 3
+        for step in 0..40 {
+            let now = step as f64;
+            pool.observe(now, &mut monitor);
+            pool.autoscale_bounded(now, &monitor, 3);
+        }
+        assert_eq!(pool.len(), 3, "floor violated: {:?}", pool.history);
+        // floor released: the pool may now shrink
+        for step in 40..120 {
+            let now = step as f64;
+            pool.observe(now, &mut monitor);
+            pool.autoscale_bounded(now, &monitor, 1);
+        }
+        assert_eq!(pool.len(), 1, "pool stuck after floor release: {:?}", pool.history);
     }
 
     #[test]

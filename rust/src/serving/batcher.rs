@@ -139,6 +139,13 @@ impl<T> DynamicBatcher<T> {
         self.queue.first().map(|p| p.arrived)
     }
 
+    /// Virtual time at which the oldest queued item ages out and a partial
+    /// batch becomes due (`oldest_arrival + max_wait_s`); None when empty.
+    /// The pipeline's wave-formation/admission loop polls this.
+    pub fn due_at(&self) -> Option<f64> {
+        self.oldest_arrival().map(|t| t + self.max_wait_s)
+    }
+
     /// Pop the next batch if the flush condition holds at time `now`.
     pub fn pop_batch(&mut self, now: f64) -> Option<Vec<T>> {
         if self.queue.is_empty() {
@@ -251,6 +258,17 @@ mod tests {
         assert_eq!(b.oldest_arrival(), Some(2.0));
         b.pop_batch(10.0).unwrap();
         assert_eq!(b.oldest_arrival(), None);
+    }
+
+    #[test]
+    fn due_at_is_oldest_plus_wait() {
+        let mut b = DynamicBatcher::new(4, 1.5);
+        assert_eq!(b.due_at(), None);
+        b.push(1, 2.0);
+        b.push(2, 3.0);
+        assert_eq!(b.due_at(), Some(3.5));
+        assert!(b.pop_batch(b.due_at().unwrap()).is_some());
+        assert_eq!(b.due_at(), None);
     }
 
     #[test]

@@ -195,10 +195,7 @@ mod tests {
     use super::*;
 
     fn det_link(mbps: f64) -> Link {
-        Link::new(
-            LinkSpec { bandwidth_mbps: mbps, propagation_s: 0.01, jitter_frac: 0.0 },
-            1,
-        )
+        Link::new(LinkSpec { bandwidth_mbps: mbps, propagation_s: 0.01, jitter_frac: 0.0 }, 1)
     }
 
     #[test]

@@ -177,11 +177,7 @@ mod tests {
     #[test]
     fn table1_object_counts_approximate_paper() {
         // expected objects within 30% of Table I
-        let cases = [
-            (dashcam(1.0), 46097.0),
-            (drone(1.0), 54153.0),
-            (traffic(1.0), 69512.0),
-        ];
+        let cases = [(dashcam(1.0), 46097.0), (drone(1.0), 54153.0), (traffic(1.0), 69512.0)];
         for (spec, want) in cases {
             let got = spec.expected_objects();
             assert!(

@@ -7,12 +7,14 @@
 //! object-level randomness, exactly like re-encoding one captured frame at
 //! two qualities.
 
+pub mod arrivals;
 pub mod chunk;
 pub mod codec;
 pub mod datasets;
 pub mod render;
 pub mod scene;
 
+pub use arrivals::{CameraArrival, WorkloadProfile};
 pub use chunk::{Chunk, Video};
 pub use codec::Quality;
 pub use render::{render_crop, render_frame, render_region_crop};

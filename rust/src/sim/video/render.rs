@@ -40,9 +40,7 @@ pub struct DriftedBank {
 
 impl DriftedBank {
     pub fn new(phi: f64, p: &SimParams) -> Self {
-        DriftedBank {
-            rows: (0..p.num_classes).map(|k| p.drifted_signature(k, phi)).collect(),
-        }
+        DriftedBank { rows: (0..p.num_classes).map(|k| p.drifted_signature(k, phi)).collect() }
     }
 
     pub fn row(&self, k: usize) -> &[f32] {
@@ -224,10 +222,7 @@ mod tests {
         }
         let obj_min = obj_e.iter().cloned().fold(f32::INFINITY, f32::min);
         let bg_mean = bg_e.iter().sum::<f32>() / bg_e.len() as f32;
-        assert!(
-            obj_min > 2.0 * bg_mean,
-            "obj_min={obj_min} bg_mean={bg_mean}"
-        );
+        assert!(obj_min > 2.0 * bg_mean, "obj_min={obj_min} bg_mean={bg_mean}");
     }
 
     #[test]

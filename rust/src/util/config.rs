@@ -42,7 +42,9 @@ impl Config {
             }
             let (k, v) = line
                 .split_once('=')
-                .ok_or_else(|| anyhow!("line {}: expected `key = value`, got {raw:?}", lineno + 1))?;
+                .ok_or_else(|| {
+                    anyhow!("line {}: expected `key = value`, got {raw:?}", lineno + 1)
+                })?;
             let key = k.trim();
             if key.is_empty() {
                 bail!("line {}: empty key", lineno + 1);

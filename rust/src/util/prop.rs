@@ -88,10 +88,7 @@ pub fn prop_check(cases: u64, seed: u64, mut property: impl FnMut(&mut Gen) -> C
                     best = (size, msg);
                 }
             }
-            panic!(
-                "property failed (seed={seed} case={case} size={}): {}",
-                best.0, best.1
-            );
+            panic!("property failed (seed={seed} case={case} size={}): {}", best.0, best.1);
         }
     }
 }

@@ -7,8 +7,11 @@
 //! does not exist yet (fresh clones in environments that could not
 //! pre-generate it), the test bootstraps it from the current run — and
 //! *always* additionally asserts in-process run-to-run determinism, which
-//! guards the invariant even on a bootstrap run. Regenerate on purpose by
-//! deleting the file and re-running `cargo test`.
+//! guards the invariant even on a bootstrap run. In CI the bootstrapped
+//! snapshot is cached across commits keyed on
+//! `tests/golden/BASELINE_EPOCH`, so the gate compares cross-commit on
+//! ephemeral runners; bump the epoch (or delete the file locally) to
+//! re-baseline on purpose (see `tests/golden/README.md`).
 
 use std::fmt::Write as _;
 use std::path::PathBuf;
@@ -28,13 +31,7 @@ fn measure(h: &Harness, kind: SystemKind) -> Vec<f64> {
     let cfg = RunConfig { golden: false, seed: 0x601D, ..RunConfig::default() };
     let m = h.run(kind, &ds, &cfg).unwrap();
     let s = m.latency.summary();
-    vec![
-        m.f1_true.f1(),
-        m.bandwidth.bytes,
-        s.p50,
-        m.cost.units(),
-        m.chunks as f64,
-    ]
+    vec![m.f1_true.f1(), m.bandwidth.bytes, s.p50, m.cost.units(), m.chunks as f64]
 }
 
 #[test]

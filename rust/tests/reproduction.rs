@@ -66,12 +66,7 @@ fn fig10_cost_and_latency_orderings() {
 fn fig13a_budget_sweep_is_monotonic_enough() {
     let h = Harness::new().unwrap();
     let ds = datasets::traffic(SCALE);
-    let base = RunConfig {
-        drift: true,
-        drift_scale: 15.0,
-        golden: false,
-        ..Default::default()
-    };
+    let base = RunConfig { drift: true, drift_scale: 15.0, golden: false, ..Default::default() };
     let f1 = |budget: f64| {
         h.run(SystemKind::Vpaas, &ds, &RunConfig { hitl_budget: budget, ..base.clone() })
             .unwrap()

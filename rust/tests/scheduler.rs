@@ -27,11 +27,7 @@ fn four_shards_interleave_two_videos() {
     // concurrent, not sequential: camera 1 starts before camera 0 ends
     let first_v1 = m.chunk_log.iter().position(|&(v, _)| v == 1).unwrap();
     let last_v0 = m.chunk_log.iter().rposition(|&(v, _)| v == 0).unwrap();
-    assert!(
-        first_v1 < last_v0,
-        "chunks were not interleaved across cameras: {:?}",
-        m.chunk_log
-    );
+    assert!(first_v1 < last_v0, "chunks were not interleaved across cameras: {:?}", m.chunk_log);
     // per-camera chunk order is still monotone
     for cam in [0usize, 1] {
         let idxs: Vec<u64> = m

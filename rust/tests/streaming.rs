@@ -1,0 +1,130 @@
+//! Run-scoped streaming executor integration tests: makespan ordering
+//! (streaming ≤ wave-barrier ≤ sequential), bit-exact determinism,
+//! label/HITL content invariance across all three dispatch modes, and
+//! camera-churn runs finishing with no orphaned `CameraSession`.
+
+use vpaas::metrics::meters::RunMetrics;
+use vpaas::pipeline::{Harness, RunConfig, SystemKind};
+use vpaas::serverless::executor::DispatchMode;
+use vpaas::sim::video::datasets::{self, DatasetSpec};
+use vpaas::sim::video::WorkloadProfile;
+
+fn cameras(n: usize) -> DatasetSpec {
+    let mut d = datasets::drone(0.1);
+    d.videos.truncate(n);
+    d
+}
+
+fn cfg(shards: usize, dispatch: DispatchMode, workload: WorkloadProfile) -> RunConfig {
+    RunConfig { shards, dispatch, workload, golden: false, ..RunConfig::default() }
+}
+
+/// Everything that must be identical across dispatch modes for one seed:
+/// what was detected, labeled, trained, billed and transmitted.
+fn assert_same_content(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.f1_true, b.f1_true, "{what}: detections moved");
+    assert_eq!(a.chunk_log, b.chunk_log, "{what}: chunk order moved");
+    assert_eq!(a.labels_used, b.labels_used, "{what}: HITL labels moved");
+    assert_eq!(a.fog_regions, b.fog_regions, "{what}: fog crops moved");
+    assert_eq!(a.bandwidth.bytes, b.bandwidth.bytes, "{what}: WAN traffic moved");
+    assert_eq!(a.cost.units(), b.cost.units(), "{what}: billing moved");
+    assert_eq!(a.sessions_retired, b.sessions_retired, "{what}: sessions moved");
+}
+
+#[test]
+fn streaming_overlaps_waves_without_changing_labels() {
+    let h = Harness::new().unwrap();
+    let ds = cameras(4);
+    let mut strict_win = false;
+    for workload in [WorkloadProfile::Uniform, WorkloadProfile::Bursty] {
+        let name = workload.name();
+        let stream =
+            h.run(SystemKind::Vpaas, &ds, &cfg(2, DispatchMode::Streaming, workload)).unwrap();
+        let wave =
+            h.run(SystemKind::Vpaas, &ds, &cfg(2, DispatchMode::EventDriven, workload)).unwrap();
+        let seq =
+            h.run(SystemKind::Vpaas, &ds, &cfg(2, DispatchMode::Sequential, workload)).unwrap();
+        assert_same_content(&stream, &wave, name);
+        assert_same_content(&stream, &seq, name);
+        // the ordering the run-scoped queue exists for (tiny tolerance:
+        // earliest-ready-first can delay one long-tailed chunk behind a
+        // quicker one on an unlucky jitter draw)
+        assert!(
+            stream.makespan <= wave.makespan * 1.05 + 1e-6,
+            "{name}: streaming slowed the fleet: {} vs wave {}",
+            stream.makespan,
+            wave.makespan
+        );
+        assert!(
+            wave.makespan <= seq.makespan * 1.05 + 1e-6,
+            "{name}: wave dispatch slower than sequential: {} vs {}",
+            wave.makespan,
+            seq.makespan
+        );
+        if stream.makespan < wave.makespan {
+            strict_win = true;
+        }
+    }
+    assert!(strict_win, "the run-scoped queue never overlapped consecutive waves");
+}
+
+#[test]
+fn streaming_runs_are_bit_identical_across_repeats() {
+    let h = Harness::new().unwrap();
+    let ds = cameras(3);
+    let c = cfg(4, DispatchMode::Streaming, WorkloadProfile::Bursty);
+    let a = h.run(SystemKind::Vpaas, &ds, &c).unwrap();
+    let b = h.run(SystemKind::Vpaas, &ds, &c).unwrap();
+    assert_eq!(a.chunk_log, b.chunk_log, "processing order must be reproducible");
+    assert_eq!(a.f1_true, b.f1_true);
+    assert_eq!(a.bandwidth.bytes.to_bits(), b.bandwidth.bytes.to_bits());
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.cost.units(), b.cost.units());
+    assert_eq!(a.labels_used, b.labels_used);
+    assert_eq!(a.fog_regions, b.fog_regions);
+    assert_eq!(a.sessions_retired, b.sessions_retired);
+    let (sa, sb) = (a.latency.summary(), b.latency.summary());
+    assert_eq!(sa.count, sb.count);
+    assert_eq!(sa.mean.to_bits(), sb.mean.to_bits());
+    assert_eq!(sa.p99.to_bits(), sb.p99.to_bits());
+}
+
+#[test]
+fn camera_churn_completes_with_no_orphaned_sessions() {
+    let h = Harness::new().unwrap();
+    // traffic videos are long enough (≥2 chunks) that a churn drop after
+    // 1–2 chunks really truncates the stream; seed 2's plan drops several
+    let mut ds = datasets::traffic(0.1);
+    ds.videos.truncate(6);
+    let seed = 2u64;
+    let churn_cfg = RunConfig { seed, ..cfg(2, DispatchMode::Streaming, WorkloadProfile::Churn) };
+    let full_cfg = RunConfig { seed, ..cfg(2, DispatchMode::Streaming, WorkloadProfile::Uniform) };
+    let churn = h.run(SystemKind::Vpaas, &ds, &churn_cfg).unwrap();
+    let full = h.run(SystemKind::Vpaas, &ds, &full_cfg).unwrap();
+    // the arrival plan is a pure function: the run must process exactly
+    // the chunks the plan admits, and nothing after a camera's drop
+    let plan = WorkloadProfile::Churn.plan(ds.videos.len(), seed);
+    let expected: u64 = ds
+        .make_videos(&h.params)
+        .iter()
+        .zip(&plan)
+        .map(|(v, a)| match a.max_chunks {
+            Some(m) => v.chunks_total().min(m),
+            None => v.chunks_total(),
+        })
+        .sum();
+    assert_eq!(churn.chunks, expected, "churn run lost or invented chunks");
+    assert!(plan.iter().any(|a| a.max_chunks.is_some()), "plan dropped nobody");
+    assert!(churn.chunks < full.chunks, "camera drops did not shorten the run");
+    // every camera that contributed HITL labels retired with its stream —
+    // no orphaned CameraSession survives the run
+    if churn.labels_used > 0 {
+        assert!(churn.sessions_retired >= 1, "labeled cameras left no retired session");
+    }
+    assert!(churn.sessions_retired <= ds.videos.len() as u64);
+    // churn runs stay deterministic
+    let again = h.run(SystemKind::Vpaas, &ds, &churn_cfg).unwrap();
+    assert_eq!(churn.chunk_log, again.chunk_log);
+    assert_eq!(churn.sessions_retired, again.sessions_retired);
+    assert_eq!(churn.makespan.to_bits(), again.makespan.to_bits());
+}
