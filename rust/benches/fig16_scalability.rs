@@ -1,9 +1,10 @@
 //! Bench: Fig. 16 — autoscaling under a camera-fleet ramp, the multi-fog
 //! shard sweep (throughput at shard counts {1, 2, 4, 8}), the event-driven
-//! vs sequential dispatch comparison (`BENCH_overlap.json`), and the
+//! vs sequential dispatch comparison (`BENCH_overlap.json`), the
 //! run-scoped streaming vs wave-barrier vs sequential sweep across
-//! workload profiles (`BENCH_stream.json`) — both JSON artifacts are
-//! uploaded by CI so the perf trajectory is visible per PR.
+//! workload profiles (`BENCH_stream.json`), and the cloud GPU pool sweep
+//! at worker counts {1, 2, 4, 8} (`BENCH_gpu.json`) — all three JSON
+//! artifacts are uploaded by CI so the perf trajectory is visible per PR.
 //!
 //! Set `VPAAS_BENCH_SMOKE=1` for the reduced CI configuration: fewer
 //! cameras, a shorter dataset, no repeated timing reps — the JSON
@@ -119,6 +120,53 @@ fn main() {
         println!("WARN: streaming never beat the wave barrier at smoke scale: {stream_rows:?}");
     } else {
         assert!(strict_win, "streaming never beat the wave barrier: {stream_rows:?}");
+    }
+
+    // cloud GPU pool sweep (the fig16 fleet story at worker granularity),
+    // as JSON; smoke shrinks the fleet and drops the 8-worker point
+    let (gpu_cams, gpu_scale) = if smoke { (8, 0.05) } else { (16, 0.1) };
+    let gpu_counts: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let (gpu_text, gpu_rows) =
+        figures::fig16_gpu_sweep(&h, &cfg, gpu_cams, gpu_scale, gpu_counts).unwrap();
+    println!("{gpu_text}");
+    let entries: Vec<String> = gpu_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"gpus\":{},\"chunks\":{},\"makespan_s\":{:.6},\"p99_latency_s\":{:.6}}}",
+                r.gpus, r.chunks, r.makespan_s, r.p99_s
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\"bench\":\"fig16_gpu_sweep\",\"workload\":\"drone x{gpu_cams} cameras, bursty, \
+         8 shards\",\"rows\":[{}]}}\n",
+        entries.join(",")
+    );
+    std::fs::write("BENCH_gpu.json", &json).expect("write BENCH_gpu.json");
+    println!("wrote BENCH_gpu.json: {json}");
+    let m1 = gpu_rows.iter().find(|r| r.gpus == 1).expect("1-gpu row").makespan_s;
+    let m4 = gpu_rows.iter().find(|r| r.gpus == 4).expect("4-gpu row").makespan_s;
+    // more GPU workers must never slow the fleet (small routing tolerance)
+    for r in &gpu_rows {
+        let ok = r.makespan_s <= m1 * 1.02 + 1e-6;
+        if smoke {
+            if !ok {
+                println!("WARN: {} GPUs slower than 1 at smoke scale: {gpu_rows:?}", r.gpus);
+            }
+        } else {
+            assert!(ok, "{} GPUs slowed the fleet: {} vs {m1}", r.gpus, r.makespan_s);
+        }
+    }
+    // ... and at full scale the pool must buy real makespan by 4 workers.
+    // At the tiny smoke scale the GPU queue may never bind, so a miss is
+    // reported rather than fatal there.
+    if smoke {
+        if m4 >= m1 {
+            println!("WARN: 4-GPU makespan did not improve at smoke scale: {gpu_rows:?}");
+        }
+    } else {
+        assert!(m4 < m1, "4-GPU pool never beat 1 GPU: {gpu_rows:?}");
     }
 
     if !smoke {

@@ -83,10 +83,32 @@
 //!   tie-breaks) derives from the run seed via [`util::rng::Pcg32`], so
 //!   sharded runs are bit-reproducible; `tests/scheduler.rs` asserts it.
 //!
-//! Run the scale-out benchmark with
+//! ## Sharded cloud GPU tier and SLO-aware admission
+//!
+//! The cloud tier scales through the same pool abstraction
+//! ([`cloud::CloudGpuPool`]): `RunConfig::gpus` single-GPU
+//! [`cloud::CloudServer`] workers behind one control plane, with
+//! least-queue-wait admission for `CloudDetect` and `il_update` stage
+//! events (plus a pooled SR entry point), per-worker `ExecTiming`
+//! queues, `gpu_queue_s`/`gpu_workers`
+//! gauges, and a bounded provisioner that never retires a worker holding
+//! queued events (a 1-worker pool reproduces the legacy single-server
+//! cloud bit-for-bit). On top of it, `RunConfig::slo_ms` enables
+//! freshness-SLO admission: a chunk whose projected capture→classify
+//! latency misses the target uplinks at a degraded quality or is refused,
+//! and a chunk that still finishes stale is never scored — counted in
+//! `RunMetrics::{chunks_degraded, chunks_dropped}`. With the SLO disabled
+//! the whole pipeline is content-invariant across dispatch mode × fog
+//! shards × cloud GPUs × workload profile
+//! ([`metrics::meters::RunMetrics::content_fingerprint`],
+//! `tests/invariance.rs`).
+//!
+//! Run the scale-out benchmarks with
 //! `cargo bench --bench fig16_scalability` (or
-//! `cargo run --release -- figures --id fig16`), which sweeps shard
-//! counts {1, 2, 4, 8} and reports virtual-time throughput.
+//! `cargo run --release -- figures --id fig16`), which sweep fog shard
+//! counts and cloud GPU worker counts {1, 2, 4, 8} and report
+//! virtual-time throughput (`BENCH_overlap.json`, `BENCH_stream.json`,
+//! `BENCH_gpu.json`).
 //!
 //! Start with `pipeline` for end-to-end drivers, or `examples/quickstart.rs`.
 

@@ -46,8 +46,8 @@ subcommands:
           [--scale 0.05] [--seed N]
   run     --system <vpaas|vpaas-nohitl|mpeg|dds|cloudseg|glimpse>
           --dataset <dashcam|drone|traffic> [--scale 0.05] [--wan 15]
-          [--budget 0.2] [--shards 1] [--no-drift] [--golden]
-          [--workload uniform|bursty|churn]
+          [--budget 0.2] [--shards 1] [--gpus 1] [--slo-ms inf]
+          [--no-drift] [--golden] [--workload uniform|bursty|churn]
   profile                       profile registered models on the shared inference engine
   serve   [--config file.cfg] [--chunks N]   drive the serverless demo app";
 
@@ -62,6 +62,8 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         drift: !args.flag("no-drift"),
         golden: args.flag("golden"),
         shards: args.get_usize("shards", 1)?,
+        gpus: args.get_usize("gpus", 1)?,
+        slo_ms: args.get_f64("slo-ms", f64::INFINITY)?,
         seed: args.get_u64("seed", 0xCAFE)?,
         workload,
         ..RunConfig::default()
@@ -112,6 +114,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
         println!("{}\n", figures::fig16_shard_sweep(&h, &cfg)?);
         println!("{}\n", figures::fig16_overlap(&h, &cfg, 6, 0.2, &[2, 4, 8])?.0);
         println!("{}\n", figures::fig16_stream(&h, &cfg, 6, 0.2)?.0);
+        println!("{}\n", figures::fig16_gpu_sweep(&h, &cfg, 12, 0.1, &[1, 2, 4])?.0);
     }
     if want("quality") {
         println!("{}\n", figures::quality_operating_points(&h));
@@ -139,6 +142,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         vec!["latency_p50_s".into(), format!("{:.3}", s.p50)],
         vec!["latency_p99_s".into(), format!("{:.3}", s.p99)],
         vec!["chunks".into(), m.chunks.to_string()],
+        vec!["chunks_degraded".into(), m.chunks_degraded.to_string()],
+        vec!["chunks_dropped".into(), m.chunks_dropped.to_string()],
         vec!["fog_regions".into(), m.fog_regions.to_string()],
         vec!["human_labels".into(), m.labels_used.to_string()],
     ];

@@ -47,6 +47,13 @@ impl CostMeter {
     pub fn units(&self) -> f64 {
         (self.detector_frames + self.sr_frames + self.trainer_batches) as f64
     }
+
+    /// Fold another meter in (the cloud GPU pool sums per-worker bills).
+    pub fn merge(&mut self, other: &CostMeter) {
+        self.detector_frames += other.detector_frames;
+        self.sr_frames += other.sr_frames;
+        self.trainer_batches += other.trainer_batches;
+    }
 }
 
 /// Freshness latency tracker (§VI-A: object appears → object labeled).
@@ -92,6 +99,38 @@ pub struct RunMetrics {
     /// Per-camera HITL sessions retired at end of run (every camera that
     /// contributed labels; churned cameras must not leave orphans behind).
     pub sessions_retired: u64,
+    /// Sessions the defensive end-of-run `retire_all` sweep found still
+    /// open — always 0 when per-chunk retirement works (asserted in debug
+    /// builds and by `tests/invariance.rs`).
+    pub sessions_swept: u64,
+    /// Chunks served with a degraded uplink quality because their
+    /// projected freshness latency exceeded `RunConfig::slo_ms`.
+    pub chunks_degraded: u64,
+    /// Chunks not served under a binding SLO: refused at admission
+    /// (projected freshness beyond rescue) or stale at completion. These
+    /// are never scored, so `chunks + chunks_dropped` accounts for every
+    /// admitted chunk.
+    pub chunks_dropped: u64,
+}
+
+/// The facts of a run that must be invariant to *how* the pipeline
+/// executed — dispatch mode, fog shard count, cloud GPU count — for a
+/// fixed seed and a non-binding SLO: what was detected, labeled, trained,
+/// billed and transmitted. `tests/invariance.rs` asserts bit-equality of
+/// this fingerprint across the whole execution matrix; timing metrics
+/// (latency, makespan) are deliberately excluded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContentFingerprint {
+    pub f1_true: F1Counts,
+    pub chunk_log: Vec<(usize, u64)>,
+    pub chunks: u64,
+    pub labels_used: u64,
+    pub fog_regions: u64,
+    pub wan_bytes_bits: u64,
+    pub cost_units_bits: u64,
+    pub sessions_retired: u64,
+    pub chunks_degraded: u64,
+    pub chunks_dropped: u64,
 }
 
 impl RunMetrics {
@@ -100,6 +139,24 @@ impl RunMetrics {
             system: system.to_string(),
             dataset: dataset.to_string(),
             ..Default::default()
+        }
+    }
+
+    /// The execution-invariant content of this run (see
+    /// [`ContentFingerprint`]): bit-comparable across dispatch modes,
+    /// shard counts and GPU counts for a fixed seed.
+    pub fn content_fingerprint(&self) -> ContentFingerprint {
+        ContentFingerprint {
+            f1_true: self.f1_true,
+            chunk_log: self.chunk_log.clone(),
+            chunks: self.chunks,
+            labels_used: self.labels_used,
+            fog_regions: self.fog_regions,
+            wan_bytes_bits: self.bandwidth.bytes.to_bits(),
+            cost_units_bits: self.cost.units().to_bits(),
+            sessions_retired: self.sessions_retired,
+            chunks_degraded: self.chunks_degraded,
+            chunks_dropped: self.chunks_dropped,
         }
     }
 
@@ -146,6 +203,30 @@ mod tests {
         l.record(1.0);
         assert_eq!(l.summary().count, 2);
         assert!(l.summary().min >= 0.0);
+    }
+
+    #[test]
+    fn cost_merge_sums_fields() {
+        let mut a = CostMeter { detector_frames: 3, sr_frames: 1, trainer_batches: 2 };
+        let b = CostMeter { detector_frames: 7, sr_frames: 0, trainer_batches: 5 };
+        a.merge(&b);
+        assert_eq!((a.detector_frames, a.sr_frames, a.trainer_batches), (10, 1, 7));
+    }
+
+    #[test]
+    fn content_fingerprint_tracks_content_not_timing() {
+        let mut a = RunMetrics::new("vpaas", "drone");
+        a.bandwidth.add(100.0);
+        a.labels_used = 3;
+        a.chunks = 2;
+        let mut b = a.clone();
+        // timing may move freely without breaking the fingerprint ...
+        b.makespan = 99.0;
+        b.latency.record(1.0);
+        assert_eq!(a.content_fingerprint(), b.content_fingerprint());
+        // ... but any content change breaks it
+        b.chunks_dropped += 1;
+        assert_ne!(a.content_fingerprint(), b.content_fingerprint());
     }
 
     #[test]

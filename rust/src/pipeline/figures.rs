@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use crate::cloud::CloudConfig;
+use crate::cloud::{CloudConfig, CloudGpuPool, CloudPoolConfig};
 use crate::fog::FogNode;
 use crate::hitl::IncrementalLearner;
 use crate::metrics::f1::{match_boxes, F1Counts};
@@ -292,12 +292,13 @@ pub fn fig13b(h: &Harness, _scale: f64, cfg: &RunConfig) -> Result<String> {
     let ex = Executor::from_registry(&h.functions, DispatchMode::EventDriven)?;
     let run = |hitl: bool| -> Result<(crate::util::stats::Summary, u64)> {
         let mut topo = Topology::new(cfg.wan_mbps, cfg.seed);
-        let mut cloud = crate::cloud::CloudServer::new(
+        let mut cloud = CloudGpuPool::new(
             h.handle(),
-            CloudConfig::default(),
+            CloudPoolConfig::default(),
             p.grid,
             p.num_classes,
             p.feat_dim,
+            cfg.seed,
         );
         let mut metrics = RunMetrics::new("vpaas", "fig13b");
         let mut annotator = Annotator::new(AnnotatorConfig {
@@ -347,6 +348,7 @@ pub fn fig13b(h: &Harness, _scale: f64, cfg: &RunConfig) -> Result<String> {
                         fogs: std::slice::from_mut(fog),
                         annotator: &mut annotator,
                         metrics: &mut metrics,
+                        slo_s: f64::INFINITY,
                     };
                     ex.run_chunk(ChunkJob::new(chunk, phi, *offset), &mut ctx)?;
                 }
@@ -355,7 +357,7 @@ pub fn fig13b(h: &Harness, _scale: f64, cfg: &RunConfig) -> Result<String> {
                 break;
             }
         }
-        Ok((metrics.latency.summary(), cloud.billing.trainer_batches))
+        Ok((metrics.latency.summary(), cloud.billing().trainer_batches))
     };
     let (on, batches) = run(true)?;
     let (off, _) = run(false)?;
@@ -432,6 +434,7 @@ pub fn fig15(h: &Harness, cfg: &RunConfig) -> Result<(String, FaultTrace)> {
                 fogs: std::slice::from_mut(&mut fog),
                 annotator: &mut annotator,
                 metrics: &mut metrics,
+                slo_s: f64::INFINITY,
             };
             ex.run_chunk(ChunkJob::new(chunk, phi, 0.0), &mut ctx)?
         };
@@ -476,18 +479,24 @@ pub fn fig16(h: &Harness, cfg: &RunConfig) -> Result<String> {
     // Chunks are processed in global capture order (k-way merge) so the
     // shared-resource FIFOs see causal arrival times.
     let n_streams = 64usize;
-    let mut cloud = crate::cloud::CloudServer::new(
+    // one pool worker with the legacy in-server provisioner (the Fig. 16
+    // story is GPUs-within-a-server; the worker sweep is fig16_gpu_sweep)
+    let mut cloud = CloudGpuPool::new(
         h.handle(),
-        CloudConfig {
-            autoscale: true,
-            max_gpus: 4,
-            scale_up_wait_s: 0.15,
-            scale_down_wait_s: 0.02,
-            ..Default::default()
+        CloudPoolConfig {
+            worker: CloudConfig {
+                autoscale: true,
+                max_gpus: 4,
+                scale_up_wait_s: 0.15,
+                scale_down_wait_s: 0.02,
+                ..Default::default()
+            },
+            ..CloudPoolConfig::default()
         },
         p.grid,
         p.num_classes,
         p.feat_dim,
+        cfg.seed,
     );
     let mut topo = Topology::new(200.0, cfg.seed); // fat shared WAN
     let mut metrics = RunMetrics::new("vpaas", "scalability");
@@ -537,11 +546,13 @@ pub fn fig16(h: &Harness, cfg: &RunConfig) -> Result<String> {
             fogs: std::slice::from_mut(fog),
             annotator: &mut annotator,
             metrics: &mut metrics,
+            slo_s: f64::INFINITY,
         };
         ex.run_chunk(ChunkJob::new(chunk, 0.0, *offset), &mut ctx)?;
         next[i] = video.next_chunk();
     }
     let rows: Vec<Vec<String>> = cloud
+        .worker(0)
         .gpu_history
         .iter()
         .map(|(t, n)| vec![format!("{t:.1}"), n.to_string()])
@@ -554,7 +565,7 @@ pub fn fig16(h: &Harness, cfg: &RunConfig) -> Result<String> {
         s.p90,
         s.p99,
         metrics.chunks,
-        cloud.gpus(),
+        cloud.total_gpus(),
     ))
 }
 
@@ -707,6 +718,69 @@ pub fn fig16_stream(
         "Fig. 16d — run-scoped streaming vs wave-barrier vs sequential \
          ({cameras} cameras, 4 shards)\n{}",
         table(&["workload", "chunks", "seq_s", "wave_s", "stream_s", "wave/stream"], &rows)
+    );
+    Ok((text, raw))
+}
+
+// ------------------------------------------------------ Fig. 16e (GPUs)
+/// One `fig16_gpu_sweep` measurement: the fleet makespan and tail latency
+/// at one cloud GPU worker count.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuRow {
+    pub gpus: usize,
+    pub chunks: u64,
+    pub makespan_s: f64,
+    pub p99_s: f64,
+}
+
+/// Cloud GPU pool sweep: a bursty camera fleet driven through the full
+/// VPaaS pipeline (run-scoped streaming, 8 fog shards, fat WAN so the
+/// cloud GPU is the binding resource) at each worker count in
+/// `gpu_counts`. Label content is GPU-count invariant — only queueing
+/// moves — so the makespan/latency deltas are pure scheduling, exactly
+/// like the shard and dispatch sweeps. Returns the printable table plus
+/// raw [`GpuRow`]s; the bench writes them to `BENCH_gpu.json` so the
+/// scale-out trajectory is tracked per PR.
+pub fn fig16_gpu_sweep(
+    h: &Harness,
+    cfg: &RunConfig,
+    cameras: usize,
+    scale: f64,
+    gpu_counts: &[usize],
+) -> Result<(String, Vec<GpuRow>)> {
+    let mut ds = datasets::drone(scale);
+    ds.videos.truncate(cameras);
+    let mut rows = Vec::new();
+    let mut raw = Vec::new();
+    for &gpus in gpu_counts {
+        let run_cfg = RunConfig {
+            gpus,
+            shards: 8,
+            wan_mbps: 200.0,
+            golden: false,
+            autoscale: false,
+            hitl_budget: 0.0,
+            drift: false,
+            dispatch: DispatchMode::Streaming,
+            workload: WorkloadProfile::Bursty,
+            ..cfg.clone()
+        };
+        let m = h.run(SystemKind::Vpaas, &ds, &run_cfg)?;
+        let s = m.latency.summary();
+        let throughput = if m.makespan > 0.0 { m.chunks as f64 / m.makespan } else { 0.0 };
+        raw.push(GpuRow { gpus, chunks: m.chunks, makespan_s: m.makespan, p99_s: s.p99 });
+        rows.push(vec![
+            gpus.to_string(),
+            m.chunks.to_string(),
+            format!("{:.2}", m.makespan),
+            format!("{:.3}", throughput),
+            format!("{:.2}", s.p50),
+            format!("{:.2}", s.p99),
+        ]);
+    }
+    let text = format!(
+        "Fig. 16e — cloud GPU pool sweep ({cameras} cameras, bursty arrivals, 8 fog shards)\n{}",
+        table(&["gpus", "chunks", "makespan_s", "throughput", "lat_p50", "lat_p99"], &rows)
     );
     Ok((text, raw))
 }

@@ -19,26 +19,30 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::baselines::{ChunkEnv, CloudSeg, Dds, Glimpse, Mpeg};
-use crate::cloud::{CloudConfig, CloudServer};
+use crate::cloud::{CloudConfig, CloudGpuPool, CloudPoolConfig, CloudServer};
 use crate::hitl::IncrementalLearner;
 use crate::interchange::Tensor;
 use crate::metrics::f1::{match_boxes, PredBox};
 use crate::metrics::meters::RunMetrics;
-use crate::protocol::coordinator::Coordinator;
+use crate::protocol::coordinator::{ChunkOutcome, Coordinator};
 use crate::protocol::post::regions_from_heads;
 use crate::protocol::ProtocolConfig;
 use crate::runtime::{InferenceHandle, InferenceService};
 use crate::serverless::executor::{ChunkJob, DispatchMode, Executor, StageCtx, StreamingSession};
 use crate::serverless::monitor::GlobalMonitor;
+use crate::serverless::policy::Route;
 use crate::serverless::registry::FunctionRegistry;
 use crate::serverless::scheduler::{FogShardPool, ShardConfig};
 use crate::serving::batcher::DynamicBatcher;
+use crate::sim::device;
 use crate::sim::human::{Annotator, AnnotatorConfig};
-use crate::sim::net::Topology;
+use crate::sim::net::{LinkSpec, Topology};
 use crate::sim::params::SimParams;
 use crate::sim::video::datasets::DatasetSpec;
 use crate::sim::video::scene::GtBox;
-use crate::sim::video::{render_frame, CameraArrival, Chunk, Quality, Video, WorkloadProfile};
+use crate::sim::video::{
+    codec, render_frame, CameraArrival, Chunk, Quality, Video, WorkloadProfile,
+};
 
 pub mod figures;
 
@@ -110,6 +114,20 @@ pub struct RunConfig {
     /// 1 reproduces the single-fog deployment; `autoscale` additionally
     /// lets the provisioner grow/shrink the pool at runtime.
     pub shards: usize,
+    /// Cloud GPU pool size (Fig. 16 GPU sweep). 1 reproduces the legacy
+    /// single-server cloud bit-for-bit; > 1 runs that many single-GPU
+    /// `CloudServer` workers behind [`CloudGpuPool`] with least-queue-wait
+    /// routing (`autoscale` then moves scaling to the pool provisioner).
+    pub gpus: usize,
+    /// Freshness-latency SLO in milliseconds (chunk capture →
+    /// `FogClassify`). Non-finite (the default) disables admission control
+    /// and reproduces the pre-SLO pipeline bit-for-bit. A binding target
+    /// degrades a chunk's uplink quality when its projected freshness
+    /// exceeds the SLO, refuses it at admission when even the degraded
+    /// projection misses, and never scores a chunk that still finishes
+    /// stale — counted in `RunMetrics::{chunks_degraded, chunks_dropped}`
+    /// so Fig. 10/16 sweeps can report the SLO/cost frontier.
+    pub slo_ms: f64,
     /// How the executor interleaves stage events: within a dispatch wave
     /// (`EventDriven`), one chunk at a time (`Sequential`, the seed
     /// system's state machine, for A/B makespan comparisons), or across
@@ -135,11 +153,21 @@ impl Default for RunConfig {
             golden: true,
             outage: None,
             shards: 1,
+            gpus: 1,
+            slo_ms: f64::INFINITY,
             dispatch: DispatchMode::default(),
             workload: WorkloadProfile::default(),
             seed: 0xCAFE,
             protocol: ProtocolConfig::default(),
         }
+    }
+}
+
+impl RunConfig {
+    /// The freshness SLO in seconds (`slo_ms / 1000`; non-finite when
+    /// disabled).
+    pub fn slo_s(&self) -> f64 {
+        self.slo_ms / 1e3
     }
 }
 
@@ -164,6 +192,7 @@ impl Harness {
         self.svc.handle()
     }
 
+    /// The baselines' single-tenant cloud server (the paper's layout).
     fn make_cloud(&self, cfg: &RunConfig) -> CloudServer {
         let p = &self.params;
         CloudServer::new(
@@ -172,6 +201,21 @@ impl Harness {
             p.grid,
             p.num_classes,
             p.feat_dim,
+        )
+    }
+
+    /// The VPaaS cloud tier: `cfg.gpus` GPU workers behind the pool
+    /// control plane (1 keeps the legacy in-server provisioner and is
+    /// bit-identical to [`Harness::make_cloud`]'s server).
+    fn make_cloud_pool(&self, cfg: &RunConfig) -> CloudGpuPool {
+        let p = &self.params;
+        CloudGpuPool::new(
+            self.handle(),
+            CloudPoolConfig::for_deployment(cfg.gpus, cfg.autoscale),
+            p.grid,
+            p.num_classes,
+            p.feat_dim,
+            cfg.seed ^ 0x6B0,
         )
     }
 
@@ -280,7 +324,7 @@ impl Harness {
             cfg: cfg.clone(),
             metrics: RunMetrics::new(kind.name(), dataset.name),
             topo,
-            cloud: self.make_cloud(cfg),
+            cloud: self.make_cloud_pool(cfg),
             pool: FogShardPool::new(
                 self.handle(),
                 p.cls_last0.clone(),
@@ -350,11 +394,18 @@ impl Harness {
                 }
             }
         }
-        // defensive end-of-run sweep: every session should already have
-        // retired with its camera's last chunk, so this finds nothing
-        run.metrics.sessions_retired += run.coordinator.retire_all();
+        // Defensive end-of-run sweep: every session must already have
+        // retired with its camera's last settled chunk (settle_chunk →
+        // note_chunk_done covers served, degraded and dropped chunks
+        // alike), so the sweep retires zero sessions — asserted here so a
+        // missed per-chunk retirement cannot hide behind it, and exported
+        // as `sessions_swept` so release-mode tests can assert it too.
+        let swept = run.coordinator.retire_all();
+        debug_assert_eq!(swept, 0, "retire_all swept {swept} sessions the per-chunk path missed");
+        run.metrics.sessions_swept = swept;
+        run.metrics.sessions_retired += swept;
         let mut metrics = run.metrics;
-        metrics.cost = run.cloud.billing.clone();
+        metrics.cost = run.cloud.billing();
         Ok(metrics)
     }
 
@@ -374,7 +425,10 @@ impl Harness {
         for (dispatch_at, wave) in waves {
             self.pump_stream(executor, &mut sess, run, dispatch_at)?;
             let jobs = self.build_jobs(run, offsets, wave, dispatch_at);
-            executor.admit_wave(&mut sess, jobs);
+            // SLO admission may have refused the whole wave
+            if !jobs.is_empty() {
+                executor.admit_wave(&mut sess, jobs);
+            }
         }
         self.pump_stream(executor, &mut sess, run, f64::INFINITY)
     }
@@ -403,15 +457,7 @@ impl Harness {
         for (job, outcome) in &completed {
             run.pool.observe(outcome.done, &mut run.monitor);
             run.pool.autoscale_bounded(outcome.done, &run.monitor, floor);
-            self.score_chunk(
-                &mut run.metrics,
-                &job.chunk,
-                &outcome.per_frame,
-                outcome.done,
-                job.phi,
-                &run.cfg,
-            )?;
-            run.note_chunk_done(job.camera());
+            self.settle_chunk(run, job, outcome)?;
         }
         Ok(())
     }
@@ -429,6 +475,7 @@ impl Harness {
         wave: Vec<(usize, Chunk)>,
         dispatch_at: f64,
     ) -> Vec<ChunkJob> {
+        let slo_s = run.cfg.slo_s();
         let mut jobs = Vec::with_capacity(wave.len());
         for (vi, chunk) in wave {
             let phi = if run.cfg.drift {
@@ -444,6 +491,21 @@ impl Harness {
             let (shard, route) = run.pool.decide(job.dispatch_at, wan_up, cloud_wait);
             job.shard = shard;
             job.route = route;
+            // SLO admission (inert for a non-finite target): project the
+            // chunk's freshness on the cloud path; degrade the uplink if
+            // the standard low quality misses, refuse the chunk if even
+            // the degraded projection misses.
+            if slo_s.is_finite() && route == Route::Cloud {
+                let low = run.cfg.protocol.low_quality;
+                if project_freshness(run, &job, low) > slo_s {
+                    if project_freshness(run, &job, Quality::DEGRADED) > slo_s {
+                        run.metrics.chunks_dropped += 1;
+                        run.note_chunk_done(job.camera());
+                        continue;
+                    }
+                    job.quality_override = Some(Quality::DEGRADED);
+                }
+            }
             jobs.push(job);
         }
         jobs
@@ -463,10 +525,33 @@ impl Harness {
         dispatch_at: f64,
     ) -> Result<()> {
         let jobs = self.build_jobs(run, offsets, wave, dispatch_at);
+        if jobs.is_empty() {
+            return Ok(()); // SLO admission refused the whole wave
+        }
         let completed = run.with_ctx(|ctx| executor.run_wave(jobs, ctx))?;
         for (job, outcome) in &completed {
             run.pool.observe(outcome.done, &mut run.monitor);
             run.pool.autoscale(outcome.done, &run.monitor);
+            self.settle_chunk(run, job, outcome)?;
+        }
+        Ok(())
+    }
+
+    /// Post-completion bookkeeping shared by the wave-scoped and streaming
+    /// drivers: feed the cloud pool provisioner, score the chunk — unless
+    /// a binding SLO marked it stale at the barrier (the executor already
+    /// counted it dropped and skipped its latency/served counters; it
+    /// contributes no F1 here) — and shrink the camera's outstanding-chunk
+    /// budget either way so its HITL session still retires on time.
+    fn settle_chunk(
+        &self,
+        run: &mut VpaasRun,
+        job: &ChunkJob,
+        outcome: &ChunkOutcome,
+    ) -> Result<()> {
+        run.cloud.observe(outcome.done, &mut run.monitor);
+        run.cloud.autoscale(outcome.done, &run.monitor);
+        if job.stream_age(outcome.done) <= run.cfg.slo_s() {
             self.score_chunk(
                 &mut run.metrics,
                 &job.chunk,
@@ -475,8 +560,13 @@ impl Harness {
                 job.phi,
                 &run.cfg,
             )?;
-            run.note_chunk_done(job.camera());
+        } else {
+            // stale: billed and transmitted, but never served
+            run.metrics.bandwidth.add_video_time(job.chunk.duration());
+            run.metrics.makespan = run.metrics.makespan.max(outcome.done);
+            run.metrics.chunk_log.push((job.chunk.video_id, job.chunk.chunk_idx));
         }
+        run.note_chunk_done(job.camera());
         Ok(())
     }
 
@@ -640,13 +730,52 @@ fn form_waves(
     waves
 }
 
+/// Conservative projection of a chunk's freshness latency — capture of
+/// its oldest frame through `FogClassify` — if admitted now with uplink
+/// `quality`: the stream's age at dispatch plus, along the cloud path,
+/// each queue's current backlog and a worst-case (max-jitter) transfer or
+/// compute estimate. Purely observational (reads horizons, moves
+/// nothing), deterministic, and monotone in the uplink byte count — so
+/// degrading the quality can only lower it. The SLO admission controller
+/// compares this against `RunConfig::slo_ms`; the executor's barrier gate
+/// independently guarantees no stale chunk is ever scored, so the
+/// projection trades precision for cheapness.
+fn project_freshness(run: &VpaasRun, job: &ChunkJob, quality: Quality) -> f64 {
+    let p = &run.p;
+    let n = job.chunk.frames.len();
+    let at = job.dispatch_at;
+    // worst-case transfer: queue backlog + serialization at ≥ the max
+    // jitter stretch (jitter draws are clamped to 2 sigma) + propagation
+    let xfer = |spec: LinkSpec, backlog: f64, bytes: f64| -> f64 {
+        let serialize = bytes * 8.0 / (spec.bandwidth_mbps * 1e6);
+        backlog + serialize * (1.0 + 2.0 * spec.jitter_frac) + spec.propagation_s
+    };
+    let lan = run.topo.fog_lans.get(job.shard).unwrap_or(&run.topo.lan);
+    let hi_bytes = n as f64 * codec::frame_bytes(Quality::ORIGINAL, p);
+    let low_bytes = n as f64 * codec::frame_bytes(quality, p);
+    let fog_dev = device::FOG;
+    // classify term is a typical-shape allowance (a batch of crops), not
+    // a bound — crop count is unknowable before detection runs
+    let classify_s = fog_dev.batched(fog_dev.classify_s, 16);
+    let fb_bytes = codec::feedback_bytes(4 * n);
+    job.stream_age(at)
+        + xfer(lan.spec(), lan.backlog_s(at), hi_bytes)
+        + run.pool.shard_backlog(job.shard, at)
+        + fog_dev.quality_control_s(n)
+        + xfer(run.topo.wan_up.spec(), run.topo.wan_up.backlog_s(at), low_bytes)
+        + run.cloud.min_backlog_s(at)
+        + run.cloud.detect_cost_s(n)
+        + xfer(run.topo.wan_down.spec(), run.topo.wan_down.backlog_s(at), fb_bytes)
+        + classify_s
+}
+
 /// Mutable state of one sharded VPaaS run, bundled so the per-wave step
 /// can borrow the pieces disjointly.
 struct VpaasRun {
     p: Arc<SimParams>,
     cfg: RunConfig,
     topo: Topology,
-    cloud: CloudServer,
+    cloud: CloudGpuPool,
     pool: FogShardPool,
     annotator: Annotator,
     coordinator: Coordinator,
@@ -664,7 +793,7 @@ impl VpaasRun {
     /// per-shard LAN top-up) lives, shared by the wave-scoped and
     /// streaming drivers.
     fn with_ctx<T>(&mut self, f: impl FnOnce(&mut StageCtx) -> Result<T>) -> Result<T> {
-        let VpaasRun { topo, cloud, pool, annotator, coordinator, metrics, p, .. } = self;
+        let VpaasRun { topo, cloud, pool, annotator, coordinator, metrics, p, cfg, .. } = self;
         topo.ensure_fog_lans(pool.len());
         let mut ctx = StageCtx {
             p: p.as_ref(),
@@ -674,6 +803,7 @@ impl VpaasRun {
             fogs: pool.shards_mut(),
             annotator,
             metrics,
+            slo_s: cfg.slo_s(),
         };
         f(&mut ctx)
     }

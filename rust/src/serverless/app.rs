@@ -18,7 +18,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::cloud::{CloudConfig, CloudServer};
+use crate::cloud::{CloudGpuPool, CloudPoolConfig};
 use crate::fog::FogNode;
 use crate::hitl::IncrementalLearner;
 use crate::metrics::meters::RunMetrics;
@@ -49,7 +49,9 @@ pub struct VideoApp {
     pub metrics: RunMetrics,
     svc: InferenceService,
     coordinator: Coordinator,
-    cloud: CloudServer,
+    /// The cloud GPU tier (`[cloud] gpus` workers; 1 reproduces the
+    /// legacy single-server deployment).
+    cloud: CloudGpuPool,
     fog: FogNode,
     topo: Topology,
     annotator: Annotator,
@@ -59,6 +61,10 @@ pub struct VideoApp {
     /// config time because this app executes one chunk at a time — use
     /// [`crate::pipeline::RunConfig`] for run-scoped streaming).
     dispatch: DispatchMode,
+    /// Freshness SLO in seconds (`[app] slo_ms`); non-finite disables the
+    /// gate. A chunk finishing staler than this counts into
+    /// `RunMetrics::chunks_dropped` instead of being served.
+    slo_s: f64,
     chunks_processed: u64,
 }
 
@@ -96,15 +102,18 @@ impl VideoApp {
         );
         let mut coordinator = Coordinator::new(protocol, learner);
         coordinator.hitl_enabled = cfg.bool_or("hitl", "enabled", true)?;
-        let cloud = CloudServer::new(
+        // `[cloud] gpus` sizes the worker pool; 1 keeps the legacy
+        // single-server layout (with its in-server provisioner when
+        // `[cloud] autoscale` is set)
+        let gpus = cfg.usize_or("cloud", "gpus", 1)?;
+        let slo_ms = cfg.f64_or("app", "slo_ms", f64::INFINITY)?;
+        let cloud = CloudGpuPool::new(
             handle.clone(),
-            CloudConfig {
-                autoscale: cfg.bool_or("cloud", "autoscale", false)?,
-                ..Default::default()
-            },
+            CloudPoolConfig::for_deployment(gpus, cfg.bool_or("cloud", "autoscale", false)?),
             params.grid,
             params.num_classes,
             params.feat_dim,
+            seed,
         );
         let fog =
             FogNode::new(handle, params.cls_last0.clone(), params.feat_dim, params.num_classes);
@@ -131,6 +140,7 @@ impl VideoApp {
             annotator,
             policy_name,
             dispatch,
+            slo_s: slo_ms / 1e3,
             chunks_processed: 0,
         })
     }
@@ -182,12 +192,14 @@ impl VideoApp {
                 fogs: std::slice::from_mut(&mut self.fog),
                 annotator: &mut self.annotator,
                 metrics: &mut self.metrics,
+                slo_s: self.slo_s,
             };
             executor.run_chunk(job, &mut ctx)?
         };
         self.chunks_processed += 1;
         self.monitor.count("chunks", 1);
-        self.monitor.gauge("gpus", outcome.done, self.cloud.gpus() as f64);
+        self.cloud.observe(outcome.done, &mut self.monitor);
+        self.monitor.gauge("gpus", outcome.done, self.cloud.total_gpus() as f64);
         self.monitor.gauge("fog_backlog_s", outcome.done, self.fog.backlog_s(outcome.done));
         self.monitor
             .latency("freshness", outcome.done - arrival + chunk.duration());
@@ -251,6 +263,24 @@ mod tests {
         let out = a.process_chunk(&chunk, 0.0).unwrap();
         assert!(out.fallback_used);
         assert_eq!(a.metrics.bandwidth.bytes, 0.0);
+    }
+
+    #[test]
+    fn cloud_gpus_and_slo_are_config_selectable() {
+        let cfg = Config::parse("[cloud]\ngpus = 2\n[app]\nslo_ms = 1000\n").unwrap();
+        let mut a = VideoApp::from_config(&cfg).unwrap();
+        a.deploy_standard().unwrap();
+        let mut v = video(&a.params.clone());
+        let chunk = v.next_chunk().unwrap();
+        a.process_chunk(&chunk, 0.0).unwrap();
+        // the worker pool is really 2 wide and publishes its gauge
+        assert_eq!(a.monitor.track("gpu_workers").unwrap().latest(), Some(2.0));
+        // a 7.5 s chunk can never meet a 1 s freshness SLO: it is
+        // processed (and still counts toward the app's chunk counter) but
+        // refused at the barrier rather than served stale
+        assert_eq!(a.monitor.counter("chunks"), 1);
+        assert_eq!(a.metrics.chunks, 0);
+        assert_eq!(a.metrics.chunks_dropped, 1);
     }
 
     #[test]

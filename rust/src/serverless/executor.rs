@@ -44,6 +44,23 @@
 //! Overriding a function with [`FunctionRegistry::bind`] changes what the
 //! pipeline runs — see `examples/quickstart.rs`.
 //!
+//! ## Cloud GPU pool and the SLO gate
+//!
+//! [`Stage::CloudDetect`] events are *admitted* to the least-queue-wait
+//! worker of the [`CloudGpuPool`] in [`StageCtx::cloud`] (and `il_update`
+//! training bursts land on its least-backlog worker), so cloud GPU work
+//! scales out exactly like fog work does through
+//! [`FogShardPool`](crate::serverless::scheduler::FogShardPool). At the
+//! wave barrier a chunk whose [`ChunkJob::stream_age`] exceeds
+//! [`StageCtx::slo_s`] is *not served*: it is counted in
+//! `RunMetrics::chunks_dropped`, spends no annotator label budget,
+//! triggers no IL training and records no latency sample, so every
+//! served chunk provably meets the freshness SLO. A chunk whose
+//! [`ChunkJob::quality_override`] was set by SLO admission uplinks at the
+//! degraded quality and counts into `RunMetrics::chunks_degraded` when
+//! served. With a non-finite SLO (the default) both mechanisms are inert
+//! and the pipeline is bit-identical to the pre-SLO system.
+//!
 //! ## Determinism
 //!
 //! Event order is (time, push-sequence); all content-bearing decisions
@@ -57,7 +74,7 @@ use std::collections::BinaryHeap;
 
 use anyhow::Result;
 
-use crate::cloud::CloudServer;
+use crate::cloud::CloudGpuPool;
 use crate::fog::FogNode;
 use crate::metrics::f1::PredBox;
 use crate::metrics::meters::RunMetrics;
@@ -150,12 +167,31 @@ pub struct ChunkJob {
     pub shard: usize,
     /// Cloud protocol vs fog-only, as decided by the deployment policy.
     pub route: Route,
+    /// Uplink quality forced by SLO admission (bypasses the registered
+    /// `reencode_low` function's choice); `None` normally.
+    pub quality_override: Option<Quality>,
 }
 
 impl ChunkJob {
     pub fn new(chunk: Chunk, phi: f64, t_offset: f64) -> Self {
         let dispatch_at = t_offset + chunk.t_capture + chunk.duration();
-        ChunkJob { chunk, phi, t_offset, dispatch_at, shard: 0, route: Route::Cloud }
+        ChunkJob {
+            chunk,
+            phi,
+            t_offset,
+            dispatch_at,
+            shard: 0,
+            route: Route::Cloud,
+            quality_override: None,
+        }
+    }
+
+    /// Freshness age of this chunk's stream at virtual time `done`: time
+    /// since its oldest frame was captured. This is the quantity
+    /// `RunConfig::slo_ms` bounds (it upper-bounds every per-frame
+    /// freshness latency the run records for the chunk).
+    pub fn stream_age(&self, done: f64) -> f64 {
+        done - (self.t_offset + self.chunk.t_capture)
     }
 
     /// Virtual time at which the chunk's last frame is captured.
@@ -176,11 +212,20 @@ pub struct StageCtx<'a> {
     /// Protocol thresholds, global learner, per-camera HITL sessions.
     pub coord: &'a mut Coordinator,
     pub topo: &'a mut Topology,
-    pub cloud: &'a mut CloudServer,
+    /// The cloud GPU worker pool: every `CloudDetect` event is admitted to
+    /// the least-queue-wait worker and `il_update` training bursts land on
+    /// the least-backlog one (a single-worker pool reproduces the legacy
+    /// one-server cloud bit-for-bit).
+    pub cloud: &'a mut CloudGpuPool,
     /// The fog shard pool (a single-fog deployment passes a 1-slice).
     pub fogs: &'a mut [FogNode],
     pub annotator: &'a mut Annotator,
     pub metrics: &'a mut RunMetrics,
+    /// Freshness-latency SLO in seconds ([`ChunkJob::stream_age`] at the
+    /// wave barrier). A chunk that finishes staler than this is counted in
+    /// `RunMetrics::chunks_dropped` instead of being served; non-finite
+    /// (the default everywhere but SLO runs) disables the gate.
+    pub slo_s: f64,
 }
 
 /// Per-job runtime state while its events are in flight.
@@ -398,7 +443,10 @@ impl Executor {
             }
             Stage::QualityControl => {
                 let qc_done = ctx.fogs[s.job.shard].quality_control(n, at);
-                s.quality = (self.encode)(&ctx.coord.cfg);
+                // SLO admission may have degraded this chunk's uplink,
+                // bypassing the registered encode function's choice
+                s.quality =
+                    s.job.quality_override.unwrap_or_else(|| (self.encode)(&ctx.coord.cfg));
                 match s.job.route {
                     Route::Cloud => Ok(Some((qc_done, Stage::WanUplink))),
                     Route::Fog => Ok(Some((qc_done, Stage::FogFallback))),
@@ -422,7 +470,18 @@ impl Executor {
                     .iter()
                     .map(|f| render_frame(f, s.quality, s.job.phi, ctx.p))
                     .collect();
-                let (heads, timing) = (self.detect)(ctx.cloud, &frames, at)?;
+                // admit to the least-queue-wait GPU worker; the admitted
+                // worker is released (with its ExecTiming) on completion
+                let worker = ctx.cloud.admit(at);
+                let (heads, timing) =
+                    match (self.detect)(ctx.cloud.worker_mut(worker), &frames, at) {
+                        Ok(out) => out,
+                        Err(e) => {
+                            ctx.cloud.abort(worker);
+                            return Err(e);
+                        }
+                    };
+                ctx.cloud.complete(worker, timing);
                 let mut per_frame: Vec<Vec<PredBox>> = Vec::with_capacity(n);
                 let mut uncertain: Vec<Vec<PredBox>> = Vec::with_capacity(n);
                 let mut total = 0usize;
@@ -556,6 +615,17 @@ impl Executor {
     /// every dispatch mode so label content and metric accumulation order
     /// are mode-invariant.
     fn finish_job(&self, s: &mut JobState, ctx: &mut StageCtx) -> Result<()> {
+        // SLO gate: a chunk that finishes staler than the freshness target
+        // is not served — its bytes and billing already happened, but it
+        // spends no annotator label budget, triggers no IL training,
+        // contributes no latency sample and no served-chunk count, so
+        // `latency.max() <= slo_s` holds for every scored chunk by
+        // construction. Non-finite slo_s (the default) never fires.
+        if s.job.stream_age(s.done) > ctx.slo_s {
+            ctx.metrics.bandwidth.add(s.wan_bytes);
+            ctx.metrics.chunks_dropped += 1;
+            return Ok(());
+        }
         if ctx.coord.hitl_enabled && !s.fallback {
             for ((fi, region), f) in s.crop_refs.iter().zip(&s.feats) {
                 // the human looks at the crop; their label is the dominant
@@ -586,6 +656,11 @@ impl Executor {
             }
         }
         ctx.metrics.bandwidth.add(s.wan_bytes);
+        // a fallback chunk never uplinked, so an SLO override that was
+        // planned but not exercised must not count as a degrade
+        if s.job.quality_override.is_some() && !s.fallback {
+            ctx.metrics.chunks_degraded += 1;
+        }
         for i in 0..s.job.chunk.frames.len() {
             ctx.metrics
                 .latency
@@ -807,7 +882,7 @@ fn shard_lan(topo: &mut Topology, shard: usize) -> &mut Link {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cloud::CloudConfig;
+    use crate::cloud::CloudPoolConfig;
     use crate::hitl::IncrementalLearner;
     use crate::protocol::ProtocolConfig;
     use crate::runtime::InferenceService;
@@ -821,7 +896,7 @@ mod tests {
         p: std::sync::Arc<SimParams>,
         coord: Coordinator,
         topo: Topology,
-        cloud: CloudServer,
+        cloud: CloudGpuPool,
         fog: FogNode,
         annotator: Annotator,
         metrics: RunMetrics,
@@ -835,12 +910,13 @@ mod tests {
             let learner =
                 IncrementalLearner::new(h.clone(), p.cls_last0.clone(), p.il_batch, p.num_classes);
             let coord = Coordinator::new(ProtocolConfig::default(), learner);
-            let cloud = CloudServer::new(
+            let cloud = CloudGpuPool::new(
                 h.clone(),
-                CloudConfig::default(),
+                CloudPoolConfig::default(),
                 p.grid,
                 p.num_classes,
                 p.feat_dim,
+                7,
             );
             let fog = FogNode::new(h, p.cls_last0.clone(), p.feat_dim, p.num_classes);
             let annotator = Annotator::new(AnnotatorConfig {
@@ -861,6 +937,10 @@ mod tests {
         }
 
         fn ctx(&mut self) -> StageCtx<'_> {
+            self.ctx_with_slo(f64::INFINITY)
+        }
+
+        fn ctx_with_slo(&mut self, slo_s: f64) -> StageCtx<'_> {
             StageCtx {
                 p: self.p.as_ref(),
                 coord: &mut self.coord,
@@ -869,6 +949,7 @@ mod tests {
                 fogs: std::slice::from_mut(&mut self.fog),
                 annotator: &mut self.annotator,
                 metrics: &mut self.metrics,
+                slo_s,
             }
         }
     }
@@ -925,6 +1006,40 @@ mod tests {
         let (_, out2) = ex.run_chunk(job, &mut rig2.ctx()).unwrap();
         assert!(out2.fallback_used, "fog route serves locally");
         assert_eq!(rig2.metrics.bandwidth.bytes, 0.0, "fog route must not touch the WAN");
+    }
+
+    #[test]
+    fn slo_gate_counts_stale_chunks_as_dropped_not_served() {
+        let mut rig = Rig::new();
+        let ex = executor(DispatchMode::EventDriven);
+        // a chunk's stream age is at least its 7.5 s capture span, so a
+        // 1 s SLO is unmeetable: the chunk is processed (billed, bytes
+        // moved) but never served
+        ex.run_chunk(ChunkJob::new(chunk(5), 0.0, 0.0), &mut rig.ctx_with_slo(1.0)).unwrap();
+        assert_eq!(rig.metrics.chunks, 0, "a stale chunk must not count as served");
+        assert_eq!(rig.metrics.chunks_dropped, 1);
+        assert_eq!(rig.metrics.latency.summary().count, 0, "no latency sample for stale chunks");
+        assert!(rig.metrics.bandwidth.bytes > 0.0, "the WAN bytes really moved");
+    }
+
+    #[test]
+    fn quality_override_bypasses_encode_and_shrinks_the_uplink() {
+        let run = |ovr: Option<Quality>| {
+            let mut rig = Rig::new();
+            let ex = executor(DispatchMode::EventDriven);
+            let mut job = ChunkJob::new(chunk(6), 0.0, 0.0);
+            job.quality_override = ovr;
+            ex.run_chunk(job, &mut rig.ctx()).unwrap();
+            (rig.metrics.bandwidth.bytes, rig.metrics.chunks_degraded)
+        };
+        let (full_bytes, none_degraded) = run(None);
+        let (deg_bytes, one_degraded) = run(Some(Quality::DEGRADED));
+        assert_eq!(none_degraded, 0);
+        assert_eq!(one_degraded, 1, "a served override must count as degraded");
+        assert!(
+            deg_bytes < full_bytes,
+            "degraded uplink must move fewer bytes: {deg_bytes} vs {full_bytes}"
+        );
     }
 
     #[test]

@@ -48,6 +48,15 @@ pub fn latency_aware(i: PolicyInput) -> Route {
     }
 }
 
+/// Keep the cloud path only while its GPU pool is keeping up: route to
+/// the fog once the smoothed cloud queue wait (the `gpu_queue_s` signal
+/// the [`CloudGpuPool`](crate::cloud::CloudGpuPool) publishes, fed in as
+/// `cloud_wait_s`) exceeds the routed shard's backlog by more than a
+/// second — shedding GPU saturation before it turns into SLO misses.
+pub fn gpu_saturation_aware(i: PolicyInput) -> Route {
+    if !i.wan_up || i.cloud_wait_s > i.fog_backlog_s + 1.0 { Route::Fog } else { Route::Cloud }
+}
+
 #[derive(Default)]
 pub struct PolicyManager {
     policies: BTreeMap<String, Policy>,
@@ -78,6 +87,7 @@ impl PolicyManager {
         m.register("always_cloud", always_cloud);
         m.register("fog_when_disconnected", fog_when_disconnected);
         m.register("latency_aware", latency_aware);
+        m.register("gpu_saturation_aware", gpu_saturation_aware);
         m
     }
 }
@@ -97,13 +107,20 @@ mod tests {
         assert_eq!(fog_when_disconnected(input(true, 0.0)), Route::Cloud);
         assert_eq!(latency_aware(input(true, 5.0)), Route::Fog);
         assert_eq!(latency_aware(input(true, 0.1)), Route::Cloud);
+        // a saturated GPU pool sheds to the fog; a keeping-up one does not
+        let saturated =
+            PolicyInput { wan_wait_s: 0.0, wan_up: true, cloud_wait_s: 3.0, fog_backlog_s: 0.5 };
+        assert_eq!(gpu_saturation_aware(saturated), Route::Fog);
+        assert_eq!(gpu_saturation_aware(input(true, 0.0)), Route::Cloud);
+        assert_eq!(gpu_saturation_aware(input(false, 0.0)), Route::Fog);
     }
 
     #[test]
     fn manager_register_and_lookup() {
         let m = PolicyManager::with_standard_policies();
         assert!(m.get("latency_aware").is_ok());
+        assert!(m.get("gpu_saturation_aware").is_ok());
         assert!(m.get("nope").is_err());
-        assert_eq!(m.names().count(), 3);
+        assert_eq!(m.names().count(), 4);
     }
 }

@@ -31,6 +31,13 @@
 //! provisioner runs between admissions via
 //! [`FogShardPool::autoscale_bounded`] (floored so a shard with queued
 //! stage events is never retired under an in-flight chunk).
+//!
+//! The cloud tier scales through the same abstraction:
+//! [`CloudGpuPool`](crate::cloud::CloudGpuPool) mirrors this pool —
+//! least-queue-wait admission instead of least-backlog routing, the
+//! `gpu_queue_s`/`gpu_workers` gauges instead of `fog_backlog_s`/
+//! `fog_shards`, and the same tail-only never-strand-queued-work
+//! retirement rule.
 
 use crate::fog::FogNode;
 use crate::interchange::Tensor;
@@ -39,6 +46,24 @@ use crate::serverless::monitor::GlobalMonitor;
 use crate::serverless::policy::{self, Policy, PolicyInput, Route};
 use crate::util::rng::Pcg32;
 use crate::util::stats::Ewma;
+
+/// Pick the least-loaded index among `backlogs`. Exact ties (within
+/// 1e-12) break via `rng` so idle members share load, and the stream is
+/// drawn **only** when there is a real tie — this discipline is
+/// load-bearing for bit-reproducibility and is shared by both pool
+/// routers ([`FogShardPool`] and
+/// [`CloudGpuPool`](crate::cloud::CloudGpuPool)).
+pub(crate) fn pick_least_loaded(backlogs: &[f64], rng: &mut Pcg32) -> usize {
+    debug_assert!(!backlogs.is_empty(), "routing over an empty pool");
+    let best = backlogs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut ties = Vec::new();
+    for (i, &b) in backlogs.iter().enumerate() {
+        if (b - best).abs() < 1e-12 {
+            ties.push(i);
+        }
+    }
+    if ties.len() == 1 { ties[0] } else { ties[rng.index(ties.len())] }
+}
 
 /// Shard-pool knobs (defaults match the paper-scale workloads).
 #[derive(Debug, Clone, Copy)]
@@ -164,14 +189,7 @@ impl FogShardPool {
     /// shard 0 (deterministic given the seed).
     pub fn route(&mut self, now: f64) -> usize {
         let backlogs: Vec<f64> = self.shards.iter().map(|s| s.backlog_s(now)).collect();
-        let best = backlogs.iter().cloned().fold(f64::INFINITY, f64::min);
-        let mut ties = Vec::new();
-        for (i, &b) in backlogs.iter().enumerate() {
-            if (b - best).abs() < 1e-12 {
-                ties.push(i);
-            }
-        }
-        if ties.len() == 1 { ties[0] } else { ties[self.stream_rng.index(ties.len())] }
+        pick_least_loaded(&backlogs, &mut self.stream_rng)
     }
 
     /// Route a chunk: least-backlog shard + the deployment policy's verdict

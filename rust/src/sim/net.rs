@@ -128,6 +128,14 @@ impl Link {
         self.bytes_sent
     }
 
+    /// Seconds of queued transmissions still ahead of virtual time `now`
+    /// — how long a send issued at `now` would wait for the transmitter.
+    /// The SLO admission controller reads this to project a chunk's
+    /// freshness latency before committing it to the cloud path.
+    pub fn backlog_s(&self, now: f64) -> f64 {
+        (self.next_free - now).max(0.0)
+    }
+
     pub fn reset_accounting(&mut self) {
         self.bytes_sent = 0.0;
     }
@@ -239,6 +247,16 @@ mod tests {
         assert_eq!(l.bytes_sent(), 1500.0);
         l.reset_accounting();
         assert_eq!(l.bytes_sent(), 0.0);
+    }
+
+    #[test]
+    fn backlog_tracks_the_transmit_queue() {
+        let mut l = det_link(10.0);
+        assert_eq!(l.backlog_s(0.0), 0.0);
+        l.transfer(1_250_000.0, 0.0).unwrap(); // 1 s of serialization
+        assert!((l.backlog_s(0.0) - 1.0).abs() < 1e-9);
+        assert!((l.backlog_s(0.4) - 0.6).abs() < 1e-9);
+        assert_eq!(l.backlog_s(5.0), 0.0, "a drained queue has no backlog");
     }
 
     #[test]

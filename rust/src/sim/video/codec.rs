@@ -30,6 +30,11 @@ impl Quality {
     pub const HIGH_ROUND2: Quality = Quality::new(0.8, 26.0);
     /// CloudSeg client-side downscale (§VI-B: QP 20, RS 0.35).
     pub const CLOUDSEG_DOWN: Quality = Quality::new(0.35, 20.0);
+    /// SLO-degraded uplink: the admission controller drops to this
+    /// operating point when a chunk's projected freshness latency misses
+    /// `RunConfig::slo_ms` at the standard low quality (cheaper bitstream,
+    /// worse class margin — the Tangram-style latency/accuracy trade).
+    pub const DEGRADED: Quality = Quality::new(0.5, 44.0);
 }
 
 /// Encoded size of one frame in **bits**.
@@ -108,6 +113,11 @@ mod tests {
         assert!(orig > 4.0 * low, "orig={orig} low={low}");
         assert!(r2 > low);
         assert!(cs < orig && cs > 0.0);
+        // the SLO degrade knob must actually shrink the uplink (that is
+        // the whole point of degrading) while keeping a usable signal
+        let deg = frame_bytes(Quality::DEGRADED, &p);
+        assert!(deg < 0.6 * low, "degraded={deg} low={low}");
+        assert!(alpha(Quality::DEGRADED, &p) > 0.1);
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Consolidated pipeline-invariance suite.
+//!
+//! * **Content-invariance matrix** — for a fixed seed with the SLO
+//!   disabled, the run's [`content_fingerprint`] (labels, F1, WAN bytes,
+//!   billing, HITL counters, chunk order) must be bit-identical across
+//!   dispatch mode × fog shard count × cloud GPU count × workload
+//!   profile. Only *timing* (latency, makespan) may move. This promotes
+//!   the ad-hoc 7-way check that used to live in `tests/streaming.rs`
+//!   into one shared harness.
+//! * **SLO admission** — with a binding `slo_ms`, every scored chunk
+//!   meets the SLO by construction, `chunks + chunks_dropped` accounts
+//!   for every planned chunk exactly, and a non-binding finite SLO (the
+//!   machinery enabled but never firing) reproduces the disabled-SLO run
+//!   byte for byte.
+//! * **Retirement sweep** — the defensive end-of-run `retire_all` sweep
+//!   retires zero sessions on every built-in workload profile (per-chunk
+//!   retirement must not hide behind it).
+//!
+//! [`content_fingerprint`]: vpaas::metrics::meters::RunMetrics::content_fingerprint
+
+use vpaas::pipeline::{Harness, RunConfig, SystemKind};
+use vpaas::serverless::executor::DispatchMode;
+use vpaas::sim::video::chunk::FRAMES_PER_CHUNK;
+use vpaas::sim::video::datasets::{self, DatasetSpec};
+use vpaas::sim::video::WorkloadProfile;
+
+fn cameras(n: usize) -> DatasetSpec {
+    let mut d = datasets::drone(0.1);
+    d.videos.truncate(n);
+    d
+}
+
+fn cfg(shards: usize, gpus: usize, dispatch: DispatchMode, workload: WorkloadProfile) -> RunConfig {
+    RunConfig { shards, gpus, dispatch, workload, golden: false, ..RunConfig::default() }
+}
+
+#[test]
+fn content_is_invariant_across_the_execution_matrix() {
+    let h = Harness::new().unwrap();
+    let ds = cameras(3);
+    // (dispatch, shards, gpus) variants measured against the canonical
+    // single-shard single-GPU wave-barrier execution, per workload
+    let variants = [
+        (DispatchMode::Streaming, 2usize, 2usize),
+        (DispatchMode::Sequential, 1, 4),
+        (DispatchMode::Streaming, 4, 1),
+    ];
+    for workload in WorkloadProfile::all() {
+        let reference = h
+            .run(SystemKind::Vpaas, &ds, &cfg(1, 1, DispatchMode::EventDriven, workload))
+            .unwrap();
+        assert!(reference.chunks > 0);
+        let want = reference.content_fingerprint();
+        for (dispatch, shards, gpus) in variants {
+            let m = h.run(SystemKind::Vpaas, &ds, &cfg(shards, gpus, dispatch, workload)).unwrap();
+            assert_eq!(
+                m.content_fingerprint(),
+                want,
+                "{}/{}/{} shards/{} gpus changed run content",
+                workload.name(),
+                dispatch.name(),
+                shards,
+                gpus,
+            );
+        }
+    }
+}
+
+#[test]
+fn non_binding_slo_reproduces_the_golden_run_byte_for_byte() {
+    let h = Harness::new().unwrap();
+    let ds = cameras(3);
+    let base = cfg(2, 2, DispatchMode::Streaming, WorkloadProfile::Bursty);
+    let golden = h.run(SystemKind::Vpaas, &ds, &base).unwrap();
+    // enabling the admission machinery with a target no chunk can miss
+    // must change nothing — projections run, but no degrade, no drop, and
+    // every timing bit is identical to the slo_ms = INFINITY run
+    let finite = h.run(SystemKind::Vpaas, &ds, &RunConfig { slo_ms: 1e12, ..base }).unwrap();
+    assert_eq!(golden.content_fingerprint(), finite.content_fingerprint());
+    assert_eq!(golden.chunks_degraded, 0);
+    assert_eq!(finite.chunks_degraded, 0);
+    assert_eq!(finite.chunks_dropped, 0);
+    assert_eq!(golden.makespan.to_bits(), finite.makespan.to_bits());
+    let (sa, sb) = (golden.latency.summary(), finite.latency.summary());
+    assert_eq!(sa.count, sb.count);
+    assert_eq!(sa.mean.to_bits(), sb.mean.to_bits());
+    assert_eq!(sa.max.to_bits(), sb.max.to_bits());
+}
+
+#[test]
+fn binding_slo_degrades_or_drops_and_every_scored_chunk_meets_it() {
+    let h = Harness::new().unwrap();
+    let ds = cameras(4);
+    let base = cfg(2, 1, DispatchMode::Streaming, WorkloadProfile::Bursty);
+    // reference run: per-chunk stream ages are the first (oldest-frame)
+    // latency sample of each 15-frame chunk, recorded in finish order
+    let reference = h.run(SystemKind::Vpaas, &ds, &base).unwrap();
+    let mut ages: Vec<f64> = reference
+        .latency
+        .freshness
+        .values()
+        .chunks(FRAMES_PER_CHUNK)
+        .map(|c| c[0])
+        .collect();
+    assert_eq!(ages.len() as u64, reference.chunks);
+    ages.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // a target between the p75 and the max chunk age: comfortably above
+    // the typical chunk, strictly below the worst one — so it binds
+    let slo_s = (ages[ages.len() * 3 / 4] + ages[ages.len() - 1]) / 2.0;
+    assert!(slo_s < ages[ages.len() - 1], "degenerate workload: all chunk ages equal");
+    let slo_cfg = RunConfig { slo_ms: slo_s * 1e3, ..base };
+    let m = h.run(SystemKind::Vpaas, &ds, &slo_cfg).unwrap();
+    // every scored chunk meets the SLO — by construction of the barrier
+    // gate, and asserted here on the recorded freshness samples
+    let s = m.latency.summary();
+    if s.count > 0 {
+        assert!(s.max <= slo_s + 1e-9, "scored chunk missed the SLO: {} > {slo_s}", s.max);
+    }
+    // exact accounting: every planned chunk was served or dropped, never
+    // lost; degraded chunks are a subset of the served ones
+    let planned: u64 = ds.make_videos(&h.params).iter().map(|v| v.chunks_total()).sum();
+    assert_eq!(m.chunks + m.chunks_dropped, planned, "chunks lost or invented under SLO");
+    assert!(m.chunks_degraded <= m.chunks);
+    // the target really bound: either admission intervened, or the run
+    // would equal the reference bit-for-bit and its worst chunk would
+    // have been late-dropped
+    assert!(m.chunks_degraded + m.chunks_dropped > 0, "SLO never bound: {m:?}");
+    assert!(m.chunks > 0, "SLO admission refused the entire workload: {m:?}");
+    // binding runs stay deterministic
+    let again = h.run(SystemKind::Vpaas, &ds, &slo_cfg).unwrap();
+    assert_eq!(m.content_fingerprint(), again.content_fingerprint());
+    assert_eq!(m.makespan.to_bits(), again.makespan.to_bits());
+}
+
+#[test]
+fn retire_all_sweep_finds_nothing_on_every_workload_profile() {
+    let h = Harness::new().unwrap();
+    let ds = cameras(3);
+    for workload in WorkloadProfile::all() {
+        for dispatch in [DispatchMode::Streaming, DispatchMode::EventDriven] {
+            let m = h.run(SystemKind::Vpaas, &ds, &cfg(2, 1, dispatch, workload)).unwrap();
+            assert_eq!(
+                m.sessions_swept,
+                0,
+                "{}/{}: the defensive retire_all sweep had to clean up — per-chunk \
+                 retirement missed a session",
+                workload.name(),
+                dispatch.name(),
+            );
+        }
+    }
+}

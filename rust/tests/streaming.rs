@@ -20,15 +20,12 @@ fn cfg(shards: usize, dispatch: DispatchMode, workload: WorkloadProfile) -> RunC
 }
 
 /// Everything that must be identical across dispatch modes for one seed:
-/// what was detected, labeled, trained, billed and transmitted.
+/// what was detected, labeled, trained, billed and transmitted. The full
+/// execution matrix (dispatch × shards × GPUs × workload) lives in
+/// `tests/invariance.rs` on the same [`RunMetrics::content_fingerprint`]
+/// harness; this file keeps the makespan-ordering and determinism checks.
 fn assert_same_content(a: &RunMetrics, b: &RunMetrics, what: &str) {
-    assert_eq!(a.f1_true, b.f1_true, "{what}: detections moved");
-    assert_eq!(a.chunk_log, b.chunk_log, "{what}: chunk order moved");
-    assert_eq!(a.labels_used, b.labels_used, "{what}: HITL labels moved");
-    assert_eq!(a.fog_regions, b.fog_regions, "{what}: fog crops moved");
-    assert_eq!(a.bandwidth.bytes, b.bandwidth.bytes, "{what}: WAN traffic moved");
-    assert_eq!(a.cost.units(), b.cost.units(), "{what}: billing moved");
-    assert_eq!(a.sessions_retired, b.sessions_retired, "{what}: sessions moved");
+    assert_eq!(a.content_fingerprint(), b.content_fingerprint(), "{what}: content moved");
 }
 
 #[test]
