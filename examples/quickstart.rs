@@ -15,7 +15,7 @@ use vpaas::interchange::Tensor;
 use vpaas::metrics::report::table;
 use vpaas::pipeline::{Harness, RunConfig, SystemKind};
 use vpaas::serverless::registry::StageBody;
-use vpaas::sim::video::datasets;
+use vpaas::sim::video::{datasets, Quality};
 
 fn main() -> anyhow::Result<()> {
     // The harness owns the shared PJRT engine; artifacts are loaded from
@@ -73,6 +73,24 @@ fn main() -> anyhow::Result<()> {
         lite.f1_true.f1(),
         vpaas.fog_regions,
         lite.fog_regions,
+    );
+
+    // ---- SLO admission with a custom rate ladder -----------------------
+    // A binding freshness target makes the admission controller search
+    // the configured ladder (highest quality first) for the best uplink
+    // whose projection still meets the SLO, refusing the chunk only when
+    // even the lowest rung misses. Any byte-monotone rung list works —
+    // here a three-rung custom ladder ending at the standard floor.
+    let slo_cfg = RunConfig {
+        slo_ms: 11_000.0,
+        ladder: vec![Quality::new(0.75, 38.0), Quality::new(0.6, 42.0), Quality::DEGRADED],
+        ..cfg.clone()
+    };
+    let slo = harness.run(SystemKind::Vpaas, &dataset, &slo_cfg)?;
+    println!(
+        "11 s freshness SLO over a custom 3-rung ladder: served {} (degraded {}), dropped {}, \
+         per-rung plans {:?}",
+        slo.chunks, slo.chunks_degraded, slo.chunks_dropped, slo.degrade_planned,
     );
     Ok(())
 }

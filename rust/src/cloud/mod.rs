@@ -11,15 +11,17 @@
 //! * [`CloudServer`] — one GPU server process: an internal load balancer
 //!   over its own `next_free` GPU horizons plus the legacy in-server
 //!   provisioner (the seed system's whole cloud tier).
-//! * [`CloudGpuPool`] — the sharded cloud tier, mirroring
-//!   [`FogShardPool`](crate::serverless::scheduler::FogShardPool) on the
-//!   fog side: N `CloudServer` workers behind one control plane with
+//! * [`CloudGpuPool`] — the sharded cloud tier: N `CloudServer` workers
+//!   behind the **generic** [`TierPool`](crate::serverless::pool::TierPool)
+//!   control plane it shares with the fog side's
+//!   [`FogShardPool`](crate::serverless::scheduler::FogShardPool) —
 //!   least-queue-wait [`CloudGpuPool::admit`] routing for `CloudDetect`
 //!   and `il_update` stage events (plus the pooled
-//!   [`CloudGpuPool::sr_chunk`] entry point for SR-stage pipelines),
-//!   per-worker [`ExecTiming`] queues, `gpu_queue_s`/`gpu_workers`
-//!   gauges published
-//!   into the [`GlobalMonitor`], and a bounded provisioner that never
+//!   [`CloudGpuPool::sr_chunk`] entry point for SR-stage pipelines and
+//!   the deadline-aware [`CloudGpuPool::admit_within`] the SLO-coupled
+//!   executor uses), per-worker [`ExecTiming`] queues,
+//!   `gpu_queue_s`/`gpu_workers` gauges published into the
+//!   [`GlobalMonitor`], and the generic bounded provisioner that never
 //!   retires a worker with admitted (in-flight) events or an un-drained
 //!   GPU horizon. A single-worker pool is bit-identical to driving the
 //!   legacy server directly ([`CloudPoolConfig::for_deployment`]).
@@ -31,9 +33,9 @@ use crate::metrics::meters::CostMeter;
 use crate::protocol::post::FrameHeads;
 use crate::runtime::InferenceHandle;
 use crate::serverless::monitor::GlobalMonitor;
+use crate::serverless::pool::{PoolWorker, SpawnFn, TierPool, TierPoolConfig};
 use crate::serving::batcher::{plan_batches, BatchPlanner};
 use crate::sim::device::{DeviceProfile, CLOUD};
-use crate::util::rng::Pcg32;
 use crate::util::stats::Ewma;
 
 /// Owned per-frame detector head outputs.
@@ -316,6 +318,29 @@ impl CloudServer {
     }
 }
 
+/// The generic-pool view of a cloud worker: queue state for routing and
+/// provisioning, the serverless bill for retirement carry-over, and a
+/// cost projection that reports the co-located-training inflation to the
+/// deadline-aware router.
+impl PoolWorker for CloudServer {
+    fn backlog_s(&self, now: f64) -> f64 {
+        CloudServer::backlog_s(self, now)
+    }
+
+    fn earliest_free(&self) -> f64 {
+        CloudServer::earliest_free(self)
+    }
+
+    fn billing(&self) -> Option<&CostMeter> {
+        Some(&self.billing)
+    }
+
+    fn projected_cost_s(&self, start: f64, base_cost_s: f64) -> f64 {
+        // ops starting inside a training window run slower (Fig. 13b)
+        if self.in_train_window(start) { base_cost_s * 1.6 } else { base_cost_s }
+    }
+}
+
 // ------------------------------------------------------------------ pool
 
 /// Knobs for the sharded multi-worker cloud GPU tier (defaults mirror
@@ -386,43 +411,34 @@ impl CloudPoolConfig {
     }
 }
 
-/// The sharded cloud GPU tier: N [`CloudServer`] workers behind one
-/// serverless control plane, mirroring the fog tier's
-/// [`FogShardPool`](crate::serverless::scheduler::FogShardPool).
+/// The sharded cloud GPU tier: N [`CloudServer`] workers behind the
+/// generic [`TierPool`] control plane the fog tier's
+/// [`FogShardPool`](crate::serverless::scheduler::FogShardPool) also
+/// instantiates, plus the cloud-specific entry points (pooled detect/SR,
+/// training-burst placement, the smoothed queue-wait signal and the
+/// admission cost model).
 ///
 /// Stage events targeting the cloud (`CloudDetect`, `il_update` training
 /// bursts, and SR through [`CloudGpuPool::sr_chunk`]) are *admitted* to
-/// the least-queue-wait worker
-/// ([`CloudGpuPool::admit`], exact ties broken by a seeded RNG stream so
-/// idle workers share load deterministically) and *completed* with the
-/// execution's [`ExecTiming`] ([`CloudGpuPool::complete`]), which feeds
-/// the per-worker timing queues, the smoothed queue-wait gauge and the
-/// provisioner. The provisioner ([`CloudGpuPool::autoscale_bounded`])
-/// never retires a worker that has admitted-but-uncompleted events or an
-/// un-drained GPU horizon, and only retires the tail worker so worker
-/// indices stay stable.
+/// the least-queue-wait worker ([`CloudGpuPool::admit`], exact ties
+/// broken by a seeded RNG stream so idle workers share load
+/// deterministically; under a finite SLO the executor uses the
+/// deadline-aware [`CloudGpuPool::admit_within`] instead) and *completed*
+/// with the execution's [`ExecTiming`] ([`CloudGpuPool::complete`]),
+/// which feeds the per-worker timing queues, the smoothed queue-wait
+/// gauge and the provisioner. The generic provisioner
+/// ([`TierPool::autoscale_bounded`]) never retires a worker that has
+/// admitted-but-uncompleted events or an un-drained GPU horizon, only
+/// retires the tail worker so indices stay stable, and carries a retired
+/// worker's bill over into [`CloudGpuPool::billing`].
 pub struct CloudGpuPool {
-    handle: InferenceHandle,
-    grid: usize,
-    num_classes: usize,
-    feat_dim: usize,
+    /// The deployment's pool configuration. `worker` (the per-worker
+    /// batch buckets the admission cost model reads) stays live; the
+    /// provisioner knobs (bounds, autoscale, thresholds) are
+    /// **snapshotted** into the generic [`TierPool`]'s own config at
+    /// construction — mutate them before building the pool.
     pub cfg: CloudPoolConfig,
-    workers: Vec<CloudServer>,
-    /// Stage events admitted per worker and not yet completed.
-    in_flight: Vec<usize>,
-    /// Per-worker-slot completed [`ExecTiming`]s, in completion order.
-    /// Slots are never removed: a retired-and-respawned tail worker
-    /// appends to the same slot.
-    timings: Vec<Vec<ExecTiming>>,
-    /// Billing carried over from retired workers.
-    retired_billing: CostMeter,
-    backlog_ewma: Ewma,
-    total_wait_s: f64,
-    stream_rng: Pcg32,
-    /// (virtual time, worker count) provisioning history.
-    pub history: Vec<(f64, usize)>,
-    /// Stage events admitted over the pool's lifetime.
-    pub routed: u64,
+    tier: TierPool<CloudServer>,
 }
 
 impl CloudGpuPool {
@@ -434,90 +450,76 @@ impl CloudGpuPool {
         feat_dim: usize,
         seed: u64,
     ) -> Self {
-        assert!(cfg.initial_workers >= 1 && cfg.max_workers >= cfg.initial_workers);
-        let mut pool = CloudGpuPool {
-            handle,
-            grid,
-            num_classes,
-            feat_dim,
-            workers: Vec::new(),
-            in_flight: Vec::new(),
-            timings: Vec::new(),
-            retired_billing: CostMeter::default(),
-            backlog_ewma: Ewma::new(0.3),
-            total_wait_s: 0.0,
-            stream_rng: Pcg32::new(seed, 0x6B0),
-            history: Vec::new(),
-            routed: 0,
-            cfg,
+        let tier_cfg = TierPoolConfig {
+            initial: cfg.initial_workers,
+            max: cfg.max_workers,
+            autoscale: cfg.autoscale,
+            scale_up_backlog_s: cfg.scale_up_backlog_s,
+            scale_down_backlog_s: cfg.scale_down_backlog_s,
+            backlog_gauge: "gpu_queue_s",
+            size_gauge: "gpu_workers",
         };
-        for _ in 0..pool.cfg.initial_workers {
-            pool.spawn_worker(0.0);
-        }
-        pool
-    }
-
-    fn spawn_worker(&mut self, now: f64) {
-        self.workers.push(CloudServer::new(
-            self.handle.clone(),
-            self.cfg.worker.clone(),
-            self.grid,
-            self.num_classes,
-            self.feat_dim,
-        ));
-        self.in_flight.push(0);
-        if self.timings.len() < self.workers.len() {
-            self.timings.push(Vec::new());
-        }
-        self.history.push((now, self.workers.len()));
+        let worker_cfg = cfg.worker.clone();
+        let spawn: SpawnFn<CloudServer> = Box::new(move |_live: &[CloudServer]| {
+            CloudServer::new(handle.clone(), worker_cfg.clone(), grid, num_classes, feat_dim)
+        });
+        CloudGpuPool { cfg, tier: TierPool::new(tier_cfg, spawn, seed, 0x6B0) }
     }
 
     pub fn len(&self) -> usize {
-        self.workers.len()
+        self.tier.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.workers.is_empty()
+        self.tier.is_empty()
     }
 
     pub fn worker(&self, i: usize) -> &CloudServer {
-        &self.workers[i]
+        self.tier.worker(i)
     }
 
     pub fn worker_mut(&mut self, i: usize) -> &mut CloudServer {
-        &mut self.workers[i]
+        self.tier.worker_mut(i)
     }
 
     /// Total GPUs across all workers (worker count × in-server GPUs).
     pub fn total_gpus(&self) -> usize {
-        self.workers.iter().map(CloudServer::gpus).sum()
+        self.tier.workers().iter().map(CloudServer::gpus).sum()
+    }
+
+    /// (virtual time, worker count) provisioning history.
+    pub fn history(&self) -> &[(f64, usize)] {
+        &self.tier.history
+    }
+
+    /// Stage events admitted over the pool's lifetime.
+    pub fn routed(&self) -> u64 {
+        self.tier.routed
     }
 
     pub fn backlog_s(&self, i: usize, now: f64) -> f64 {
-        self.workers[i].backlog_s(now)
+        self.tier.backlog_s(i, now)
     }
 
     pub fn mean_backlog(&self, now: f64) -> f64 {
-        let n = self.workers.len().max(1) as f64;
-        self.workers.iter().map(|w| w.backlog_s(now)).sum::<f64>() / n
+        self.tier.mean_backlog(now)
     }
 
     /// The least backlog across workers — what a chunk admitted at `now`
     /// would wait before its first batch starts (the admission
     /// controller's cloud-queue term).
     pub fn min_backlog_s(&self, now: f64) -> f64 {
-        self.workers.iter().map(|w| w.backlog_s(now)).fold(f64::INFINITY, f64::min).max(0.0)
+        self.tier.min_backlog_s(now)
     }
 
     /// Pick the least-queue-wait worker; exact ties break via the pool's
     /// seeded RNG stream so idle workers share load (deterministic per
     /// seed, and drawn only when there *is* a tie — a 1-worker pool never
-    /// touches the stream). Shares
-    /// [`pick_least_loaded`](crate::serverless::scheduler) with the fog
-    /// shard router so the two tiers' tie-break discipline cannot drift.
+    /// touches the stream). The pick is the generic
+    /// [`TierPool::route`], shared with the fog shard router so the two
+    /// tiers' tie-break discipline cannot drift.
     pub fn route(&mut self, now: f64) -> usize {
-        let backlogs: Vec<f64> = self.workers.iter().map(|w| w.backlog_s(now)).collect();
-        crate::serverless::scheduler::pick_least_loaded(&backlogs, &mut self.stream_rng)
+        self.tier.route(now)
     }
 
     /// Admit one cloud stage event: route it and mark the worker busy
@@ -525,10 +527,17 @@ impl CloudGpuPool {
     /// is always a live worker, and the provisioner will not retire it
     /// while the event is in flight.
     pub fn admit(&mut self, now: f64) -> usize {
-        let w = self.route(now);
-        self.in_flight[w] += 1;
-        self.routed += 1;
-        w
+        self.tier.admit(now)
+    }
+
+    /// Deadline-aware admission for the SLO-coupled executor: among
+    /// workers whose projected completion (`now` + backlog + projected op
+    /// cost, including any co-located-training inflation) meets
+    /// `deadline`, admit the least-loaded; fall back to plain least-wait
+    /// when none qualifies. A non-finite deadline is bit-identical to
+    /// [`CloudGpuPool::admit`].
+    pub fn admit_within(&mut self, now: f64, deadline: f64, base_cost_s: f64) -> usize {
+        self.tier.admit_within(now, deadline, base_cost_s)
     }
 
     /// Complete an admitted event with its execution timing: releases the
@@ -536,34 +545,29 @@ impl CloudGpuPool {
     /// accounting is conserved: the sum of every completed `queue_wait`
     /// equals [`CloudGpuPool::total_wait_s`].
     pub fn complete(&mut self, worker: usize, timing: ExecTiming) {
-        assert!(self.in_flight[worker] > 0, "complete without admit on worker {worker}");
-        debug_assert!(timing.queue_wait >= 0.0, "negative queue wait {}", timing.queue_wait);
-        self.in_flight[worker] -= 1;
-        self.total_wait_s += timing.queue_wait;
-        self.timings[worker].push(timing);
+        self.tier.complete(worker, timing);
     }
 
     /// Release an admitted event whose execution failed (no timing to
     /// account).
     pub fn abort(&mut self, worker: usize) {
-        assert!(self.in_flight[worker] > 0, "abort without admit on worker {worker}");
-        self.in_flight[worker] -= 1;
+        self.tier.abort(worker);
     }
 
     /// Events admitted to `worker` and not yet completed.
     pub fn in_flight(&self, worker: usize) -> usize {
-        self.in_flight[worker]
+        self.tier.in_flight(worker)
     }
 
     /// Completed executions on `worker`'s slot, in completion order.
     pub fn timings(&self, worker: usize) -> &[ExecTiming] {
-        &self.timings[worker]
+        self.tier.timings(worker)
     }
 
     /// Sum of every completed execution's queue wait (conservation check
     /// for the admit/complete protocol).
     pub fn total_wait_s(&self) -> f64 {
-        self.total_wait_s
+        self.tier.total_wait_s()
     }
 
     /// Smoothed queue wait a chunk would see at the best worker — the
@@ -572,7 +576,12 @@ impl CloudGpuPool {
     /// (feeds the `cloud_wait_s` field of
     /// [`PolicyInput`](crate::serverless::policy::PolicyInput)).
     pub fn queue_wait(&self) -> f64 {
-        self.workers.iter().map(CloudServer::queue_wait).fold(f64::INFINITY, f64::min).max(0.0)
+        self.tier
+            .workers()
+            .iter()
+            .map(CloudServer::queue_wait)
+            .fold(f64::INFINITY, f64::min)
+            .max(0.0)
     }
 
     /// Run the heavy detector on the least-queue-wait worker
@@ -583,14 +592,14 @@ impl CloudGpuPool {
         arrival: f64,
         artifact_prefix: &str,
     ) -> Result<(Vec<HeadsOwned>, ExecTiming, usize)> {
-        let w = self.admit(arrival);
-        match self.workers[w].detect_chunk(frames, arrival, artifact_prefix) {
+        let w = self.tier.admit(arrival);
+        match self.tier.worker_mut(w).detect_chunk(frames, arrival, artifact_prefix) {
             Ok((heads, timing)) => {
-                self.complete(w, timing);
+                self.tier.complete(w, timing);
                 Ok((heads, timing, w))
             }
             Err(e) => {
-                self.abort(w);
+                self.tier.abort(w);
                 Err(e)
             }
         }
@@ -603,14 +612,14 @@ impl CloudGpuPool {
         frames: &[Tensor],
         arrival: f64,
     ) -> Result<(Vec<Tensor>, ExecTiming, usize)> {
-        let w = self.admit(arrival);
-        match self.workers[w].sr_chunk(frames, arrival) {
+        let w = self.tier.admit(arrival);
+        match self.tier.worker_mut(w).sr_chunk(frames, arrival) {
             Ok((rec, timing)) => {
-                self.complete(w, timing);
+                self.tier.complete(w, timing);
                 Ok((rec, timing, w))
             }
             Err(e) => {
-                self.abort(w);
+                self.tier.abort(w);
                 Err(e)
             }
         }
@@ -619,69 +628,44 @@ impl CloudGpuPool {
     /// Route an `il_update` training burst to the least-backlog worker
     /// (the co-located trainer occupies that worker's GPU 0; Fig. 13b).
     pub fn train_burst(&mut self, start: f64, batches: u64) -> f64 {
-        let w = self.route(start);
-        self.workers[w].train_burst(start, batches)
+        let w = self.tier.route(start);
+        self.tier.worker_mut(w).train_burst(start, batches)
     }
 
     /// Projected GPU seconds to detect a chunk of `frames` — the dynamic
     /// batch plan at the worker device profile, ignoring queueing (the
     /// admission controller's cost model).
     pub fn detect_cost_s(&self, frames: usize) -> f64 {
-        let device = self.workers.first().map(|w| w.device).unwrap_or(CLOUD);
+        let device = self.tier.workers().first().map(|w| w.device).unwrap_or(CLOUD);
         plan_batches(frames, &self.cfg.worker.batch_buckets)
             .iter()
             .map(|&b| device.batched(device.detect_s, b))
             .sum()
     }
 
-    /// Serverless billing summed across live and retired workers.
+    /// Serverless billing summed across live and retired workers (the
+    /// generic pool carries retired workers' bills over).
     pub fn billing(&self) -> CostMeter {
-        let mut total = self.retired_billing.clone();
-        for w in &self.workers {
-            total.merge(&w.billing);
-        }
-        total
+        self.tier.billing()
     }
 
-    /// Publish pool gauges into the global monitor and refresh the
-    /// smoothed backlog the provisioner acts on.
+    /// Publish pool gauges (`gpu_queue_s`, `gpu_workers`) into the global
+    /// monitor and refresh the smoothed backlog the provisioner acts on.
     pub fn observe(&mut self, now: f64, monitor: &mut GlobalMonitor) {
-        let mean = self.mean_backlog(now);
-        self.backlog_ewma.update(mean);
-        monitor.gauge("gpu_queue_s", now, mean);
-        monitor.gauge("gpu_workers", now, self.workers.len() as f64);
+        self.tier.observe(now, monitor);
     }
 
-    /// Grow/shrink the worker set against the backlog thresholds (reads
-    /// the `gpu_queue_s` gauge published via [`CloudGpuPool::observe`]).
+    /// Grow/shrink the worker set against the backlog thresholds
+    /// (delegates to the generic [`TierPool::autoscale`]).
     pub fn autoscale(&mut self, now: f64, monitor: &GlobalMonitor) {
-        self.autoscale_bounded(now, monitor, 1);
+        self.tier.autoscale(now, monitor);
     }
 
-    /// [`CloudGpuPool::autoscale`] with a shrink floor. Retirement is
-    /// tail-only (worker indices stay stable) and refuses any worker with
-    /// admitted in-flight events or an un-drained GPU horizon — queued
-    /// work is never stranded.
+    /// [`CloudGpuPool::autoscale`] with a shrink floor — the generic
+    /// tail-only never-strand-queued-work rule of
+    /// [`TierPool::autoscale_bounded`].
     pub fn autoscale_bounded(&mut self, now: f64, monitor: &GlobalMonitor, min_keep: usize) {
-        if !self.cfg.autoscale {
-            return;
-        }
-        if monitor.track("gpu_queue_s").and_then(|t| t.latest()).is_none() {
-            return; // provisioner runs off the published gauge
-        }
-        let smoothed = self.backlog_ewma.get().unwrap_or(0.0);
-        let floor = min_keep.max(1);
-        if smoothed > self.cfg.scale_up_backlog_s && self.workers.len() < self.cfg.max_workers {
-            self.spawn_worker(now);
-        } else if smoothed < self.cfg.scale_down_backlog_s && self.workers.len() > floor {
-            let last = self.workers.len() - 1;
-            if self.in_flight[last] == 0 && self.workers[last].backlog_s(now) <= 0.0 {
-                let gone = self.workers.pop().expect("len > floor >= 1");
-                self.in_flight.pop();
-                self.retired_billing.merge(&gone.billing);
-                self.history.push((now, self.workers.len()));
-            }
-        }
+        self.tier.autoscale_bounded(now, monitor, min_keep);
     }
 }
 

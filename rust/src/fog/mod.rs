@@ -84,6 +84,11 @@ impl FogNode {
         (self.gpu_free - now).max(0.0)
     }
 
+    /// Earliest virtual time this shard's GPU is free.
+    pub fn earliest_free(&self) -> f64 {
+        self.gpu_free
+    }
+
     /// Quality control for a chunk at the fog (decode + re-encode), the
     /// step the paper moves off the weak client. Returns completion time.
     pub fn quality_control(&mut self, frames: usize, arrival: f64) -> f64 {
@@ -185,6 +190,20 @@ impl FogNode {
 
     pub fn padding_frac(&self) -> f64 {
         self.planner.padding_frac()
+    }
+}
+
+/// The generic-pool view of a fog shard
+/// ([`crate::serverless::pool::TierPool`]): queue state only — the fog
+/// tier bills nothing, so retirement has no carry-over, and its ops have
+/// no co-located contention, so the default cost projection applies.
+impl crate::serverless::pool::PoolWorker for FogNode {
+    fn backlog_s(&self, now: f64) -> f64 {
+        FogNode::backlog_s(self, now)
+    }
+
+    fn earliest_free(&self) -> f64 {
+        FogNode::earliest_free(self)
     }
 }
 

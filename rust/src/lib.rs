@@ -58,6 +58,16 @@
 //!   cameras, while the [`hitl::IncrementalLearner`] stays global and its
 //!   updates fan out to every fog shard.
 //!
+//! ## One generic tier control plane
+//!
+//! Both scale-out tiers are instantiations of
+//! [`serverless::pool::TierPool`] over a
+//! [`serverless::pool::PoolWorker`]: seeded least-loaded routing (tie
+//! breaks drawn only on real ties), `admit`/`complete`/`abort` in-flight
+//! accounting, gauge publication, and a bounded provisioner that only
+//! retires an idle tail worker and carries retired workers' bills over —
+//! one implementation, so the fog and cloud tiers cannot drift.
+//!
 //! ## Sharded multi-fog scale-out
 //!
 //! The request path scales across a pool of fog nodes
@@ -95,20 +105,30 @@
 //! queued events (a 1-worker pool reproduces the legacy single-server
 //! cloud bit-for-bit). On top of it, `RunConfig::slo_ms` enables
 //! freshness-SLO admission: a chunk whose projected capture→classify
-//! latency misses the target uplinks at a degraded quality or is refused,
-//! and a chunk that still finishes stale is never scored — counted in
-//! `RunMetrics::{chunks_degraded, chunks_dropped}`. With the SLO disabled
-//! the whole pipeline is content-invariant across dispatch mode × fog
-//! shards × cloud GPUs × workload profile
+//! latency ([`pipeline::project_freshness`]) misses the target uplinks at
+//! the **highest feasible rung of the configured rate ladder**
+//! ([`sim::video::codec::Quality::LADDER`], searched greedily by
+//! [`pipeline::plan_uplink`]; `RunConfig::ladder`, CLI `--ladder`,
+//! `[app] ladder`) or is refused when even the lowest rung misses, and a
+//! chunk that still finishes stale is never scored — counted in
+//! `RunMetrics::{chunks_degraded, chunks_dropped}` (per-rung plans in
+//! `degrade_planned`). The same projection couples into routing: the
+//! executor admits detects to a worker whose projected completion meets
+//! the deadline (`CloudGpuPool::admit_within`), and the
+//! `gpu_saturation_aware` policy reads the projection instead of the
+//! lagging queue-wait EWMA. With the SLO disabled the whole pipeline is
+//! content-invariant across dispatch mode × fog shards × cloud GPUs ×
+//! workload profile
 //! ([`metrics::meters::RunMetrics::content_fingerprint`],
-//! `tests/invariance.rs`).
+//! `tests/invariance.rs`), ladder configured or not.
 //!
 //! Run the scale-out benchmarks with
 //! `cargo bench --bench fig16_scalability` (or
 //! `cargo run --release -- figures --id fig16`), which sweep fog shard
 //! counts and cloud GPU worker counts {1, 2, 4, 8} and report
 //! virtual-time throughput (`BENCH_overlap.json`, `BENCH_stream.json`,
-//! `BENCH_gpu.json`).
+//! `BENCH_gpu.json`), plus the SLO/cost frontier sweep
+//! (`BENCH_slo.json`, `pipeline::figures::fig10_slo_frontier`).
 //!
 //! Start with `pipeline` for end-to-end drivers, or `examples/quickstart.rs`.
 

@@ -13,6 +13,7 @@ use anyhow::{bail, Result};
 
 use vpaas::metrics::report::table;
 use vpaas::pipeline::{figures, Harness, RunConfig, SystemKind};
+use vpaas::sim::video::codec;
 use vpaas::sim::video::datasets;
 use vpaas::sim::video::WorkloadProfile;
 use vpaas::util::cli::Args;
@@ -42,11 +43,12 @@ fn dispatch(args: &Args) -> Result<()> {
 
 const HELP: &str = "vpaas — serverless cloud-fog video analytics (paper reproduction)
 subcommands:
-  figures --id <table1|fig4|fig5|fig9|fig10|fig11|fig12|fig13a|fig13b|fig15|fig16|quality|all>
+  figures --id <table1|fig4|fig5|fig9|fig10|fig10slo|fig11|fig12|fig13a|fig13b|fig15|fig16|quality|all>
           [--scale 0.05] [--seed N]
   run     --system <vpaas|vpaas-nohitl|mpeg|dds|cloudseg|glimpse>
           --dataset <dashcam|drone|traffic> [--scale 0.05] [--wan 15]
           [--budget 0.2] [--shards 1] [--gpus 1] [--slo-ms inf]
+          [--ladder default|single|r:qp,...]
           [--no-drift] [--golden] [--workload uniform|bursty|churn]
   profile                       profile registered models on the shared inference engine
   serve   [--config file.cfg] [--chunks N]   drive the serverless demo app";
@@ -56,6 +58,9 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     let workload = WorkloadProfile::parse(workload_name).ok_or_else(|| {
         anyhow::anyhow!("unknown workload {workload_name:?} (uniform|bursty|churn)")
     })?;
+    // SLO degrade ladder: `default` (the multi-rung Quality::LADDER),
+    // `single` (legacy one-step), or an explicit `r:qp,...` rung list
+    let ladder = codec::parse_ladder(args.get_or("ladder", "default"))?;
     Ok(RunConfig {
         wan_mbps: args.get_f64("wan", 15.0)?,
         hitl_budget: args.get_f64("budget", 0.2)?,
@@ -64,6 +69,7 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         shards: args.get_usize("shards", 1)?,
         gpus: args.get_usize("gpus", 1)?,
         slo_ms: args.get_f64("slo-ms", f64::INFINITY)?,
+        ladder,
         seed: args.get_u64("seed", 0xCAFE)?,
         workload,
         ..RunConfig::default()
@@ -93,6 +99,10 @@ fn cmd_figures(args: &Args) -> Result<()> {
         if want("fig10") {
             println!("{}\n", figures::fig10(&runs));
         }
+    }
+    if want("fig10slo") {
+        let points = [f64::INFINITY, 12_000.0, 10_000.0, 8_500.0, 800.0, 200.0];
+        println!("{}\n", figures::fig10_slo_frontier(&h, &cfg, 4, 0.05, &points)?.0);
     }
     if want("fig11") {
         println!("{}\n", figures::fig11(&h, scale, &cfg)?);

@@ -106,6 +106,13 @@ pub struct RunMetrics {
     /// Chunks served with a degraded uplink quality because their
     /// projected freshness latency exceeded `RunConfig::slo_ms`.
     pub chunks_degraded: u64,
+    /// Per-ladder-rung admission degrade plans (index = rung into
+    /// `RunConfig::ladder`, highest quality first; the vector grows to
+    /// the deepest rung used). Counts *planned* overrides at admission —
+    /// a superset of `chunks_degraded`, which counts only the served
+    /// subset (a planned override on a chunk that later falls back to the
+    /// fog, or finishes stale, serves no degraded uplink).
+    pub degrade_planned: Vec<u64>,
     /// Chunks not served under a binding SLO: refused at admission
     /// (projected freshness beyond rescue) or stale at completion. These
     /// are never scored, so `chunks + chunks_dropped` accounts for every
@@ -140,6 +147,17 @@ impl RunMetrics {
             dataset: dataset.to_string(),
             ..Default::default()
         }
+    }
+
+    /// Record one admission-planned degrade at ladder rung `rung`
+    /// (growing the histogram to fit) — the single bookkeeping path
+    /// shared by the pipeline driver's and `VideoApp`'s admission
+    /// controllers so the two cannot diverge.
+    pub fn note_degrade_planned(&mut self, rung: usize) {
+        if self.degrade_planned.len() <= rung {
+            self.degrade_planned.resize(rung + 1, 0);
+        }
+        self.degrade_planned[rung] += 1;
     }
 
     /// The execution-invariant content of this run (see

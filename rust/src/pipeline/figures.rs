@@ -201,6 +201,92 @@ pub fn fig10(runs: &[(String, Vec<RunMetrics>)]) -> String {
     )
 }
 
+// ---------------------------------------------------- Fig. 10b (SLO frontier)
+/// One SLO-frontier measurement: a freshness target × degrade-ladder mode.
+#[derive(Debug, Clone)]
+pub struct SloRow {
+    pub slo_ms: f64,
+    /// Multi-rung ladder (`true`) vs the legacy single-step degrade.
+    pub ladder: bool,
+    pub f1: f64,
+    pub wan_bytes: f64,
+    pub cost_units: f64,
+    pub chunks: u64,
+    pub chunks_degraded: u64,
+    pub chunks_dropped: u64,
+}
+
+/// SLO-vs-cost frontier sweep (the cross-run Fig. 10/16 story): run the
+/// full VPaaS pipeline at each freshness target in `slo_ms_points` —
+/// non-finite disables admission — once with the multi-rung
+/// [`Quality::LADDER`] and once with the legacy single-step ladder
+/// `[Quality::DEGRADED]`, reporting accuracy, WAN bytes, serverless
+/// billing and the degrade/drop counters. Note a chunk's stream age can
+/// never undercut its 7.5 s capture span, so millisecond-scale targets
+/// sit on the all-refused edge of the frontier. Returns the printable
+/// table plus raw [`SloRow`]s; the bench writes them to `BENCH_slo.json`
+/// so the frontier trajectory is tracked per PR.
+pub fn fig10_slo_frontier(
+    h: &Harness,
+    cfg: &RunConfig,
+    cameras: usize,
+    scale: f64,
+    slo_ms_points: &[f64],
+) -> Result<(String, Vec<SloRow>)> {
+    let mut ds = datasets::drone(scale);
+    ds.videos.truncate(cameras);
+    let mut rows = Vec::new();
+    let mut raw = Vec::new();
+    for &slo_ms in slo_ms_points {
+        for ladder_on in [true, false] {
+            let run_cfg = RunConfig {
+                slo_ms,
+                ladder: if ladder_on {
+                    Quality::LADDER.to_vec()
+                } else {
+                    vec![Quality::DEGRADED]
+                },
+                shards: 2,
+                golden: false,
+                autoscale: false,
+                dispatch: DispatchMode::Streaming,
+                workload: WorkloadProfile::Bursty,
+                ..cfg.clone()
+            };
+            let m = h.run(SystemKind::Vpaas, &ds, &run_cfg)?;
+            raw.push(SloRow {
+                slo_ms,
+                ladder: ladder_on,
+                f1: m.f1_true.f1(),
+                wan_bytes: m.bandwidth.bytes,
+                cost_units: m.cost.units(),
+                chunks: m.chunks,
+                chunks_degraded: m.chunks_degraded,
+                chunks_dropped: m.chunks_dropped,
+            });
+            rows.push(vec![
+                if slo_ms.is_finite() { format!("{slo_ms:.0}") } else { "inf".into() },
+                if ladder_on { "ladder".into() } else { "single".into() },
+                format!("{:.3}", m.f1_true.f1()),
+                format!("{:.0}", m.bandwidth.bytes),
+                format!("{:.0}", m.cost.units()),
+                m.chunks.to_string(),
+                m.chunks_degraded.to_string(),
+                m.chunks_dropped.to_string(),
+            ]);
+        }
+    }
+    let text = format!(
+        "Fig. 10b — SLO/cost frontier: freshness target × degrade ladder ({cameras} cameras; \
+         targets below the 7.5 s capture span sit on the all-refused edge)\n{}",
+        table(
+            &["slo_ms", "mode", "f1_true", "wan_bytes", "billing", "chunks", "degraded", "dropped"],
+            &rows
+        )
+    );
+    Ok((text, raw))
+}
+
 // ---------------------------------------------------------------- Fig. 11
 pub fn fig11(h: &Harness, scale: f64, cfg: &RunConfig) -> Result<String> {
     let ds = datasets::traffic(scale);

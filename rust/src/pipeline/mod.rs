@@ -122,12 +122,19 @@ pub struct RunConfig {
     /// Freshness-latency SLO in milliseconds (chunk capture →
     /// `FogClassify`). Non-finite (the default) disables admission control
     /// and reproduces the pre-SLO pipeline bit-for-bit. A binding target
-    /// degrades a chunk's uplink quality when its projected freshness
-    /// exceeds the SLO, refuses it at admission when even the degraded
-    /// projection misses, and never scores a chunk that still finishes
-    /// stale — counted in `RunMetrics::{chunks_degraded, chunks_dropped}`
-    /// so Fig. 10/16 sweeps can report the SLO/cost frontier.
+    /// degrades a chunk's uplink to the highest rung of [`RunConfig::ladder`]
+    /// whose projected freshness meets the SLO, refuses it at admission
+    /// when even the lowest rung misses, and never scores a chunk that
+    /// still finishes stale — counted in
+    /// `RunMetrics::{chunks_degraded, chunks_dropped}` so Fig. 10/16
+    /// sweeps can report the SLO/cost frontier.
     pub slo_ms: f64,
+    /// SLO admission rate ladder, ordered highest quality first (see
+    /// [`plan_uplink`]). Defaults to [`Quality::LADDER`]; a single-rung
+    /// ladder `vec![Quality::DEGRADED]` reproduces the legacy one-step
+    /// degrade controller. Must be non-empty; inert unless `slo_ms` is
+    /// finite and binding.
+    pub ladder: Vec<Quality>,
     /// How the executor interleaves stage events: within a dispatch wave
     /// (`EventDriven`), one chunk at a time (`Sequential`, the seed
     /// system's state machine, for A/B makespan comparisons), or across
@@ -155,6 +162,7 @@ impl Default for RunConfig {
             shards: 1,
             gpus: 1,
             slo_ms: f64::INFINITY,
+            ladder: Quality::LADDER.to_vec(),
             dispatch: DispatchMode::default(),
             workload: WorkloadProfile::default(),
             seed: 0xCAFE,
@@ -306,6 +314,11 @@ impl Harness {
         dataset: &DatasetSpec,
         cfg: &RunConfig,
     ) -> Result<RunMetrics> {
+        anyhow::ensure!(
+            !cfg.ladder.is_empty(),
+            "RunConfig::ladder must have at least one rung (use vec![Quality::DEGRADED] \
+             for the legacy single-step controller)"
+        );
         let p = self.params.clone();
         let executor = Executor::from_registry(&self.functions, cfg.dispatch)?;
         let shards = cfg.shards.max(1);
@@ -488,22 +501,39 @@ impl Harness {
             job.dispatch_at = dispatch_at.max(job.captured());
             let wan_up = !run.topo.wan_up.is_down(job.dispatch_at);
             let cloud_wait = run.cloud.queue_wait();
-            let (shard, route) = run.pool.decide(job.dispatch_at, wan_up, cloud_wait);
+            // the policy sees the same cloud projection term SLO
+            // admission reads: least pool backlog + batch-plan detect cost
+            let cloud_projected = run.cloud.min_backlog_s(job.dispatch_at)
+                + run.cloud.detect_cost_s(job.chunk.frames.len());
+            let (shard, route) =
+                run.pool.decide(job.dispatch_at, wan_up, cloud_wait, cloud_projected);
             job.shard = shard;
             job.route = route;
             // SLO admission (inert for a non-finite target): project the
-            // chunk's freshness on the cloud path; degrade the uplink if
-            // the standard low quality misses, refuse the chunk if even
-            // the degraded projection misses.
+            // chunk's freshness on the cloud path, then search the rate
+            // ladder greedily — keep the standard low quality if its
+            // projection meets the SLO, otherwise uplink at the highest
+            // feasible rung, and refuse the chunk when even the lowest
+            // rung misses.
             if slo_s.is_finite() && route == Route::Cloud {
-                let low = run.cfg.protocol.low_quality;
-                if project_freshness(run, &job, low) > slo_s {
-                    if project_freshness(run, &job, Quality::DEGRADED) > slo_s {
+                let fog_backlog = run.pool.shard_backlog(job.shard, job.dispatch_at);
+                let plan = plan_uplink(
+                    run.cfg.protocol.low_quality,
+                    &run.cfg.ladder,
+                    slo_s,
+                    |q| project_freshness(&run.p, &run.topo, fog_backlog, &run.cloud, &job, q),
+                );
+                match plan {
+                    UplinkPlan::Standard => {}
+                    UplinkPlan::Degrade(rung) => {
+                        job.quality_override = Some(run.cfg.ladder[rung]);
+                        run.metrics.note_degrade_planned(rung);
+                    }
+                    UplinkPlan::Refuse => {
                         run.metrics.chunks_dropped += 1;
                         run.note_chunk_done(job.camera());
                         continue;
                     }
-                    job.quality_override = Some(Quality::DEGRADED);
                 }
             }
             jobs.push(job);
@@ -730,18 +760,70 @@ fn form_waves(
     waves
 }
 
+/// SLO admission verdict for one chunk's uplink (see [`plan_uplink`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UplinkPlan {
+    /// The standard low quality's projection meets the SLO: no override.
+    Standard,
+    /// Uplink at ladder rung `.0` (an index into the configured ladder) —
+    /// the highest rung whose projection meets the SLO.
+    Degrade(usize),
+    /// Even the lowest rung misses: refuse the chunk at admission.
+    Refuse,
+}
+
+/// Greedy rate-ladder search (the DDS-style §VI-B protocol as a
+/// multi-rung quality ladder rather than a binary degrade switch): keep
+/// the deployment's standard `low` quality when its projection meets
+/// `slo_s`; otherwise walk `ladder` — ordered highest quality first — and
+/// take the **first** (highest) rung whose projection meets the target;
+/// refuse when even the last rung misses. Because the freshness
+/// projection is monotone non-decreasing in the uplink byte count and the
+/// ladder is byte-monotone (asserted by the codec tests for
+/// [`Quality::LADDER`]), the greedy pick is the accuracy-optimal feasible
+/// rung. A single-rung ladder `[Quality::DEGRADED]` reproduces the legacy
+/// one-step controller decision-for-decision.
+pub fn plan_uplink(
+    low: Quality,
+    ladder: &[Quality],
+    slo_s: f64,
+    mut project: impl FnMut(Quality) -> f64,
+) -> UplinkPlan {
+    assert!(!ladder.is_empty(), "SLO admission needs at least one ladder rung");
+    if project(low) <= slo_s {
+        return UplinkPlan::Standard;
+    }
+    for (i, &q) in ladder.iter().enumerate() {
+        if project(q) <= slo_s {
+            return UplinkPlan::Degrade(i);
+        }
+    }
+    UplinkPlan::Refuse
+}
+
 /// Conservative projection of a chunk's freshness latency — capture of
 /// its oldest frame through `FogClassify` — if admitted now with uplink
 /// `quality`: the stream's age at dispatch plus, along the cloud path,
 /// each queue's current backlog and a worst-case (max-jitter) transfer or
 /// compute estimate. Purely observational (reads horizons, moves
 /// nothing), deterministic, and monotone in the uplink byte count — so
-/// degrading the quality can only lower it. The SLO admission controller
-/// compares this against `RunConfig::slo_ms`; the executor's barrier gate
+/// degrading the quality can only lower it, which is what makes the
+/// greedy [`plan_uplink`] ladder search correct. The SLO admission
+/// controller compares this against `RunConfig::slo_ms`, and the
+/// `gpu_saturation_aware` policy reads the same cloud term
+/// (`min_backlog_s + detect_cost_s`); the executor's barrier gate
 /// independently guarantees no stale chunk is ever scored, so the
-/// projection trades precision for cheapness.
-fn project_freshness(run: &VpaasRun, job: &ChunkJob, quality: Quality) -> f64 {
-    let p = &run.p;
+/// projection trades precision for cheapness. `fog_backlog_s` is the
+/// routed shard's backlog at dispatch (callers with a single fog pass its
+/// backlog directly — [`crate::serverless::VideoApp`] does).
+pub fn project_freshness(
+    p: &SimParams,
+    topo: &Topology,
+    fog_backlog_s: f64,
+    cloud: &CloudGpuPool,
+    job: &ChunkJob,
+    quality: Quality,
+) -> f64 {
     let n = job.chunk.frames.len();
     let at = job.dispatch_at;
     // worst-case transfer: queue backlog + serialization at ≥ the max
@@ -750,7 +832,7 @@ fn project_freshness(run: &VpaasRun, job: &ChunkJob, quality: Quality) -> f64 {
         let serialize = bytes * 8.0 / (spec.bandwidth_mbps * 1e6);
         backlog + serialize * (1.0 + 2.0 * spec.jitter_frac) + spec.propagation_s
     };
-    let lan = run.topo.fog_lans.get(job.shard).unwrap_or(&run.topo.lan);
+    let lan = topo.fog_lans.get(job.shard).unwrap_or(&topo.lan);
     let hi_bytes = n as f64 * codec::frame_bytes(Quality::ORIGINAL, p);
     let low_bytes = n as f64 * codec::frame_bytes(quality, p);
     let fog_dev = device::FOG;
@@ -760,12 +842,12 @@ fn project_freshness(run: &VpaasRun, job: &ChunkJob, quality: Quality) -> f64 {
     let fb_bytes = codec::feedback_bytes(4 * n);
     job.stream_age(at)
         + xfer(lan.spec(), lan.backlog_s(at), hi_bytes)
-        + run.pool.shard_backlog(job.shard, at)
+        + fog_backlog_s
         + fog_dev.quality_control_s(n)
-        + xfer(run.topo.wan_up.spec(), run.topo.wan_up.backlog_s(at), low_bytes)
-        + run.cloud.min_backlog_s(at)
-        + run.cloud.detect_cost_s(n)
-        + xfer(run.topo.wan_down.spec(), run.topo.wan_down.backlog_s(at), fb_bytes)
+        + xfer(topo.wan_up.spec(), topo.wan_up.backlog_s(at), low_bytes)
+        + cloud.min_backlog_s(at)
+        + cloud.detect_cost_s(n)
+        + xfer(topo.wan_down.spec(), topo.wan_down.backlog_s(at), fb_bytes)
         + classify_s
 }
 
@@ -861,6 +943,52 @@ mod tests {
         assert_eq!(chunks_of(&waves_c, 1), 1, "dropped camera kept streaming");
         assert_eq!(chunks_of(&waves_c, 0), chunks_of(&waves_a, 0));
         assert_eq!(chunks_of(&waves_c, 2), chunks_of(&waves_a, 2));
+    }
+
+    #[test]
+    fn plan_uplink_picks_the_highest_feasible_rung_and_is_monotone_in_headroom() {
+        let p = SimParams::load().unwrap();
+        // a synthetic projection that is exactly linear in the uplink
+        // bytes — the monotonicity plan_uplink's greedy search relies on
+        let project = |q: Quality| codec::frame_bytes(q, &p) / 1e4;
+        let low = Quality::LOW;
+        let ladder = Quality::LADDER;
+        let cost = |q: Quality| project(q);
+        // generous target: standard quality survives
+        assert_eq!(plan_uplink(low, &ladder, cost(low) + 1.0, project), UplinkPlan::Standard);
+        // sweep the SLO headroom down across every rung boundary: the
+        // picked rung index must be monotone non-decreasing (less
+        // headroom -> lower quality), ending in refusal
+        let mut picks = Vec::new();
+        let mut targets = vec![cost(low) + 1e-9];
+        targets.extend(ladder.iter().map(|&q| cost(q) + 1e-9));
+        targets.push(cost(ladder[ladder.len() - 1]) / 2.0);
+        for &slo in &targets {
+            picks.push(plan_uplink(low, &ladder, slo, project));
+        }
+        assert_eq!(picks[0], UplinkPlan::Standard);
+        let rank = |plan: &UplinkPlan| match plan {
+            UplinkPlan::Standard => 0usize,
+            UplinkPlan::Degrade(r) => 1 + r,
+            UplinkPlan::Refuse => usize::MAX,
+        };
+        for (i, w) in picks.windows(2).enumerate() {
+            assert!(rank(&w[1]) >= rank(&w[0]), "quality improved as headroom shrank at {i}");
+        }
+        // each rung boundary picks exactly that rung (highest feasible)
+        for (i, &q) in ladder.iter().enumerate() {
+            assert_eq!(plan_uplink(low, &ladder, cost(q) + 1e-9, project), UplinkPlan::Degrade(i));
+        }
+        // refusal if and only if even the lowest rung misses
+        let floor = cost(ladder[ladder.len() - 1]);
+        assert_eq!(plan_uplink(low, &ladder, floor - 1e-9, project), UplinkPlan::Refuse);
+        assert_ne!(plan_uplink(low, &ladder, floor + 1e-9, project), UplinkPlan::Refuse);
+        // the legacy single-step ladder degrades or refuses, never picks
+        // an intermediate rung
+        let single = [Quality::DEGRADED];
+        let at_floor = cost(Quality::DEGRADED);
+        assert_eq!(plan_uplink(low, &single, at_floor + 1e-9, project), UplinkPlan::Degrade(0));
+        assert_eq!(plan_uplink(low, &single, at_floor - 1e-9, project), UplinkPlan::Refuse);
     }
 
     #[test]

@@ -22,18 +22,19 @@ use crate::cloud::{CloudGpuPool, CloudPoolConfig};
 use crate::fog::FogNode;
 use crate::hitl::IncrementalLearner;
 use crate::metrics::meters::RunMetrics;
+use crate::pipeline::{plan_uplink, project_freshness, UplinkPlan};
 use crate::protocol::coordinator::{ChunkOutcome, Coordinator};
 use crate::protocol::ProtocolConfig;
 use crate::runtime::{InferenceHandle, InferenceService};
 use crate::serverless::dispatcher::Dispatcher;
 use crate::serverless::executor::{ChunkJob, DispatchMode, Executor, StageCtx};
 use crate::serverless::monitor::GlobalMonitor;
-use crate::serverless::policy::{PolicyInput, PolicyManager};
+use crate::serverless::policy::{PolicyInput, PolicyManager, Route};
 use crate::serverless::registry::FunctionRegistry;
 use crate::sim::human::{Annotator, AnnotatorConfig};
 use crate::sim::net::Topology;
 use crate::sim::params::SimParams;
-use crate::sim::video::Chunk;
+use crate::sim::video::{codec, Chunk, Quality};
 use crate::util::config::Config;
 use crate::zoo::ModelZoo;
 
@@ -65,6 +66,12 @@ pub struct VideoApp {
     /// gate. A chunk finishing staler than this counts into
     /// `RunMetrics::chunks_dropped` instead of being served.
     slo_s: f64,
+    /// SLO admission rate ladder (`[app] ladder`: `default`, `single`, or
+    /// a comma-separated `r:qp` rung list, highest quality first). When
+    /// the SLO binds, a chunk's uplink degrades to the highest rung whose
+    /// freshness projection meets the target, and is refused at admission
+    /// when even the lowest rung misses.
+    ladder: Vec<Quality>,
     chunks_processed: u64,
 }
 
@@ -107,6 +114,8 @@ impl VideoApp {
         // `[cloud] autoscale` is set)
         let gpus = cfg.usize_or("cloud", "gpus", 1)?;
         let slo_ms = cfg.f64_or("app", "slo_ms", f64::INFINITY)?;
+        let ladder = codec::parse_ladder(cfg.str_or("app", "ladder", "default"))
+            .map_err(|e| anyhow!("config [app] ladder: {e}"))?;
         let cloud = CloudGpuPool::new(
             handle.clone(),
             CloudPoolConfig::for_deployment(gpus, cfg.bool_or("cloud", "autoscale", false)?),
@@ -141,6 +150,7 @@ impl VideoApp {
             policy_name,
             dispatch,
             slo_s: slo_ms / 1e3,
+            ladder,
             chunks_processed: 0,
         })
     }
@@ -166,6 +176,11 @@ impl VideoApp {
 
     /// Process one chunk under the configured policy, through the
     /// event-driven executor built from this app's function registry.
+    /// With a finite `[app] slo_ms`, admission mirrors the pipeline
+    /// driver: the chunk's freshness projection is searched down the
+    /// configured rate ladder, and a chunk beyond rescue is refused here
+    /// (counted in `RunMetrics::chunks_dropped`) instead of being
+    /// processed and dropped stale at the barrier.
     pub fn process_chunk(&mut self, chunk: &Chunk, t_offset: f64) -> Result<ChunkOutcome> {
         let executor = Executor::from_registry(&self.functions, self.dispatch)?;
         let p = self.params.clone();
@@ -174,15 +189,44 @@ impl VideoApp {
         let phi = p.drift_phi(self.chunks_processed as f64);
         let policy = self.policies.get(&self.policy_name)?;
         let arrival = t_offset + chunk.t_capture + chunk.duration();
+        let fog_backlog = self.fog.backlog_s(arrival);
         let input = PolicyInput {
             wan_wait_s: 0.0,
             wan_up: !self.topo.wan_up.is_down(arrival),
             cloud_wait_s: self.cloud.queue_wait(),
+            // the same projection term the SLO admission controller reads
+            cloud_projected_s: self.cloud.min_backlog_s(arrival)
+                + self.cloud.detect_cost_s(chunk.frames.len()),
             // report the real fog backlog, like the sharded scheduler does
-            fog_backlog_s: self.fog.backlog_s(arrival),
+            fog_backlog_s: fog_backlog,
         };
         let mut job = ChunkJob::new(chunk.clone(), phi, t_offset);
         job.route = policy(input);
+        if self.slo_s.is_finite() && job.route == Route::Cloud {
+            let plan =
+                plan_uplink(self.coordinator.cfg.low_quality, &self.ladder, self.slo_s, |q| {
+                    project_freshness(p.as_ref(), &self.topo, fog_backlog, &self.cloud, &job, q)
+                });
+            match plan {
+                UplinkPlan::Standard => {}
+                UplinkPlan::Degrade(rung) => {
+                    job.quality_override = Some(self.ladder[rung]);
+                    self.metrics.note_degrade_planned(rung);
+                }
+                UplinkPlan::Refuse => {
+                    self.metrics.chunks_dropped += 1;
+                    self.chunks_processed += 1;
+                    self.monitor.count("chunks", 1);
+                    self.cloud.observe(arrival, &mut self.monitor);
+                    return Ok(ChunkOutcome {
+                        per_frame: Vec::new(),
+                        done: arrival,
+                        uncertain_regions: 0,
+                        fallback_used: false,
+                    });
+                }
+            }
+        }
         let (_, outcome) = {
             let mut ctx = StageCtx {
                 p: p.as_ref(),
@@ -281,6 +325,57 @@ mod tests {
         assert_eq!(a.monitor.counter("chunks"), 1);
         assert_eq!(a.metrics.chunks, 0);
         assert_eq!(a.metrics.chunks_dropped, 1);
+    }
+
+    #[test]
+    fn slo_admission_walks_the_ladder_before_refusing() {
+        // probe the idle testbed's freshness projections to place an SLO
+        // between the top rung's projection and the standard quality's:
+        // admission must degrade to rung 0, never refuse
+        let probe = app();
+        let mut v = video(&probe.params.clone());
+        let chunk = v.next_chunk().unwrap();
+        let job = ChunkJob::new(chunk.clone(), 0.0, 0.0);
+        let proj = |q: Quality| {
+            project_freshness(probe.params.as_ref(), &probe.topo, 0.0, &probe.cloud, &job, q)
+        };
+        let p_low = proj(probe.coordinator.cfg.low_quality);
+        let p_top = proj(Quality::LADDER[0]);
+        assert!(p_top < p_low, "top rung must project fresher than the standard quality");
+        let slo_ms = (p_top + p_low) / 2.0 * 1e3;
+        let cfg = Config::parse(&format!("[app]\nslo_ms = {slo_ms}\n")).unwrap();
+        let mut a = VideoApp::from_config(&cfg).unwrap();
+        a.deploy_standard().unwrap();
+        a.process_chunk(&chunk, 0.0).unwrap();
+        // the standard quality's projection misses, the top rung's meets:
+        // admission must plan exactly one degrade at rung 0 — and the
+        // chunk is accounted whether the barrier serves it or finds it
+        // stale (its degraded uplink moved bytes either way)
+        assert_eq!(a.metrics.degrade_planned, vec![1], "must degrade at the highest rung");
+        assert_eq!(a.metrics.chunks + a.metrics.chunks_dropped, 1);
+        assert!(a.metrics.bandwidth.bytes > 0.0, "a degraded chunk still uplinks");
+        // an unmeetable target is refused at admission: no executor run,
+        // no WAN bytes, but the drop is accounted
+        let cfg = Config::parse("[app]\nslo_ms = 1000\n").unwrap();
+        let mut b = VideoApp::from_config(&cfg).unwrap();
+        b.deploy_standard().unwrap();
+        let out = b.process_chunk(&chunk, 0.0).unwrap();
+        assert!(out.per_frame.is_empty());
+        assert_eq!(b.metrics.chunks_dropped, 1);
+        assert_eq!(b.metrics.bandwidth.bytes, 0.0, "a refused chunk moves no bytes");
+        assert_eq!(b.chunks_processed(), 1);
+    }
+
+    #[test]
+    fn ladder_is_config_selectable_and_validated() {
+        let cfg = Config::parse("[app]\nladder = 0.75:38, 0.5:44\n").unwrap();
+        let a = VideoApp::from_config(&cfg).unwrap();
+        assert_eq!(a.ladder, vec![Quality::new(0.75, 38.0), Quality::new(0.5, 44.0)]);
+        let cfg = Config::parse("[app]\nladder = single\n").unwrap();
+        assert_eq!(VideoApp::from_config(&cfg).unwrap().ladder, vec![Quality::DEGRADED]);
+        let bad = Config::parse("[app]\nladder = nonsense\n").unwrap();
+        let err = VideoApp::from_config(&bad).unwrap_err();
+        assert!(err.to_string().contains("[app] ladder"), "{err}");
     }
 
     #[test]

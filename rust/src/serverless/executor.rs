@@ -46,20 +46,27 @@
 //!
 //! ## Cloud GPU pool and the SLO gate
 //!
-//! [`Stage::CloudDetect`] events are *admitted* to the least-queue-wait
-//! worker of the [`CloudGpuPool`] in [`StageCtx::cloud`] (and `il_update`
-//! training bursts land on its least-backlog worker), so cloud GPU work
-//! scales out exactly like fog work does through
-//! [`FogShardPool`](crate::serverless::scheduler::FogShardPool). At the
-//! wave barrier a chunk whose [`ChunkJob::stream_age`] exceeds
-//! [`StageCtx::slo_s`] is *not served*: it is counted in
-//! `RunMetrics::chunks_dropped`, spends no annotator label budget,
-//! triggers no IL training and records no latency sample, so every
-//! served chunk provably meets the freshness SLO. A chunk whose
-//! [`ChunkJob::quality_override`] was set by SLO admission uplinks at the
-//! degraded quality and counts into `RunMetrics::chunks_degraded` when
-//! served. With a non-finite SLO (the default) both mechanisms are inert
-//! and the pipeline is bit-identical to the pre-SLO system.
+//! [`Stage::CloudDetect`] events are *admitted* to the [`CloudGpuPool`]
+//! in [`StageCtx::cloud`] (and `il_update` training bursts land on its
+//! least-backlog worker), so cloud GPU work scales out exactly like fog
+//! work does through
+//! [`FogShardPool`](crate::serverless::scheduler::FogShardPool) — both
+//! are instantiations of the generic
+//! [`TierPool`](crate::serverless::pool::TierPool). Under a finite SLO
+//! the executor asks the pool for a worker whose *projected completion*
+//! (backlog + batch-plan detect cost, including any co-located-training
+//! inflation) still meets the chunk's staleness deadline, falling back
+//! to least-wait ([`CloudGpuPool::admit_within`]). At the wave barrier a
+//! chunk whose [`ChunkJob::stream_age`] exceeds [`StageCtx::slo_s`] is
+//! *not served*: it is counted in `RunMetrics::chunks_dropped`, spends
+//! no annotator label budget, triggers no IL training and records no
+//! latency sample, so every served chunk provably meets the freshness
+//! SLO. A chunk whose [`ChunkJob::quality_override`] was set by SLO
+//! admission (the highest feasible rung of the configured rate ladder —
+//! see `pipeline::plan_uplink`) uplinks at that degraded quality and
+//! counts into `RunMetrics::chunks_degraded` when served. With a
+//! non-finite SLO (the default) all three mechanisms are inert and the
+//! pipeline is bit-identical to the pre-SLO system.
 //!
 //! ## Determinism
 //!
@@ -470,9 +477,20 @@ impl Executor {
                     .iter()
                     .map(|f| render_frame(f, s.quality, s.job.phi, ctx.p))
                     .collect();
-                // admit to the least-queue-wait GPU worker; the admitted
-                // worker is released (with its ExecTiming) on completion
-                let worker = ctx.cloud.admit(at);
+                // Admit to the GPU pool; the admitted worker is released
+                // (with its ExecTiming) on completion. Under a finite SLO
+                // the pool is asked for a worker whose projected
+                // completion still meets the chunk's staleness deadline
+                // (falling back to least-wait); with no SLO the plain
+                // least-wait admission runs and the batch-plan cost is
+                // never computed.
+                let worker = if ctx.slo_s.is_finite() {
+                    let deadline = s.job.t_offset + s.job.chunk.t_capture + ctx.slo_s;
+                    let cost = ctx.cloud.detect_cost_s(n);
+                    ctx.cloud.admit_within(at, deadline, cost)
+                } else {
+                    ctx.cloud.admit(at)
+                };
                 let (heads, timing) =
                     match (self.detect)(ctx.cloud.worker_mut(worker), &frames, at) {
                         Ok(out) => out,

@@ -13,9 +13,13 @@
 //!   records placements in the zoo.
 //! * [`monitor`] — the global monitor: runtime gauges every component
 //!   reports into; feeds the provisioner and the dashboards.
-//! * [`scheduler`] — the sharded multi-fog scale-out: a pool of fog shards
-//!   with least-backlog routing, policy-driven cloud/fog dispatch, and a
-//!   backlog-threshold autoscaling provisioner.
+//! * [`pool`] — the generic tier control plane ([`pool::TierPool`]):
+//!   seeded least-loaded routing, admit/complete in-flight accounting,
+//!   gauge publication and the bounded tail-only provisioner, shared by
+//!   the fog and cloud tiers so they cannot drift.
+//! * [`scheduler`] — the sharded multi-fog scale-out: the fog tier's
+//!   [`pool::TierPool`] instantiation plus policy-driven cloud/fog
+//!   dispatch and the IL model fan-out.
 //! * [`app`] — the user-facing pipeline builder: the Fig. 14 code example
 //!   maps 1:1 onto this API (see `examples/retail_store.rs`).
 
@@ -24,6 +28,7 @@ pub mod dispatcher;
 pub mod executor;
 pub mod monitor;
 pub mod policy;
+pub mod pool;
 pub mod registry;
 pub mod scheduler;
 
@@ -32,5 +37,6 @@ pub use dispatcher::Dispatcher;
 pub use executor::{ChunkJob, DispatchMode, Executor, Stage, StageCtx};
 pub use monitor::GlobalMonitor;
 pub use policy::{Policy, PolicyManager};
+pub use pool::{PoolWorker, TierPool, TierPoolConfig};
 pub use registry::{FunctionKind, FunctionRegistry, StageBody};
 pub use scheduler::{FogShardPool, ShardConfig};

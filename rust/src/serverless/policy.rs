@@ -13,8 +13,15 @@ pub struct PolicyInput {
     pub wan_wait_s: f64,
     /// Is the WAN currently usable?
     pub wan_up: bool,
-    /// Smoothed cloud queue wait (seconds).
+    /// Smoothed cloud queue wait (seconds) — a per-batch EWMA, so it lags
+    /// the instantaneous queue state.
     pub cloud_wait_s: f64,
+    /// Projected cloud-side seconds for **this** chunk: the pool's least
+    /// backlog plus the batch-plan detect cost — the same cloud term the
+    /// SLO admission controller's freshness projection
+    /// (`pipeline::project_freshness`) reads, so routing and admission
+    /// act on one signal.
+    pub cloud_projected_s: f64,
     /// Fog GPU backlog (seconds).
     pub fog_backlog_s: f64,
 }
@@ -49,12 +56,19 @@ pub fn latency_aware(i: PolicyInput) -> Route {
 }
 
 /// Keep the cloud path only while its GPU pool is keeping up: route to
-/// the fog once the smoothed cloud queue wait (the `gpu_queue_s` signal
-/// the [`CloudGpuPool`](crate::cloud::CloudGpuPool) publishes, fed in as
-/// `cloud_wait_s`) exceeds the routed shard's backlog by more than a
-/// second — shedding GPU saturation before it turns into SLO misses.
+/// the fog once the chunk's **projected** cloud-side time
+/// (`cloud_projected_s`: the pool's least backlog + the batch-plan
+/// detect cost — the identical cloud term the SLO admission controller's
+/// freshness projection reads) exceeds the routed shard's backlog by
+/// more than a second. Reading the projection instead of the smoothed
+/// per-batch EWMA sheds GPU saturation the moment the queue builds,
+/// before it turns into SLO misses.
 pub fn gpu_saturation_aware(i: PolicyInput) -> Route {
-    if !i.wan_up || i.cloud_wait_s > i.fog_backlog_s + 1.0 { Route::Fog } else { Route::Cloud }
+    if !i.wan_up || i.cloud_projected_s > i.fog_backlog_s + 1.0 {
+        Route::Fog
+    } else {
+        Route::Cloud
+    }
 }
 
 #[derive(Default)]
@@ -97,7 +111,13 @@ mod tests {
     use super::*;
 
     fn input(wan_up: bool, wan_wait: f64) -> PolicyInput {
-        PolicyInput { wan_wait_s: wan_wait, wan_up, cloud_wait_s: 0.0, fog_backlog_s: 0.0 }
+        PolicyInput {
+            wan_wait_s: wan_wait,
+            wan_up,
+            cloud_wait_s: 0.0,
+            cloud_projected_s: 0.0,
+            fog_backlog_s: 0.0,
+        }
     }
 
     #[test]
@@ -108,8 +128,13 @@ mod tests {
         assert_eq!(latency_aware(input(true, 5.0)), Route::Fog);
         assert_eq!(latency_aware(input(true, 0.1)), Route::Cloud);
         // a saturated GPU pool sheds to the fog; a keeping-up one does not
-        let saturated =
-            PolicyInput { wan_wait_s: 0.0, wan_up: true, cloud_wait_s: 3.0, fog_backlog_s: 0.5 };
+        let saturated = PolicyInput {
+            wan_wait_s: 0.0,
+            wan_up: true,
+            cloud_wait_s: 0.1, // the lagging EWMA has not caught up ...
+            cloud_projected_s: 3.0, // ... but the projection already has
+            fog_backlog_s: 0.5,
+        };
         assert_eq!(gpu_saturation_aware(saturated), Route::Fog);
         assert_eq!(gpu_saturation_aware(input(true, 0.0)), Route::Cloud);
         assert_eq!(gpu_saturation_aware(input(false, 0.0)), Route::Fog);

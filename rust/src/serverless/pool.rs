@@ -1,0 +1,568 @@
+//! Generic tier control plane: one provisioner/router shared by the fog
+//! and cloud pools, so the two tiers cannot drift.
+//!
+//! PR 1 grew `FogShardPool` and PR 4 grew `CloudGpuPool`, and the two
+//! reimplemented the same scaffolding — seeded least-loaded routing,
+//! `observe` gauge publication, bounded autoscaling, tail-only
+//! retirement, billing carry-over. [`TierPool`] is that scaffolding,
+//! factored once and instantiated per tier over a [`PoolWorker`]:
+//!
+//! * [`FogShardPool`](crate::serverless::scheduler::FogShardPool) =
+//!   `TierPool<FogNode>` plus wave/policy configuration and the
+//!   last-layer fan-out.
+//! * [`CloudGpuPool`](crate::cloud::CloudGpuPool) = `TierPool<CloudServer>`
+//!   plus the pooled detect/SR/train entry points and the smoothed
+//!   queue-wait signal.
+//!
+//! ## The `PoolWorker` contract
+//!
+//! A worker exposes its queue state ([`PoolWorker::backlog_s`],
+//! [`PoolWorker::earliest_free`]), its serverless bill
+//! ([`PoolWorker::billing`], `None` for unbilled tiers like the fog), and
+//! a per-op cost projection ([`PoolWorker::projected_cost_s`]) that lets
+//! a heterogeneous worker — e.g. one whose GPU 0 sits inside a co-located
+//! training window — report an inflated cost to the deadline-aware router.
+//! Spawning is a closure handed to [`TierPool::new`]: it sees the live
+//! worker slice, so a fog shard spawned mid-run can inherit the current
+//! (IL-updated) classifier instead of the t = 0 weights.
+//!
+//! ## Routing
+//!
+//! [`TierPool::route`] picks the least-backlog worker; exact ties (within
+//! 1e-12) break via one seeded [`Pcg32`] stream drawn **only** when there
+//! is a real tie — this discipline is load-bearing for
+//! bit-reproducibility and is now shared by construction.
+//! [`TierPool::admit_within`] is the SLO-coupled variant: among workers
+//! whose projected completion (`now + backlog + projected cost`) meets a
+//! deadline, take the least-loaded; fall back to plain least-wait when
+//! none qualifies. A non-finite deadline takes the exact
+//! [`TierPool::admit`] path (same RNG draws), so SLO-disabled runs are
+//! bit-identical to the pre-SLO router.
+//!
+//! ## Retirement invariants
+//!
+//! The provisioner ([`TierPool::autoscale_bounded`]) only ever retires
+//! the **tail** worker (indices map onto per-shard LAN links and timing
+//! slots, so interior removal would remap live state mid-run), and only
+//! when that worker is idle: zero admitted-but-uncompleted events *and* a
+//! drained horizon (`backlog_s <= 0`). A `min_keep` floor lets streaming
+//! drivers pin every worker an in-flight chunk targets. A retired
+//! worker's bill merges into [`TierPool::billing`]'s carry-over, so
+//! elastic scaling never loses cost accounting; timing slots are never
+//! removed — a retired-and-respawned tail worker appends to the same
+//! slot.
+
+use crate::cloud::ExecTiming;
+use crate::metrics::meters::CostMeter;
+use crate::serverless::monitor::GlobalMonitor;
+use crate::util::rng::Pcg32;
+use crate::util::stats::Ewma;
+
+/// Pick the least-loaded index among `backlogs`. Exact ties (within
+/// 1e-12) break via `rng` so idle members share load, and the stream is
+/// drawn **only** when there is a real tie — this discipline is
+/// load-bearing for bit-reproducibility.
+pub(crate) fn pick_least_loaded(backlogs: &[f64], rng: &mut Pcg32) -> usize {
+    debug_assert!(!backlogs.is_empty(), "routing over an empty pool");
+    let best = backlogs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut ties = Vec::new();
+    for (i, &b) in backlogs.iter().enumerate() {
+        if (b - best).abs() < 1e-12 {
+            ties.push(i);
+        }
+    }
+    if ties.len() == 1 { ties[0] } else { ties[rng.index(ties.len())] }
+}
+
+/// What a tier's worker must expose to the generic control plane.
+pub trait PoolWorker {
+    /// Seconds of queued work still ahead of virtual time `now` — the
+    /// routing and provisioning signal.
+    fn backlog_s(&self, now: f64) -> f64;
+
+    /// Earliest virtual time this worker is free.
+    fn earliest_free(&self) -> f64;
+
+    /// This worker's serverless bill, merged into the pool's retired
+    /// carry-over when the provisioner retires it. `None` for unbilled
+    /// tiers (the fog shards bill nothing).
+    fn billing(&self) -> Option<&CostMeter> {
+        None
+    }
+
+    /// Projected cost of an op with `base_cost_s` starting at `start` on
+    /// this worker — the heterogeneity hook for the deadline-aware router
+    /// (e.g. co-located training inflates a cloud worker's ops).
+    fn projected_cost_s(&self, _start: f64, base_cost_s: f64) -> f64 {
+        base_cost_s
+    }
+}
+
+/// Control-plane knobs shared by every tier instantiation.
+#[derive(Debug, Clone, Copy)]
+pub struct TierPoolConfig {
+    pub initial: usize,
+    pub max: usize,
+    /// Let the provisioner grow/shrink the worker set.
+    pub autoscale: bool,
+    /// Grow when the smoothed mean backlog exceeds this (seconds).
+    pub scale_up_backlog_s: f64,
+    /// Shrink when the smoothed mean backlog falls below this.
+    pub scale_down_backlog_s: f64,
+    /// Gauge names this pool publishes into the [`GlobalMonitor`]:
+    /// smoothed-input mean backlog and live worker count.
+    pub backlog_gauge: &'static str,
+    pub size_gauge: &'static str,
+}
+
+/// Spawn hook: builds one new worker, seeing the live worker slice (so a
+/// mid-run spawn can inherit state from an existing worker).
+pub type SpawnFn<W> = Box<dyn Fn(&[W]) -> W>;
+
+/// One tier's worker pool behind the generic serverless control plane:
+/// seeded least-loaded routing, admit/complete/abort in-flight
+/// accounting, gauge publication, and a bounded tail-only provisioner.
+/// See the module docs for the contract and invariants.
+pub struct TierPool<W> {
+    pub cfg: TierPoolConfig,
+    spawn: SpawnFn<W>,
+    workers: Vec<W>,
+    /// Stage events admitted per worker and not yet completed/aborted.
+    in_flight: Vec<usize>,
+    /// Per-worker-slot completed [`ExecTiming`]s, in completion order.
+    /// Slots are never removed: a retired-and-respawned tail worker
+    /// appends to the same slot.
+    timings: Vec<Vec<ExecTiming>>,
+    /// Billing carried over from retired workers.
+    retired_billing: CostMeter,
+    backlog_ewma: Ewma,
+    total_wait_s: f64,
+    stream_rng: Pcg32,
+    /// (virtual time, worker count) provisioning history.
+    pub history: Vec<(f64, usize)>,
+    /// Routed admissions over the pool's lifetime.
+    pub routed: u64,
+}
+
+impl<W: PoolWorker> TierPool<W> {
+    /// Build a pool of `cfg.initial` workers from the spawn hook. The
+    /// tie-break RNG derives from `(seed, stream)`, so each tier keeps
+    /// its own independent deterministic stream.
+    pub fn new(cfg: TierPoolConfig, spawn: SpawnFn<W>, seed: u64, stream: u64) -> Self {
+        assert!(cfg.initial >= 1 && cfg.max >= cfg.initial);
+        let mut pool = TierPool {
+            cfg,
+            spawn,
+            workers: Vec::new(),
+            in_flight: Vec::new(),
+            timings: Vec::new(),
+            retired_billing: CostMeter::default(),
+            backlog_ewma: Ewma::new(0.3),
+            total_wait_s: 0.0,
+            stream_rng: Pcg32::new(seed, stream),
+            history: Vec::new(),
+            routed: 0,
+        };
+        for _ in 0..pool.cfg.initial {
+            pool.spawn_worker(0.0);
+        }
+        pool
+    }
+
+    fn spawn_worker(&mut self, now: f64) {
+        let w = (self.spawn)(&self.workers);
+        self.workers.push(w);
+        self.in_flight.push(0);
+        if self.timings.len() < self.workers.len() {
+            self.timings.push(Vec::new());
+        }
+        self.history.push((now, self.workers.len()));
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    pub fn worker(&self, i: usize) -> &W {
+        &self.workers[i]
+    }
+
+    pub fn worker_mut(&mut self, i: usize) -> &mut W {
+        &mut self.workers[i]
+    }
+
+    pub fn workers(&self) -> &[W] {
+        &self.workers
+    }
+
+    /// The whole pool as a mutable slice (the executor's shard view).
+    pub fn workers_mut(&mut self) -> &mut [W] {
+        &mut self.workers
+    }
+
+    pub fn backlog_s(&self, i: usize, now: f64) -> f64 {
+        self.workers[i].backlog_s(now)
+    }
+
+    pub fn mean_backlog(&self, now: f64) -> f64 {
+        let n = self.workers.len().max(1) as f64;
+        self.workers.iter().map(|w| w.backlog_s(now)).sum::<f64>() / n
+    }
+
+    /// The least backlog across workers — what an admission at `now`
+    /// would wait before starting (the admission controller's queue term).
+    pub fn min_backlog_s(&self, now: f64) -> f64 {
+        self.workers.iter().map(|w| w.backlog_s(now)).fold(f64::INFINITY, f64::min).max(0.0)
+    }
+
+    /// Pick the least-backlog worker; exact ties break via the pool's
+    /// seeded RNG stream so idle workers share load (deterministic per
+    /// seed, and drawn only when there *is* a tie — a 1-worker pool never
+    /// touches the stream).
+    pub fn route(&mut self, now: f64) -> usize {
+        let backlogs: Vec<f64> = self.workers.iter().map(|w| w.backlog_s(now)).collect();
+        pick_least_loaded(&backlogs, &mut self.stream_rng)
+    }
+
+    /// Admit one stage event: route it and mark the worker busy until the
+    /// matching [`TierPool::complete`]. The returned index is always a
+    /// live worker, and the provisioner will not retire it while the
+    /// event is in flight.
+    pub fn admit(&mut self, now: f64) -> usize {
+        let w = self.route(now);
+        self.in_flight[w] += 1;
+        self.routed += 1;
+        w
+    }
+
+    /// Deadline-aware admission: among workers whose projected completion
+    /// `now + backlog + projected_cost_s(base_cost_s)` meets `deadline`,
+    /// admit the least-loaded one; when none qualifies, fall back to
+    /// plain least-wait. A non-finite deadline — or one every worker
+    /// meets — takes the exact [`TierPool::admit`] path, drawing the same
+    /// RNG tie-breaks, so non-binding SLO runs stay bit-identical to the
+    /// pre-SLO router. For a pool of cost-homogeneous workers the filter
+    /// never changes the pick (the least-loaded worker is also the
+    /// earliest projected completion); it bites when per-worker costs
+    /// diverge, e.g. a worker inside a co-located training window.
+    pub fn admit_within(&mut self, now: f64, deadline: f64, base_cost_s: f64) -> usize {
+        if !deadline.is_finite() {
+            return self.admit(now);
+        }
+        let backlogs: Vec<f64> = self.workers.iter().map(|w| w.backlog_s(now)).collect();
+        let feasible: Vec<usize> = (0..self.workers.len())
+            .filter(|&i| {
+                let start = now + backlogs[i];
+                start + self.workers[i].projected_cost_s(start, base_cost_s) <= deadline
+            })
+            .collect();
+        let w = if feasible.is_empty() || feasible.len() == self.workers.len() {
+            // every worker (or none) qualifies: identical pick and
+            // identical RNG draws to the plain least-wait router
+            pick_least_loaded(&backlogs, &mut self.stream_rng)
+        } else {
+            let sub: Vec<f64> = feasible.iter().map(|&i| backlogs[i]).collect();
+            feasible[pick_least_loaded(&sub, &mut self.stream_rng)]
+        };
+        self.in_flight[w] += 1;
+        self.routed += 1;
+        w
+    }
+
+    /// Complete an admitted event with its execution timing: releases the
+    /// worker and appends to its [`ExecTiming`] queue. Queue-wait
+    /// accounting is conserved: the sum of every completed `queue_wait`
+    /// equals [`TierPool::total_wait_s`].
+    pub fn complete(&mut self, worker: usize, timing: ExecTiming) {
+        assert!(self.in_flight[worker] > 0, "complete without admit on worker {worker}");
+        debug_assert!(timing.queue_wait >= 0.0, "negative queue wait {}", timing.queue_wait);
+        self.in_flight[worker] -= 1;
+        self.total_wait_s += timing.queue_wait;
+        self.timings[worker].push(timing);
+    }
+
+    /// Release an admitted event whose execution failed (no timing to
+    /// account).
+    pub fn abort(&mut self, worker: usize) {
+        assert!(self.in_flight[worker] > 0, "abort without admit on worker {worker}");
+        self.in_flight[worker] -= 1;
+    }
+
+    /// Events admitted to `worker` and not yet completed.
+    pub fn in_flight(&self, worker: usize) -> usize {
+        self.in_flight[worker]
+    }
+
+    /// Completed executions on `worker`'s slot, in completion order.
+    pub fn timings(&self, worker: usize) -> &[ExecTiming] {
+        &self.timings[worker]
+    }
+
+    /// Sum of every completed execution's queue wait (conservation check
+    /// for the admit/complete protocol).
+    pub fn total_wait_s(&self) -> f64 {
+        self.total_wait_s
+    }
+
+    /// Serverless billing summed across live and retired workers.
+    pub fn billing(&self) -> CostMeter {
+        let mut total = self.retired_billing.clone();
+        for w in &self.workers {
+            if let Some(b) = w.billing() {
+                total.merge(b);
+            }
+        }
+        total
+    }
+
+    /// Publish the pool gauges into the global monitor and refresh the
+    /// smoothed backlog the provisioner acts on.
+    pub fn observe(&mut self, now: f64, monitor: &mut GlobalMonitor) {
+        let mean = self.mean_backlog(now);
+        self.backlog_ewma.update(mean);
+        monitor.gauge(self.cfg.backlog_gauge, now, mean);
+        monitor.gauge(self.cfg.size_gauge, now, self.workers.len() as f64);
+    }
+
+    /// Grow/shrink the pool against the backlog thresholds (reads the
+    /// backlog gauge published via [`TierPool::observe`]).
+    pub fn autoscale(&mut self, now: f64, monitor: &GlobalMonitor) {
+        self.autoscale_bounded(now, monitor, 1);
+    }
+
+    /// [`TierPool::autoscale`] with a shrink floor: the pool never drops
+    /// below `min_keep` workers. Retirement is tail-only (indices stay
+    /// stable) and refuses any worker with admitted in-flight events or
+    /// an un-drained horizon — queued work is never stranded; a busy tail
+    /// just postpones the shrink to a later tick. A retired worker's bill
+    /// carries over into [`TierPool::billing`].
+    pub fn autoscale_bounded(&mut self, now: f64, monitor: &GlobalMonitor, min_keep: usize) {
+        if !self.cfg.autoscale {
+            return;
+        }
+        if monitor.track(self.cfg.backlog_gauge).and_then(|t| t.latest()).is_none() {
+            return; // provisioner runs off the published gauge
+        }
+        let smoothed = self.backlog_ewma.get().unwrap_or(0.0);
+        let floor = min_keep.max(1);
+        if smoothed > self.cfg.scale_up_backlog_s && self.workers.len() < self.cfg.max {
+            self.spawn_worker(now);
+        } else if smoothed < self.cfg.scale_down_backlog_s && self.workers.len() > floor {
+            let last = self.workers.len() - 1;
+            if self.in_flight[last] == 0 && self.workers[last].backlog_s(now) <= 0.0 {
+                let gone = self.workers.pop().expect("len > floor >= 1");
+                self.in_flight.pop();
+                if let Some(b) = gone.billing() {
+                    self.retired_billing.merge(b);
+                }
+                self.history.push((now, self.workers.len()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic stub worker: a settable horizon plus a cost factor so
+    /// the deadline-aware router's heterogeneity hook is exercisable.
+    struct StubWorker {
+        free_at: f64,
+        cost_factor: f64,
+        bill: CostMeter,
+    }
+
+    impl PoolWorker for StubWorker {
+        fn backlog_s(&self, now: f64) -> f64 {
+            (self.free_at - now).max(0.0)
+        }
+
+        fn earliest_free(&self) -> f64 {
+            self.free_at
+        }
+
+        fn billing(&self) -> Option<&CostMeter> {
+            Some(&self.bill)
+        }
+
+        fn projected_cost_s(&self, _start: f64, base: f64) -> f64 {
+            base * self.cost_factor
+        }
+    }
+
+    fn stub_cfg(initial: usize, autoscale: bool) -> TierPoolConfig {
+        TierPoolConfig {
+            initial,
+            max: initial.max(4),
+            autoscale,
+            scale_up_backlog_s: 1.0,
+            scale_down_backlog_s: 0.05,
+            backlog_gauge: "stub_backlog_s",
+            size_gauge: "stub_workers",
+        }
+    }
+
+    fn stub_pool(initial: usize, autoscale: bool, seed: u64) -> TierPool<StubWorker> {
+        TierPool::new(
+            stub_cfg(initial, autoscale),
+            Box::new(|_| StubWorker { free_at: 0.0, cost_factor: 1.0, bill: CostMeter::default() }),
+            seed,
+            0x7E57,
+        )
+    }
+
+    #[test]
+    fn routes_least_loaded_and_spreads_exact_ties_deterministically() {
+        let mut pool = stub_pool(3, false, 7);
+        pool.worker_mut(0).free_at = 2.0;
+        pool.worker_mut(2).free_at = 1.0;
+        assert_eq!(pool.route(0.0), 1, "the idle worker must win");
+        let picks = |seed: u64| -> Vec<usize> {
+            let mut pool = stub_pool(4, false, seed);
+            (0..16).map(|_| pool.route(0.0)).collect()
+        };
+        assert_eq!(picks(11), picks(11), "tie-breaking must be seed-deterministic");
+        let distinct: std::collections::BTreeSet<usize> = picks(11).into_iter().collect();
+        assert!(distinct.len() > 1, "idle workers must share load");
+    }
+
+    #[test]
+    fn admit_within_prefers_a_deadline_meeting_worker() {
+        let mut pool = stub_pool(2, false, 7);
+        // worker 0: least backlog but 10x cost inflation (a co-located
+        // training window); worker 1: more backlog, clean cost
+        pool.worker_mut(0).free_at = 0.5;
+        pool.worker_mut(0).cost_factor = 10.0;
+        pool.worker_mut(1).free_at = 1.0;
+        // deadline 3.0, base cost 1.0: worker 0 projects 0.5 + 10 = 10.5
+        // (miss), worker 1 projects 1.0 + 1.0 = 2.0 (hit)
+        let w = pool.admit_within(0.0, 3.0, 1.0);
+        assert_eq!(w, 1, "the router must route around the inflated worker");
+        pool.complete(1, ExecTiming { start: 1.0, done: 2.0, queue_wait: 0.0 });
+        // a non-finite deadline reproduces plain least-wait admission
+        assert_eq!(pool.admit_within(0.0, f64::INFINITY, 1.0), 0);
+        pool.abort(0);
+        // no worker feasible: fall back to least-wait rather than refuse
+        assert_eq!(pool.admit_within(0.0, 0.1, 1.0), 0);
+        pool.abort(0);
+        assert_eq!(pool.routed, 3);
+    }
+
+    #[test]
+    fn admit_complete_conserves_wait_and_abort_releases() {
+        let mut pool = stub_pool(2, false, 7);
+        pool.worker_mut(1).free_at = 5.0; // pin routing to worker 0
+        let w = pool.admit(0.0);
+        assert_eq!(w, 0);
+        assert_eq!(pool.in_flight(0), 1);
+        pool.complete(0, ExecTiming { start: 0.0, done: 0.5, queue_wait: 0.25 });
+        assert_eq!(pool.in_flight(0), 0);
+        assert_eq!(pool.timings(0).len(), 1);
+        assert!((pool.total_wait_s() - 0.25).abs() < 1e-12);
+        let w = pool.admit(0.0);
+        pool.abort(w);
+        assert_eq!(pool.in_flight(w), 0, "abort must release without accounting");
+        assert!((pool.total_wait_s() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn provisioner_publishes_gauges_grows_and_retires_tail_only_when_idle() {
+        let mut pool = stub_pool(1, true, 7);
+        let mut monitor = GlobalMonitor::new();
+        // no gauge published yet: the provisioner must not act
+        pool.autoscale(0.0, &monitor);
+        assert_eq!(pool.len(), 1);
+        // sustained backlog drives growth
+        for step in 0..20 {
+            let now = step as f64 * 0.01;
+            pool.worker_mut(0).free_at = now + 5.0;
+            pool.observe(now, &mut monitor);
+            pool.autoscale(now, &monitor);
+        }
+        let grown = pool.len();
+        assert!(grown > 1, "provisioner never grew: {:?}", pool.history);
+        assert_eq!(grown as f64, monitor.track("stub_workers").unwrap().latest().unwrap());
+        // a busy tail postpones the shrink even when the mean has drained
+        // below the scale-down threshold (0.1 s over 4 workers keeps the
+        // smoothed mean under 0.05, so retirement IS attempted and must
+        // be refused by the un-drained tail horizon)
+        for step in 0..40 {
+            let now = 1e6 + step as f64;
+            pool.worker_mut(grown - 1).free_at = now + 0.1;
+            pool.observe(now, &mut monitor);
+            pool.autoscale(now, &monitor);
+        }
+        assert_eq!(pool.len(), grown, "retired a tail worker with an un-drained horizon");
+        // drained + billed tail: retirement carries the bill over
+        pool.worker_mut(grown - 1).free_at = 0.0;
+        pool.worker_mut(grown - 1).bill.detector_frames = 42;
+        for step in 0..80 {
+            let now = 2e7 + step as f64;
+            pool.observe(now, &mut monitor);
+            pool.autoscale(now, &monitor);
+        }
+        assert_eq!(pool.len(), 1, "provisioner never shrank: {:?}", pool.history);
+        assert_eq!(pool.billing().detector_frames, 42, "retired billing lost");
+        assert!(pool.history.len() >= 2 * grown - 1);
+    }
+
+    #[test]
+    fn in_flight_events_and_min_keep_floor_block_retirement() {
+        let mut pool = stub_pool(3, true, 7);
+        pool.cfg.scale_up_backlog_s = 1e9; // never grow
+        let mut monitor = GlobalMonitor::new();
+        // hold an event in flight on the tail worker
+        let w = loop {
+            let w = pool.admit(0.0);
+            if w == pool.len() - 1 {
+                break w;
+            }
+            pool.abort(w);
+        };
+        for step in 0..40 {
+            let now = step as f64;
+            pool.observe(now, &mut monitor);
+            pool.autoscale(now, &monitor);
+        }
+        assert_eq!(pool.len(), 3, "provisioner retired a worker with a queued event");
+        pool.complete(w, ExecTiming { start: 0.0, done: 0.1, queue_wait: 0.0 });
+        // floor released down to min_keep = 2, never below
+        for step in 40..160 {
+            let now = step as f64;
+            pool.observe(now, &mut monitor);
+            pool.autoscale_bounded(now, &monitor, 2);
+        }
+        assert_eq!(pool.len(), 2, "min_keep floor violated: {:?}", pool.history);
+    }
+
+    #[test]
+    fn spawn_hook_sees_the_live_workers() {
+        let mut pool: TierPool<StubWorker> = TierPool::new(
+            stub_cfg(1, true),
+            Box::new(|live: &[StubWorker]| StubWorker {
+                // inherit the first worker's cost factor (the fog tier
+                // inherits IL-updated weights the same way)
+                cost_factor: live.first().map(|w| w.cost_factor).unwrap_or(1.0),
+                free_at: 0.0,
+                bill: CostMeter::default(),
+            }),
+            7,
+            0x7E57,
+        );
+        pool.worker_mut(0).cost_factor = 3.0;
+        let mut monitor = GlobalMonitor::new();
+        for step in 0..20 {
+            let now = step as f64 * 0.01;
+            pool.worker_mut(0).free_at = now + 5.0;
+            pool.observe(now, &mut monitor);
+            pool.autoscale(now, &monitor);
+        }
+        assert!(pool.len() > 1);
+        assert_eq!(pool.worker(1).cost_factor, 3.0, "mid-run spawn must inherit live state");
+    }
+}

@@ -2,20 +2,25 @@
 //!
 //! The seed system drove exactly one [`FogNode`]; real deployments fan many
 //! cameras out across a *pool* of fog nodes behind one serverless control
-//! plane. This module owns that pool:
+//! plane. This module owns that pool as a thin instantiation of the
+//! generic [`TierPool`] ([`crate::serverless::pool`]) — routing, gauge
+//! publication, bounded autoscaling and tail-only retirement all live
+//! there, shared with the cloud tier's
+//! [`CloudGpuPool`](crate::cloud::CloudGpuPool) so the two tiers cannot
+//! drift. What is fog-specific stays here:
 //!
-//! * **Routing** — each chunk goes to the least-backlog shard; the
+//! * **Policy routing** — each chunk goes to the least-backlog shard; the
 //!   deployment's [`Policy`] then decides cloud-protocol vs fog-only using
-//!   a [`PolicyInput`] carrying that shard's `fog_backlog_s`.
-//! * **Provisioning** — a simple autoscaler grows/shrinks the shard pool
-//!   against a backlog threshold, driven by the `fog_backlog_s` gauge it
-//!   publishes into the [`GlobalMonitor`] (Fig. 16's provisioner, applied
-//!   to the fog tier).
-//! * **Determinism** — per-shard RNG streams (link jitter, tie-breaking)
-//!   derive from one seeded [`Pcg32`], so runs are bit-reproducible for a
-//!   given seed under any interleaving ([`crate::pipeline::Harness`] holds
-//!   the matching per-shard LAN links in
-//!   [`crate::sim::net::Topology::fog_lans`]).
+//!   a [`PolicyInput`] carrying that shard's `fog_backlog_s` plus the
+//!   cloud tier's queue-wait and freshness-projection signals.
+//! * **Model fan-out** — [`FogShardPool::sync_last_layer`] swaps the
+//!   IL-updated classifier into every shard, and a shard spawned mid-run
+//!   inherits the *current* weights through the pool's spawn hook.
+//! * **Determinism** — the routing tie-break stream derives from one
+//!   seeded [`Pcg32`](crate::util::rng::Pcg32) on the fog tier's own
+//!   stream id, so runs are bit-reproducible for a given seed under any
+//!   interleaving ([`crate::pipeline::Harness`] holds the matching
+//!   per-shard LAN links in [`crate::sim::net::Topology::fog_lans`]).
 //!
 //! Cross-camera batch formation lives in the pipeline driver: chunks from
 //! all cameras merge in capture order into
@@ -31,39 +36,13 @@
 //! provisioner runs between admissions via
 //! [`FogShardPool::autoscale_bounded`] (floored so a shard with queued
 //! stage events is never retired under an in-flight chunk).
-//!
-//! The cloud tier scales through the same abstraction:
-//! [`CloudGpuPool`](crate::cloud::CloudGpuPool) mirrors this pool —
-//! least-queue-wait admission instead of least-backlog routing, the
-//! `gpu_queue_s`/`gpu_workers` gauges instead of `fog_backlog_s`/
-//! `fog_shards`, and the same tail-only never-strand-queued-work
-//! retirement rule.
 
 use crate::fog::FogNode;
 use crate::interchange::Tensor;
 use crate::runtime::InferenceHandle;
 use crate::serverless::monitor::GlobalMonitor;
 use crate::serverless::policy::{self, Policy, PolicyInput, Route};
-use crate::util::rng::Pcg32;
-use crate::util::stats::Ewma;
-
-/// Pick the least-loaded index among `backlogs`. Exact ties (within
-/// 1e-12) break via `rng` so idle members share load, and the stream is
-/// drawn **only** when there is a real tie — this discipline is
-/// load-bearing for bit-reproducibility and is shared by both pool
-/// routers ([`FogShardPool`] and
-/// [`CloudGpuPool`](crate::cloud::CloudGpuPool)).
-pub(crate) fn pick_least_loaded(backlogs: &[f64], rng: &mut Pcg32) -> usize {
-    debug_assert!(!backlogs.is_empty(), "routing over an empty pool");
-    let best = backlogs.iter().cloned().fold(f64::INFINITY, f64::min);
-    let mut ties = Vec::new();
-    for (i, &b) in backlogs.iter().enumerate() {
-        if (b - best).abs() < 1e-12 {
-            ties.push(i);
-        }
-    }
-    if ties.len() == 1 { ties[0] } else { ties[rng.index(ties.len())] }
-}
+use crate::serverless::pool::{SpawnFn, TierPool, TierPoolConfig};
 
 /// Shard-pool knobs (defaults match the paper-scale workloads).
 #[derive(Debug, Clone, Copy)]
@@ -99,20 +78,15 @@ impl Default for ShardConfig {
     }
 }
 
-/// A pool of fog shards with routing + provisioning state.
+/// A pool of fog shards: the generic [`TierPool`] control plane plus the
+/// fog tier's policy routing and model fan-out.
 pub struct FogShardPool {
-    handle: InferenceHandle,
-    w_last0: Tensor,
-    feat_dim: usize,
-    num_classes: usize,
+    /// The deployment's shard configuration. The wave-formation and
+    /// policy fields stay live; the provisioner knobs (bounds, autoscale,
+    /// thresholds) are **snapshotted** into the generic [`TierPool`]'s
+    /// own config at construction — mutate them before building the pool.
     pub cfg: ShardConfig,
-    shards: Vec<FogNode>,
-    /// Root stream for per-shard derivations and routing tie-breaks.
-    stream_rng: Pcg32,
-    backlog: Ewma,
-    /// (virtual time, shard count) provisioning history.
-    pub history: Vec<(f64, usize)>,
-    pub routed_chunks: u64,
+    tier: TierPool<FogNode>,
 }
 
 impl FogShardPool {
@@ -124,112 +98,114 @@ impl FogShardPool {
         cfg: ShardConfig,
         seed: u64,
     ) -> Self {
-        assert!(cfg.initial_shards >= 1 && cfg.max_shards >= cfg.initial_shards);
         assert!(cfg.wave_batch >= 1 && cfg.wave_wait_s >= 0.0);
-        let mut pool = FogShardPool {
-            handle,
-            w_last0,
-            feat_dim,
-            num_classes,
-            shards: Vec::new(),
-            stream_rng: Pcg32::new(seed, 0x5C4ED),
-            backlog: Ewma::new(0.3),
-            history: Vec::new(),
-            routed_chunks: 0,
-            cfg,
+        let tier_cfg = TierPoolConfig {
+            initial: cfg.initial_shards,
+            max: cfg.max_shards,
+            autoscale: cfg.autoscale,
+            scale_up_backlog_s: cfg.scale_up_backlog_s,
+            scale_down_backlog_s: cfg.scale_down_backlog_s,
+            backlog_gauge: "fog_backlog_s",
+            size_gauge: "fog_shards",
         };
-        for _ in 0..pool.cfg.initial_shards {
-            pool.spawn_shard(0.0);
-        }
-        pool
-    }
-
-    fn spawn_shard(&mut self, now: f64) {
         // a shard spawned mid-run inherits the current (IL-updated) last
         // layer from shard 0, not the t = 0 weights
-        let w = self
-            .shards
-            .first()
-            .map(|s| s.last_layer().clone())
-            .unwrap_or_else(|| self.w_last0.clone());
-        self.shards.push(FogNode::new(self.handle.clone(), w, self.feat_dim, self.num_classes));
-        self.history.push((now, self.shards.len()));
+        let spawn: SpawnFn<FogNode> = Box::new(move |shards: &[FogNode]| {
+            let w = shards
+                .first()
+                .map(|s| s.last_layer().clone())
+                .unwrap_or_else(|| w_last0.clone());
+            FogNode::new(handle.clone(), w, feat_dim, num_classes)
+        });
+        FogShardPool { cfg, tier: TierPool::new(tier_cfg, spawn, seed, 0x5C4ED) }
     }
 
     pub fn len(&self) -> usize {
-        self.shards.len()
+        self.tier.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.shards.is_empty()
+        self.tier.is_empty()
     }
 
     pub fn shard_mut(&mut self, i: usize) -> &mut FogNode {
-        &mut self.shards[i]
+        self.tier.worker_mut(i)
     }
 
     /// The whole pool as a slice — the executor's [`StageCtx::fogs`] view.
     ///
     /// [`StageCtx::fogs`]: crate::serverless::executor::StageCtx
     pub fn shards_mut(&mut self) -> &mut [FogNode] {
-        &mut self.shards
+        self.tier.workers_mut()
     }
 
     pub fn shard_backlog(&self, i: usize, now: f64) -> f64 {
-        self.shards[i].backlog_s(now)
+        self.tier.backlog_s(i, now)
     }
 
     pub fn mean_backlog(&self, now: f64) -> f64 {
-        let n = self.shards.len().max(1) as f64;
-        self.shards.iter().map(|s| s.backlog_s(now)).sum::<f64>() / n
+        self.tier.mean_backlog(now)
+    }
+
+    /// (virtual time, shard count) provisioning history.
+    pub fn history(&self) -> &[(f64, usize)] {
+        &self.tier.history
+    }
+
+    /// Chunks routed over the pool's lifetime.
+    pub fn routed_chunks(&self) -> u64 {
+        self.tier.routed
     }
 
     /// Pick the least-backlog shard; exact ties break via the pool's RNG
     /// stream so idle shards share load instead of all traffic pinning to
     /// shard 0 (deterministic given the seed).
     pub fn route(&mut self, now: f64) -> usize {
-        let backlogs: Vec<f64> = self.shards.iter().map(|s| s.backlog_s(now)).collect();
-        pick_least_loaded(&backlogs, &mut self.stream_rng)
+        self.tier.route(now)
     }
 
     /// Route a chunk: least-backlog shard + the deployment policy's verdict
-    /// given that shard's backlog.
-    pub fn decide(&mut self, now: f64, wan_up: bool, cloud_wait_s: f64) -> (usize, Route) {
+    /// given that shard's backlog, the cloud tier's smoothed queue wait,
+    /// and the cloud tier's freshness projection for this chunk
+    /// (`cloud_projected_s`: queue + batch-plan detect cost — the same
+    /// term the SLO admission controller reads).
+    pub fn decide(
+        &mut self,
+        now: f64,
+        wan_up: bool,
+        cloud_wait_s: f64,
+        cloud_projected_s: f64,
+    ) -> (usize, Route) {
         let shard = self.route(now);
         let input = PolicyInput {
             wan_wait_s: 0.0,
             wan_up,
             cloud_wait_s,
+            cloud_projected_s,
             fog_backlog_s: self.shard_backlog(shard, now),
         };
-        self.routed_chunks += 1;
+        self.tier.routed += 1;
         (shard, (self.cfg.policy)(input))
     }
 
     /// Swap the IL-updated classifier last layer into every shard (the
     /// paper's "almost negligible overhead" model refresh, fanned out).
     pub fn sync_last_layer(&mut self, w: &Tensor) {
-        for s in &mut self.shards {
+        for s in self.tier.workers_mut() {
             s.set_last_layer(w.clone());
         }
     }
 
-    /// Publish pool gauges into the global monitor and refresh the smoothed
-    /// backlog the provisioner acts on.
+    /// Publish pool gauges (`fog_backlog_s`, `fog_shards`) into the global
+    /// monitor and refresh the smoothed backlog the provisioner acts on.
     pub fn observe(&mut self, now: f64, monitor: &mut GlobalMonitor) {
-        let mean = self.mean_backlog(now);
-        self.backlog.update(mean);
-        monitor.gauge("fog_backlog_s", now, mean);
-        monitor.gauge("fog_shards", now, self.shards.len() as f64);
+        self.tier.observe(now, monitor);
     }
 
-    /// Grow/shrink the pool against the backlog thresholds. Reads the
-    /// `fog_backlog_s` gauge published via [`FogShardPool::observe`]; a
-    /// shard is only retired when it is idle (drained GPU horizon), and the
-    /// highest-indexed idle shard goes first so shard↔link mappings stay
-    /// stable.
+    /// Grow/shrink the pool against the backlog thresholds (delegates to
+    /// the generic [`TierPool::autoscale`]).
     pub fn autoscale(&mut self, now: f64, monitor: &GlobalMonitor) {
-        self.autoscale_bounded(now, monitor, 1);
+        self.tier.autoscale(now, monitor);
     }
 
     /// [`FogShardPool::autoscale`] with a shrink floor: the pool never
@@ -238,29 +214,10 @@ impl FogShardPool {
     /// backlog is observable, but retiring the shard under a queued stage
     /// event would strand the chunk); the wave-scoped drivers have no
     /// in-flight jobs between waves and use the plain floor of 1.
+    /// Retirement itself is the generic tail-only rule of
+    /// [`TierPool::autoscale_bounded`].
     pub fn autoscale_bounded(&mut self, now: f64, monitor: &GlobalMonitor, min_keep: usize) {
-        if !self.cfg.autoscale {
-            return;
-        }
-        if monitor.track("fog_backlog_s").and_then(|t| t.latest()).is_none() {
-            return; // provisioner runs off the published gauge
-        }
-        let smoothed = self.backlog.get().unwrap_or(0.0);
-        let floor = min_keep.max(1);
-        if smoothed > self.cfg.scale_up_backlog_s && self.shards.len() < self.cfg.max_shards {
-            self.spawn_shard(now);
-        } else if smoothed < self.cfg.scale_down_backlog_s && self.shards.len() > floor {
-            // Retire only the tail shard, and only when it is idle: shard
-            // indices map onto per-shard LAN links
-            // (`Topology::fog_lans`), so removing an interior shard would
-            // remap every later shard onto a different link mid-run. A
-            // busy tail just postpones the shrink to a later tick.
-            let last = self.shards.len() - 1;
-            if self.shards[last].backlog_s(now) <= 0.0 {
-                self.shards.pop();
-                self.history.push((now, self.shards.len()));
-            }
-        }
+        self.tier.autoscale_bounded(now, monitor, min_keep);
     }
 }
 
@@ -290,10 +247,10 @@ mod tests {
             pool_with(ShardConfig { initial_shards: 3, ..ShardConfig::default() });
         pool.shard_mut(0).quality_control(500, 0.0);
         pool.shard_mut(2).quality_control(200, 0.0);
-        let (shard, route) = pool.decide(0.0, true, 0.0);
+        let (shard, route) = pool.decide(0.0, true, 0.0, 0.0);
         assert_eq!(shard, 1);
         assert_eq!(route, Route::Cloud);
-        assert_eq!(pool.routed_chunks, 1);
+        assert_eq!(pool.routed_chunks(), 1);
     }
 
     #[test]
@@ -325,13 +282,27 @@ mod tests {
             policy: policy::latency_aware,
             ..ShardConfig::default()
         });
-        let (_, route) = pool.decide(0.0, true, 0.0);
+        let (_, route) = pool.decide(0.0, true, 0.0, 0.0);
         assert_eq!(route, Route::Cloud);
-        let (_, route) = pool.decide(0.0, false, 0.0);
+        let (_, route) = pool.decide(0.0, false, 0.0, 0.0);
         assert_eq!(route, Route::Fog);
         // a huge cloud queue with idle fog shards flips the route to fog
-        let (_, route) = pool.decide(0.0, true, 50.0);
+        let (_, route) = pool.decide(0.0, true, 50.0, 50.0);
         assert_eq!(route, Route::Fog);
+    }
+
+    #[test]
+    fn saturation_policy_reads_the_cloud_projection() {
+        let (_svc, mut pool) = pool_with(ShardConfig {
+            initial_shards: 1,
+            policy: policy::gpu_saturation_aware,
+            ..ShardConfig::default()
+        });
+        // a small smoothed wait but a saturated projection sheds to fog
+        let (_, route) = pool.decide(0.0, true, 0.1, 5.0);
+        assert_eq!(route, Route::Fog);
+        let (_, route) = pool.decide(0.0, true, 0.1, 0.3);
+        assert_eq!(route, Route::Cloud);
     }
 
     #[test]
@@ -354,7 +325,7 @@ mod tests {
             pool.autoscale(now, &monitor);
         }
         let grown = pool.len();
-        assert!(grown > 1, "provisioner never grew: {:?}", pool.history);
+        assert!(grown > 1, "provisioner never grew: {:?}", pool.history());
         assert_eq!(grown as f64, monitor.track("fog_shards").unwrap().latest().unwrap());
         // far in the future every backlog has drained; the pool shrinks
         // back to one shard
@@ -363,8 +334,8 @@ mod tests {
             pool.observe(now, &mut monitor);
             pool.autoscale(now, &monitor);
         }
-        assert_eq!(pool.len(), 1, "provisioner never shrank: {:?}", pool.history);
-        assert!(pool.history.len() >= 2 * grown - 1);
+        assert_eq!(pool.len(), 1, "provisioner never shrank: {:?}", pool.history());
+        assert!(pool.history().len() >= 2 * grown - 1);
     }
 
     #[test]
@@ -385,14 +356,14 @@ mod tests {
             pool.observe(now, &mut monitor);
             pool.autoscale_bounded(now, &monitor, 3);
         }
-        assert_eq!(pool.len(), 3, "floor violated: {:?}", pool.history);
+        assert_eq!(pool.len(), 3, "floor violated: {:?}", pool.history());
         // floor released: the pool may now shrink
         for step in 40..120 {
             let now = step as f64;
             pool.observe(now, &mut monitor);
             pool.autoscale_bounded(now, &monitor, 1);
         }
-        assert_eq!(pool.len(), 1, "pool stuck after floor release: {:?}", pool.history);
+        assert_eq!(pool.len(), 1, "pool stuck after floor release: {:?}", pool.history());
     }
 
     #[test]

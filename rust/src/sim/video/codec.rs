@@ -30,11 +30,76 @@ impl Quality {
     pub const HIGH_ROUND2: Quality = Quality::new(0.8, 26.0);
     /// CloudSeg client-side downscale (§VI-B: QP 20, RS 0.35).
     pub const CLOUDSEG_DOWN: Quality = Quality::new(0.35, 20.0);
-    /// SLO-degraded uplink: the admission controller drops to this
-    /// operating point when a chunk's projected freshness latency misses
-    /// `RunConfig::slo_ms` at the standard low quality (cheaper bitstream,
-    /// worse class margin — the Tangram-style latency/accuracy trade).
-    pub const DEGRADED: Quality = Quality::new(0.5, 44.0);
+
+    /// The SLO admission rate ladder, ordered highest quality (most
+    /// bytes) first. The DDS-style protocol (§VI-B) is inherently a
+    /// multi-rung quality ladder, not a binary switch: when a chunk's
+    /// projected freshness misses `RunConfig::slo_ms` at the standard low
+    /// quality, the admission controller walks these rungs greedily and
+    /// uplinks at the **highest** one whose projection meets the target,
+    /// refusing the chunk only when even the lowest rung misses. Every
+    /// rung costs strictly fewer bytes than [`Quality::LOW`] and than the
+    /// rung above it (asserted by a codec unit test), which is what makes
+    /// the greedy search correct: the projection is monotone in the
+    /// uplink byte count.
+    pub const LADDER: [Quality; 3] =
+        [Quality::new(0.7, 40.0), Quality::new(0.6, 42.0), Quality::new(0.5, 44.0)];
+
+    /// SLO-degraded uplink — the legacy single-step operating point,
+    /// defined as the **lowest rung of the ladder** so the ladder and the
+    /// single-step path cannot disagree about the floor (cheapest
+    /// bitstream, worst class margin — the Tangram-style
+    /// latency/accuracy trade).
+    pub const DEGRADED: Quality = Self::LADDER[Self::LADDER.len() - 1];
+}
+
+/// Parse a rate-ladder spec: comma-separated `r:qp` rungs ordered highest
+/// quality first (e.g. `"0.7:40, 0.6:42, 0.5:44"`), or the keywords
+/// `default` ([`Quality::LADDER`]) / `single` (the legacy one-step ladder
+/// `[Quality::DEGRADED]`). Rungs must be strictly byte-monotone
+/// (descending) — the greedy admission search takes the *first* feasible
+/// rung, so a misordered ladder would silently over-degrade; the rate
+/// model makes ordering parameter-independent, so it is validated here.
+/// Used by the `--ladder` CLI option and the `[app] ladder` config key.
+pub fn parse_ladder(spec: &str) -> anyhow::Result<Vec<Quality>> {
+    match spec.trim() {
+        "default" => return Ok(Quality::LADDER.to_vec()),
+        "single" => return Ok(vec![Quality::DEGRADED]),
+        _ => {}
+    }
+    // relative encoded size, up to the (positive) bpp0·src pixel factor:
+    // bits ∝ r² · 2^(−qp/6), so rung ordering needs no SimParams
+    let rel_bits = |q: Quality| q.r * q.r * (2.0f64).powf(-q.qp / 6.0);
+    let mut ladder: Vec<Quality> = Vec::new();
+    for rung in spec.split(',') {
+        let rung = rung.trim();
+        let (r, qp) = rung.split_once(':').ok_or_else(|| {
+            anyhow::anyhow!("ladder rung {rung:?}: expected `r:qp` (e.g. 0.7:40)")
+        })?;
+        let r: f64 = r
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("ladder rung {rung:?}: bad resolution scale"))?;
+        let qp: f64 =
+            qp.trim().parse().map_err(|_| anyhow::anyhow!("ladder rung {rung:?}: bad QP"))?;
+        if !(r > 0.0 && r <= 1.0) || !(0.0..=51.0).contains(&qp) {
+            anyhow::bail!("ladder rung {rung:?}: r must be in (0, 1], qp in [0, 51]");
+        }
+        let q = Quality::new(r, qp);
+        if let Some(&prev) = ladder.last() {
+            if rel_bits(q) >= rel_bits(prev) {
+                anyhow::bail!(
+                    "ladder rung {rung:?} does not shrink the stream below the rung before \
+                     it — order rungs highest quality first"
+                );
+            }
+        }
+        ladder.push(q);
+    }
+    if ladder.is_empty() {
+        anyhow::bail!("empty ladder spec {spec:?}");
+    }
+    Ok(ladder)
 }
 
 /// Encoded size of one frame in **bits**.
@@ -118,6 +183,44 @@ mod tests {
         let deg = frame_bytes(Quality::DEGRADED, &p);
         assert!(deg < 0.6 * low, "degraded={deg} low={low}");
         assert!(alpha(Quality::DEGRADED, &p) > 0.1);
+    }
+
+    #[test]
+    fn ladder_rungs_are_strictly_monotone_in_frame_bytes() {
+        let p = params();
+        let low = frame_bytes(Quality::LOW, &p);
+        let mut prev = low;
+        for (i, q) in Quality::LADDER.iter().enumerate() {
+            let b = frame_bytes(*q, &p);
+            assert!(
+                b < prev,
+                "rung {i} ({q:?}) does not strictly shrink the stream: {b} vs {prev}"
+            );
+            // every rung keeps a usable localization signal
+            assert!(alpha(*q, &p) > 0.1, "rung {i} destroys the signal");
+            prev = b;
+        }
+        // the legacy single-step operating point IS the lowest rung — the
+        // two admission paths cannot disagree about the floor
+        let last = Quality::LADDER[Quality::LADDER.len() - 1];
+        assert_eq!(Quality::DEGRADED.r.to_bits(), last.r.to_bits());
+        assert_eq!(Quality::DEGRADED.qp.to_bits(), last.qp.to_bits());
+    }
+
+    #[test]
+    fn parse_ladder_accepts_keywords_and_rung_lists() {
+        assert_eq!(parse_ladder("default").unwrap(), Quality::LADDER.to_vec());
+        assert_eq!(parse_ladder("single").unwrap(), vec![Quality::DEGRADED]);
+        let custom = parse_ladder("0.75:38, 0.5:44").unwrap();
+        assert_eq!(custom, vec![Quality::new(0.75, 38.0), Quality::new(0.5, 44.0)]);
+        assert!(parse_ladder("").is_err());
+        assert!(parse_ladder("0.7").is_err(), "missing qp must be rejected");
+        assert!(parse_ladder("2.0:40").is_err(), "r > 1 must be rejected");
+        assert!(parse_ladder("0.7:99").is_err(), "qp > 51 must be rejected");
+        // the greedy search takes the first feasible rung, so a ladder
+        // that is not strictly byte-descending must be rejected loudly
+        assert!(parse_ladder("0.5:44, 0.7:40").is_err(), "misordered ladder must be rejected");
+        assert!(parse_ladder("0.7:40, 0.7:40").is_err(), "duplicate rungs must be rejected");
     }
 
     #[test]

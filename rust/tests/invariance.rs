@@ -22,7 +22,7 @@ use vpaas::pipeline::{Harness, RunConfig, SystemKind};
 use vpaas::serverless::executor::DispatchMode;
 use vpaas::sim::video::chunk::FRAMES_PER_CHUNK;
 use vpaas::sim::video::datasets::{self, DatasetSpec};
-use vpaas::sim::video::WorkloadProfile;
+use vpaas::sim::video::{Quality, WorkloadProfile};
 
 fn cameras(n: usize) -> DatasetSpec {
     let mut d = datasets::drone(0.1);
@@ -73,18 +73,28 @@ fn non_binding_slo_reproduces_the_golden_run_byte_for_byte() {
     let base = cfg(2, 2, DispatchMode::Streaming, WorkloadProfile::Bursty);
     let golden = h.run(SystemKind::Vpaas, &ds, &base).unwrap();
     // enabling the admission machinery with a target no chunk can miss
-    // must change nothing — projections run, but no degrade, no drop, and
-    // every timing bit is identical to the slo_ms = INFINITY run
-    let finite = h.run(SystemKind::Vpaas, &ds, &RunConfig { slo_ms: 1e12, ..base }).unwrap();
+    // must change nothing — projections run (down the whole default
+    // ladder), but no degrade, no drop, and every timing bit is
+    // identical to the slo_ms = INFINITY run
+    let finite =
+        h.run(SystemKind::Vpaas, &ds, &RunConfig { slo_ms: 1e12, ..base.clone() }).unwrap();
     assert_eq!(golden.content_fingerprint(), finite.content_fingerprint());
     assert_eq!(golden.chunks_degraded, 0);
     assert_eq!(finite.chunks_degraded, 0);
     assert_eq!(finite.chunks_dropped, 0);
+    assert!(finite.degrade_planned.is_empty(), "non-binding target planned a degrade");
     assert_eq!(golden.makespan.to_bits(), finite.makespan.to_bits());
     let (sa, sb) = (golden.latency.summary(), finite.latency.summary());
     assert_eq!(sa.count, sb.count);
     assert_eq!(sa.mean.to_bits(), sb.mean.to_bits());
     assert_eq!(sa.max.to_bits(), sb.max.to_bits());
+    // ... and so must swapping the ladder for the legacy single-step one:
+    // ladder choice is unobservable until a target binds
+    let single_cfg =
+        RunConfig { slo_ms: 1e12, ladder: vec![Quality::DEGRADED], ..base.clone() };
+    let single = h.run(SystemKind::Vpaas, &ds, &single_cfg).unwrap();
+    assert_eq!(golden.content_fingerprint(), single.content_fingerprint());
+    assert_eq!(golden.makespan.to_bits(), single.makespan.to_bits());
 }
 
 #[test]
@@ -130,6 +140,66 @@ fn binding_slo_degrades_or_drops_and_every_scored_chunk_meets_it() {
     let again = h.run(SystemKind::Vpaas, &ds, &slo_cfg).unwrap();
     assert_eq!(m.content_fingerprint(), again.content_fingerprint());
     assert_eq!(m.makespan.to_bits(), again.makespan.to_bits());
+}
+
+#[test]
+fn ladder_beats_single_step_degrade_at_a_binding_slo() {
+    let h = Harness::new().unwrap();
+    let ds = cameras(4);
+    let base = cfg(2, 1, DispatchMode::Streaming, WorkloadProfile::Bursty);
+    // pick a binding target from the reference run's per-chunk stream
+    // ages, exactly like the binding-SLO accounting test above
+    let reference = h.run(SystemKind::Vpaas, &ds, &base).unwrap();
+    let mut ages: Vec<f64> = reference
+        .latency
+        .freshness
+        .values()
+        .chunks(FRAMES_PER_CHUNK)
+        .map(|c| c[0])
+        .collect();
+    ages.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let slo_s = (ages[ages.len() * 3 / 4] + ages[ages.len() - 1]) / 2.0;
+    let ladder_cfg = RunConfig { slo_ms: slo_s * 1e3, ..base.clone() };
+    let single_cfg = RunConfig { ladder: vec![Quality::DEGRADED], ..ladder_cfg.clone() };
+    let ladder = h.run(SystemKind::Vpaas, &ds, &ladder_cfg).unwrap();
+    let single = h.run(SystemKind::Vpaas, &ds, &single_cfg).unwrap();
+    // exact accounting holds for both controllers: every planned chunk
+    // was served or dropped, never lost
+    let planned: u64 = ds.make_videos(&h.params).iter().map(|v| v.chunks_total()).sum();
+    assert_eq!(ladder.chunks + ladder.chunks_dropped, planned, "ladder lost chunks");
+    assert_eq!(single.chunks + single.chunks_dropped, planned, "single-step lost chunks");
+    // the target really bound at least one of the controllers
+    assert!(
+        ladder.chunks_degraded
+            + ladder.chunks_dropped
+            + single.chunks_degraded
+            + single.chunks_dropped
+            > 0,
+        "SLO never bound: ladder {ladder:?} single {single:?}"
+    );
+    // frontier dominance (the point of the multi-rung ladder): at the
+    // same binding target it scores at least the single-step accuracy at
+    // equal or lower drop count — it shares the single step's floor rung
+    // and refusal condition, and only ever adds feasible rungs above it
+    assert!(
+        ladder.chunks_dropped <= single.chunks_dropped,
+        "ladder dropped more: {} vs {}",
+        ladder.chunks_dropped,
+        single.chunks_dropped
+    );
+    assert!(
+        ladder.f1_true.f1() + 1e-9 >= single.f1_true.f1(),
+        "ladder under-scored single-step: {} vs {}",
+        ladder.f1_true.f1(),
+        single.f1_true.f1()
+    );
+    // every scored chunk still meets the SLO under both controllers
+    for m in [&ladder, &single] {
+        let s = m.latency.summary();
+        if s.count > 0 {
+            assert!(s.max <= slo_s + 1e-9, "scored chunk missed the SLO: {} > {slo_s}", s.max);
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,224 @@
+//! Generic-pool property tests instantiated against **both** tier worker
+//! types — [`FogNode`] fog shards and [`CloudServer`] GPU workers — from
+//! one set of helpers, so the shared `serverless::pool::TierPool` control
+//! plane is verified once for the whole platform (these replace the
+//! cloud-only copies that used to live in `tests/cloud_pool.rs`):
+//!
+//! * admit/complete queue-wait conservation (and abort releasing without
+//!   accounting) under arbitrary interleavings,
+//! * never-retire-in-flight: the provisioner refuses to retire a worker
+//!   holding admitted events or an un-drained horizon,
+//! * deterministic tie-break spread: idle workers share load, identically
+//!   for a fixed seed,
+//! * worker-count bounds: the pool never empties and never exceeds its
+//!   configured maximum.
+
+use std::sync::Arc;
+
+use vpaas::cloud::{CloudConfig, CloudServer, ExecTiming};
+use vpaas::fog::FogNode;
+use vpaas::runtime::{InferenceHandle, InferenceService};
+use vpaas::serverless::monitor::GlobalMonitor;
+use vpaas::serverless::pool::{PoolWorker, TierPool, TierPoolConfig};
+use vpaas::sim::params::SimParams;
+use vpaas::util::prop::prop_check;
+
+fn tier_cfg(initial: usize, autoscale: bool, up: f64) -> TierPoolConfig {
+    TierPoolConfig {
+        initial,
+        max: initial.max(4),
+        autoscale,
+        scale_up_backlog_s: up,
+        scale_down_backlog_s: 0.05,
+        backlog_gauge: "tier_backlog_s",
+        size_gauge: "tier_workers",
+    }
+}
+
+fn fog_pool(
+    h: &InferenceHandle,
+    p: &Arc<SimParams>,
+    cfg: TierPoolConfig,
+    seed: u64,
+) -> TierPool<FogNode> {
+    let h = h.clone();
+    let w0 = p.cls_last0.clone();
+    let (d, k) = (p.feat_dim, p.num_classes);
+    TierPool::new(cfg, Box::new(move |_| FogNode::new(h.clone(), w0.clone(), d, k)), seed, 0xF06)
+}
+
+fn cloud_pool(
+    h: &InferenceHandle,
+    p: &Arc<SimParams>,
+    cfg: TierPoolConfig,
+    seed: u64,
+) -> TierPool<CloudServer> {
+    let h = h.clone();
+    let (grid, k, d) = (p.grid, p.num_classes, p.feat_dim);
+    TierPool::new(
+        cfg,
+        Box::new(move |_| CloudServer::new(h.clone(), CloudConfig::default(), grid, k, d)),
+        seed,
+        0x6B0,
+    )
+}
+
+/// Deterministic tie-break spread, generic over the worker type.
+fn check_tie_spread<W: PoolWorker>(make: &dyn Fn(u64) -> TierPool<W>) {
+    let picks = |seed: u64| -> Vec<usize> {
+        let mut pool = make(seed);
+        (0..16).map(|_| pool.route(0.0)).collect()
+    };
+    let a = picks(11);
+    assert_eq!(a, picks(11), "tie-breaking must be seed-deterministic");
+    let distinct: std::collections::BTreeSet<usize> = a.iter().copied().collect();
+    assert!(distinct.len() > 1, "idle workers must share load: {a:?}");
+}
+
+/// The admit/complete/provision invariant walk, generic over the worker
+/// type. `make` builds a pool; `load` puts real queued work onto one
+/// worker's horizon (the tier-specific op).
+fn prop_pool_invariants<W: PoolWorker>(
+    tag: u64,
+    make: impl Fn(TierPoolConfig, u64) -> TierPool<W>,
+    load: impl Fn(&mut TierPool<W>, usize, f64),
+) {
+    prop_check(30, tag, |g| {
+        let workers = g.usize_in(1, 4);
+        let cfg = tier_cfg(workers, g.bool(), g.f64_range(0.1, 2.0));
+        let mut pool = make(cfg, g.u32() as u64);
+        let mut monitor = GlobalMonitor::new();
+        let mut open: Vec<usize> = Vec::new(); // in-flight (worker) tickets
+        let mut expected_wait = 0.0f64;
+        let mut now = 0.0f64;
+        let steps = g.usize_in(5, 60);
+        for _ in 0..steps {
+            now += g.f64_range(0.0, 2.0);
+            match g.usize_in(0, 3) {
+                // admit: the pick must be a live worker
+                0 => {
+                    let w = pool.admit(now);
+                    if w >= pool.len() {
+                        return Err(format!("routed to retired worker {w} of {}", pool.len()));
+                    }
+                    open.push(w);
+                }
+                // complete the oldest open ticket with a synthetic timing
+                1 => {
+                    if let Some(w) = open.first().copied() {
+                        open.remove(0);
+                        let wait = g.f64_range(0.0, 1.0);
+                        expected_wait += wait;
+                        let t = ExecTiming { start: now, done: now + 0.1, queue_wait: wait };
+                        pool.complete(w, t);
+                    }
+                }
+                // load a worker's horizon with real tier work
+                2 => {
+                    let w = g.usize_in(0, pool.len() - 1);
+                    load(&mut pool, w, now);
+                }
+                // provisioner tick
+                _ => {
+                    pool.observe(now, &mut monitor);
+                    pool.autoscale(now, &monitor);
+                }
+            }
+            // invariants after every step
+            if pool.is_empty() || pool.len() > pool.cfg.max {
+                return Err(format!("worker count {} out of bounds", pool.len()));
+            }
+            if pool.total_wait_s() < 0.0 {
+                return Err("negative accumulated queue wait".into());
+            }
+            for &w in &open {
+                if w >= pool.len() {
+                    return Err(format!(
+                        "worker {w} retired under an in-flight event (len {})",
+                        pool.len()
+                    ));
+                }
+            }
+        }
+        // conservation: completed waits sum exactly to the pool's meter
+        if (pool.total_wait_s() - expected_wait).abs() > 1e-9 {
+            return Err(format!(
+                "queue-wait not conserved: pool {} vs expected {expected_wait}",
+                pool.total_wait_s()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tie_spread_is_deterministic_for_both_worker_types() {
+    let svc = InferenceService::start().unwrap();
+    let p = SimParams::load().unwrap();
+    let h = svc.handle();
+    check_tie_spread(&|seed| fog_pool(&h, &p, tier_cfg(4, false, 1.0), seed));
+    check_tie_spread(&|seed| cloud_pool(&h, &p, tier_cfg(4, false, 1.0), seed));
+}
+
+#[test]
+fn prop_invariants_hold_for_fog_shard_workers() {
+    let svc = InferenceService::start().unwrap();
+    let p = SimParams::load().unwrap();
+    let h = svc.handle();
+    prop_pool_invariants(
+        0xF06,
+        |cfg, seed| fog_pool(&h, &p, cfg, seed),
+        |pool, w, now| {
+            pool.worker_mut(w).quality_control(2_000, now);
+        },
+    );
+}
+
+#[test]
+fn prop_invariants_hold_for_cloud_gpu_workers() {
+    let svc = InferenceService::start().unwrap();
+    let p = SimParams::load().unwrap();
+    let h = svc.handle();
+    prop_pool_invariants(
+        0xC10D,
+        |cfg, seed| cloud_pool(&h, &p, cfg, seed),
+        |pool, w, now| {
+            pool.worker_mut(w).train_burst(now, 4);
+        },
+    );
+}
+
+#[test]
+fn never_retire_in_flight_holds_for_both_worker_types() {
+    let svc = InferenceService::start().unwrap();
+    let p = SimParams::load().unwrap();
+    let h = svc.handle();
+    fn exercise<W: PoolWorker>(mut pool: TierPool<W>) {
+        pool.cfg.scale_up_backlog_s = 1e9; // never grow
+        let mut monitor = GlobalMonitor::new();
+        // pin an event to the tail worker, drain everything else
+        let w = loop {
+            let w = pool.admit(0.0);
+            if w == pool.len() - 1 {
+                break w;
+            }
+            pool.abort(w);
+        };
+        for step in 0..40 {
+            let now = step as f64;
+            pool.observe(now, &mut monitor);
+            pool.autoscale(now, &monitor);
+        }
+        assert_eq!(pool.len(), 3, "provisioner retired a worker with a queued event");
+        // completing the event releases the floor; the pool drains to 1
+        pool.complete(w, ExecTiming { start: 0.0, done: 0.1, queue_wait: 0.0 });
+        for step in 40..160 {
+            let now = step as f64;
+            pool.observe(now, &mut monitor);
+            pool.autoscale(now, &monitor);
+        }
+        assert_eq!(pool.len(), 1, "pool stuck after the in-flight event completed");
+    }
+    exercise(fog_pool(&h, &p, tier_cfg(3, true, 1e9), 7));
+    exercise(cloud_pool(&h, &p, tier_cfg(3, true, 1e9), 7));
+}

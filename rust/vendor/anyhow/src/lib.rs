@@ -123,6 +123,22 @@ macro_rules! bail {
     };
 }
 
+/// Return early with an error if a condition is not satisfied
+/// (`assert!`-shaped [`bail!`]).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +173,17 @@ mod tests {
         }
         assert_eq!(f(false).unwrap(), 1);
         assert_eq!(f(true).unwrap_err().to_string(), "flagged true");
+    }
+
+    #[test]
+    fn ensure_guards_conditions() {
+        fn f(n: u32) -> Result<u32> {
+            ensure!(n < 10, "too big: {n}");
+            ensure!(n != 7);
+            Ok(n)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert_eq!(f(12).unwrap_err().to_string(), "too big: 12");
+        assert!(f(7).unwrap_err().to_string().contains("n != 7"));
     }
 }
