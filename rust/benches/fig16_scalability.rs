@@ -5,6 +5,8 @@
 //! workload profiles (`BENCH_stream.json`), and the cloud GPU pool sweep
 //! at worker counts {1, 2, 4, 8} (`BENCH_gpu.json`) — all three JSON
 //! artifacts are uploaded by CI so the perf trajectory is visible per PR.
+//! The sweeps run as declarative studies (`vpaas::study`) and the JSON
+//! encoders live in `pipeline::figures`, shared with the schema tests.
 //!
 //! Set `VPAAS_BENCH_SMOKE=1` for the reduced CI configuration: fewer
 //! cameras, a shorter dataset, no repeated timing reps — the JSON
@@ -13,9 +15,10 @@
 mod bench_support;
 use bench_support::bench;
 use vpaas::pipeline::{figures, Harness, RunConfig};
+use vpaas::serverless::app::bench_smoke;
 
 fn main() {
-    let smoke = std::env::var("VPAAS_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let smoke = bench_smoke();
     let h = Harness::new().expect("artifacts");
     let cfg = RunConfig { golden: false, ..RunConfig::default() };
 
@@ -35,20 +38,7 @@ fn main() {
     let shard_counts: &[usize] = if smoke { &[2, 4] } else { &[2, 4, 8] };
     let (overlap, rows) = figures::fig16_overlap(&h, &cfg, cameras, scale, shard_counts).unwrap();
     println!("{overlap}");
-    let entries: Vec<String> = rows
-        .iter()
-        .map(|(shards, event, seq)| {
-            format!(
-                "{{\"shards\":{shards},\"event_makespan_s\":{event:.6},\
-                 \"sequential_makespan_s\":{seq:.6},\"speedup\":{:.6}}}",
-                seq / event.max(1e-12)
-            )
-        })
-        .collect();
-    let json = format!(
-        "{{\"bench\":\"fig16_overlap\",\"workload\":\"drone x{cameras} cameras\",\"rows\":[{}]}}\n",
-        entries.join(",")
-    );
+    let json = figures::overlap_json(cameras, &rows);
     std::fs::write("BENCH_overlap.json", &json).expect("write BENCH_overlap.json");
     println!("wrote BENCH_overlap.json: {json}");
     // tiny tolerance: earliest-ready-first can, in principle, delay one
@@ -64,27 +54,7 @@ fn main() {
     // profile (uniform / bursty / churn), as JSON
     let (stream_text, stream_rows) = figures::fig16_stream(&h, &cfg, cameras, scale).unwrap();
     println!("{stream_text}");
-    let entries: Vec<String> = stream_rows
-        .iter()
-        .map(|r| {
-            format!(
-                "{{\"workload\":\"{}\",\"chunks\":{},\"streaming_makespan_s\":{:.6},\
-                 \"wave_makespan_s\":{:.6},\"sequential_makespan_s\":{:.6},\
-                 \"wave_over_streaming\":{:.6}}}",
-                r.workload,
-                r.chunks,
-                r.streaming_s,
-                r.wave_s,
-                r.sequential_s,
-                r.wave_s / r.streaming_s.max(1e-12)
-            )
-        })
-        .collect();
-    let json = format!(
-        "{{\"bench\":\"fig16_stream\",\"workload\":\"drone x{cameras} cameras, 4 shards\",\
-         \"rows\":[{}]}}\n",
-        entries.join(",")
-    );
+    let json = figures::stream_json(cameras, &stream_rows);
     std::fs::write("BENCH_stream.json", &json).expect("write BENCH_stream.json");
     println!("wrote BENCH_stream.json: {json}");
     // makespan ordering: authoritative gating lives in the tier-1 tests
@@ -129,20 +99,7 @@ fn main() {
     let (gpu_text, gpu_rows) =
         figures::fig16_gpu_sweep(&h, &cfg, gpu_cams, gpu_scale, gpu_counts).unwrap();
     println!("{gpu_text}");
-    let entries: Vec<String> = gpu_rows
-        .iter()
-        .map(|r| {
-            format!(
-                "{{\"gpus\":{},\"chunks\":{},\"makespan_s\":{:.6},\"p99_latency_s\":{:.6}}}",
-                r.gpus, r.chunks, r.makespan_s, r.p99_s
-            )
-        })
-        .collect();
-    let json = format!(
-        "{{\"bench\":\"fig16_gpu_sweep\",\"workload\":\"drone x{gpu_cams} cameras, bursty, \
-         8 shards\",\"rows\":[{}]}}\n",
-        entries.join(",")
-    );
+    let json = figures::gpu_json(gpu_cams, &gpu_rows);
     std::fs::write("BENCH_gpu.json", &json).expect("write BENCH_gpu.json");
     println!("wrote BENCH_gpu.json: {json}");
     let m1 = gpu_rows.iter().find(|r| r.gpus == 1).expect("1-gpu row").makespan_s;
@@ -181,29 +138,7 @@ fn main() {
     let (slo_text, slo_rows) =
         figures::fig10_slo_frontier(&h, &cfg, slo_cams, slo_scale, slo_points).unwrap();
     println!("{slo_text}");
-    let entries: Vec<String> = slo_rows
-        .iter()
-        .map(|r| {
-            format!(
-                "{{\"slo_ms\":{},\"ladder\":{},\"f1\":{:.6},\"wan_bytes\":{:.0},\
-                 \"billing_units\":{:.0},\"chunks\":{},\"chunks_degraded\":{},\
-                 \"chunks_dropped\":{}}}",
-                if r.slo_ms.is_finite() { format!("{:.0}", r.slo_ms) } else { "null".into() },
-                r.ladder,
-                r.f1,
-                r.wan_bytes,
-                r.cost_units,
-                r.chunks,
-                r.chunks_degraded,
-                r.chunks_dropped
-            )
-        })
-        .collect();
-    let json = format!(
-        "{{\"bench\":\"fig10_slo_frontier\",\"workload\":\"drone x{slo_cams} cameras, bursty, \
-         2 shards\",\"rows\":[{}]}}\n",
-        entries.join(",")
-    );
+    let json = figures::slo_json(slo_cams, &slo_rows);
     std::fs::write("BENCH_slo.json", &json).expect("write BENCH_slo.json");
     println!("wrote BENCH_slo.json: {json}");
     // at every binding target the ladder must not drop more chunks than

@@ -130,6 +130,21 @@
 //! `BENCH_gpu.json`), plus the SLO/cost frontier sweep
 //! (`BENCH_slo.json`, `pipeline::figures::fig10_slo_frontier`).
 //!
+//! ## Declarative scenario studies
+//!
+//! The [`study`] subsystem turns those sweeps into data: a declarative
+//! spec (`rust/studies/*.toml`) names scenario axes, a repeat count and a
+//! base seed; it expands into a canonical bit-reproducible trial plan,
+//! executes through [`pipeline::Harness`], and aggregates per-cell
+//! mean/stddev/95%-CI tables serialized to `BENCH_study.json`
+//! ([`study::StudyReport`]). `vpaas study <spec.toml>` runs one from the
+//! CLI; `--baseline` compares against a stored report with Welch's
+//! t-test, and the cross-commit CI gate (`tests/golden_metrics.rs`) only
+//! fails on regressions that are statistically significant *and* beyond
+//! per-metric tolerances. The fig16/fig10 sweeps in
+//! [`pipeline::figures`] are thin study specs (`repeats = 1`,
+//! `seed_mode = fixed`) whose legacy output is preserved byte for byte.
+//!
 //! Start with `pipeline` for end-to-end drivers, or `examples/quickstart.rs`.
 
 pub mod baselines;
@@ -143,6 +158,7 @@ pub mod protocol;
 pub mod runtime;
 pub mod serverless;
 pub mod serving;
+pub mod study;
 pub mod zoo;
 pub mod sim;
 pub mod util;

@@ -5,6 +5,7 @@
 //! vpaas figures --id fig9 [--scale 0.05]     regenerate one figure/table
 //! vpaas figures --id all                     regenerate everything
 //! vpaas run --system vpaas --dataset drone   one system on one dataset
+//! vpaas study studies/gpu_sweep.toml         declarative scenario study
 //! vpaas profile                              model profiler (Fig. 4)
 //! vpaas serve --config policy.cfg            serverless demo loop
 //! ```
@@ -31,6 +32,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("figures") => cmd_figures(args),
         Some("run") => cmd_run(args),
+        Some("study") => cmd_study(args),
         Some("profile") => cmd_profile(),
         Some("serve") => cmd_serve(args),
         Some("help") | None => {
@@ -50,6 +52,11 @@ subcommands:
           [--budget 0.2] [--shards 1] [--gpus 1] [--slo-ms inf]
           [--ladder default|single|r:qp,...]
           [--no-drift] [--golden] [--workload uniform|bursty|churn]
+  study   <spec.toml> [--smoke] [--out BENCH_study.json] [--baseline report.json]
+          run a declarative scenario study: expand the spec's axes into a
+          deterministic trial plan, execute repeats, report mean/stddev/CI
+          per cell; --baseline gates on Welch-significant regressions
+          (VPAAS_BENCH_SMOKE=1 selects the spec's [smoke] shape like --smoke)
   profile                       profile registered models on the shared inference engine
   serve   [--config file.cfg] [--chunks N]   drive the serverless demo app";
 
@@ -162,6 +169,44 @@ fn cmd_run(args: &Args) -> Result<()> {
         kind.name(),
         table(&["metric", "value"], &rows)
     );
+    Ok(())
+}
+
+fn cmd_study(args: &Args) -> Result<()> {
+    use vpaas::study::{self, StudySpec};
+    let path = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .or_else(|| args.get("spec"))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "usage: vpaas study <spec.toml> [--smoke] [--out file.json] [--baseline report.json]"
+            )
+        })?;
+    let smoke = args.flag("smoke") || vpaas::serverless::app::bench_smoke();
+    let spec = StudySpec::from_config(&Config::load(path)?, smoke)?;
+    let h = Harness::new()?;
+    // studies own the whole run configuration via [run]/[axes]; the base
+    // config only fixes golden off (pseudo-GT scoring is a study axis of
+    // its own if ever needed, not an ambient default)
+    let base = RunConfig { golden: false, ..RunConfig::default() };
+    let run = study::run_study(&h, &spec, &base)?;
+    let report = run.report();
+    println!("{}", report.table());
+    let out = args.get_or("out", "BENCH_study.json");
+    std::fs::write(out, report.to_json())?;
+    println!("wrote {out}");
+    if let Some(baseline_path) = args.get("baseline") {
+        let baseline = study::StudyReport::from_json(&std::fs::read_to_string(baseline_path)?)?;
+        let deltas = study::compare(&report, &baseline, study::GATE_ALPHA);
+        println!("{}", study::compare_table(&deltas));
+        let violations = deltas.iter().filter(|d| d.violates()).count();
+        if violations > 0 {
+            bail!("{violations} significant regression(s) beyond tolerance vs {baseline_path}");
+        }
+        println!("gate: no significant regressions vs {baseline_path}");
+    }
     Ok(())
 }
 

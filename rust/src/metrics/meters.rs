@@ -140,6 +140,38 @@ pub struct ContentFingerprint {
     pub chunks_dropped: u64,
 }
 
+impl ContentFingerprint {
+    /// Stable 64-bit digest (FNV-1a over the fields in declaration
+    /// order). The study report stores this per cell so a re-run of the
+    /// same spec + seed can be checked for identical content without
+    /// shipping the whole chunk log in `BENCH_study.json`.
+    pub fn hash64(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |v: u64| {
+            for byte in v.to_le_bytes() {
+                h = (h ^ byte as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(self.f1_true.tp);
+        eat(self.f1_true.fp);
+        eat(self.f1_true.fn_);
+        eat(self.chunks);
+        eat(self.labels_used);
+        eat(self.fog_regions);
+        eat(self.wan_bytes_bits);
+        eat(self.cost_units_bits);
+        eat(self.sessions_retired);
+        eat(self.chunks_degraded);
+        eat(self.chunks_dropped);
+        eat(self.chunk_log.len() as u64);
+        for &(video, idx) in &self.chunk_log {
+            eat(video as u64);
+            eat(idx);
+        }
+        h
+    }
+}
+
 impl RunMetrics {
     pub fn new(system: &str, dataset: &str) -> Self {
         RunMetrics {
@@ -245,6 +277,21 @@ mod tests {
         // ... but any content change breaks it
         b.chunks_dropped += 1;
         assert_ne!(a.content_fingerprint(), b.content_fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_hash_tracks_equality() {
+        let mut a = RunMetrics::new("vpaas", "drone");
+        a.chunks = 5;
+        a.chunk_log = vec![(0, 0), (0, 1), (1, 0)];
+        let b = a.clone();
+        assert_eq!(a.content_fingerprint().hash64(), b.content_fingerprint().hash64());
+        let mut c = a.clone();
+        c.chunk_log[2] = (1, 1);
+        assert_ne!(a.content_fingerprint().hash64(), c.content_fingerprint().hash64());
+        let mut d = a.clone();
+        d.labels_used = 1;
+        assert_ne!(a.content_fingerprint().hash64(), d.content_fingerprint().hash64());
     }
 
     #[test]

@@ -21,7 +21,27 @@ use crate::sim::human::{Annotator, AnnotatorConfig};
 use crate::sim::net::Topology;
 use crate::sim::video::datasets::{self, DatasetSpec};
 use crate::sim::video::{codec, render_frame, Quality, WorkloadProfile};
+use crate::study::{self, Axis, SeedMode, StudySpec};
 use crate::zoo::Profiler;
+
+/// A single-run study spec shared by the legacy figure sweeps: one trial
+/// per cell, every cell at `cfg.seed` (`SeedMode::Fixed`) — exactly the
+/// run matrix the pre-study sweep loops executed, so their output is
+/// preserved byte for byte.
+fn sweep_spec(name: &str, scale: f64, cameras: usize, seed: u64, axes: Vec<Axis>) -> StudySpec {
+    StudySpec {
+        name: name.to_string(),
+        system: SystemKind::Vpaas,
+        dataset: "drone".into(),
+        scale,
+        cameras,
+        repeats: 1,
+        base_seed: seed,
+        seed_mode: SeedMode::Fixed,
+        axes,
+        fixed: Vec::new(),
+    }
+}
 
 /// Default dataset scale for interactive regeneration. Full-scale runs
 /// reproduce the paper's exact workload sizes but take much longer.
@@ -216,16 +236,18 @@ pub struct SloRow {
     pub chunks_dropped: u64,
 }
 
-/// SLO-vs-cost frontier sweep (the cross-run Fig. 10/16 story): run the
-/// full VPaaS pipeline at each freshness target in `slo_ms_points` —
-/// non-finite disables admission — once with the multi-rung
-/// [`Quality::LADDER`] and once with the legacy single-step ladder
-/// `[Quality::DEGRADED]`, reporting accuracy, WAN bytes, serverless
-/// billing and the degrade/drop counters. Note a chunk's stream age can
-/// never undercut its 7.5 s capture span, so millisecond-scale targets
-/// sit on the all-refused edge of the frontier. Returns the printable
-/// table plus raw [`SloRow`]s; the bench writes them to `BENCH_slo.json`
-/// so the frontier trajectory is tracked per PR.
+/// SLO-vs-cost frontier sweep (the cross-run Fig. 10/16 story), expressed
+/// as a declarative study over `slo_ms × ladder`: run the full VPaaS
+/// pipeline at each freshness target in `slo_ms_points` — non-finite
+/// disables admission — once with the multi-rung ladder (`default` =
+/// [`Quality::LADDER`]) and once with the legacy single-step ladder
+/// (`single` = `[Quality::DEGRADED]`), reporting accuracy, WAN bytes,
+/// serverless billing and the degrade/drop counters. Note a chunk's
+/// stream age can never undercut its 7.5 s capture span, so
+/// millisecond-scale targets sit on the all-refused edge of the frontier.
+/// Returns the printable table plus raw [`SloRow`]s; the bench writes
+/// them ([`slo_json`]) to `BENCH_slo.json` so the frontier trajectory is
+/// tracked per PR.
 pub fn fig10_slo_frontier(
     h: &Harness,
     cfg: &RunConfig,
@@ -233,27 +255,40 @@ pub fn fig10_slo_frontier(
     scale: f64,
     slo_ms_points: &[f64],
 ) -> Result<(String, Vec<SloRow>)> {
-    let mut ds = datasets::drone(scale);
-    ds.videos.truncate(cameras);
+    // shortest-round-trip f64 formatting: the axis value parses back to
+    // the identical bits, so the study runs the exact requested targets
+    let slo_keys: Vec<String> = slo_ms_points
+        .iter()
+        .map(|v| if v.is_finite() { format!("{v}") } else { "inf".into() })
+        .collect();
+    let spec = sweep_spec(
+        "fig10_slo_frontier",
+        scale,
+        cameras,
+        cfg.seed,
+        vec![
+            Axis { name: "slo_ms".into(), values: slo_keys.clone() },
+            Axis { name: "ladder".into(), values: vec!["default".into(), "single".into()] },
+        ],
+    );
+    let base = RunConfig {
+        shards: 2,
+        golden: false,
+        autoscale: false,
+        dispatch: DispatchMode::Streaming,
+        workload: WorkloadProfile::Bursty,
+        ..cfg.clone()
+    };
+    let run = study::run_study(h, &spec, &base)?;
     let mut rows = Vec::new();
     let mut raw = Vec::new();
-    for &slo_ms in slo_ms_points {
+    for (&slo_ms, slo_key) in slo_ms_points.iter().zip(&slo_keys) {
         for ladder_on in [true, false] {
-            let run_cfg = RunConfig {
-                slo_ms,
-                ladder: if ladder_on {
-                    Quality::LADDER.to_vec()
-                } else {
-                    vec![Quality::DEGRADED]
-                },
-                shards: 2,
-                golden: false,
-                autoscale: false,
-                dispatch: DispatchMode::Streaming,
-                workload: WorkloadProfile::Bursty,
-                ..cfg.clone()
-            };
-            let m = h.run(SystemKind::Vpaas, &ds, &run_cfg)?;
+            let ladder_key = if ladder_on { "default" } else { "single" };
+            let m = &run
+                .find(&[("ladder", ladder_key), ("slo_ms", slo_key)])
+                .expect("planned frontier trial")
+                .metrics;
             raw.push(SloRow {
                 slo_ms,
                 ladder: ladder_on,
@@ -685,13 +720,15 @@ pub fn fig16_shard_sweep(h: &Harness, cfg: &RunConfig) -> Result<String> {
 }
 
 // ------------------------------------------------------ Fig. 16c (overlap)
-/// Event-driven executor vs the old synchronous per-chunk state machine:
-/// the same seed, workload and labels, differing only in how stage events
+/// Event-driven executor vs the old synchronous per-chunk state machine,
+/// expressed as a declarative study over `dispatch × shards`: the same
+/// seed, workload and labels, differing only in how stage events
 /// interleave within a dispatch wave. Event dispatch lets chunk *k+1*'s
 /// WAN uplink overlap chunk *k*'s cloud GPU phase, so the makespan
 /// shrinks. Returns the printable table plus raw
 /// `(shards, event_makespan, sequential_makespan)` rows — the bench writes
-/// them to `BENCH_overlap.json` so the perf trajectory is tracked.
+/// them ([`overlap_json`]) to `BENCH_overlap.json` so the perf trajectory
+/// is tracked.
 pub fn fig16_overlap(
     h: &Harness,
     cfg: &RunConfig,
@@ -699,27 +736,39 @@ pub fn fig16_overlap(
     scale: f64,
     shard_counts: &[usize],
 ) -> Result<(String, Vec<(usize, f64, f64)>)> {
-    let mut ds = datasets::drone(scale);
-    ds.videos.truncate(cameras); // cameras streaming concurrently
+    let spec = sweep_spec(
+        "fig16_overlap",
+        scale,
+        cameras,
+        cfg.seed,
+        vec![
+            Axis {
+                name: "dispatch".into(),
+                values: vec!["event".into(), "sequential".into()],
+            },
+            Axis {
+                name: "shards".into(),
+                values: shard_counts.iter().map(|s| s.to_string()).collect(),
+            },
+        ],
+    );
+    let base = RunConfig { golden: false, autoscale: false, ..cfg.clone() };
+    let run = study::run_study(h, &spec, &base)?;
     let mut rows = Vec::new();
     let mut raw = Vec::new();
     for &shards in shard_counts {
-        let event_cfg = RunConfig {
-            shards,
-            golden: false,
-            autoscale: false,
-            dispatch: DispatchMode::EventDriven,
-            ..cfg.clone()
+        let n = shards.to_string();
+        let find = |mode: &str| {
+            run.find(&[("dispatch", mode), ("shards", &n)]).expect("planned overlap trial")
         };
-        let seq_cfg = RunConfig { dispatch: DispatchMode::Sequential, ..event_cfg.clone() };
-        let event = h.run(SystemKind::Vpaas, &ds, &event_cfg)?;
-        let seq = h.run(SystemKind::Vpaas, &ds, &seq_cfg)?;
-        raw.push((shards, event.makespan, seq.makespan));
+        let event = find("event").metrics.makespan;
+        let seq = find("sequential").metrics.makespan;
+        raw.push((shards, event, seq));
         rows.push(vec![
             shards.to_string(),
-            format!("{:.2}", seq.makespan),
-            format!("{:.2}", event.makespan),
-            format!("{:.4}", seq.makespan / event.makespan.max(1e-12)),
+            format!("{:.2}", seq),
+            format!("{:.2}", event),
+            format!("{:.4}", seq / event.max(1e-12)),
         ]);
     }
     let text = format!(
@@ -743,36 +792,48 @@ pub struct StreamRow {
 
 /// Run-scoped streaming vs wave-barrier vs sequential dispatch across
 /// workload profiles (uniform stagger / bursty Poisson-like arrivals /
-/// camera churn), on a multi-camera multi-shard run. All three modes see
-/// the identical wave formation and compute identical labels — only the
-/// event interleaving differs — so the makespan gap is pure scheduling.
-/// Returns the printable table plus raw [`StreamRow`]s; the bench writes
-/// them to `BENCH_stream.json` so the perf trajectory is tracked per PR.
+/// camera churn), expressed as a declarative study over
+/// `dispatch × workload` on a multi-camera multi-shard run. All three
+/// modes see the identical wave formation and compute identical labels —
+/// only the event interleaving differs — so the makespan gap is pure
+/// scheduling. Returns the printable table plus raw [`StreamRow`]s; the
+/// bench writes them ([`stream_json`]) to `BENCH_stream.json` so the perf
+/// trajectory is tracked per PR.
 pub fn fig16_stream(
     h: &Harness,
     cfg: &RunConfig,
     cameras: usize,
     scale: f64,
 ) -> Result<(String, Vec<StreamRow>)> {
-    let mut ds = datasets::drone(scale);
-    ds.videos.truncate(cameras);
+    let spec = sweep_spec(
+        "fig16_stream",
+        scale,
+        cameras,
+        cfg.seed,
+        vec![
+            Axis {
+                name: "dispatch".into(),
+                values: vec!["streaming".into(), "event".into(), "sequential".into()],
+            },
+            Axis {
+                name: "workload".into(),
+                values: WorkloadProfile::all().iter().map(|p| p.name().to_string()).collect(),
+            },
+        ],
+    );
+    let base = RunConfig { shards: 4, golden: false, autoscale: false, ..cfg.clone() };
+    let run = study::run_study(h, &spec, &base)?;
     let mut rows = Vec::new();
     let mut raw = Vec::new();
     for profile in WorkloadProfile::all() {
-        let run = |dispatch: DispatchMode| -> Result<RunMetrics> {
-            let run_cfg = RunConfig {
-                shards: 4,
-                golden: false,
-                autoscale: false,
-                dispatch,
-                workload: profile,
-                ..cfg.clone()
-            };
-            h.run(SystemKind::Vpaas, &ds, &run_cfg)
+        let find = |mode: &str| {
+            &run.find(&[("dispatch", mode), ("workload", profile.name())])
+                .expect("planned stream trial")
+                .metrics
         };
-        let streaming = run(DispatchMode::Streaming)?;
-        let wave = run(DispatchMode::EventDriven)?;
-        let seq = run(DispatchMode::Sequential)?;
+        let streaming = find("streaming");
+        let wave = find("event");
+        let seq = find("sequential");
         // content must be dispatch-mode invariant for the same seed
         anyhow::ensure!(
             streaming.f1_true == wave.f1_true && wave.f1_true == seq.f1_true,
@@ -822,10 +883,11 @@ pub struct GpuRow {
 /// Cloud GPU pool sweep: a bursty camera fleet driven through the full
 /// VPaaS pipeline (run-scoped streaming, 8 fog shards, fat WAN so the
 /// cloud GPU is the binding resource) at each worker count in
-/// `gpu_counts`. Label content is GPU-count invariant — only queueing
-/// moves — so the makespan/latency deltas are pure scheduling, exactly
-/// like the shard and dispatch sweeps. Returns the printable table plus
-/// raw [`GpuRow`]s; the bench writes them to `BENCH_gpu.json` so the
+/// `gpu_counts`, expressed as a single-axis declarative study. Label
+/// content is GPU-count invariant — only queueing moves — so the
+/// makespan/latency deltas are pure scheduling, exactly like the shard
+/// and dispatch sweeps. Returns the printable table plus raw [`GpuRow`]s;
+/// the bench writes them ([`gpu_json`]) to `BENCH_gpu.json` so the
 /// scale-out trajectory is tracked per PR.
 pub fn fig16_gpu_sweep(
     h: &Harness,
@@ -834,24 +896,33 @@ pub fn fig16_gpu_sweep(
     scale: f64,
     gpu_counts: &[usize],
 ) -> Result<(String, Vec<GpuRow>)> {
-    let mut ds = datasets::drone(scale);
-    ds.videos.truncate(cameras);
+    let spec = sweep_spec(
+        "fig16_gpu_sweep",
+        scale,
+        cameras,
+        cfg.seed,
+        vec![Axis {
+            name: "gpus".into(),
+            values: gpu_counts.iter().map(|g| g.to_string()).collect(),
+        }],
+    );
+    let base = RunConfig {
+        shards: 8,
+        wan_mbps: 200.0,
+        golden: false,
+        autoscale: false,
+        hitl_budget: 0.0,
+        drift: false,
+        dispatch: DispatchMode::Streaming,
+        workload: WorkloadProfile::Bursty,
+        ..cfg.clone()
+    };
+    let run = study::run_study(h, &spec, &base)?;
     let mut rows = Vec::new();
     let mut raw = Vec::new();
     for &gpus in gpu_counts {
-        let run_cfg = RunConfig {
-            gpus,
-            shards: 8,
-            wan_mbps: 200.0,
-            golden: false,
-            autoscale: false,
-            hitl_budget: 0.0,
-            drift: false,
-            dispatch: DispatchMode::Streaming,
-            workload: WorkloadProfile::Bursty,
-            ..cfg.clone()
-        };
-        let m = h.run(SystemKind::Vpaas, &ds, &run_cfg)?;
+        let n = gpus.to_string();
+        let m = &run.find(&[("gpus", &n)]).expect("planned gpu trial").metrics;
         let s = m.latency.summary();
         let throughput = if m.makespan > 0.0 { m.chunks as f64 / m.makespan } else { 0.0 };
         raw.push(GpuRow { gpus, chunks: m.chunks, makespan_s: m.makespan, p99_s: s.p99 });
@@ -869,6 +940,100 @@ pub fn fig16_gpu_sweep(
         table(&["gpus", "chunks", "makespan_s", "throughput", "lat_p50", "lat_p99"], &rows)
     );
     Ok((text, raw))
+}
+
+// ------------------------------------------------- bench JSON artifacts
+// The `BENCH_*.json` encoders live next to the sweeps that produce the
+// rows so the CLI, the bench harness and the artifact schema tests all
+// share one byte-identical implementation.
+
+/// `BENCH_overlap.json` from [`fig16_overlap`] rows.
+pub fn overlap_json(cameras: usize, rows: &[(usize, f64, f64)]) -> String {
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|(shards, event, seq)| {
+            format!(
+                "{{\"shards\":{shards},\"event_makespan_s\":{event:.6},\
+                 \"sequential_makespan_s\":{seq:.6},\"speedup\":{:.6}}}",
+                seq / event.max(1e-12)
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"fig16_overlap\",\"workload\":\"drone x{cameras} cameras\",\"rows\":[{}]}}\n",
+        entries.join(",")
+    )
+}
+
+/// `BENCH_stream.json` from [`fig16_stream`] rows.
+pub fn stream_json(cameras: usize, rows: &[StreamRow]) -> String {
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"workload\":\"{}\",\"chunks\":{},\"streaming_makespan_s\":{:.6},\
+                 \"wave_makespan_s\":{:.6},\"sequential_makespan_s\":{:.6},\
+                 \"wave_over_streaming\":{:.6}}}",
+                r.workload,
+                r.chunks,
+                r.streaming_s,
+                r.wave_s,
+                r.sequential_s,
+                r.wave_s / r.streaming_s.max(1e-12)
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"fig16_stream\",\"workload\":\"drone x{cameras} cameras, 4 shards\",\
+         \"rows\":[{}]}}\n",
+        entries.join(",")
+    )
+}
+
+/// `BENCH_gpu.json` from [`fig16_gpu_sweep`] rows.
+pub fn gpu_json(cameras: usize, rows: &[GpuRow]) -> String {
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"gpus\":{},\"chunks\":{},\"makespan_s\":{:.6},\"p99_latency_s\":{:.6}}}",
+                r.gpus, r.chunks, r.makespan_s, r.p99_s
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"fig16_gpu_sweep\",\"workload\":\"drone x{cameras} cameras, bursty, \
+         8 shards\",\"rows\":[{}]}}\n",
+        entries.join(",")
+    )
+}
+
+/// `BENCH_slo.json` from [`fig10_slo_frontier`] rows. A disabled SLO
+/// (non-finite target) encodes as JSON `null`.
+pub fn slo_json(cameras: usize, rows: &[SloRow]) -> String {
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"slo_ms\":{},\"ladder\":{},\"f1\":{:.6},\"wan_bytes\":{:.0},\
+                 \"billing_units\":{:.0},\"chunks\":{},\"chunks_degraded\":{},\
+                 \"chunks_dropped\":{}}}",
+                if r.slo_ms.is_finite() { format!("{:.0}", r.slo_ms) } else { "null".into() },
+                r.ladder,
+                r.f1,
+                r.wan_bytes,
+                r.cost_units,
+                r.chunks,
+                r.chunks_degraded,
+                r.chunks_dropped
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"fig10_slo_frontier\",\"workload\":\"drone x{cameras} cameras, bursty, \
+         2 shards\",\"rows\":[{}]}}\n",
+        entries.join(",")
+    )
 }
 
 // ---------------------------------------------------------------- codec aside

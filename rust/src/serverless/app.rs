@@ -38,6 +38,13 @@ use crate::sim::video::{codec, Chunk, Quality};
 use crate::util::config::Config;
 use crate::zoo::ModelZoo;
 
+/// True when `VPAAS_BENCH_SMOKE` selects the reduced benchmark shape —
+/// the one switch honored by the bench harness, `vpaas study`, and the
+/// study specs' `[smoke]` sections (any value other than `0` enables it).
+pub fn bench_smoke() -> bool {
+    std::env::var("VPAAS_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
 /// A fully wired video-analytics application.
 pub struct VideoApp {
     pub params: std::sync::Arc<SimParams>,

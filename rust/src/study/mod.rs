@@ -1,0 +1,92 @@
+//! Declarative scenario studies with statistically honest benchmarking.
+//!
+//! A **study** replaces ad-hoc benchmark loops with a declarative sweep:
+//! a [`spec::StudySpec`] names the workload and the scenario **axes**
+//! (workload × shards × gpus × ladder × slo_ms × dispatch × …), a repeat
+//! count and a base seed; [`plan::expand`] turns it into a canonical,
+//! bit-reproducible trial plan; [`runner::run_study`] executes every
+//! trial through the existing [`crate::pipeline::Harness`]; and
+//! [`report::build`] aggregates per-cell mean/stddev/95%-CI tables that
+//! serialize to `BENCH_study.json`. [`report::compare`] runs Welch's
+//! t-test per (cell, metric) against a stored baseline report, and the CI
+//! gate ([`report::gate_violations`]) only fails a regression that is
+//! **both** statistically significant and beyond the metric's tolerance.
+//!
+//! ## Study spec file format
+//!
+//! Specs are sectioned `key = value` files (see `rust/studies/*.toml`),
+//! parsed by [`crate::util::config::Config`]:
+//!
+//! ```text
+//! # comments are full-line only; values are taken verbatim
+//! [study]
+//! name = gpu_sweep
+//! # pipeline under test (SystemKind name); dataset via datasets::by_name
+//! system = vpaas
+//! dataset = drone
+//! scale = 0.1
+//! # truncate to N cameras (0 = all)
+//! cameras = 16
+//! # >= 2 repeats per cell (error bars); base seed decimal or 0x hex
+//! repeats = 3
+//! seed = 0xCAFE
+//! # per_cell (distinct derived seeds) | fixed
+//! seed_mode = per_cell
+//!
+//! # fixed RunConfig overrides for every trial
+//! [run]
+//! shards = 8
+//! wan_mbps = 200
+//! dispatch = streaming
+//!
+//! # each list is one axis; cells = cartesian product
+//! [axes]
+//! gpus = 1, 2, 4, 8
+//!
+//! # reduced shape under VPAAS_BENCH_SMOKE / --smoke
+//! [smoke]
+//! scale = 0.05
+//! cameras = 8
+//! repeats = 2
+//! [smoke.axes]
+//! gpus = 1, 2
+//! ```
+//!
+//! Axis / `[run]` keys: `workload`, `dispatch`, `ladder` (`default` |
+//! `single`), `shards`, `gpus`, `slo_ms` (`inf` disables), `wan_mbps`,
+//! `hitl_budget`, `drift`, `autoscale`, plus the special `system` axis
+//! that sweeps the pipeline under test itself.
+//!
+//! ## Determinism contract
+//!
+//! * Same spec + base seed ⇒ byte-identical trial plan and, cell by
+//!   cell, identical run content fingerprints on re-execution.
+//! * Axis *declaration order never matters*: the plan canonicalizes by
+//!   sorting axis names, so permuting `[axes]` lines cannot change cell
+//!   identity, ordering, or seeds.
+//! * Repeats of a cell share the cell's seed — the simulator is
+//!   deterministic, so run *content* is repeat-invariant (enforced by the
+//!   runner) and only wall-clock time contributes within-cell variance.
+//! * `per_cell` seeds derive via a bijective SplitMix64 mix
+//!   ([`plan::splitmix64`]), so distinct cells can never collide onto one
+//!   seed.
+//!
+//! Run a study from the CLI: `vpaas study studies/gpu_sweep.toml`
+//! (`--smoke` or `VPAAS_BENCH_SMOKE=1` selects the `[smoke]` shape;
+//! `--baseline <report.json>` enables the significance gate). The legacy
+//! figure sweeps in [`crate::pipeline::figures`] are now thin study specs
+//! running with `repeats = 1` and `seed_mode = fixed`, preserving their
+//! historical single-run output byte for byte.
+
+pub mod plan;
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use plan::{cell_key, expand, splitmix64, Trial, TrialPlan};
+pub use report::{
+    compare, compare_table, gate_tolerances, gate_violations, metric_values, CellStats,
+    MetricDelta, MetricStats, StudyReport, GATE_ALPHA,
+};
+pub use runner::{run_study, StudyRun, TrialRecord};
+pub use spec::{apply_axis, parse_seed, Axis, SeedMode, StudySpec, KNOWN_AXES};

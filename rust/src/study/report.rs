@@ -1,0 +1,521 @@
+//! Per-cell analysis tables and the variance-aware baseline gate.
+//!
+//! [`build`] collapses a [`StudyRun`]'s trials into per-cell, per-metric
+//! `{n, mean, std, ci95}` statistics; the report serializes to
+//! `BENCH_study.json` through [`crate::util::json`] and parses back for
+//! cross-commit comparison. [`compare`] runs Welch's t-test per
+//! (cell, gated metric) against a stored baseline report: a regression
+//! only **fails** the gate when it is statistically significant *and*
+//! beyond the metric's relative tolerance — single-run noise cannot trip
+//! it, and a deterministic content change degenerates to the exact
+//! comparison the old snapshot gate performed (zero variance ⇒ p ∈ {0,1}).
+
+use anyhow::{anyhow, Result};
+
+use super::runner::StudyRun;
+use super::spec::parse_seed;
+use crate::metrics::meters::RunMetrics;
+use crate::metrics::report::table;
+use crate::util::json::Json;
+use crate::util::stats::{welch_t_test, Series};
+
+/// Significance level for the baseline gate.
+pub const GATE_ALPHA: f64 = 0.01;
+
+/// Gated metrics and their relative tolerances — the same headline
+/// numbers (and tolerances) the legacy `tests/golden/metrics.txt` gate
+/// tracked: f1, WAN bytes, p50 freshness, billed units, chunks (exact).
+/// Wall-clock time is reported but never gated (cross-runner noise).
+pub fn gate_tolerances() -> [(&'static str, f64); 5] {
+    [
+        ("f1_true", 0.08),
+        ("wan_bytes", 0.10),
+        ("latency_p50_s", 0.30),
+        ("cost_units", 0.10),
+        ("chunks", 0.0),
+    ]
+}
+
+/// The per-trial metric vector every cell aggregates. `wall_clock_s` is
+/// the only entry that varies between repeats of a cell; everything else
+/// is a deterministic function of the cell's seed + config.
+pub fn metric_values(m: &RunMetrics, wall_s: f64) -> Vec<(&'static str, f64)> {
+    let s = m.latency.summary();
+    vec![
+        ("f1_true", m.f1_true.f1()),
+        ("wan_bytes", m.bandwidth.bytes),
+        ("latency_p50_s", s.p50),
+        ("latency_p99_s", s.p99),
+        ("cost_units", m.cost.units()),
+        ("chunks", m.chunks as f64),
+        ("chunks_degraded", m.chunks_degraded as f64),
+        ("chunks_dropped", m.chunks_dropped as f64),
+        ("labels_used", m.labels_used as f64),
+        ("makespan_s", m.makespan),
+        ("wall_clock_s", wall_s),
+    ]
+}
+
+/// One metric's within-cell distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricStats {
+    pub name: String,
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    /// 95% CI half-width on the mean; `None` when `n < 2`.
+    pub ci95: Option<f64>,
+}
+
+/// One study cell: its identity, seed, content digest and metric table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellStats {
+    pub cell: usize,
+    /// Canonical key, e.g. `dispatch=event,shards=4`.
+    pub key: String,
+    pub values: Vec<(String, String)>,
+    pub seed: u64,
+    /// `content_fingerprint().hash64()` — identical across repeats by
+    /// construction, and across re-runs of the same spec + seed.
+    pub fingerprint: u64,
+    pub metrics: Vec<MetricStats>,
+}
+
+impl CellStats {
+    pub fn metric(&self, name: &str) -> Option<&MetricStats> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+}
+
+/// The serializable study result (`BENCH_study.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StudyReport {
+    pub study: String,
+    pub system: String,
+    pub dataset: String,
+    pub scale: f64,
+    pub cameras: usize,
+    pub repeats: usize,
+    pub base_seed: u64,
+    pub seed_mode: String,
+    pub cells: Vec<CellStats>,
+}
+
+/// Aggregate an executed run into its report.
+pub fn build(run: &StudyRun) -> StudyReport {
+    let mut cells = Vec::with_capacity(run.plan.cells);
+    for cell in 0..run.plan.cells {
+        let trials: Vec<_> = run.trials.iter().filter(|t| t.cell == cell).collect();
+        let head = trials.first().expect("non-empty cell");
+        let names: Vec<&'static str> =
+            metric_values(&head.metrics, head.wall_s).iter().map(|(n, _)| *n).collect();
+        let mut series: Vec<Series> = names.iter().map(|_| Series::new()).collect();
+        for t in &trials {
+            for (i, (_, v)) in metric_values(&t.metrics, t.wall_s).iter().enumerate() {
+                series[i].push(*v);
+            }
+        }
+        let metrics = names
+            .iter()
+            .zip(&series)
+            .map(|(name, s)| MetricStats {
+                name: name.to_string(),
+                n: s.len(),
+                mean: s.mean(),
+                std: s.std(),
+                ci95: s.ci95_half_width(),
+            })
+            .collect();
+        cells.push(CellStats {
+            cell,
+            key: super::plan::cell_key(&head.values),
+            values: head.values.clone(),
+            seed: head.seed,
+            fingerprint: head.fingerprint,
+            metrics,
+        });
+    }
+    StudyReport {
+        study: run.spec.name.clone(),
+        system: run.spec.system.name().to_string(),
+        dataset: run.spec.dataset.clone(),
+        scale: run.spec.scale,
+        cameras: run.spec.cameras,
+        repeats: run.spec.repeats,
+        base_seed: run.spec.base_seed,
+        seed_mode: run.spec.seed_mode.name().to_string(),
+        cells,
+    }
+}
+
+impl StudyReport {
+    pub fn cell(&self, key: &str) -> Option<&CellStats> {
+        self.cells.iter().find(|c| c.key == key)
+    }
+
+    /// Serialize to the `BENCH_study.json` schema. Seeds and fingerprints
+    /// are hex *strings* (u64 does not survive an f64 JSON number).
+    pub fn to_json(&self) -> String {
+        let cells = self
+            .cells
+            .iter()
+            .map(|c| {
+                let values = c
+                    .values
+                    .iter()
+                    .map(|(k, v)| {
+                        Json::Obj(vec![
+                            ("axis".into(), Json::Str(k.clone())),
+                            ("value".into(), Json::Str(v.clone())),
+                        ])
+                    })
+                    .collect();
+                let metrics = c
+                    .metrics
+                    .iter()
+                    .map(|m| {
+                        Json::Obj(vec![
+                            ("name".into(), Json::Str(m.name.clone())),
+                            ("n".into(), Json::num(m.n as f64)),
+                            ("mean".into(), Json::num(m.mean)),
+                            ("std".into(), Json::num(m.std)),
+                            ("ci95".into(), m.ci95.map(Json::num).unwrap_or(Json::Null)),
+                        ])
+                    })
+                    .collect();
+                Json::Obj(vec![
+                    ("cell".into(), Json::num(c.cell as f64)),
+                    ("key".into(), Json::Str(c.key.clone())),
+                    ("values".into(), Json::Arr(values)),
+                    ("seed".into(), Json::Str(format!("{:#x}", c.seed))),
+                    ("fingerprint".into(), Json::Str(format!("{:#x}", c.fingerprint))),
+                    ("metrics".into(), Json::Arr(metrics)),
+                ])
+            })
+            .collect();
+        let doc = Json::Obj(vec![
+            ("bench".into(), Json::Str("study".into())),
+            ("study".into(), Json::Str(self.study.clone())),
+            ("system".into(), Json::Str(self.system.clone())),
+            ("dataset".into(), Json::Str(self.dataset.clone())),
+            ("scale".into(), Json::num(self.scale)),
+            ("cameras".into(), Json::num(self.cameras as f64)),
+            ("repeats".into(), Json::num(self.repeats as f64)),
+            ("base_seed".into(), Json::Str(format!("{:#x}", self.base_seed))),
+            ("seed_mode".into(), Json::Str(self.seed_mode.clone())),
+            ("cells".into(), Json::Arr(cells)),
+        ]);
+        let mut text = doc.write();
+        text.push('\n');
+        text
+    }
+
+    /// Parse a report back from its JSON form.
+    pub fn from_json(text: &str) -> Result<StudyReport> {
+        let doc = Json::parse(text)?;
+        let str_field = |v: &Json, key: &str| -> Result<String> {
+            Ok(v.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("study report: missing string {key:?}"))?
+                .to_string())
+        };
+        let num_field = |v: &Json, key: &str| -> Result<f64> {
+            v.get(key).and_then(Json::as_f64).ok_or_else(|| anyhow!("study report: missing number {key:?}"))
+        };
+        let mut cells = Vec::new();
+        for c in doc
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("study report: missing cells array"))?
+        {
+            let mut values = Vec::new();
+            for v in c.get("values").and_then(Json::as_arr).unwrap_or(&[]) {
+                values.push((str_field(v, "axis")?, str_field(v, "value")?));
+            }
+            let mut metrics = Vec::new();
+            for m in c
+                .get("metrics")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("study report: cell missing metrics"))?
+            {
+                let ci95 = match m.get("ci95") {
+                    Some(Json::Null) | None => None,
+                    Some(v) => {
+                        Some(v.as_f64().ok_or_else(|| anyhow!("study report: bad ci95"))?)
+                    }
+                };
+                metrics.push(MetricStats {
+                    name: str_field(m, "name")?,
+                    n: num_field(m, "n")? as usize,
+                    mean: num_field(m, "mean")?,
+                    std: num_field(m, "std")?,
+                    ci95,
+                });
+            }
+            cells.push(CellStats {
+                cell: num_field(c, "cell")? as usize,
+                key: str_field(c, "key")?,
+                values,
+                seed: parse_seed(&str_field(c, "seed")?)?,
+                fingerprint: parse_seed(&str_field(c, "fingerprint")?)?,
+                metrics,
+            });
+        }
+        Ok(StudyReport {
+            study: str_field(&doc, "study")?,
+            system: str_field(&doc, "system")?,
+            dataset: str_field(&doc, "dataset")?,
+            scale: num_field(&doc, "scale")?,
+            cameras: num_field(&doc, "cameras")? as usize,
+            repeats: num_field(&doc, "repeats")? as usize,
+            base_seed: parse_seed(&str_field(&doc, "base_seed")?)?,
+            seed_mode: str_field(&doc, "seed_mode")?,
+            cells,
+        })
+    }
+
+    /// Printable per-cell summary (`mean±ci95`, headline metrics).
+    pub fn table(&self) -> String {
+        let fmt = |c: &CellStats, name: &str, digits: usize| -> String {
+            match c.metric(name) {
+                Some(m) => match m.ci95 {
+                    Some(hw) => format!("{:.*}±{:.*}", digits, m.mean, digits, hw),
+                    None => format!("{:.*}", digits, m.mean),
+                },
+                None => "-".into(),
+            }
+        };
+        let rows: Vec<Vec<String>> = self
+            .cells
+            .iter()
+            .map(|c| {
+                vec![
+                    c.key.clone(),
+                    c.metric("f1_true").map(|m| m.n.to_string()).unwrap_or_default(),
+                    fmt(c, "f1_true", 3),
+                    fmt(c, "wan_bytes", 0),
+                    fmt(c, "latency_p50_s", 2),
+                    fmt(c, "cost_units", 0),
+                    fmt(c, "chunks", 0),
+                    fmt(c, "chunks_dropped", 0),
+                    fmt(c, "wall_clock_s", 2),
+                ]
+            })
+            .collect();
+        format!(
+            "study {} — {} x{} cameras (scale {}, {} repeats, seed {:#x}, {} seeds)\n{}",
+            self.study,
+            self.dataset,
+            self.cameras,
+            self.scale,
+            self.repeats,
+            self.base_seed,
+            self.seed_mode,
+            table(
+                &["cell", "n", "f1_true", "wan_bytes", "p50_s", "billing", "chunks", "dropped", "wall_s"],
+                &rows
+            )
+        )
+    }
+}
+
+/// One (cell, metric) comparison against the baseline.
+#[derive(Debug, Clone)]
+pub struct MetricDelta {
+    pub cell: String,
+    pub metric: String,
+    pub baseline_mean: f64,
+    pub current_mean: f64,
+    /// Relative change vs the baseline mean.
+    pub rel_delta: f64,
+    pub t: f64,
+    pub df: f64,
+    pub p: f64,
+    /// Welch-significant at the chosen alpha.
+    pub significant: bool,
+    /// Beyond the metric's relative tolerance.
+    pub beyond_tol: bool,
+}
+
+impl MetricDelta {
+    /// A gate violation needs *both*: statistical significance (not
+    /// run-to-run noise) and a delta beyond the tolerance (not a
+    /// meaninglessly small but consistent drift).
+    pub fn violates(&self) -> bool {
+        self.significant && self.beyond_tol
+    }
+}
+
+/// Compare every gated metric of every shared cell against the baseline.
+/// Cells present on only one side are skipped (the spec changed — that is
+/// a re-baseline, not a regression).
+pub fn compare(current: &StudyReport, baseline: &StudyReport, alpha: f64) -> Vec<MetricDelta> {
+    let mut out = Vec::new();
+    for cell in &current.cells {
+        let Some(base) = baseline.cell(&cell.key) else { continue };
+        for (metric, tol) in gate_tolerances() {
+            let (Some(cur), Some(bas)) = (cell.metric(metric), base.metric(metric)) else {
+                continue;
+            };
+            let w = welch_t_test(bas.mean, bas.std, bas.n, cur.mean, cur.std, cur.n);
+            let diff = cur.mean - bas.mean;
+            out.push(MetricDelta {
+                cell: cell.key.clone(),
+                metric: metric.to_string(),
+                baseline_mean: bas.mean,
+                current_mean: cur.mean,
+                rel_delta: diff / bas.mean.abs().max(1e-12),
+                t: w.t,
+                df: w.df,
+                p: w.p,
+                significant: w.p < alpha,
+                beyond_tol: diff.abs() > tol * bas.mean.abs() + 1e-9,
+            });
+        }
+    }
+    out
+}
+
+/// The gate: deltas that are both significant and beyond tolerance.
+pub fn gate_violations(current: &StudyReport, baseline: &StudyReport) -> Vec<MetricDelta> {
+    compare(current, baseline, GATE_ALPHA).into_iter().filter(MetricDelta::violates).collect()
+}
+
+/// Printable comparison table (all gated deltas, violations marked).
+pub fn compare_table(deltas: &[MetricDelta]) -> String {
+    let rows: Vec<Vec<String>> = deltas
+        .iter()
+        .map(|d| {
+            vec![
+                d.cell.clone(),
+                d.metric.clone(),
+                format!("{:.4}", d.baseline_mean),
+                format!("{:.4}", d.current_mean),
+                format!("{:+.2}%", d.rel_delta * 100.0),
+                format!("{:.4}", d.p),
+                if d.violates() {
+                    "FAIL".into()
+                } else if d.significant {
+                    "significant (in tol)".into()
+                } else {
+                    "ok".into()
+                },
+            ]
+        })
+        .collect();
+    table(&["cell", "metric", "baseline", "current", "delta", "p", "verdict"], &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(key: &str, metric: &str, n: usize, mean: f64, std: f64) -> CellStats {
+        CellStats {
+            cell: 0,
+            key: key.into(),
+            values: vec![("gpus".into(), "1".into())],
+            seed: 0xCAFE,
+            fingerprint: 0xDEAD_BEEF,
+            metrics: vec![MetricStats {
+                name: metric.into(),
+                n,
+                mean,
+                std,
+                ci95: if n >= 2 { Some(std) } else { None },
+            }],
+        }
+    }
+
+    fn report(cells: Vec<CellStats>) -> StudyReport {
+        StudyReport {
+            study: "t".into(),
+            system: "vpaas".into(),
+            dataset: "drone".into(),
+            scale: 0.05,
+            cameras: 1,
+            repeats: 2,
+            base_seed: 0xCAFE,
+            seed_mode: "per_cell".into(),
+            cells,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let r = report(vec![cell("gpus=1", "f1_true", 3, 0.8125, 0.011)]);
+        let text = r.to_json();
+        assert!(text.ends_with('\n'));
+        let back = StudyReport::from_json(&text).unwrap();
+        assert_eq!(back, r);
+        // singleton cells keep their CI-less shape through the roundtrip
+        let single = report(vec![cell("gpus=1", "f1_true", 1, 0.5, 0.0)]);
+        let back = StudyReport::from_json(&single.to_json()).unwrap();
+        assert_eq!(back.cells[0].metrics[0].ci95, None);
+    }
+
+    #[test]
+    fn gate_passes_identical_reports() {
+        let r = report(vec![cell("gpus=1", "f1_true", 2, 0.8, 0.0)]);
+        assert!(gate_violations(&r, &r).is_empty());
+    }
+
+    #[test]
+    fn gate_fails_significant_out_of_tolerance_change() {
+        let base = report(vec![cell("gpus=1", "f1_true", 3, 0.80, 0.0)]);
+        let cur = report(vec![cell("gpus=1", "f1_true", 3, 0.70, 0.0)]);
+        // 12.5% drop, zero variance: p = 0, tol 8% — must fail
+        let v = gate_violations(&cur, &base);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].metric, "f1_true");
+        assert!(v[0].p < GATE_ALPHA);
+    }
+
+    #[test]
+    fn gate_tolerates_insignificant_noise() {
+        // a 15% swing that is *not* significant (huge within-cell spread):
+        // the variance-aware gate must NOT fail where a point gate would
+        let base = report(vec![cell("gpus=1", "f1_true", 2, 0.80, 0.30)]);
+        let cur = report(vec![cell("gpus=1", "f1_true", 2, 0.68, 0.30)]);
+        let deltas = compare(&cur, &base, GATE_ALPHA);
+        assert_eq!(deltas.len(), 1);
+        assert!(deltas[0].beyond_tol, "15% is beyond the 8% tolerance");
+        assert!(!deltas[0].significant, "p={} should not be significant", deltas[0].p);
+        assert!(gate_violations(&cur, &base).is_empty());
+    }
+
+    #[test]
+    fn gate_tolerates_significant_in_tolerance_drift() {
+        // significant (deterministic) but tiny: inside the 8% tolerance
+        let base = report(vec![cell("gpus=1", "f1_true", 2, 0.800, 0.0)]);
+        let cur = report(vec![cell("gpus=1", "f1_true", 2, 0.790, 0.0)]);
+        let deltas = compare(&cur, &base, GATE_ALPHA);
+        assert!(deltas[0].significant);
+        assert!(!deltas[0].beyond_tol);
+        assert!(gate_violations(&cur, &base).is_empty());
+    }
+
+    #[test]
+    fn gate_skips_unmatched_cells() {
+        let base = report(vec![cell("gpus=1", "f1_true", 2, 0.8, 0.0)]);
+        let cur = report(vec![cell("gpus=2", "f1_true", 2, 0.1, 0.0)]);
+        assert!(compare(&cur, &base, GATE_ALPHA).is_empty());
+    }
+
+    #[test]
+    fn chunks_are_gated_exactly() {
+        let base = report(vec![cell("gpus=1", "chunks", 2, 40.0, 0.0)]);
+        let cur = report(vec![cell("gpus=1", "chunks", 2, 41.0, 0.0)]);
+        let v = gate_violations(&cur, &base);
+        assert_eq!(v.len(), 1, "chunk count has zero tolerance");
+    }
+
+    #[test]
+    fn compare_table_renders() {
+        let base = report(vec![cell("gpus=1", "f1_true", 2, 0.8, 0.0)]);
+        let cur = report(vec![cell("gpus=1", "f1_true", 2, 0.7, 0.0)]);
+        let text = compare_table(&compare(&cur, &base, GATE_ALPHA));
+        assert!(text.contains("FAIL"));
+        assert!(text.contains("f1_true"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Study execution: drive every planned trial through the existing
+//! [`Harness`]/[`RunConfig`] machinery and collect per-trial results.
+//!
+//! The runner is deliberately thin — a trial *is* `Harness::run` with the
+//! cell's axis assignment applied on top of a caller-supplied base
+//! config — so a study measures exactly what the figure sweeps measure.
+//! After execution it asserts the repeat-invariance contract: all repeats
+//! of a cell must produce bit-identical run content
+//! ([`RunMetrics::content_fingerprint`]); only wall-clock timing may vary.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::plan::{self, TrialPlan};
+use super::report::{self, StudyReport};
+use super::spec::{self, StudySpec};
+use crate::metrics::meters::RunMetrics;
+use crate::pipeline::{Harness, RunConfig, SystemKind};
+use crate::sim::video::datasets;
+
+/// One executed trial: the plan entry plus everything it measured.
+#[derive(Debug, Clone)]
+pub struct TrialRecord {
+    pub cell: usize,
+    pub repeat: usize,
+    pub seed: u64,
+    /// Axis assignments, sorted by axis name.
+    pub values: Vec<(String, String)>,
+    pub system: SystemKind,
+    pub metrics: RunMetrics,
+    /// Host wall-clock run time — the only per-repeat-varying metric.
+    pub wall_s: f64,
+    /// `content_fingerprint().hash64()` of the run.
+    pub fingerprint: u64,
+}
+
+/// An executed study: spec, plan, and every trial's results.
+#[derive(Debug, Clone)]
+pub struct StudyRun {
+    pub spec: StudySpec,
+    pub plan: TrialPlan,
+    pub trials: Vec<TrialRecord>,
+}
+
+impl StudyRun {
+    /// First-repeat trial matching every given (axis, value) pair — how
+    /// the figure sweeps rebuild their legacy row order from a study.
+    pub fn find(&self, kv: &[(&str, &str)]) -> Option<&TrialRecord> {
+        self.trials.iter().find(|t| {
+            t.repeat == 0
+                && kv.iter().all(|(k, v)| t.values.iter().any(|(tk, tv)| tk == k && tv == v))
+        })
+    }
+
+    /// Aggregate into the serializable per-cell statistics table.
+    pub fn report(&self) -> StudyReport {
+        report::build(self)
+    }
+}
+
+/// Execute a study: expand the plan, run every trial on `h` with `base`
+/// as the starting [`RunConfig`] (the spec's `[run]` overrides and the
+/// cell's axis assignment are applied on top, then the trial seed).
+pub fn run_study(h: &Harness, spec: &StudySpec, base: &RunConfig) -> Result<StudyRun> {
+    let plan = plan::expand(spec)?;
+    let mut ds = datasets::by_name(&spec.dataset, spec.scale)?;
+    if spec.cameras > 0 {
+        ds.videos.truncate(spec.cameras);
+    }
+    let mut trials: Vec<TrialRecord> = Vec::with_capacity(plan.trials.len());
+    for trial in &plan.trials {
+        let mut cfg = base.clone();
+        let mut system = spec.system;
+        for (key, value) in &spec.fixed {
+            spec::apply_axis(&mut cfg, key, value)?;
+        }
+        for (key, value) in &trial.values {
+            if key == "system" {
+                system = SystemKind::parse(value)
+                    .ok_or_else(|| anyhow!("axis system: unknown system {value:?}"))?;
+            } else {
+                spec::apply_axis(&mut cfg, key, value)?;
+            }
+        }
+        cfg.seed = trial.seed;
+        let start = Instant::now();
+        let metrics = h.run(system, &ds, &cfg)?;
+        let wall_s = start.elapsed().as_secs_f64();
+        let fingerprint = metrics.content_fingerprint().hash64();
+        trials.push(TrialRecord {
+            cell: trial.cell,
+            repeat: trial.repeat,
+            seed: trial.seed,
+            values: trial.values.clone(),
+            system,
+            metrics,
+            wall_s,
+            fingerprint,
+        });
+    }
+    // repeat-invariance: same cell ⇒ same seed ⇒ identical run content;
+    // only wall-clock timing may differ between repeats
+    for cell in 0..plan.cells {
+        let mut first: Option<&TrialRecord> = None;
+        for t in trials.iter().filter(|t| t.cell == cell) {
+            match first {
+                None => first = Some(t),
+                Some(head) => ensure!(
+                    t.fingerprint == head.fingerprint
+                        && t.metrics.content_fingerprint() == head.metrics.content_fingerprint(),
+                    "study {:?} cell {:?}: repeat {} changed run content (nondeterminism)",
+                    spec.name,
+                    head.values,
+                    t.repeat
+                ),
+            }
+        }
+    }
+    Ok(StudyRun { spec: spec.clone(), plan, trials })
+}

@@ -1,0 +1,357 @@
+//! Declarative study specifications.
+//!
+//! A spec names the workload (dataset/scale/cameras), the repeat count,
+//! the base seed, and the scenario **axes** whose cartesian product forms
+//! the study's cells. On disk it is a sectioned `key = value` file
+//! ([`crate::util::config::Config`] — the same format as the Fig. 14
+//! policy file):
+//!
+//! ```text
+//! # comments are full-line only (the parser takes values verbatim)
+//! [study]
+//! name = gpu_sweep
+//! system = vpaas
+//! dataset = drone
+//! scale = 0.1
+//! cameras = 16
+//! repeats = 3
+//! seed = 0xCAFE
+//! seed_mode = per_cell
+//!
+//! # fixed RunConfig overrides applied to every trial
+//! [run]
+//! shards = 8
+//! dispatch = streaming
+//!
+//! # each list is one axis; cells = cartesian product
+//! [axes]
+//! gpus = 1, 2, 4, 8
+//!
+//! # reduced overrides selected under VPAAS_BENCH_SMOKE / --smoke
+//! [smoke]
+//! repeats = 2
+//! [smoke.axes]
+//! gpus = 1, 2
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::pipeline::{RunConfig, SystemKind};
+use crate::serverless::executor::DispatchMode;
+use crate::sim::video::{codec, WorkloadProfile};
+use crate::util::config::Config;
+
+/// Axis/override keys the runner knows how to apply. `system` selects the
+/// pipeline under test; every other key writes one [`RunConfig`] field.
+pub const KNOWN_AXES: [&str; 11] = [
+    "autoscale",
+    "dispatch",
+    "drift",
+    "gpus",
+    "hitl_budget",
+    "ladder",
+    "shards",
+    "slo_ms",
+    "system",
+    "wan_mbps",
+    "workload",
+];
+
+/// One scenario axis: a named knob and the values it sweeps, in declared
+/// order (the order shapes row grouping, never cell identity — the plan
+/// canonicalizes by sorting axis *names*).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Axis {
+    pub name: String,
+    pub values: Vec<String>,
+}
+
+/// How per-cell simulation seeds derive from the base seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeedMode {
+    /// Each cell gets a distinct seed via `splitmix64(base + cell + 1)`
+    /// (the default — cells are statistically independent scenarios).
+    PerCell,
+    /// Every cell runs at the base seed — the legacy figure-sweep layout,
+    /// where one `RunConfig::seed` drives every configuration.
+    Fixed,
+}
+
+impl SeedMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SeedMode::PerCell => "per_cell",
+            SeedMode::Fixed => "fixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SeedMode> {
+        match s {
+            "per_cell" => Some(SeedMode::PerCell),
+            "fixed" => Some(SeedMode::Fixed),
+            _ => None,
+        }
+    }
+}
+
+/// A fully resolved study specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StudySpec {
+    pub name: String,
+    /// Pipeline under test; overridden per cell when `system` is an axis.
+    pub system: SystemKind,
+    pub dataset: String,
+    pub scale: f64,
+    /// Truncate the dataset to this many videos; 0 keeps all of them.
+    pub cameras: usize,
+    /// Repeats per cell. All repeats of a cell share the cell's seed, so
+    /// content is repeat-invariant and only wall-clock timing varies.
+    pub repeats: usize,
+    pub base_seed: u64,
+    pub seed_mode: SeedMode,
+    /// Scenario axes, cartesian product = cells.
+    pub axes: Vec<Axis>,
+    /// Fixed `[run]` overrides applied to every trial's base config
+    /// before the cell's axis assignment.
+    pub fixed: Vec<(String, String)>,
+}
+
+/// Parse a seed as decimal or `0x`-prefixed hex.
+pub fn parse_seed(s: &str) -> Result<u64> {
+    let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => s.parse(),
+    };
+    parsed.map_err(|_| anyhow!("bad seed {s:?} (decimal or 0x hex)"))
+}
+
+impl StudySpec {
+    /// Load a spec from a parsed config file. With `smoke` set, the
+    /// `[smoke]` / `[smoke.axes]` sections override the full-size study —
+    /// how `vpaas study` honors `VPAAS_BENCH_SMOKE` in CI.
+    pub fn from_config(cfg: &Config, smoke: bool) -> Result<StudySpec> {
+        let system_name = cfg.str_or("study", "system", "vpaas");
+        let system = SystemKind::parse(system_name)
+            .ok_or_else(|| anyhow!("[study] system: unknown system {system_name:?}"))?;
+        let seed_name = cfg.str_or("study", "seed_mode", "per_cell");
+        let seed_mode = SeedMode::parse(seed_name)
+            .ok_or_else(|| anyhow!("[study] seed_mode: {seed_name:?} (per_cell|fixed)"))?;
+        let mut spec = StudySpec {
+            name: cfg.str_or("study", "name", "study").to_string(),
+            system,
+            dataset: cfg.str_or("study", "dataset", "drone").to_string(),
+            scale: cfg.f64_or("study", "scale", 0.05)?,
+            cameras: cfg.usize_or("study", "cameras", 0)?,
+            repeats: cfg.usize_or("study", "repeats", 3)?,
+            base_seed: parse_seed(cfg.str_or("study", "seed", "0xCAFE"))?,
+            seed_mode,
+            axes: Vec::new(),
+            fixed: Vec::new(),
+        };
+        for key in cfg.keys("axes") {
+            let values = cfg.list("axes", key);
+            spec.axes.push(Axis { name: key.to_string(), values });
+        }
+        for key in cfg.keys("run") {
+            spec.fixed.push((key.to_string(), cfg.get("run", key).unwrap().to_string()));
+        }
+        if smoke {
+            spec.scale = cfg.f64_or("smoke", "scale", spec.scale)?;
+            spec.cameras = cfg.usize_or("smoke", "cameras", spec.cameras)?;
+            spec.repeats = cfg.usize_or("smoke", "repeats", spec.repeats)?;
+            if let Some(seed) = cfg.get("smoke", "seed") {
+                spec.base_seed = parse_seed(seed)?;
+            }
+            for key in cfg.keys("smoke.axes") {
+                let values = cfg.list("smoke.axes", key);
+                match spec.axes.iter_mut().find(|a| a.name == key) {
+                    Some(axis) => axis.values = values,
+                    None => spec.axes.push(Axis { name: key.to_string(), values }),
+                }
+            }
+        }
+        // file-based specs must be statistically honest: variance needs
+        // at least two repeats per cell (programmatic single-run specs —
+        // the legacy figure sweeps — construct the struct directly)
+        if spec.repeats < 2 {
+            bail!("[study] repeats: {} < 2 — studies need repeats >= 2 for error bars", spec.repeats);
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Structural validation: known, unique, non-empty axes; no value
+    /// duplicated within an axis (duplicate values would alias cells).
+    pub fn validate(&self) -> Result<()> {
+        if self.repeats < 1 {
+            bail!("study {:?}: repeats must be >= 1", self.name);
+        }
+        if self.axes.is_empty() {
+            bail!("study {:?}: at least one [axes] entry is required", self.name);
+        }
+        let mut names: Vec<&str> = Vec::new();
+        for axis in &self.axes {
+            if !KNOWN_AXES.contains(&axis.name.as_str()) {
+                bail!("study {:?}: unknown axis {:?} (known: {KNOWN_AXES:?})", self.name, axis.name);
+            }
+            if names.contains(&axis.name.as_str()) {
+                bail!("study {:?}: duplicate axis {:?}", self.name, axis.name);
+            }
+            names.push(&axis.name);
+            if axis.values.is_empty() {
+                bail!("study {:?}: axis {:?} has no values", self.name, axis.name);
+            }
+            for (i, v) in axis.values.iter().enumerate() {
+                if axis.values[..i].contains(v) {
+                    bail!("study {:?}: axis {:?} repeats value {v:?}", self.name, axis.name);
+                }
+            }
+        }
+        for (key, _) in &self.fixed {
+            if !KNOWN_AXES.contains(&key.as_str()) || key == "system" {
+                bail!("study {:?}: bad [run] override {key:?} (use [study] system)", self.name);
+            }
+            if names.contains(&key.as_str()) {
+                bail!("study {:?}: {key:?} is both an axis and a [run] override", self.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Apply one axis assignment (or `[run]` override) to a [`RunConfig`].
+/// The `system` axis is resolved by the runner, not here — it selects the
+/// pipeline, not a config field.
+pub fn apply_axis(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()> {
+    match key {
+        "workload" => {
+            cfg.workload = WorkloadProfile::parse(value)
+                .ok_or_else(|| anyhow!("axis workload: unknown profile {value:?}"))?;
+        }
+        "dispatch" => {
+            cfg.dispatch = DispatchMode::parse(value)
+                .ok_or_else(|| anyhow!("axis dispatch: unknown mode {value:?}"))?;
+        }
+        "ladder" => cfg.ladder = codec::parse_ladder(value)?,
+        "shards" => cfg.shards = parse_usize("shards", value)?,
+        "gpus" => cfg.gpus = parse_usize("gpus", value)?,
+        "slo_ms" => cfg.slo_ms = parse_f64("slo_ms", value)?,
+        "wan_mbps" => cfg.wan_mbps = parse_f64("wan_mbps", value)?,
+        "hitl_budget" => cfg.hitl_budget = parse_f64("hitl_budget", value)?,
+        "drift" => cfg.drift = parse_bool("drift", value)?,
+        "autoscale" => cfg.autoscale = parse_bool("autoscale", value)?,
+        "system" => bail!("the `system` axis is applied by the study runner, not apply_axis"),
+        other => bail!("unknown study axis {other:?} (known: {KNOWN_AXES:?})"),
+    }
+    Ok(())
+}
+
+fn parse_usize(key: &str, v: &str) -> Result<usize> {
+    v.parse().map_err(|_| anyhow!("axis {key}: expected integer, got {v:?}"))
+}
+
+fn parse_f64(key: &str, v: &str) -> Result<f64> {
+    // `inf` is meaningful (a disabled SLO) and parses natively
+    v.parse().map_err(|_| anyhow!("axis {key}: expected number, got {v:?}"))
+}
+
+fn parse_bool(key: &str, v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        _ => bail!("axis {key}: expected bool, got {v:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = "\
+[study]
+name = gpu_sweep
+system = vpaas
+dataset = drone
+scale = 0.1
+cameras = 16
+repeats = 3
+seed = 0xCAFE
+seed_mode = per_cell
+
+[run]
+shards = 8
+dispatch = streaming
+
+[axes]
+gpus = 1, 2, 4, 8
+
+[smoke]
+scale = 0.05
+cameras = 8
+repeats = 2
+
+[smoke.axes]
+gpus = 1, 2
+";
+
+    #[test]
+    fn parses_full_and_smoke_variants() {
+        let cfg = Config::parse(SPEC).unwrap();
+        let full = StudySpec::from_config(&cfg, false).unwrap();
+        assert_eq!(full.name, "gpu_sweep");
+        assert_eq!(full.base_seed, 0xCAFE);
+        assert_eq!(full.repeats, 3);
+        assert_eq!(full.axes, vec![Axis {
+            name: "gpus".into(),
+            values: vec!["1".into(), "2".into(), "4".into(), "8".into()],
+        }]);
+        assert_eq!(full.fixed.len(), 2);
+        let smoke = StudySpec::from_config(&cfg, true).unwrap();
+        assert_eq!(smoke.repeats, 2);
+        assert_eq!(smoke.cameras, 8);
+        assert_eq!(smoke.axes[0].values, vec!["1", "2"]);
+    }
+
+    #[test]
+    fn rejects_dishonest_or_malformed_specs() {
+        let single = "[study]\nrepeats = 1\n[axes]\ngpus = 1, 2\n";
+        assert!(StudySpec::from_config(&Config::parse(single).unwrap(), false).is_err());
+        let unknown = "[study]\nrepeats = 2\n[axes]\nbananas = 1, 2\n";
+        assert!(StudySpec::from_config(&Config::parse(unknown).unwrap(), false).is_err());
+        let dup = "[study]\nrepeats = 2\n[axes]\ngpus = 1, 1\n";
+        assert!(StudySpec::from_config(&Config::parse(dup).unwrap(), false).is_err());
+        let clash = "[study]\nrepeats = 2\n[run]\ngpus = 4\n[axes]\ngpus = 1, 2\n";
+        assert!(StudySpec::from_config(&Config::parse(clash).unwrap(), false).is_err());
+        let empty = "[study]\nrepeats = 2\n";
+        assert!(StudySpec::from_config(&Config::parse(empty).unwrap(), false).is_err());
+    }
+
+    #[test]
+    fn seeds_parse_hex_and_decimal() {
+        assert_eq!(parse_seed("0x601D").unwrap(), 0x601D);
+        assert_eq!(parse_seed("51966").unwrap(), 51966);
+        assert!(parse_seed("0xZZ").is_err());
+    }
+
+    #[test]
+    fn apply_axis_sets_every_known_field() {
+        let mut cfg = RunConfig::default();
+        apply_axis(&mut cfg, "gpus", "4").unwrap();
+        apply_axis(&mut cfg, "shards", "8").unwrap();
+        apply_axis(&mut cfg, "slo_ms", "inf").unwrap();
+        apply_axis(&mut cfg, "wan_mbps", "200").unwrap();
+        apply_axis(&mut cfg, "hitl_budget", "0").unwrap();
+        apply_axis(&mut cfg, "drift", "false").unwrap();
+        apply_axis(&mut cfg, "autoscale", "off").unwrap();
+        apply_axis(&mut cfg, "workload", "bursty").unwrap();
+        apply_axis(&mut cfg, "dispatch", "streaming").unwrap();
+        apply_axis(&mut cfg, "ladder", "single").unwrap();
+        assert_eq!((cfg.gpus, cfg.shards), (4, 8));
+        assert!(cfg.slo_ms.is_infinite());
+        assert_eq!(cfg.wan_mbps, 200.0);
+        assert!(!cfg.drift && !cfg.autoscale);
+        assert_eq!(cfg.ladder.len(), 1);
+        assert!(apply_axis(&mut cfg, "system", "dds").is_err());
+        assert!(apply_axis(&mut cfg, "nope", "1").is_err());
+    }
+}

@@ -66,6 +66,12 @@ impl Config {
         self.sections.keys().map(|s| s.as_str())
     }
 
+    /// Keys of one section in sorted order (empty iterator when the
+    /// section is absent) — how the study spec discovers its `[axes]`.
+    pub fn keys(&self, section: &str) -> impl Iterator<Item = &str> {
+        self.sections.get(section).into_iter().flat_map(|m| m.keys().map(|s| s.as_str()))
+    }
+
     pub fn get(&self, section: &str, key: &str) -> Option<&str> {
         self.sections.get(section)?.get(key).map(|s| s.as_str())
     }
@@ -169,5 +175,12 @@ mod tests {
         let mut c = Config::default();
         c.set("s", "k", "v");
         assert_eq!(c.get("s", "k"), Some("v"));
+    }
+
+    #[test]
+    fn keys_iterate_sorted() {
+        let c = Config::parse("[axes]\nshards = 1, 2\ngpus = 1\n").unwrap();
+        assert_eq!(c.keys("axes").collect::<Vec<_>>(), vec!["gpus", "shards"]);
+        assert_eq!(c.keys("missing").count(), 0);
     }
 }

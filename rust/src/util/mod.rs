@@ -11,6 +11,8 @@
 //! * [`cli`] — a small argv parser for the `vpaas` binary and examples
 //! * [`config`] — sectioned `key = value` config files (the paper's
 //!   "policy file", Fig. 14's `example.yml` equivalent)
+//! * [`json`] — a minimal JSON tree for the `BENCH_*.json` artifacts and
+//!   the study baseline (schema-checked, bit-exact round-trips)
 //! * [`logging`] — leveled logger controlled by `VPAAS_LOG`
 //! * [`pool`] — a fixed thread pool + job handles (the async substrate)
 //! * [`prop`] — a mini property-testing framework used by the test suite
@@ -18,6 +20,7 @@
 pub mod cli;
 pub mod clock;
 pub mod config;
+pub mod json;
 pub mod logging;
 pub mod pool;
 pub mod prop;

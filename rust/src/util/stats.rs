@@ -1,7 +1,9 @@
-//! Streaming metric summaries: mean/std/min/max and exact percentiles.
+//! Streaming metric summaries: mean/std/min/max and exact percentiles,
+//! plus the inference helpers behind the study runner's error bars —
+//! Student-t confidence intervals and Welch's unequal-variance t-test.
 //!
 //! Used by the global monitor, the latency tracker (Fig. 10b/11 report
-//! p50/p90/p99 "freshness"), and the bench harness.
+//! p50/p90/p99 "freshness"), the bench harness, and [`crate::study`].
 
 /// Collects samples and answers summary queries. Percentiles are exact
 /// (sorted copy) — sample counts here are small enough that a streaming
@@ -85,6 +87,17 @@ impl Series {
         self.percentile(50.0)
     }
 
+    /// Half-width of the 95% confidence interval on the mean,
+    /// `t_{0.975, n-1} · s / √n`. `None` when `n < 2` — a single repeat
+    /// carries no variance information, so no interval is claimed.
+    pub fn ci95_half_width(&self) -> Option<f64> {
+        let n = self.samples.len();
+        if n < 2 {
+            return None;
+        }
+        Some(t_critical_975(n - 1) * self.std() / (n as f64).sqrt())
+    }
+
     pub fn summary(&self) -> Summary {
         Summary {
             count: self.len(),
@@ -160,6 +173,182 @@ impl Ewma {
     }
 }
 
+/// Two-sided 95% Student-t critical value (`t_{0.975, df}`), from the
+/// standard table; large df falls back to the normal quantile 1.960.
+pub fn t_critical_975(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    match df {
+        0 => f64::INFINITY,
+        1..=30 => TABLE[df - 1],
+        31..=40 => 2.021,
+        41..=60 => 2.000,
+        61..=120 => 1.980,
+        _ => 1.960,
+    }
+}
+
+/// Natural log of the gamma function (Lanczos approximation, g = 7).
+fn ln_gamma(z: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_59,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    let pi = std::f64::consts::PI;
+    if z < 0.5 {
+        // reflection: Γ(z)·Γ(1−z) = π / sin(πz)
+        return (pi / (pi * z).sin()).ln() - ln_gamma(1.0 - z);
+    }
+    let z = z - 1.0;
+    let mut x = COEF[0];
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        x += c / (z + i as f64);
+    }
+    let t = z + 7.5;
+    0.5 * (2.0 * pi).ln() + (z + 0.5) * t.ln() - t + x.ln()
+}
+
+/// Continued fraction for the incomplete beta function (modified Lentz).
+fn betacf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_ITER: usize = 300;
+    const EPS: f64 = 3e-14;
+    const FPMIN: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_ITER {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Regularized incomplete beta function `I_x(a, b)`.
+pub fn incomplete_beta(a: f64, b: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && b > 0.0, "incomplete_beta parameters must be positive");
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_bt = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    let bt = ln_bt.exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        bt * betacf(a, b, x) / a
+    } else {
+        1.0 - bt * betacf(b, a, 1.0 - x) / b
+    }
+}
+
+/// Two-sided p-value of a Student-t statistic at (possibly fractional)
+/// `df`: `I_{df/(df+t²)}(df/2, 1/2)`. Infinite `t` → 0.
+pub fn t_two_sided_p(t: f64, df: f64) -> f64 {
+    if !t.is_finite() {
+        return 0.0;
+    }
+    // t at df ≳ 400 is indistinguishable from normal at our precision;
+    // the cap keeps the continued fraction well-conditioned
+    let df = df.clamp(1.0, 400.0);
+    incomplete_beta(df / 2.0, 0.5, df / (df + t * t)).clamp(0.0, 1.0)
+}
+
+/// Outcome of a Welch two-sample test.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WelchTest {
+    /// t statistic for mean_b − mean_a (±∞ when both variances are zero
+    /// but the means differ).
+    pub t: f64,
+    /// Welch–Satterthwaite degrees of freedom (≥ 1).
+    pub df: f64,
+    /// Two-sided p-value; never NaN.
+    pub p: f64,
+}
+
+/// Welch's unequal-variance t-test from sample summaries. Degenerate
+/// cells stay honest instead of going NaN: two zero-variance samples with
+/// equal means are a certain match (p = 1), with different means a
+/// certain mismatch (p = 0) — the deterministic-simulator case, where a
+/// content metric either moved or it did not.
+pub fn welch_t_test(
+    mean_a: f64,
+    std_a: f64,
+    n_a: usize,
+    mean_b: f64,
+    std_b: f64,
+    n_b: usize,
+) -> WelchTest {
+    assert!(n_a >= 1 && n_b >= 1, "welch_t_test needs at least one sample per side");
+    let va = std_a * std_a;
+    let vb = std_b * std_b;
+    let sa = va / n_a as f64;
+    let sb = vb / n_b as f64;
+    let se2 = sa + sb;
+    let diff = mean_b - mean_a;
+    if se2 <= 0.0 {
+        return if diff == 0.0 {
+            WelchTest { t: 0.0, df: 1.0, p: 1.0 }
+        } else {
+            WelchTest { t: diff.signum() * f64::INFINITY, df: 1.0, p: 0.0 }
+        };
+    }
+    let t = diff / se2.sqrt();
+    // Welch–Satterthwaite; a zero-variance (or single-sample) side
+    // contributes no df term, matching the one-sample-t limit
+    let mut denom = 0.0;
+    if sa > 0.0 && n_a > 1 {
+        denom += sa * sa / (n_a as f64 - 1.0);
+    }
+    if sb > 0.0 && n_b > 1 {
+        denom += sb * sb / (n_b as f64 - 1.0);
+    }
+    let df = if denom > 0.0 { (se2 * se2 / denom).max(1.0) } else { 1.0 };
+    WelchTest { t, df, p: t_two_sided_p(t, df) }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,5 +401,105 @@ mod tests {
             e.update(2.0);
         }
         assert!((e.get().unwrap() - 2.0).abs() < 0.01);
+    }
+
+    // ------------------------------------------------- inference helpers
+
+    #[test]
+    fn ci95_matches_hand_computed_fixture() {
+        // n=8, mean 5, s=2.138090: hw = 2.365 · s / √8 = 1.787824
+        let mut s = Series::new();
+        s.extend(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        let hw = s.ci95_half_width().unwrap();
+        assert!((hw - 1.787_824).abs() < 1e-4, "hw={hw}");
+    }
+
+    #[test]
+    fn ci95_absent_for_single_repeat() {
+        let mut s = Series::new();
+        s.push(3.0);
+        assert_eq!(s.ci95_half_width(), None);
+        assert_eq!(Series::new().ci95_half_width(), None);
+    }
+
+    #[test]
+    fn ci95_zero_variance_is_zero_not_nan() {
+        let mut s = Series::new();
+        s.extend(&[4.0, 4.0, 4.0]);
+        assert_eq!(s.ci95_half_width(), Some(0.0));
+    }
+
+    #[test]
+    fn t_table_brackets_known_quantiles() {
+        assert!((t_critical_975(1) - 12.706).abs() < 1e-9);
+        assert!((t_critical_975(7) - 2.365).abs() < 1e-9);
+        assert!((t_critical_975(30) - 2.042).abs() < 1e-9);
+        assert!((t_critical_975(10_000) - 1.960).abs() < 1e-9);
+        assert_eq!(t_critical_975(0), f64::INFINITY);
+    }
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        // Γ(n) = (n−1)!
+        for (z, want) in [(1.0, 1.0), (2.0, 1.0), (3.0, 2.0), (5.0, 24.0), (7.0, 720.0)] {
+            let got = super::ln_gamma(z).exp();
+            assert!((got - want).abs() / want < 1e-10, "Γ({z}) = {got}, want {want}");
+        }
+        // Γ(1/2) = √π
+        let half = super::ln_gamma(0.5).exp();
+        assert!((half - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn t_cdf_known_points() {
+        // df=1 is Cauchy: P(|T| > 1) = 1 − (2/π)·arctan(1) = 1/2 exactly
+        assert!((t_two_sided_p(1.0, 1.0) - 0.5).abs() < 1e-10);
+        // symmetric in t
+        assert_eq!(t_two_sided_p(2.0, 5.0), t_two_sided_p(-2.0, 5.0));
+        // the critical value reproduces its own tail mass
+        let p = t_two_sided_p(2.228, 10.0);
+        assert!((p - 0.05).abs() < 2e-3, "p={p}");
+        // t = 0 carries no evidence; huge t carries all of it
+        assert!((t_two_sided_p(0.0, 10.0) - 1.0).abs() < 1e-12);
+        assert!(t_two_sided_p(50.0, 10.0) < 1e-9);
+        assert_eq!(t_two_sided_p(f64::INFINITY, 10.0), 0.0);
+    }
+
+    #[test]
+    fn welch_flags_known_significant_pair() {
+        // classic fixture: means 2 pooled-σ apart with n=10 per side
+        let w = welch_t_test(10.0, 1.0, 10, 12.0, 1.0, 10);
+        assert!((w.t - 4.472).abs() < 1e-3, "t={}", w.t);
+        assert!((w.df - 18.0).abs() < 1e-6, "df={}", w.df);
+        assert!(w.p < 1e-3, "p={}", w.p);
+        assert!(w.p > 0.0);
+    }
+
+    #[test]
+    fn welch_passes_known_insignificant_pair() {
+        // quarter-σ mean shift at n=5: nowhere near significance
+        let w = welch_t_test(10.0, 2.0, 5, 10.5, 2.0, 5);
+        assert!((w.t - 0.3953).abs() < 1e-3, "t={}", w.t);
+        assert!(w.p > 0.5, "p={}", w.p);
+        assert!(w.p < 1.0);
+    }
+
+    #[test]
+    fn welch_degenerate_zero_variance_cells() {
+        // both sides deterministic and equal: certain match, no NaN
+        let same = welch_t_test(7.0, 0.0, 3, 7.0, 0.0, 3);
+        assert_eq!(same.p, 1.0);
+        assert!(same.t == 0.0 && same.df >= 1.0);
+        // both sides deterministic but shifted: certain mismatch
+        let diff = welch_t_test(7.0, 0.0, 3, 7.1, 0.0, 3);
+        assert_eq!(diff.p, 0.0);
+        assert_eq!(diff.t, f64::INFINITY);
+        // single repeats (n=1, std 0 by convention) stay finite
+        let single = welch_t_test(1.0, 0.0, 1, 1.0, 0.0, 1);
+        assert_eq!(single.p, 1.0);
+        // one-sided variance still yields a finite, sane test
+        let onesided = welch_t_test(10.0, 1.0, 5, 10.0, 0.0, 5);
+        assert!(onesided.p.is_finite() && onesided.p > 0.9, "p={}", onesided.p);
+        assert!((onesided.df - 4.0).abs() < 1e-9, "df={}", onesided.df);
     }
 }

@@ -1,0 +1,219 @@
+//! Schema + round-trip tests for every emitted bench artifact:
+//! `BENCH_overlap.json`, `BENCH_stream.json`, `BENCH_gpu.json`,
+//! `BENCH_slo.json` (encoders in `pipeline::figures`, shared with the
+//! bench harness) and `BENCH_study.json` (`study::StudyReport`). Each
+//! artifact is built from synthetic rows in both its smoke- and
+//! full-sized shape, parsed back with the crate's JSON parser, and
+//! checked field by field — so a schema drift breaks here, not in the CI
+//! artifact consumers.
+
+use vpaas::pipeline::figures::{
+    gpu_json, overlap_json, slo_json, stream_json, GpuRow, SloRow, StreamRow,
+};
+use vpaas::study::{CellStats, MetricStats, StudyReport};
+use vpaas::util::json::Json;
+
+fn parse(text: &str) -> Json {
+    assert!(text.ends_with('\n'), "artifacts are newline-terminated");
+    Json::parse(text).expect("artifact must be valid JSON")
+}
+
+fn rows<'a>(doc: &'a Json, bench: &str, workload: &str) -> &'a [Json] {
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some(bench));
+    assert_eq!(doc.get("workload").and_then(Json::as_str), Some(workload));
+    doc.get("rows").and_then(Json::as_arr).expect("rows array")
+}
+
+fn num(row: &Json, key: &str) -> f64 {
+    row.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("row field {key:?} must be a number"))
+}
+
+#[test]
+fn overlap_artifact_schema() {
+    // smoke shape: shard sweep [2, 4]; full adds 8
+    for shard_rows in [
+        vec![(2usize, 10.0, 14.0), (4, 8.0, 13.0)],
+        vec![(2, 10.0, 14.0), (4, 8.0, 13.0), (8, 7.5, 12.5)],
+    ] {
+        let text = overlap_json(4, &shard_rows);
+        let doc = parse(&text);
+        let rs = rows(&doc, "fig16_overlap", "drone x4 cameras");
+        assert_eq!(rs.len(), shard_rows.len());
+        for (row, &(shards, event, seq)) in rs.iter().zip(&shard_rows) {
+            assert_eq!(num(row, "shards"), shards as f64);
+            assert!((num(row, "event_makespan_s") - event).abs() < 1e-6);
+            assert!((num(row, "sequential_makespan_s") - seq).abs() < 1e-6);
+            assert!((num(row, "speedup") - seq / event).abs() < 1e-5);
+        }
+        // stable: same rows encode to identical bytes
+        assert_eq!(text, overlap_json(4, &shard_rows));
+    }
+}
+
+#[test]
+fn stream_artifact_schema() {
+    let mk = |w: &'static str| StreamRow {
+        workload: w,
+        chunks: 40,
+        streaming_s: 100.0,
+        wave_s: 110.0,
+        sequential_s: 130.0,
+    };
+    let all = vec![mk("uniform"), mk("bursty"), mk("churn")];
+    let text = stream_json(6, &all);
+    let doc = parse(&text);
+    let rs = rows(&doc, "fig16_stream", "drone x6 cameras, 4 shards");
+    assert_eq!(rs.len(), 3);
+    for (row, want) in rs.iter().zip(&all) {
+        assert_eq!(row.get("workload").and_then(Json::as_str), Some(want.workload));
+        assert_eq!(num(row, "chunks"), want.chunks as f64);
+        assert!((num(row, "streaming_makespan_s") - want.streaming_s).abs() < 1e-6);
+        assert!((num(row, "wave_makespan_s") - want.wave_s).abs() < 1e-6);
+        assert!((num(row, "sequential_makespan_s") - want.sequential_s).abs() < 1e-6);
+        assert!((num(row, "wave_over_streaming") - 1.1).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn gpu_artifact_schema() {
+    // smoke [1,2,4] and full [1,2,4,8] shapes
+    for counts in [vec![1usize, 2, 4], vec![1, 2, 4, 8]] {
+        let gpu_rows: Vec<GpuRow> = counts
+            .iter()
+            .map(|&g| GpuRow {
+                gpus: g,
+                chunks: 80,
+                makespan_s: 200.0 / g as f64,
+                p99_s: 12.0 / g as f64,
+            })
+            .collect();
+        let text = gpu_json(8, &gpu_rows);
+        let doc = parse(&text);
+        let rs = rows(&doc, "fig16_gpu_sweep", "drone x8 cameras, bursty, 8 shards");
+        assert_eq!(rs.len(), counts.len());
+        for (row, want) in rs.iter().zip(&gpu_rows) {
+            assert_eq!(num(row, "gpus"), want.gpus as f64);
+            assert_eq!(num(row, "chunks"), 80.0);
+            assert!((num(row, "makespan_s") - want.makespan_s).abs() < 1e-6);
+            assert!((num(row, "p99_latency_s") - want.p99_s).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn slo_artifact_encodes_disabled_slo_as_null() {
+    let mk = |slo: f64, ladder: bool, dropped: u64| SloRow {
+        slo_ms: slo,
+        ladder,
+        f1: 0.8,
+        wan_bytes: 1.0e6,
+        cost_units: 500.0,
+        chunks: 40,
+        chunks_degraded: 3,
+        chunks_dropped: dropped,
+    };
+    let slo_rows = vec![
+        mk(f64::INFINITY, true, 0),
+        mk(f64::INFINITY, false, 0),
+        mk(10_000.0, true, 1),
+        mk(10_000.0, false, 2),
+    ];
+    let text = slo_json(4, &slo_rows);
+    let doc = parse(&text);
+    let rs = rows(&doc, "fig10_slo_frontier", "drone x4 cameras, bursty, 2 shards");
+    assert_eq!(rs.len(), 4);
+    // a disabled SLO is JSON null, never a non-finite number literal
+    assert!(rs[0].get("slo_ms").unwrap().is_null());
+    assert!(rs[1].get("slo_ms").unwrap().is_null());
+    assert_eq!(num(&rs[2], "slo_ms"), 10_000.0);
+    assert_eq!(rs[2].get("ladder").and_then(Json::as_bool), Some(true));
+    assert_eq!(rs[3].get("ladder").and_then(Json::as_bool), Some(false));
+    for (row, want) in rs.iter().zip(&slo_rows) {
+        assert!((num(row, "f1") - want.f1).abs() < 1e-6);
+        assert_eq!(num(row, "wan_bytes"), want.wan_bytes);
+        assert_eq!(num(row, "billing_units"), want.cost_units);
+        assert_eq!(num(row, "chunks"), 40.0);
+        assert_eq!(num(row, "chunks_degraded"), 3.0);
+        assert_eq!(num(row, "chunks_dropped"), want.chunks_dropped as f64);
+    }
+}
+
+#[test]
+fn study_artifact_schema_and_roundtrip() {
+    let cell = |idx: usize, key: &str, n: usize| CellStats {
+        cell: idx,
+        key: key.into(),
+        values: key
+            .split(',')
+            .map(|kv| {
+                let (k, v) = kv.split_once('=').unwrap();
+                (k.to_string(), v.to_string())
+            })
+            .collect(),
+        seed: 0xDEAD_BEEF_0000_0001 + idx as u64,
+        fingerprint: 0xFEED_FACE_CAFE_F00D ^ idx as u64,
+        metrics: vec![
+            MetricStats { name: "f1_true".into(), n, mean: 0.8125, std: 0.0, ci95: if n >= 2 { Some(0.0) } else { None } },
+            MetricStats { name: "wall_clock_s".into(), n, mean: 1.25, std: 0.125, ci95: if n >= 2 { Some(0.31) } else { None } },
+        ],
+    };
+    // smoke-shaped (repeats 2) and full-shaped (repeats 3) reports
+    for repeats in [2usize, 3] {
+        let report = StudyReport {
+            study: "gpu_sweep".into(),
+            system: "vpaas".into(),
+            dataset: "drone".into(),
+            scale: 0.05,
+            cameras: 8,
+            repeats,
+            base_seed: 0xCAFE,
+            seed_mode: "per_cell".into(),
+            cells: vec![cell(0, "gpus=1", repeats), cell(1, "gpus=2", repeats)],
+        };
+        let text = report.to_json();
+        let doc = parse(&text);
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("study"));
+        assert_eq!(doc.get("study").and_then(Json::as_str), Some("gpu_sweep"));
+        assert_eq!(doc.get("repeats").and_then(Json::as_f64), Some(repeats as f64));
+        // u64 seeds/fingerprints ride as hex strings (f64 can't hold u64)
+        assert_eq!(doc.get("base_seed").and_then(Json::as_str), Some("0xcafe"));
+        let cells = doc.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 2);
+        for c in cells {
+            assert!(c.get("seed").and_then(Json::as_str).unwrap().starts_with("0x"));
+            assert!(c.get("fingerprint").and_then(Json::as_str).unwrap().starts_with("0x"));
+            for m in c.get("metrics").and_then(Json::as_arr).unwrap() {
+                assert!(m.get("name").and_then(Json::as_str).is_some());
+                assert!(num(m, "n") >= 2.0);
+                assert!(num(m, "mean").is_finite());
+                assert!(num(m, "std").is_finite());
+                assert!(m.get("ci95").and_then(Json::as_f64).is_some());
+            }
+        }
+        // full parse-back equality — the gate consumes this path
+        assert_eq!(StudyReport::from_json(&text).unwrap(), report);
+    }
+    // a singleton cell (n = 1) carries ci95: null and still round-trips
+    let single = StudyReport {
+        study: "one".into(),
+        system: "vpaas".into(),
+        dataset: "drone".into(),
+        scale: 0.02,
+        cameras: 1,
+        repeats: 1,
+        base_seed: 1,
+        seed_mode: "fixed".into(),
+        cells: vec![cell(0, "gpus=1", 1)],
+    };
+    let text = single.to_json();
+    let doc = parse(&text);
+    let m = doc.get("cells").and_then(Json::as_arr).unwrap()[0]
+        .get("metrics")
+        .and_then(Json::as_arr)
+        .unwrap()[0]
+        .clone();
+    assert!(m.get("ci95").unwrap().is_null(), "n=1 must not fabricate a CI");
+    assert_eq!(StudyReport::from_json(&text).unwrap(), single);
+}

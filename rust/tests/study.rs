@@ -1,0 +1,203 @@
+//! Study subsystem tests: plan expansion properties (determinism,
+//! axis-permutation invariance, seed collision-freedom) and an end-to-end
+//! study run asserting repeat-invariant content, CI-bearing statistics,
+//! cross-run reproducibility and report round-tripping.
+
+use vpaas::pipeline::{Harness, RunConfig, SystemKind};
+use vpaas::prop_assert;
+use vpaas::study::{self, Axis, SeedMode, StudySpec};
+use vpaas::util::prop::prop_check;
+
+fn spec_with(axes: Vec<Axis>, repeats: usize, base_seed: u64) -> StudySpec {
+    StudySpec {
+        name: "prop".into(),
+        system: SystemKind::Vpaas,
+        dataset: "drone".into(),
+        scale: 0.02,
+        cameras: 1,
+        repeats,
+        base_seed,
+        seed_mode: SeedMode::PerCell,
+        axes,
+        fixed: Vec::new(),
+    }
+}
+
+/// Same spec + base seed ⇒ identical trial plan; permuting axis
+/// declaration order never changes the plan; distinct cells get distinct
+/// seeds while repeats of a cell share theirs.
+#[test]
+fn plan_expansion_is_deterministic_canonical_and_collision_free() {
+    // (name, value pool) — values per axis are drawn as a prefix, so
+    // within-axis uniqueness is preserved by construction
+    let pool: &[(&str, &[&str])] = &[
+        ("gpus", &["1", "2", "4", "8"]),
+        ("shards", &["1", "2", "4"]),
+        ("dispatch", &["event", "sequential", "streaming"]),
+        ("workload", &["uniform", "bursty", "churn"]),
+        ("slo_ms", &["inf", "10000", "800"]),
+        ("ladder", &["default", "single"]),
+    ];
+    prop_check(60, 0x57D7, |g| {
+        let n_axes = g.usize_in(1, 4);
+        let mut picks: Vec<usize> = (0..pool.len()).collect();
+        g.rng().shuffle(&mut picks);
+        let axes: Vec<Axis> = picks[..n_axes]
+            .iter()
+            .map(|&i| {
+                let (name, values) = pool[i];
+                let take = g.usize_in(1, values.len());
+                Axis {
+                    name: name.into(),
+                    values: values[..take].iter().map(|v| v.to_string()).collect(),
+                }
+            })
+            .collect();
+        let repeats = g.usize_in(1, 3);
+        let base_seed = g.rng().next_u64();
+        let spec = spec_with(axes.clone(), repeats, base_seed);
+        let plan = study::expand(&spec).map_err(|e| e.to_string())?;
+
+        // determinism: bit-identical on re-expansion
+        let again = study::expand(&spec).map_err(|e| e.to_string())?;
+        prop_assert!(plan == again, "re-expansion changed the plan");
+
+        // axis declaration order is irrelevant
+        let mut shuffled = axes.clone();
+        g.rng().shuffle(&mut shuffled);
+        let permuted =
+            study::expand(&spec_with(shuffled, repeats, base_seed)).map_err(|e| e.to_string())?;
+        prop_assert!(plan == permuted, "axis declaration order changed the plan");
+
+        // shape: cells × repeats trials, sorted axis names per trial
+        let cells: usize = axes.iter().map(|a| a.values.len()).product();
+        prop_assert!(plan.cells == cells, "expected {cells} cells, got {}", plan.cells);
+        prop_assert!(
+            plan.trials.len() == cells * repeats,
+            "expected {} trials, got {}",
+            cells * repeats,
+            plan.trials.len()
+        );
+        for t in &plan.trials {
+            let mut names: Vec<&str> = t.values.iter().map(|(k, _)| k.as_str()).collect();
+            let sorted = {
+                let mut s = names.clone();
+                s.sort();
+                s
+            };
+            prop_assert!(names == sorted, "trial values not in sorted axis order: {names:?}");
+            names.dedup();
+            prop_assert!(names.len() == t.values.len(), "duplicate axis in trial");
+        }
+
+        // per-cell seeds are distinct; repeats share the cell seed
+        let mut cell_seeds: Vec<(usize, u64)> = Vec::new();
+        for t in &plan.trials {
+            match cell_seeds.iter().find(|(c, _)| *c == t.cell) {
+                Some((_, seed)) => {
+                    prop_assert!(*seed == t.seed, "cell {}: repeats disagree on seed", t.cell)
+                }
+                None => cell_seeds.push((t.cell, t.seed)),
+            }
+        }
+        for (i, (ca, sa)) in cell_seeds.iter().enumerate() {
+            for (cb, sb) in &cell_seeds[i + 1..] {
+                prop_assert!(sa != sb, "cells {ca} and {cb} collided on seed {sa:#x}");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end: a small PerCell study with `repeats = 3` produces
+/// CI-bearing per-cell statistics, repeat-invariant content fingerprints,
+/// and a report that survives JSON round-tripping; re-running the same
+/// spec + seed reproduces the identical content per cell.
+#[test]
+fn study_run_repeats_roundtrip_and_reproduce() {
+    let h = Harness::new().unwrap();
+    let spec = StudySpec {
+        name: "e2e".into(),
+        system: SystemKind::Vpaas,
+        dataset: "drone".into(),
+        scale: 0.02,
+        cameras: 1,
+        repeats: 3,
+        base_seed: 0xCAFE,
+        seed_mode: SeedMode::PerCell,
+        axes: vec![Axis {
+            name: "dispatch".into(),
+            values: vec!["event".into(), "streaming".into()],
+        }],
+        fixed: Vec::new(),
+    };
+    let base = RunConfig { golden: false, ..RunConfig::default() };
+    let run = study::run_study(&h, &spec, &base).unwrap();
+    assert_eq!(run.plan.cells, 2);
+    assert_eq!(run.trials.len(), 6);
+    // distinct per-cell seeds, shared within a cell (PerCell mode)
+    assert_ne!(run.trials[0].seed, run.trials[3].seed);
+    assert_eq!(run.trials[0].seed, run.trials[2].seed);
+
+    let report = run.report();
+    assert_eq!(report.cells.len(), 2);
+    for cell in &report.cells {
+        for m in &cell.metrics {
+            assert_eq!(m.n, 3, "{}/{}: expected 3 repeats", cell.key, m.name);
+            let hw = m.ci95.unwrap_or_else(|| panic!("{}/{}: no CI at n=3", cell.key, m.name));
+            assert!(hw.is_finite() && hw >= 0.0, "{}/{}: bad CI {hw}", cell.key, m.name);
+            // deterministic simulator: every content metric has zero
+            // within-cell variance; only wall-clock time may spread
+            if m.name != "wall_clock_s" {
+                assert_eq!(m.std, 0.0, "{}/{}: repeat variance on content", cell.key, m.name);
+            }
+        }
+    }
+
+    // serde round-trip is lossless
+    let text = report.to_json();
+    let back = study::StudyReport::from_json(&text).unwrap();
+    assert_eq!(back, report);
+
+    // re-running the same spec + seed reproduces the content per cell
+    let rerun = study::run_study(&h, &spec, &base).unwrap().report();
+    for (a, b) in report.cells.iter().zip(&rerun.cells) {
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.fingerprint, b.fingerprint, "{}: content moved across runs", a.key);
+    }
+    // and the significance gate sees no regression against itself
+    assert!(study::gate_violations(&rerun, &report).is_empty());
+}
+
+/// The `system` axis selects the pipeline under test per cell.
+#[test]
+fn system_axis_sweeps_pipelines() {
+    let h = Harness::new().unwrap();
+    let spec = StudySpec {
+        name: "sys".into(),
+        system: SystemKind::Vpaas,
+        dataset: "drone".into(),
+        scale: 0.02,
+        cameras: 1,
+        repeats: 1,
+        base_seed: 0x601D,
+        seed_mode: SeedMode::Fixed,
+        axes: vec![Axis {
+            name: "system".into(),
+            values: vec!["mpeg".into(), "vpaas".into()],
+        }],
+        fixed: Vec::new(),
+    };
+    let base = RunConfig { golden: false, ..RunConfig::default() };
+    let run = study::run_study(&h, &spec, &base).unwrap();
+    let mpeg = run.find(&[("system", "mpeg")]).unwrap();
+    let vpaas = run.find(&[("system", "vpaas")]).unwrap();
+    assert_eq!(mpeg.system, SystemKind::Mpeg);
+    assert_eq!(vpaas.system, SystemKind::Vpaas);
+    assert_eq!(mpeg.seed, vpaas.seed, "Fixed mode shares the workload seed");
+    assert_ne!(
+        mpeg.fingerprint, vpaas.fingerprint,
+        "different pipelines must produce different run content"
+    );
+}
