@@ -130,6 +130,27 @@
 //! `BENCH_gpu.json`), plus the SLO/cost frontier sweep
 //! (`BENCH_slo.json`, `pipeline::figures::fig10_slo_frontier`).
 //!
+//! ## Multi-tenant fair admission
+//!
+//! VPaaS is a platform, so many developers' pipelines share the two
+//! tiers. [`serverless::tenant`] adds the arbitration layer: a
+//! [`serverless::tenant::TenantRegistry`] (name, fair-share weight,
+//! optional per-tenant `slo_ms` override; CLI `--tenants`, `[tenants]`
+//! config section, `tenants` study axis) maps cameras to tenants, and a
+//! [`serverless::tenant::FairQueue`] runs start-time fair queueing over
+//! DRF-style chunk costs ([`serverless::tenant::chunk_cost`]) between
+//! wave formation and pool admission — a work-conserving pure reorder of
+//! each dispatch wave, so a bursty tenant queues behind its weighted
+//! share instead of starving the fleet (`tests/tenant_fairness.rs`
+//! bounds the steady tenant's p99 against FIFO). [`metrics::RunMetrics`]
+//! grows per-tenant accounting ([`metrics::TenantMetrics`]) and a Jain
+//! fairness index over weight-normalized chunk shares
+//! ([`metrics::meters::RunMetrics::jain_fairness`]); single-tenant,
+//! `fifo`-mode and equal-weight-balanced registries are byte-identical
+//! to the untenanted pipeline (`tests/invariance.rs`), and
+//! `studies/tenant_fairness.toml` sweeps weight mixes × arrival mixes
+//! into `BENCH_fairness.json`.
+//!
 //! ## Declarative scenario studies
 //!
 //! The [`study`] subsystem turns those sweeps into data: a declarative

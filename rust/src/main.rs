@@ -14,9 +14,7 @@ use anyhow::{bail, Result};
 
 use vpaas::metrics::report::table;
 use vpaas::pipeline::{figures, Harness, RunConfig, SystemKind};
-use vpaas::sim::video::codec;
 use vpaas::sim::video::datasets;
-use vpaas::sim::video::WorkloadProfile;
 use vpaas::util::cli::Args;
 use vpaas::util::config::Config;
 
@@ -45,13 +43,16 @@ fn dispatch(args: &Args) -> Result<()> {
 
 const HELP: &str = "vpaas — serverless cloud-fog video analytics (paper reproduction)
 subcommands:
-  figures --id <table1|fig4|fig5|fig9|fig10|fig10slo|fig11|fig12|fig13a|fig13b|fig15|fig16|quality|all>
+  figures --id <table1|fig4|fig5|fig9|fig10|fig10slo|fig11|fig12|fig13a|fig13b|fig15|fig16|fairness|quality|all>
           [--scale 0.05] [--seed N]
   run     --system <vpaas|vpaas-nohitl|mpeg|dds|cloudseg|glimpse>
           --dataset <dashcam|drone|traffic> [--scale 0.05] [--wan 15]
           [--budget 0.2] [--shards 1] [--gpus 1] [--slo-ms inf]
           [--ladder default|single|r:qp,...]
           [--no-drift] [--golden] [--workload uniform|bursty|churn]
+          [--dispatch event|sequential|streaming]
+          [--tenants off|fifo,name[*cams][:weight[:slo_ms]],...]
+          [--config run.cfg]  (config file supplies the whole run config)
   study   <spec.toml> [--smoke] [--out BENCH_study.json] [--baseline report.json]
           run a declarative scenario study: expand the spec's axes into a
           deterministic trial plan, execute repeats, report mean/stddev/CI
@@ -60,27 +61,15 @@ subcommands:
   profile                       profile registered models on the shared inference engine
   serve   [--config file.cfg] [--chunks N]   drive the serverless demo app";
 
+/// `--config file.cfg` hands the whole run configuration to the
+/// config-file path ([`RunConfig::from_config`]); otherwise the
+/// individual flags build it ([`RunConfig::from_args`]). Both paths
+/// reach every knob — `tests/config_parity.rs` keeps them in lockstep.
 fn run_config(args: &Args) -> Result<RunConfig> {
-    let workload_name = args.get_or("workload", "uniform");
-    let workload = WorkloadProfile::parse(workload_name).ok_or_else(|| {
-        anyhow::anyhow!("unknown workload {workload_name:?} (uniform|bursty|churn)")
-    })?;
-    // SLO degrade ladder: `default` (the multi-rung Quality::LADDER),
-    // `single` (legacy one-step), or an explicit `r:qp,...` rung list
-    let ladder = codec::parse_ladder(args.get_or("ladder", "default"))?;
-    Ok(RunConfig {
-        wan_mbps: args.get_f64("wan", 15.0)?,
-        hitl_budget: args.get_f64("budget", 0.2)?,
-        drift: !args.flag("no-drift"),
-        golden: args.flag("golden"),
-        shards: args.get_usize("shards", 1)?,
-        gpus: args.get_usize("gpus", 1)?,
-        slo_ms: args.get_f64("slo-ms", f64::INFINITY)?,
-        ladder,
-        seed: args.get_u64("seed", 0xCAFE)?,
-        workload,
-        ..RunConfig::default()
-    })
+    match args.get("config") {
+        Some(path) => RunConfig::from_config(&Config::load(path)?),
+        None => RunConfig::from_args(args),
+    }
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
@@ -133,6 +122,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
         println!("{}\n", figures::fig16_stream(&h, &cfg, 6, 0.2)?.0);
         println!("{}\n", figures::fig16_gpu_sweep(&h, &cfg, 12, 0.1, &[1, 2, 4])?.0);
     }
+    if want("fairness") {
+        println!("{}\n", figures::fig_fairness(&h, &cfg, 8, 0.1)?.0);
+    }
     if want("quality") {
         println!("{}\n", figures::quality_operating_points(&h));
     }
@@ -150,7 +142,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let ds = datasets::by_name(dataset, scale)?;
     let m = h.run(kind, &ds, &cfg)?;
     let s = m.latency.summary();
-    let rows = vec![
+    let mut rows = vec![
         vec!["f1_true".into(), format!("{:.4}", m.f1_true.f1())],
         vec!["f1_golden".into(), format!("{:.4}", m.f1_golden.f1())],
         vec!["wan_bytes".into(), format!("{:.0}", m.bandwidth.bytes)],
@@ -164,6 +156,26 @@ fn cmd_run(args: &Args) -> Result<()> {
         vec!["fog_regions".into(), m.fog_regions.to_string()],
         vec!["human_labels".into(), m.labels_used.to_string()],
     ];
+    if let Some(jain) = m.jain_fairness() {
+        rows.push(vec!["jain_fairness".into(), format!("{jain:.4}")]);
+    }
+    for tm in &m.tenants {
+        let ts = tm.latency.summary();
+        rows.push(vec![
+            format!("tenant_{}", tm.name),
+            format!(
+                "w={} chunks={} dropped={} f1={:.4} p50={:.3}s p99={:.3}s wan={:.0} billed={}",
+                tm.weight,
+                tm.chunks,
+                tm.chunks_dropped,
+                tm.f1.f1(),
+                ts.p50,
+                ts.p99,
+                tm.wan_bytes,
+                tm.billed_frames
+            ),
+        ]);
+    }
     println!(
         "{} on {dataset} (scale {scale})\n{}",
         kind.name(),

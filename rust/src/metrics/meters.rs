@@ -2,7 +2,7 @@
 //! per-run aggregate every pipeline returns.
 
 use crate::metrics::f1::F1Counts;
-use crate::util::stats::{Series, Summary};
+use crate::util::stats::{jain_index, Series, Summary};
 
 /// WAN bandwidth accounting (§VI-A: `b = Σ v_i / t`, normalized against
 /// the original-quality stream).
@@ -118,6 +118,39 @@ pub struct RunMetrics {
     /// are never scored, so `chunks + chunks_dropped` accounts for every
     /// admitted chunk.
     pub chunks_dropped: u64,
+    /// Per-tenant accounting (empty unless the run declared tenants via
+    /// `RunConfig::tenants`). Index = tenant id from the
+    /// `serverless::tenant::TenantRegistry`. Deliberately NOT part of
+    /// [`ContentFingerprint`]: a tenanted run that does not reorder work
+    /// must stay byte-identical to the untenanted pipeline.
+    pub tenants: Vec<TenantMetrics>,
+}
+
+/// One tenant's slice of a run: what was served, dropped, billed and how
+/// fresh it was. Mirrors the fleet-level fields of [`RunMetrics`] so
+/// per-tenant and fleet accounting can be cross-checked exactly.
+#[derive(Debug, Clone, Default)]
+pub struct TenantMetrics {
+    pub name: String,
+    /// Fair-share weight the scheduler used (copied from the registry so
+    /// reports are self-describing).
+    pub weight: f64,
+    pub chunks: u64,
+    pub chunks_dropped: u64,
+    pub chunks_degraded: u64,
+    pub f1: F1Counts,
+    pub wan_bytes: f64,
+    /// Billing proxy: detector frames of cloud-served (non-fallback)
+    /// chunks. The authoritative bill lives in the pool workers; this
+    /// attributes a per-tenant share of it.
+    pub billed_frames: u64,
+    pub latency: LatencyMeter,
+}
+
+impl TenantMetrics {
+    pub fn new(name: &str, weight: f64) -> Self {
+        TenantMetrics { name: name.to_string(), weight, ..Default::default() }
+    }
 }
 
 /// The facts of a run that must be invariant to *how* the pipeline
@@ -210,6 +243,19 @@ impl RunMetrics {
         }
     }
 
+    /// Jain's fairness index over weight-normalized per-tenant service
+    /// (`served chunks / weight`), in `[1/n, 1]`. `None` below two
+    /// tenants — fairness of a fleet with one (or no) tenant is
+    /// meaningless and would read as a perfect 1.0 in sweeps.
+    pub fn jain_fairness(&self) -> Option<f64> {
+        if self.tenants.len() < 2 {
+            return None;
+        }
+        let shares: Vec<f64> =
+            self.tenants.iter().map(|t| t.chunks as f64 / t.weight).collect();
+        Some(jain_index(&shares))
+    }
+
     /// Bandwidth normalized against a reference meter (MPEG original).
     pub fn normalized_bandwidth(&self, reference: &BandwidthMeter) -> f64 {
         if reference.bytes == 0.0 {
@@ -292,6 +338,32 @@ mod tests {
         let mut d = a.clone();
         d.labels_used = 1;
         assert_ne!(a.content_fingerprint().hash64(), d.content_fingerprint().hash64());
+    }
+
+    #[test]
+    fn jain_fairness_needs_two_tenants_and_normalizes_by_weight() {
+        let mut m = RunMetrics::new("vpaas", "drone");
+        assert_eq!(m.jain_fairness(), None);
+        m.tenants.push(TenantMetrics::new("solo", 1.0));
+        assert_eq!(m.jain_fairness(), None);
+        // weight-proportional service is perfectly fair ...
+        m.tenants = vec![TenantMetrics::new("gold", 3.0), TenantMetrics::new("silver", 1.0)];
+        m.tenants[0].chunks = 30;
+        m.tenants[1].chunks = 10;
+        assert!((m.jain_fairness().unwrap() - 1.0).abs() < 1e-12);
+        // ... and a starved tenant drags the index toward 1/n
+        m.tenants[1].chunks = 0;
+        assert!((m.jain_fairness().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tenant_metrics_stay_out_of_the_fingerprint() {
+        let mut a = RunMetrics::new("vpaas", "drone");
+        a.chunks = 4;
+        let mut b = a.clone();
+        b.tenants.push(TenantMetrics::new("gold", 2.0));
+        b.tenants[0].chunks = 4;
+        assert_eq!(a.content_fingerprint().hash64(), b.content_fingerprint().hash64());
     }
 
     #[test]

@@ -942,6 +942,83 @@ pub fn fig16_gpu_sweep(
     Ok((text, raw))
 }
 
+/// Multi-tenant fairness sweep: tenant weight mixes × arrival mixes on a
+/// shared pool under a binding SLO, the same cell matrix the committed
+/// `studies/tenant_fairness.toml` spec runs in CI (which emits the
+/// [`crate::study::StudyReport`] JSON as `BENCH_fairness.json`). Under a
+/// work-conserving fair queue total throughput is weight-invariant — what
+/// moves across cells is *who* eats the SLO drops and the tail latency,
+/// which is exactly what the Jain index over weight-normalized chunk
+/// shares and the per-tenant p99 columns surface.
+pub fn fig_fairness(
+    h: &Harness,
+    cfg: &RunConfig,
+    cameras: usize,
+    scale: f64,
+) -> Result<(String, study::StudyReport)> {
+    let spec = sweep_spec(
+        "tenant_fairness",
+        scale,
+        cameras,
+        cfg.seed,
+        vec![
+            Axis {
+                name: "tenants".into(),
+                values: vec![
+                    "gold:1+silver:1".into(),
+                    "gold:3+silver:1".into(),
+                    "off".into(),
+                ],
+            },
+            Axis {
+                name: "workload".into(),
+                values: vec!["uniform".into(), "bursty".into()],
+            },
+        ],
+    );
+    let base = RunConfig {
+        shards: 4,
+        wan_mbps: 60.0,
+        slo_ms: 12_000.0,
+        golden: false,
+        autoscale: false,
+        hitl_budget: 0.0,
+        drift: false,
+        dispatch: DispatchMode::Streaming,
+        ..cfg.clone()
+    };
+    let run = study::run_study(h, &spec, &base)?;
+    let report = run.report();
+    let fmt = |c: &study::CellStats, name: &str, digits: usize| match c.metric(name) {
+        Some(m) => format!("{:.*}", digits, m.mean),
+        None => "-".into(),
+    };
+    let rows: Vec<Vec<String>> = report
+        .cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.key.clone(),
+                fmt(c, "chunks", 0),
+                fmt(c, "chunks_dropped", 0),
+                fmt(c, "jain_fairness", 4),
+                fmt(c, "tenant_gold_chunks", 0),
+                fmt(c, "tenant_silver_chunks", 0),
+                fmt(c, "tenant_gold_p99_s", 2),
+                fmt(c, "tenant_silver_p99_s", 2),
+            ]
+        })
+        .collect();
+    let text = format!(
+        "Fairness — weighted-fair admission ({cameras} cameras, 4 shards, 12 s SLO)\n{}",
+        table(
+            &["cell", "chunks", "dropped", "jain", "gold", "silver", "gold_p99", "silver_p99"],
+            &rows
+        )
+    );
+    Ok((text, report))
+}
+
 // ------------------------------------------------- bench JSON artifacts
 // The `BENCH_*.json` encoders live next to the sweeps that produce the
 // rows so the CLI, the bench harness and the artifact schema tests all

@@ -33,6 +33,7 @@ use crate::serverless::monitor::GlobalMonitor;
 use crate::serverless::policy::Route;
 use crate::serverless::registry::FunctionRegistry;
 use crate::serverless::scheduler::{FogShardPool, ShardConfig};
+use crate::serverless::tenant::{chunk_cost, FairQueue, TenantRegistry};
 use crate::serving::batcher::DynamicBatcher;
 use crate::sim::device;
 use crate::sim::human::{Annotator, AnnotatorConfig};
@@ -145,6 +146,14 @@ pub struct RunConfig {
     /// Poisson-like bursts, or mid-run churn (`fig16_stream` sweeps all
     /// three against the dispatch modes).
     pub workload: WorkloadProfile,
+    /// The run's tenants (CLI `--tenants`, config `[tenants]`, study axis
+    /// `tenants`). Empty (the default) runs the untenanted pipeline.
+    /// With ≥ 2 tenants the wave-formation → admission seam reorders each
+    /// wave by start-time fair queueing
+    /// ([`FairQueue`](crate::serverless::tenant::FairQueue)); per-tenant
+    /// accounting lands in `RunMetrics::tenants` either way. See
+    /// [`crate::serverless::tenant`] for the spec grammar and model.
+    pub tenants: TenantRegistry,
     pub seed: u64,
     pub protocol: ProtocolConfig,
 }
@@ -165,6 +174,7 @@ impl Default for RunConfig {
             ladder: Quality::LADDER.to_vec(),
             dispatch: DispatchMode::default(),
             workload: WorkloadProfile::default(),
+            tenants: TenantRegistry::default(),
             seed: 0xCAFE,
             protocol: ProtocolConfig::default(),
         }
@@ -176,6 +186,83 @@ impl RunConfig {
     /// disabled).
     pub fn slo_s(&self) -> f64 {
         self.slo_ms / 1e3
+    }
+
+    /// Build a run config from a sectioned config file — the same
+    /// sections [`crate::serverless::VideoApp::from_config`] reads, so
+    /// every CLI-reachable knob has a config-file path (asserted by
+    /// `tests/config_parity.rs`): `[net] wan_mbps`, `[hitl] budget`,
+    /// `[app] seed | dispatch | slo_ms | ladder | workload | shards |
+    /// drift | golden`, `[cloud] gpus | autoscale`, and a `[tenants]`
+    /// section.
+    pub fn from_config(cfg: &crate::util::config::Config) -> Result<RunConfig> {
+        let base = RunConfig::default();
+        let ladder = match cfg.get("app", "ladder") {
+            Some(spec) => codec::parse_ladder(spec)?,
+            None => base.ladder.clone(),
+        };
+        let dispatch = match cfg.get("app", "dispatch") {
+            Some(d) => DispatchMode::parse(d)
+                .ok_or_else(|| anyhow::anyhow!("[app] dispatch: unknown mode {d:?}"))?,
+            None => base.dispatch,
+        };
+        let workload = match cfg.get("app", "workload") {
+            Some(w) => WorkloadProfile::parse(w)
+                .ok_or_else(|| anyhow::anyhow!("[app] workload: unknown profile {w:?}"))?,
+            None => base.workload,
+        };
+        Ok(RunConfig {
+            wan_mbps: cfg.f64_or("net", "wan_mbps", base.wan_mbps)?,
+            hitl_budget: cfg.f64_or("hitl", "budget", base.hitl_budget)?,
+            seed: cfg.usize_or("app", "seed", base.seed as usize)? as u64,
+            shards: cfg.usize_or("app", "shards", base.shards)?,
+            gpus: cfg.usize_or("cloud", "gpus", base.gpus)?,
+            autoscale: cfg.bool_or("cloud", "autoscale", base.autoscale)?,
+            slo_ms: cfg.f64_or("app", "slo_ms", base.slo_ms)?,
+            drift: cfg.bool_or("app", "drift", base.drift)?,
+            golden: cfg.bool_or("app", "golden", false)?,
+            ladder,
+            dispatch,
+            workload,
+            tenants: TenantRegistry::from_config(cfg)?,
+            ..base
+        })
+    }
+
+    /// Build a run config from parsed CLI arguments — the `vpaas run` /
+    /// `vpaas figures` flag surface (`--wan --budget --no-drift --golden
+    /// --shards --gpus --slo-ms --ladder --seed --workload --dispatch
+    /// --tenants`). Lives next to [`RunConfig::from_config`] so the two
+    /// input paths cover the same knobs; `tests/config_parity.rs` holds
+    /// them to that.
+    pub fn from_args(args: &crate::util::cli::Args) -> Result<RunConfig> {
+        let workload_name = args.get_or("workload", "uniform");
+        let workload = WorkloadProfile::parse(workload_name).ok_or_else(|| {
+            anyhow::anyhow!("unknown workload {workload_name:?} (uniform|bursty|churn)")
+        })?;
+        // SLO degrade ladder: `default` (the multi-rung Quality::LADDER),
+        // `single` (legacy one-step), or an explicit `r:qp,...` rung list
+        let ladder = codec::parse_ladder(args.get_or("ladder", "default"))?;
+        let dispatch_name = args.get_or("dispatch", "event");
+        let dispatch = DispatchMode::parse(dispatch_name).ok_or_else(|| {
+            anyhow::anyhow!("unknown dispatch mode {dispatch_name:?} (event|sequential|streaming)")
+        })?;
+        let tenants = TenantRegistry::parse(args.get_or("tenants", "off"))?;
+        Ok(RunConfig {
+            wan_mbps: args.get_f64("wan", 15.0)?,
+            hitl_budget: args.get_f64("budget", 0.2)?,
+            drift: !args.flag("no-drift"),
+            golden: args.flag("golden"),
+            shards: args.get_usize("shards", 1)?,
+            gpus: args.get_usize("gpus", 1)?,
+            slo_ms: args.get_f64("slo-ms", f64::INFINITY)?,
+            ladder,
+            seed: args.get_u64("seed", 0xCAFE)?,
+            workload,
+            dispatch,
+            tenants,
+            ..RunConfig::default()
+        })
     }
 }
 
@@ -357,7 +444,12 @@ impl Harness {
             p,
             global_chunk: 0,
             remaining_chunks: Vec::new(),
+            // armed only for a fair multi-tenant registry (≥ 2 tenants,
+            // not `fifo` mode) — the hard gate behind single-tenant runs
+            // staying byte-identical to the untenanted pipeline
+            fair: FairQueue::new(&cfg.tenants),
         };
+        cfg.tenants.init_metrics(&mut run.metrics);
 
         // Multi-camera concurrency: videos stream at once, offset on the
         // run timeline by the workload profile's arrival plan (uniform
@@ -475,9 +567,22 @@ impl Harness {
         Ok(())
     }
 
-    /// Stamp one wave's chunks into routed [`ChunkJob`]s, in capture
-    /// order: assign the global drift angle, then the least-backlog shard
-    /// and the deployment policy's route at the wave's dispatch time.
+    /// Stamp one wave's chunks into routed [`ChunkJob`]s. Three phases:
+    ///
+    /// 1. **Capture order** — assign each chunk's global drift angle, its
+    ///    tenant (and any per-tenant SLO override), then the
+    ///    least-backlog shard and the deployment policy's route at the
+    ///    wave's dispatch time (the routing RNG and `tier.routed`
+    ///    counters must advance in capture order regardless of tenancy).
+    /// 2. **Fair reorder** — with a fair multi-tenant registry, the
+    ///    [`FairQueue`] permutes the wave into start-tag order; admission
+    ///    order is resource-acquisition order at every hop, so this is
+    ///    where a bursty tenant queues behind its share. Untenanted (and
+    ///    `fifo`) runs skip this phase entirely.
+    /// 3. **Admission order** — SLO admission walks the jobs in their
+    ///    final order: project each chunk's freshness, degrade to the
+    ///    highest feasible ladder rung, or refuse it outright.
+    ///
     /// Shared by the wave-scoped and streaming drivers; under streaming
     /// the backlogs read here are mid-stream (earlier waves still in
     /// flight).
@@ -499,6 +604,8 @@ impl Harness {
             run.global_chunk += 1;
             let mut job = ChunkJob::new(chunk, phi, offsets[vi]);
             job.dispatch_at = dispatch_at.max(job.captured());
+            job.tenant = run.cfg.tenants.tenant_of(vi);
+            job.slo_override = run.cfg.tenants.slo_s_for(job.tenant);
             let wan_up = !run.topo.wan_up.is_down(job.dispatch_at);
             let cloud_wait = run.cloud.queue_wait();
             // the policy sees the same cloud projection term SLO
@@ -509,18 +616,26 @@ impl Harness {
                 run.pool.decide(job.dispatch_at, wan_up, cloud_wait, cloud_projected);
             job.shard = shard;
             job.route = route;
-            // SLO admission (inert for a non-finite target): project the
-            // chunk's freshness on the cloud path, then search the rate
-            // ladder greedily — keep the standard low quality if its
-            // projection meets the SLO, otherwise uplink at the highest
-            // feasible rung, and refuse the chunk when even the lowest
-            // rung misses.
-            if slo_s.is_finite() && route == Route::Cloud {
+            jobs.push(job);
+        }
+        if let Some(fair) = &mut run.fair {
+            fair.schedule(&mut jobs, |j| j.tenant, |j| chunk_cost(j.chunk.frames.len(), j.route));
+        }
+        // SLO admission (inert for a non-finite target, per-tenant
+        // overrides included): project the chunk's freshness on the cloud
+        // path, then search the rate ladder greedily — keep the standard
+        // low quality if its projection meets the SLO, otherwise uplink
+        // at the highest feasible rung, and refuse the chunk when even
+        // the lowest rung misses.
+        let mut admitted = Vec::with_capacity(jobs.len());
+        for mut job in jobs {
+            let eff_slo = job.effective_slo(slo_s);
+            if eff_slo.is_finite() && job.route == Route::Cloud {
                 let fog_backlog = run.pool.shard_backlog(job.shard, job.dispatch_at);
                 let plan = plan_uplink(
                     run.cfg.protocol.low_quality,
                     &run.cfg.ladder,
-                    slo_s,
+                    eff_slo,
                     |q| project_freshness(&run.p, &run.topo, fog_backlog, &run.cloud, &job, q),
                 );
                 match plan {
@@ -531,14 +646,17 @@ impl Harness {
                     }
                     UplinkPlan::Refuse => {
                         run.metrics.chunks_dropped += 1;
+                        if let Some(tm) = run.metrics.tenants.get_mut(job.tenant) {
+                            tm.chunks_dropped += 1;
+                        }
                         run.note_chunk_done(job.camera());
                         continue;
                     }
                 }
             }
-            jobs.push(job);
+            admitted.push(job);
         }
-        jobs
+        admitted
     }
 
     /// Dispatch one cross-camera wave through the event-driven executor:
@@ -581,13 +699,14 @@ impl Harness {
     ) -> Result<()> {
         run.cloud.observe(outcome.done, &mut run.monitor);
         run.cloud.autoscale(outcome.done, &run.monitor);
-        if job.stream_age(outcome.done) <= run.cfg.slo_s() {
+        if job.stream_age(outcome.done) <= job.effective_slo(run.cfg.slo_s()) {
             self.score_chunk(
                 &mut run.metrics,
                 &job.chunk,
                 &outcome.per_frame,
                 outcome.done,
                 job.phi,
+                job.tenant,
                 &run.cfg,
             )?;
         } else {
@@ -611,6 +730,7 @@ impl Harness {
         per_frame: &[Vec<PredBox>],
         done: f64,
         phi: f64,
+        tenant: usize,
         cfg: &RunConfig,
     ) -> Result<()> {
         let golden = if cfg.golden {
@@ -620,7 +740,13 @@ impl Harness {
         };
         for (fi, preds) in per_frame.iter().enumerate() {
             let gt = chunk.frames[fi].gt_boxes();
-            metrics.f1_true.merge(match_boxes(preds, &gt, 0.5));
+            let counts = match_boxes(preds, &gt, 0.5);
+            metrics.f1_true.merge(counts);
+            // per-tenant F1 slice (no-op on untenanted runs — baselines
+            // pass tenant 0 and have no tenant metrics slots)
+            if let Some(tm) = metrics.tenants.get_mut(tenant) {
+                tm.f1.merge(counts);
+            }
             if let Some(g) = &golden {
                 metrics.f1_golden.merge(match_boxes(preds, &g[fi], 0.5));
             }
@@ -685,7 +811,15 @@ impl Harness {
                         unreachable!("vpaas runs through the sharded scheduler")
                     }
                 };
-                self.score_chunk(&mut metrics, &chunk, &outcome.per_frame, outcome.done, phi, cfg)?;
+                self.score_chunk(
+                    &mut metrics,
+                    &chunk,
+                    &outcome.per_frame,
+                    outcome.done,
+                    phi,
+                    0,
+                    cfg,
+                )?;
                 video_len = video_len.max(chunk.t_capture + chunk.duration());
             }
             t_offset += video_len + 1.0;
@@ -867,6 +1001,9 @@ struct VpaasRun {
     /// Admitted chunks still outstanding per camera (index = video id);
     /// hits zero when the camera's stream ends — the churn drop point.
     remaining_chunks: Vec<u64>,
+    /// Weighted-fair admission state, persistent across waves; `None`
+    /// unless the registry arms it (≥ 2 tenants, fair mode).
+    fair: Option<FairQueue>,
 }
 
 impl VpaasRun {

@@ -31,6 +31,7 @@ use crate::serverless::executor::{ChunkJob, DispatchMode, Executor, StageCtx};
 use crate::serverless::monitor::GlobalMonitor;
 use crate::serverless::policy::{PolicyInput, PolicyManager, Route};
 use crate::serverless::registry::FunctionRegistry;
+use crate::serverless::tenant::TenantRegistry;
 use crate::sim::human::{Annotator, AnnotatorConfig};
 use crate::sim::net::Topology;
 use crate::sim::params::SimParams;
@@ -79,6 +80,11 @@ pub struct VideoApp {
     /// freshness projection meets the target, and is refused at admission
     /// when even the lowest rung misses.
     ladder: Vec<Quality>,
+    /// Tenant accounting (`[tenants]` section). The app drives a single
+    /// camera, so every chunk lands on camera slot 0's tenant — fairness
+    /// reordering needs the multi-camera pipeline driver, but per-tenant
+    /// metrics and SLO overrides apply here too.
+    tenants: TenantRegistry,
     chunks_processed: u64,
 }
 
@@ -141,13 +147,16 @@ impl VideoApp {
         });
         let policies = PolicyManager::with_standard_policies();
         policies.get(&policy_name).map_err(|e| anyhow!("config [app] policy: {e}"))?;
+        let tenants = TenantRegistry::from_config(cfg)?;
+        let mut metrics = RunMetrics::new("vpaas", "app");
+        tenants.init_metrics(&mut metrics);
         Ok(VideoApp {
             params,
             zoo: ModelZoo::with_standard_models(),
             functions: FunctionRegistry::with_standard_functions(),
             policies,
             monitor: GlobalMonitor::new(),
-            metrics: RunMetrics::new("vpaas", "app"),
+            metrics,
             svc,
             coordinator,
             cloud,
@@ -158,6 +167,7 @@ impl VideoApp {
             dispatch,
             slo_s: slo_ms / 1e3,
             ladder,
+            tenants,
             chunks_processed: 0,
         })
     }
@@ -209,11 +219,13 @@ impl VideoApp {
         };
         let mut job = ChunkJob::new(chunk.clone(), phi, t_offset);
         job.route = policy(input);
-        if self.slo_s.is_finite() && job.route == Route::Cloud {
-            let plan =
-                plan_uplink(self.coordinator.cfg.low_quality, &self.ladder, self.slo_s, |q| {
-                    project_freshness(p.as_ref(), &self.topo, fog_backlog, &self.cloud, &job, q)
-                });
+        job.tenant = self.tenants.tenant_of(0);
+        job.slo_override = self.tenants.slo_s_for(job.tenant);
+        let slo_s = job.effective_slo(self.slo_s);
+        if slo_s.is_finite() && job.route == Route::Cloud {
+            let plan = plan_uplink(self.coordinator.cfg.low_quality, &self.ladder, slo_s, |q| {
+                project_freshness(p.as_ref(), &self.topo, fog_backlog, &self.cloud, &job, q)
+            });
             match plan {
                 UplinkPlan::Standard => {}
                 UplinkPlan::Degrade(rung) => {
@@ -222,6 +234,9 @@ impl VideoApp {
                 }
                 UplinkPlan::Refuse => {
                     self.metrics.chunks_dropped += 1;
+                    if let Some(tm) = self.metrics.tenants.get_mut(job.tenant) {
+                        tm.chunks_dropped += 1;
+                    }
                     self.chunks_processed += 1;
                     self.monitor.count("chunks", 1);
                     self.cloud.observe(arrival, &mut self.monitor);
@@ -383,6 +398,30 @@ mod tests {
         let bad = Config::parse("[app]\nladder = nonsense\n").unwrap();
         let err = VideoApp::from_config(&bad).unwrap_err();
         assert!(err.to_string().contains("[app] ladder"), "{err}");
+    }
+
+    #[test]
+    fn tenants_section_plumbs_accounting_and_slo_override() {
+        let cfg = Config::parse("[tenants]\nacme = 3\nglobex = 1:1000\n").unwrap();
+        let mut a = VideoApp::from_config(&cfg).unwrap();
+        a.deploy_standard().unwrap();
+        // the registry is mirrored into per-tenant meters up front
+        assert_eq!(a.metrics.tenants.len(), 2);
+        assert_eq!(a.metrics.tenants[0].name, "acme");
+        assert_eq!(a.metrics.tenants[0].weight, 3.0);
+        let mut v = video(&a.params.clone());
+        let chunk = v.next_chunk().unwrap();
+        a.process_chunk(&chunk, 0.0).unwrap();
+        // the single camera lands on slot 0's tenant; its meter moves
+        assert_eq!(a.metrics.tenants[0].chunks + a.metrics.tenants[0].chunks_dropped, 1);
+        assert_eq!(a.metrics.tenants[1].chunks + a.metrics.tenants[1].chunks_dropped, 0);
+        // globex's 1000 ms override would bind if a chunk ever reached it;
+        // acme carries none, so the app-level (infinite) SLO applies
+        assert_eq!(a.tenants.slo_s_for(1), Some(1.0));
+        assert_eq!(a.tenants.slo_s_for(0), None);
+        // a malformed section is rejected loudly
+        let bad = Config::parse("[tenants]\nacme = -1\n").unwrap();
+        assert!(VideoApp::from_config(&bad).is_err());
     }
 
     #[test]

@@ -177,6 +177,13 @@ pub struct ChunkJob {
     /// Uplink quality forced by SLO admission (bypasses the registered
     /// `reencode_low` function's choice); `None` normally.
     pub quality_override: Option<Quality>,
+    /// Owning tenant (index into `RunMetrics::tenants` /
+    /// [`TenantRegistry`](crate::serverless::tenant::TenantRegistry));
+    /// 0 — the only tenant — on untenanted runs.
+    pub tenant: usize,
+    /// Per-tenant freshness-SLO override in seconds; `None` inherits the
+    /// run-level [`StageCtx::slo_s`].
+    pub slo_override: Option<f64>,
 }
 
 impl ChunkJob {
@@ -190,7 +197,15 @@ impl ChunkJob {
             shard: 0,
             route: Route::Cloud,
             quality_override: None,
+            tenant: 0,
+            slo_override: None,
         }
+    }
+
+    /// The freshness SLO binding this chunk: its tenant's override if one
+    /// was declared, the run-level default otherwise.
+    pub fn effective_slo(&self, run_slo_s: f64) -> f64 {
+        self.slo_override.unwrap_or(run_slo_s)
     }
 
     /// Freshness age of this chunk's stream at virtual time `done`: time
@@ -484,8 +499,9 @@ impl Executor {
                 // (falling back to least-wait); with no SLO the plain
                 // least-wait admission runs and the batch-plan cost is
                 // never computed.
-                let worker = if ctx.slo_s.is_finite() {
-                    let deadline = s.job.t_offset + s.job.chunk.t_capture + ctx.slo_s;
+                let slo_s = s.job.effective_slo(ctx.slo_s);
+                let worker = if slo_s.is_finite() {
+                    let deadline = s.job.t_offset + s.job.chunk.t_capture + slo_s;
                     let cost = ctx.cloud.detect_cost_s(n);
                     ctx.cloud.admit_within(at, deadline, cost)
                 } else {
@@ -638,10 +654,15 @@ impl Executor {
         // spends no annotator label budget, triggers no IL training,
         // contributes no latency sample and no served-chunk count, so
         // `latency.max() <= slo_s` holds for every scored chunk by
-        // construction. Non-finite slo_s (the default) never fires.
-        if s.job.stream_age(s.done) > ctx.slo_s {
+        // construction. Non-finite slo_s (the default) never fires. A
+        // tenant with its own SLO override is gated on that instead.
+        if s.job.stream_age(s.done) > s.job.effective_slo(ctx.slo_s) {
             ctx.metrics.bandwidth.add(s.wan_bytes);
             ctx.metrics.chunks_dropped += 1;
+            if let Some(tm) = ctx.metrics.tenants.get_mut(s.job.tenant) {
+                tm.wan_bytes += s.wan_bytes;
+                tm.chunks_dropped += 1;
+            }
             return Ok(());
         }
         if ctx.coord.hitl_enabled && !s.fallback {
@@ -676,7 +697,8 @@ impl Executor {
         ctx.metrics.bandwidth.add(s.wan_bytes);
         // a fallback chunk never uplinked, so an SLO override that was
         // planned but not exercised must not count as a degrade
-        if s.job.quality_override.is_some() && !s.fallback {
+        let degraded = s.job.quality_override.is_some() && !s.fallback;
+        if degraded {
             ctx.metrics.chunks_degraded += 1;
         }
         for i in 0..s.job.chunk.frames.len() {
@@ -685,6 +707,23 @@ impl Executor {
                 .record(s.done - (s.job.t_offset + s.job.chunk.frame_time(i)));
         }
         ctx.metrics.chunks += 1;
+        // per-tenant slice of the same accounting (absent on untenanted
+        // runs; every field mirrors a fleet-level one exactly)
+        if let Some(tm) = ctx.metrics.tenants.get_mut(s.job.tenant) {
+            tm.wan_bytes += s.wan_bytes;
+            if degraded {
+                tm.chunks_degraded += 1;
+            }
+            for i in 0..s.job.chunk.frames.len() {
+                tm.latency.record(s.done - (s.job.t_offset + s.job.chunk.frame_time(i)));
+            }
+            tm.chunks += 1;
+            if !s.fallback {
+                // billing proxy: cloud-served chunks bill one detector
+                // frame-invocation per frame (see TenantMetrics docs)
+                tm.billed_frames += s.job.chunk.frames.len() as u64;
+            }
+        }
         Ok(())
     }
 

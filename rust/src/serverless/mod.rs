@@ -20,6 +20,11 @@
 //! * [`scheduler`] — the sharded multi-fog scale-out: the fog tier's
 //!   [`pool::TierPool`] instantiation plus policy-driven cloud/fog
 //!   dispatch and the IL model fan-out.
+//! * [`tenant`] — multi-tenant fair admission: the
+//!   [`tenant::TenantRegistry`] (weights, camera slots, per-tenant SLO
+//!   overrides) and [`tenant::FairQueue`], start-time fair queueing that
+//!   reorders each dispatch wave between wave formation and
+//!   [`pool::TierPool`] admission.
 //! * [`app`] — the user-facing pipeline builder: the Fig. 14 code example
 //!   maps 1:1 onto this API (see `examples/retail_store.rs`).
 
@@ -31,6 +36,7 @@ pub mod policy;
 pub mod pool;
 pub mod registry;
 pub mod scheduler;
+pub mod tenant;
 
 pub use app::VideoApp;
 pub use dispatcher::Dispatcher;
@@ -40,3 +46,4 @@ pub use policy::{Policy, PolicyManager};
 pub use pool::{PoolWorker, TierPool, TierPoolConfig};
 pub use registry::{FunctionKind, FunctionRegistry, StageBody};
 pub use scheduler::{FogShardPool, ShardConfig};
+pub use tenant::{FairQueue, TenantRegistry, TenantSpec};

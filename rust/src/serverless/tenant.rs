@@ -1,0 +1,569 @@
+//! Multi-tenant fair admission: tenant identity plus weighted fair
+//! queueing between wave formation and `TierPool` admission.
+//!
+//! VPaaS is a platform — many developers' pipelines share one fog shard
+//! pool and one cloud GPU pool. Without arbitration every camera
+//! competes FIFO inside the pools, so a single bursty tenant parks its
+//! backlog in front of everyone else's. This module adds the missing
+//! layer:
+//!
+//! - [`TenantRegistry`] — who the tenants are (name, fair-share weight,
+//!   optional per-tenant SLO override) and which cameras belong to whom
+//!   (a round-robin slot pattern over camera ids). Parsed from
+//!   `--tenants` / `RunConfig::tenants` / a `[tenants]` config section.
+//! - [`FairQueue`] — start-time fair queueing (SFQ) over virtual service
+//!   time. Each chunk gets a start tag `S = max(V, F_t)`; its tenant's
+//!   finish tag advances by `cost / weight_t` and the global virtual
+//!   clock by `cost / Σweights`. Chunks are admitted to the pools in
+//!   start-tag order, so a tenant that races ahead of its share
+//!   accumulates finish-tag debt and queues behind everyone else's
+//!   fresher chunks.
+//! - [`chunk_cost`] — the DRF-style service cost. Cloud- and fog-routed
+//!   chunks consume different dominant resources (GPU detector frames
+//!   vs. the much cheaper fog classifier), so a fog-routed chunk charges
+//!   a fraction of a cloud frame; tenants whose demand diverges across
+//!   tiers are compared on what they actually consume.
+//!
+//! ## Fairness model (and its honest limits)
+//!
+//! The pools are non-preemptive and the virtual clock is driven by the
+//! capture timeline, so fairness acts **within each contention set** —
+//! the dispatch wave. `FairQueue::schedule` is a pure reorder of the
+//! wave's admission order: it never delays, drops or duplicates a chunk
+//! (work conservation is a permutation invariant, property-tested
+//! below), and per-tenant order is preserved because finish tags are
+//! monotone per tenant. Under contention (every member of a wave shares
+//! one dispatch instant and therefore ties on event time), admission
+//! order *is* resource-acquisition order at every hop — LAN, quality
+//! control, WAN uplink, GPU detect, fog classify — which is exactly
+//! where a bursty tenant used to win every tie.
+//!
+//! A registry with fewer than two tenants (or one in `fifo` mode —
+//! accounting without reordering, the baseline the starvation test
+//! compares against) never constructs a `FairQueue`, so single-tenant
+//! runs are byte-identical to the untenanted pipeline by construction.
+
+use anyhow::{bail, Result};
+
+use crate::metrics::{RunMetrics, TenantMetrics};
+use crate::serverless::policy::Route;
+use crate::util::config::Config;
+
+/// Relative service cost of one chunk for the fair queue, in cloud
+/// detector-frame equivalents. Fog-routed chunks skip the cloud GPU and
+/// bill only the lightweight fog classifier, so their dominant-resource
+/// share is a fraction of a cloud frame (DRF-style: tenants are charged
+/// on the resource they actually dominate).
+pub fn chunk_cost(frames: usize, route: Route) -> f64 {
+    match route {
+        Route::Cloud => frames as f64,
+        Route::Fog => frames as f64 * 0.25,
+    }
+}
+
+/// One declared tenant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Fair-share weight (> 0, finite). Defaults to 1.
+    pub weight: f64,
+    /// Optional per-tenant freshness SLO override in milliseconds;
+    /// `None` inherits the run-level `RunConfig::slo_ms`.
+    pub slo_ms: Option<f64>,
+}
+
+/// The run's tenants plus the camera→tenant mapping.
+///
+/// Spec grammar (CLI `--tenants`, study axis value, `RunConfig`):
+/// entries separated by `,` or `+` (study axis values use `+` because
+/// the axis list itself splits on commas); each entry is
+/// `name[*count][:weight[:slo_ms]]` — `count` repeats the tenant in the
+/// round-robin camera-slot pattern (so `burst*7+steady` gives the bursty
+/// tenant 7 of every 8 cameras) — or the token `fifo`, which keeps the
+/// registry (accounting, overrides, Jain index) but disables fair
+/// reordering: the FIFO baseline. `off` or an empty string parses to the
+/// empty, disabled registry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantRegistry {
+    tenants: Vec<TenantSpec>,
+    /// Round-robin slot pattern: `tenant_of(camera) = slots[camera % len]`.
+    slots: Vec<usize>,
+    /// `false` in `fifo` mode: account per tenant, never reorder.
+    fair: bool,
+}
+
+impl TenantRegistry {
+    /// Parse the spec grammar above. `""` and `"off"` yield the empty
+    /// (disabled) registry.
+    pub fn parse(spec: &str) -> Result<TenantRegistry> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "off" {
+            return Ok(TenantRegistry::default());
+        }
+        let mut reg = TenantRegistry { fair: true, ..Default::default() };
+        for entry in spec.split([',', '+']) {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                bail!("tenant spec {spec:?}: empty entry");
+            }
+            if entry == "fifo" {
+                reg.fair = false;
+                continue;
+            }
+            reg.push_entry(entry)?;
+        }
+        if reg.tenants.is_empty() {
+            bail!("tenant spec {spec:?} declares no tenants");
+        }
+        Ok(reg)
+    }
+
+    /// Read a `[tenants]` config section: each key is a tenant entry
+    /// (`name[*count]`), its value the `weight[:slo_ms]` tail (empty for
+    /// defaults); the reserved key `mode` selects `fair` (default) or
+    /// `fifo`. Keys arrive name-sorted (the config map is a BTreeMap),
+    /// which fixes the slot order deterministically. An absent section
+    /// yields the disabled registry.
+    pub fn from_config(cfg: &Config) -> Result<TenantRegistry> {
+        let keys: Vec<&str> = cfg.keys("tenants").collect();
+        if keys.is_empty() {
+            return Ok(TenantRegistry::default());
+        }
+        let mut reg = TenantRegistry { fair: true, ..Default::default() };
+        for key in keys {
+            let value = cfg.get("tenants", key).unwrap_or("");
+            if key == "mode" {
+                match value {
+                    "fair" => reg.fair = true,
+                    "fifo" => reg.fair = false,
+                    other => bail!("[tenants] mode: expected fair|fifo, got {other:?}"),
+                }
+                continue;
+            }
+            let entry =
+                if value.is_empty() { key.to_string() } else { format!("{key}:{value}") };
+            reg.push_entry(&entry)?;
+        }
+        if reg.tenants.is_empty() {
+            bail!("[tenants] section declares no tenants");
+        }
+        Ok(reg)
+    }
+
+    /// Parse one `name[*count][:weight[:slo_ms]]` entry into the
+    /// registry.
+    fn push_entry(&mut self, entry: &str) -> Result<()> {
+        let mut parts = entry.splitn(3, ':');
+        let head = parts.next().unwrap().trim();
+        let (name, count) = match head.split_once('*') {
+            None => (head, 1usize),
+            Some((n, c)) => {
+                let count: usize = c
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("tenant {head:?}: bad camera count {c:?}"))?;
+                if count == 0 {
+                    bail!("tenant {head:?}: camera count must be >= 1");
+                }
+                (n.trim(), count)
+            }
+        };
+        if name.is_empty() {
+            bail!("tenant entry {entry:?}: empty name");
+        }
+        if self.tenants.iter().any(|t| t.name == name) {
+            bail!("tenant {name:?} declared twice");
+        }
+        let weight = match parts.next() {
+            None => 1.0,
+            Some(w) => {
+                let w: f64 = w
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("tenant {name:?}: bad weight {w:?}"))?;
+                if !(w.is_finite() && w > 0.0) {
+                    bail!("tenant {name:?}: weight must be finite and > 0, got {w}");
+                }
+                w
+            }
+        };
+        let slo_ms = match parts.next() {
+            None => None,
+            Some(s) => {
+                let ms: f64 = s
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("tenant {name:?}: bad slo_ms {s:?}"))?;
+                if !(ms.is_finite() && ms > 0.0) {
+                    bail!("tenant {name:?}: slo_ms must be finite and > 0, got {ms}");
+                }
+                Some(ms)
+            }
+        };
+        let id = self.tenants.len();
+        self.tenants.push(TenantSpec { name: name.to_string(), weight, slo_ms });
+        self.slots.extend(std::iter::repeat(id).take(count));
+        Ok(())
+    }
+
+    /// No tenants declared — the pipeline runs exactly as before.
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn tenants(&self) -> &[TenantSpec] {
+        &self.tenants
+    }
+
+    pub fn get(&self, tenant: usize) -> &TenantSpec {
+        &self.tenants[tenant]
+    }
+
+    /// Whether fair reordering is armed: at least two tenants and not
+    /// `fifo` mode. Single-tenant registries keep accounting but can
+    /// never reorder — there is nothing to arbitrate.
+    pub fn fair_enabled(&self) -> bool {
+        self.fair && self.tenants.len() >= 2
+    }
+
+    /// Camera → tenant id via the round-robin slot pattern. Cameras of
+    /// an empty registry all map to tenant 0 (which has no metrics slot
+    /// — callers gate on `is_empty`).
+    pub fn tenant_of(&self, camera: usize) -> usize {
+        if self.slots.is_empty() {
+            return 0;
+        }
+        self.slots[camera % self.slots.len()]
+    }
+
+    /// Per-tenant SLO override in seconds, if declared.
+    pub fn slo_s_for(&self, tenant: usize) -> Option<f64> {
+        self.tenants.get(tenant).and_then(|t| t.slo_ms).map(|ms| ms / 1000.0)
+    }
+
+    /// Install one `TenantMetrics` slot per tenant on a fresh run.
+    pub fn init_metrics(&self, metrics: &mut RunMetrics) {
+        metrics.tenants =
+            self.tenants.iter().map(|t| TenantMetrics::new(&t.name, t.weight)).collect();
+    }
+
+    /// Canonical one-line form of the registry, parseable by
+    /// [`TenantRegistry::parse`] — the config-file and CLI paths
+    /// round-trip through this in the parity test.
+    pub fn spec_string(&self) -> String {
+        if self.tenants.is_empty() {
+            return "off".to_string();
+        }
+        let mut parts: Vec<String> = Vec::new();
+        if !self.fair {
+            parts.push("fifo".to_string());
+        }
+        for (id, t) in self.tenants.iter().enumerate() {
+            let count = self.slots.iter().filter(|&&s| s == id).count();
+            let mut s = t.name.clone();
+            if count != 1 {
+                s.push_str(&format!("*{count}"));
+            }
+            match t.slo_ms {
+                Some(ms) => s.push_str(&format!(":{}:{}", t.weight, ms)),
+                None if t.weight != 1.0 => s.push_str(&format!(":{}", t.weight)),
+                None => {}
+            }
+            parts.push(s);
+        }
+        parts.join("+")
+    }
+}
+
+/// Start-time fair queueing state, persistent across waves.
+///
+/// `schedule` reorders one wave's worth of jobs into start-tag order; see
+/// the module doc for the model. Constructed once per run via
+/// [`FairQueue::new`], which returns `None` whenever fairness cannot
+/// bind (fewer than two tenants, or `fifo` mode) — the hard gate behind
+/// the byte-identity guarantee for single-tenant runs.
+#[derive(Debug, Clone)]
+pub struct FairQueue {
+    /// Global virtual time: total service / total weight.
+    vtime: f64,
+    /// Per-tenant finish tags.
+    finish: Vec<f64>,
+    weights: Vec<f64>,
+    total_weight: f64,
+}
+
+impl FairQueue {
+    pub fn new(registry: &TenantRegistry) -> Option<FairQueue> {
+        if !registry.fair_enabled() {
+            return None;
+        }
+        let weights: Vec<f64> = registry.tenants().iter().map(|t| t.weight).collect();
+        let total_weight = weights.iter().sum();
+        Some(FairQueue { vtime: 0.0, finish: vec![0.0; weights.len()], weights, total_weight })
+    }
+
+    /// Reorder `items` (one contention set, in arrival order) into
+    /// weighted-fair admission order. Pure permutation: every item
+    /// survives exactly once, and two items of the same tenant never
+    /// swap (start tags are monotone per tenant; ties keep arrival
+    /// order).
+    pub fn schedule<T>(
+        &mut self,
+        items: &mut Vec<T>,
+        tenant_of: impl Fn(&T) -> usize,
+        cost_of: impl Fn(&T) -> f64,
+    ) {
+        if items.len() < 2 {
+            // still advance the clocks so later waves see the service
+            if let Some(item) = items.first() {
+                self.tag(tenant_of(item), cost_of(item));
+            }
+            return;
+        }
+        let mut order: Vec<(f64, usize)> = items
+            .iter()
+            .enumerate()
+            .map(|(idx, item)| (self.tag(tenant_of(item), cost_of(item)), idx))
+            .collect();
+        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        if order.iter().enumerate().all(|(pos, &(_, idx))| pos == idx) {
+            return; // identity — don't touch the vec
+        }
+        let mut slots: Vec<Option<T>> = items.drain(..).map(Some).collect();
+        items.extend(order.iter().map(|&(_, idx)| slots[idx].take().expect("unique index")));
+    }
+
+    /// Advance the virtual clocks for one item and return its start tag.
+    fn tag(&mut self, tenant: usize, cost: f64) -> f64 {
+        let cost = cost.max(0.0);
+        let start = self.vtime.max(self.finish[tenant]);
+        self.finish[tenant] = start + cost / self.weights[tenant];
+        self.vtime += cost / self.total_weight;
+        start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+    use crate::util::stats::jain_index;
+
+    #[test]
+    fn parses_weights_slots_and_overrides() {
+        let reg = TenantRegistry::parse("gold*3:2:5000, silver").unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.get(0).name, "gold");
+        assert_eq!(reg.get(0).weight, 2.0);
+        assert_eq!(reg.get(0).slo_ms, Some(5000.0));
+        assert_eq!(reg.get(1).weight, 1.0);
+        assert_eq!(reg.get(1).slo_ms, None);
+        // slot pattern: gold,gold,gold,silver repeating
+        let tenants: Vec<usize> = (0..8).map(|c| reg.tenant_of(c)).collect();
+        assert_eq!(tenants, vec![0, 0, 0, 1, 0, 0, 0, 1]);
+        assert_eq!(reg.slo_s_for(0), Some(5.0));
+        assert_eq!(reg.slo_s_for(1), None);
+        assert!(reg.fair_enabled());
+        // `+` separates like `,` (study axis values can't hold commas)
+        assert_eq!(TenantRegistry::parse("gold*3:2:5000+silver").unwrap(), reg);
+    }
+
+    #[test]
+    fn fifo_token_keeps_accounting_but_disarms_fairness() {
+        let reg = TenantRegistry::parse("fifo,burst*7,steady").unwrap();
+        assert_eq!(reg.len(), 2);
+        assert!(!reg.fair_enabled());
+        assert!(FairQueue::new(&reg).is_none());
+    }
+
+    #[test]
+    fn off_and_empty_disable_the_registry() {
+        for spec in ["", "off", "  "] {
+            let reg = TenantRegistry::parse(spec).unwrap();
+            assert!(reg.is_empty());
+            assert!(!reg.fair_enabled());
+            assert!(FairQueue::new(&reg).is_none());
+            assert_eq!(reg.tenant_of(5), 0);
+        }
+    }
+
+    #[test]
+    fn single_tenant_never_arms_the_queue() {
+        let reg = TenantRegistry::parse("solo:4").unwrap();
+        assert!(!reg.fair_enabled());
+        assert!(FairQueue::new(&reg).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "gold,gold",      // duplicate
+            "gold:0",         // zero weight
+            "gold:-1",        // negative weight
+            "gold:inf",       // non-finite weight
+            "gold:1:0",       // zero slo
+            "gold*0",         // zero cameras
+            "gold,,silver",   // empty entry
+            ":2",             // empty name
+            "fifo",           // mode without tenants
+        ] {
+            assert!(TenantRegistry::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn config_section_round_trips_through_spec_string() {
+        let cfg = Config::parse(
+            "[tenants]\nmode = fifo\nburst*7 = 2\nsteady = 1:4000\n",
+        )
+        .unwrap();
+        let reg = TenantRegistry::from_config(&cfg).unwrap();
+        assert!(!reg.fair_enabled());
+        assert_eq!(reg.len(), 2);
+        // BTreeMap ordering: burst*7 < steady
+        assert_eq!(reg.get(0).name, "burst");
+        assert_eq!(reg.get(1).slo_ms, Some(4000.0));
+        assert_eq!(TenantRegistry::parse(&reg.spec_string()).unwrap(), reg);
+        // absent section = disabled
+        let empty = Config::parse("[app]\nseed = 1\n").unwrap();
+        assert!(TenantRegistry::from_config(&empty).unwrap().is_empty());
+    }
+
+    #[test]
+    fn init_metrics_mirrors_the_registry() {
+        let reg = TenantRegistry::parse("gold:3,silver").unwrap();
+        let mut m = RunMetrics::new("vpaas", "drone");
+        reg.init_metrics(&mut m);
+        assert_eq!(m.tenants.len(), 2);
+        assert_eq!(m.tenants[0].name, "gold");
+        assert_eq!(m.tenants[0].weight, 3.0);
+        assert_eq!(m.tenants[1].name, "silver");
+    }
+
+    #[test]
+    fn fog_route_costs_a_fraction_of_cloud() {
+        assert_eq!(chunk_cost(8, Route::Cloud), 8.0);
+        assert_eq!(chunk_cost(8, Route::Fog), 2.0);
+    }
+
+    #[test]
+    fn backlogged_tenant_queues_behind_fresh_one() {
+        let reg = TenantRegistry::parse("burst,steady").unwrap();
+        let mut q = FairQueue::new(&reg).unwrap();
+        // wave 1: the bursty tenant floods 4 chunks before steady's one
+        let mut wave: Vec<(usize, u64)> =
+            vec![(0, 0), (0, 1), (0, 2), (0, 3), (1, 0)];
+        q.schedule(&mut wave, |&(t, _)| t, |_| 8.0);
+        // start tags: burst 0,8,16,24 / steady 16 — steady overtakes
+        // burst's last chunk (tie at 16 keeps arrival order) while
+        // burst's own order holds
+        assert_eq!(wave, vec![(0, 0), (0, 1), (0, 2), (1, 0), (0, 3)]);
+        // wave 2: the debt persists — steady goes first outright
+        let mut wave2: Vec<(usize, u64)> = vec![(0, 4), (0, 5), (1, 1)];
+        q.schedule(&mut wave2, |&(t, _)| t, |_| 8.0);
+        assert_eq!(wave2[0], (1, 1));
+    }
+
+    #[test]
+    fn weights_bias_the_interleave() {
+        let reg = TenantRegistry::parse("gold:3,silver:1").unwrap();
+        let mut q = FairQueue::new(&reg).unwrap();
+        // strict alternation arriving; gold's weight lets it run 3 chunks
+        // per silver chunk, so silver's later chunks sink
+        let mut wave: Vec<(usize, u64)> =
+            vec![(0, 0), (1, 0), (0, 1), (1, 1), (0, 2), (1, 2), (0, 3), (1, 3)];
+        q.schedule(&mut wave, |&(t, _)| t, |_| 4.0);
+        let gold_served_before_silver_2 = wave
+            .iter()
+            .take_while(|&&j| j != (1, 2))
+            .filter(|&&(t, _)| t == 0)
+            .count();
+        assert!(
+            gold_served_before_silver_2 >= 3,
+            "weight-3 tenant should front-run: {wave:?}"
+        );
+    }
+
+    #[test]
+    fn equal_weights_alternating_arrivals_are_identity() {
+        let reg = TenantRegistry::parse("a,b").unwrap();
+        let mut q = FairQueue::new(&reg).unwrap();
+        for wave_len in [4usize, 2, 6] {
+            let mut wave: Vec<(usize, u64)> =
+                (0..wave_len).map(|i| (i % 2, i as u64)).collect();
+            let want = wave.clone();
+            q.schedule(&mut wave, |&(t, _)| t, |_| 8.0);
+            assert_eq!(wave, want, "balanced round-robin must not reorder");
+        }
+    }
+
+    // ---------------------------------------------------- property tests
+
+    #[test]
+    fn prop_jain_index_stays_in_unit_interval() {
+        prop_check(300, 0x7E4A_17, |g| {
+            let n = g.usize_in(1, 12);
+            let xs: Vec<f64> = (0..n).map(|_| g.f64_range(0.0, 1e6)).collect();
+            let j = jain_index(&xs);
+            let lo = 1.0 / n as f64;
+            prop_assert!(
+                j >= lo - 1e-9 && j <= 1.0 + 1e-9,
+                "jain {j} outside [{lo}, 1] for {xs:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_schedule_conserves_work_and_per_tenant_order() {
+        prop_check(200, 0xFA1_55, |g| {
+            let n_tenants = g.usize_in(2, 5);
+            let spec = (0..n_tenants)
+                .map(|i| format!("t{}:{}", i, g.usize_in(1, 9)))
+                .collect::<Vec<_>>()
+                .join(",");
+            let reg = TenantRegistry::parse(&spec).unwrap();
+            let mut q = FairQueue::new(&reg).unwrap();
+            let mut fifo_total = 0usize;
+            let mut fair_total = 0usize;
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(1, 6) {
+                let mut wave: Vec<(usize, u64, f64)> = g.vec(12, |g| {
+                    next_id += 1;
+                    (g.usize_in(0, n_tenants - 1), next_id, g.f64_range(0.5, 16.0))
+                });
+                let before = wave.clone();
+                fifo_total += before.len();
+                q.schedule(&mut wave, |&(t, _, _)| t, |&(_, _, c)| c);
+                fair_total += wave.len();
+                // work conservation: same multiset (ids are unique)
+                let mut a: Vec<u64> = before.iter().map(|j| j.1).collect();
+                let mut b: Vec<u64> = wave.iter().map(|j| j.1).collect();
+                a.sort_unstable();
+                b.sort_unstable();
+                prop_assert!(a == b, "chunks lost or duplicated: {before:?} -> {wave:?}");
+                // per-tenant FIFO preserved
+                for t in 0..n_tenants {
+                    let was: Vec<u64> =
+                        before.iter().filter(|j| j.0 == t).map(|j| j.1).collect();
+                    let now: Vec<u64> =
+                        wave.iter().filter(|j| j.0 == t).map(|j| j.1).collect();
+                    prop_assert!(
+                        was == now,
+                        "tenant {t} reordered internally: {was:?} -> {now:?}"
+                    );
+                }
+            }
+            prop_assert!(
+                fifo_total == fair_total,
+                "admitted {fair_total} != fifo {fifo_total}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -38,22 +38,38 @@ pub fn gate_tolerances() -> [(&'static str, f64); 5] {
 
 /// The per-trial metric vector every cell aggregates. `wall_clock_s` is
 /// the only entry that varies between repeats of a cell; everything else
-/// is a deterministic function of the cell's seed + config.
-pub fn metric_values(m: &RunMetrics, wall_s: f64) -> Vec<(&'static str, f64)> {
+/// is a deterministic function of the cell's seed + config. Multi-tenant
+/// runs append the Jain fairness index and a per-tenant block; untenanted
+/// runs keep the exact legacy vector, so their reports stay byte-stable.
+pub fn metric_values(m: &RunMetrics, wall_s: f64) -> Vec<(String, f64)> {
     let s = m.latency.summary();
-    vec![
-        ("f1_true", m.f1_true.f1()),
-        ("wan_bytes", m.bandwidth.bytes),
-        ("latency_p50_s", s.p50),
-        ("latency_p99_s", s.p99),
-        ("cost_units", m.cost.units()),
-        ("chunks", m.chunks as f64),
-        ("chunks_degraded", m.chunks_degraded as f64),
-        ("chunks_dropped", m.chunks_dropped as f64),
-        ("labels_used", m.labels_used as f64),
-        ("makespan_s", m.makespan),
-        ("wall_clock_s", wall_s),
-    ]
+    let mut out: Vec<(String, f64)> = vec![
+        ("f1_true".into(), m.f1_true.f1()),
+        ("wan_bytes".into(), m.bandwidth.bytes),
+        ("latency_p50_s".into(), s.p50),
+        ("latency_p99_s".into(), s.p99),
+        ("cost_units".into(), m.cost.units()),
+        ("chunks".into(), m.chunks as f64),
+        ("chunks_degraded".into(), m.chunks_degraded as f64),
+        ("chunks_dropped".into(), m.chunks_dropped as f64),
+        ("labels_used".into(), m.labels_used as f64),
+        ("makespan_s".into(), m.makespan),
+        ("wall_clock_s".into(), wall_s),
+    ];
+    if let Some(jain) = m.jain_fairness() {
+        out.push(("jain_fairness".into(), jain));
+    }
+    for tm in &m.tenants {
+        let ts = tm.latency.summary();
+        out.push((format!("tenant_{}_chunks", tm.name), tm.chunks as f64));
+        out.push((format!("tenant_{}_dropped", tm.name), tm.chunks_dropped as f64));
+        out.push((format!("tenant_{}_f1", tm.name), tm.f1.f1()));
+        out.push((format!("tenant_{}_p50_s", tm.name), ts.p50));
+        out.push((format!("tenant_{}_p99_s", tm.name), ts.p99));
+        out.push((format!("tenant_{}_wan_bytes", tm.name), tm.wan_bytes));
+        out.push((format!("tenant_{}_billed", tm.name), tm.billed_frames as f64));
+    }
+    out
 }
 
 /// One metric's within-cell distribution.
@@ -107,8 +123,8 @@ pub fn build(run: &StudyRun) -> StudyReport {
     for cell in 0..run.plan.cells {
         let trials: Vec<_> = run.trials.iter().filter(|t| t.cell == cell).collect();
         let head = trials.first().expect("non-empty cell");
-        let names: Vec<&'static str> =
-            metric_values(&head.metrics, head.wall_s).iter().map(|(n, _)| *n).collect();
+        let names: Vec<String> =
+            metric_values(&head.metrics, head.wall_s).into_iter().map(|(n, _)| n).collect();
         let mut series: Vec<Series> = names.iter().map(|_| Series::new()).collect();
         for t in &trials {
             for (i, (_, v)) in metric_values(&t.metrics, t.wall_s).iter().enumerate() {
@@ -119,7 +135,7 @@ pub fn build(run: &StudyRun) -> StudyReport {
             .iter()
             .zip(&series)
             .map(|(name, s)| MetricStats {
-                name: name.to_string(),
+                name: name.clone(),
                 n: s.len(),
                 mean: s.mean(),
                 std: s.std(),

@@ -26,6 +26,9 @@
 //! # each list is one axis; cells = cartesian product
 //! [axes]
 //! gpus = 1, 2, 4, 8
+//! # a `tenants` axis sweeps tenant registries; entries join with `+`
+//! # so each spec stays one comma-free list token (`off` = untenanted)
+//! # tenants = gold:3+silver:1, off
 //!
 //! # reduced overrides selected under VPAAS_BENCH_SMOKE / --smoke
 //! [smoke]
@@ -38,12 +41,13 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::pipeline::{RunConfig, SystemKind};
 use crate::serverless::executor::DispatchMode;
+use crate::serverless::tenant::TenantRegistry;
 use crate::sim::video::{codec, WorkloadProfile};
 use crate::util::config::Config;
 
 /// Axis/override keys the runner knows how to apply. `system` selects the
 /// pipeline under test; every other key writes one [`RunConfig`] field.
-pub const KNOWN_AXES: [&str; 11] = [
+pub const KNOWN_AXES: [&str; 12] = [
     "autoscale",
     "dispatch",
     "drift",
@@ -53,6 +57,7 @@ pub const KNOWN_AXES: [&str; 11] = [
     "shards",
     "slo_ms",
     "system",
+    "tenants",
     "wan_mbps",
     "workload",
 ];
@@ -233,6 +238,9 @@ pub fn apply_axis(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()> {
                 .ok_or_else(|| anyhow!("axis dispatch: unknown mode {value:?}"))?;
         }
         "ladder" => cfg.ladder = codec::parse_ladder(value)?,
+        // tenant specs use `+` between entries so an axis value stays one
+        // comma-free token ([axes] lists split on commas)
+        "tenants" => cfg.tenants = TenantRegistry::parse(value)?,
         "shards" => cfg.shards = parse_usize("shards", value)?,
         "gpus" => cfg.gpus = parse_usize("gpus", value)?,
         "slo_ms" => cfg.slo_ms = parse_f64("slo_ms", value)?,
@@ -346,11 +354,15 @@ gpus = 1, 2
         apply_axis(&mut cfg, "workload", "bursty").unwrap();
         apply_axis(&mut cfg, "dispatch", "streaming").unwrap();
         apply_axis(&mut cfg, "ladder", "single").unwrap();
+        apply_axis(&mut cfg, "tenants", "gold:3+silver:1").unwrap();
         assert_eq!((cfg.gpus, cfg.shards), (4, 8));
         assert!(cfg.slo_ms.is_infinite());
         assert_eq!(cfg.wan_mbps, 200.0);
         assert!(!cfg.drift && !cfg.autoscale);
         assert_eq!(cfg.ladder.len(), 1);
+        assert_eq!(cfg.tenants.len(), 2);
+        assert!(cfg.tenants.fair_enabled());
+        assert!(apply_axis(&mut cfg, "tenants", "bad::").is_err());
         assert!(apply_axis(&mut cfg, "system", "dds").is_err());
         assert!(apply_axis(&mut cfg, "nope", "1").is_err());
     }

@@ -349,6 +349,26 @@ pub fn welch_t_test(
     WelchTest { t, df, p: t_two_sided_p(t, df) }
 }
 
+/// Jain's fairness index over per-entity allocations: `(Σx)² / (n·Σx²)`.
+///
+/// Ranges from `1/n` (one entity gets everything) to `1.0` (perfectly
+/// even). The degenerate all-zero allocation counts as perfectly fair —
+/// nobody was served, so nobody was favored. Used by
+/// [`crate::metrics::RunMetrics::jain_fairness`] over weight-normalized
+/// per-tenant service.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "jain_index of empty allocation");
+    for &x in xs {
+        assert!(x.is_finite() && x >= 0.0, "jain_index needs finite non-negative allocations");
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    sum * sum / (xs.len() as f64 * sq)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,6 +421,18 @@ mod tests {
             e.update(2.0);
         }
         assert!((e.get().unwrap() - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn jain_index_known_values() {
+        // perfectly even
+        assert!((jain_index(&[3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12);
+        // one entity takes everything: 1/n
+        assert!((jain_index(&[9.0, 0.0, 0.0]) - 1.0 / 3.0).abs() < 1e-12);
+        // hand-computed: (1+3)² / (2·(1+9)) = 16/20
+        assert!((jain_index(&[1.0, 3.0]) - 0.8).abs() < 1e-12);
+        // nothing served anywhere is fair, not NaN
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
     }
 
     // ------------------------------------------------- inference helpers

@@ -1,7 +1,8 @@
 //! Schema + round-trip tests for every emitted bench artifact:
 //! `BENCH_overlap.json`, `BENCH_stream.json`, `BENCH_gpu.json`,
 //! `BENCH_slo.json` (encoders in `pipeline::figures`, shared with the
-//! bench harness) and `BENCH_study.json` (`study::StudyReport`). Each
+//! bench harness) and `BENCH_study.json` / `BENCH_fairness.json` (both
+//! `study::StudyReport` documents). Each
 //! artifact is built from synthetic rows in both its smoke- and
 //! full-sized shape, parsed back with the crate's JSON parser, and
 //! checked field by field — so a schema drift breaks here, not in the CI
@@ -216,4 +217,113 @@ fn study_artifact_schema_and_roundtrip() {
         .clone();
     assert!(m.get("ci95").unwrap().is_null(), "n=1 must not fabricate a CI");
     assert_eq!(StudyReport::from_json(&text).unwrap(), single);
+}
+
+#[test]
+fn fairness_artifact_schema_and_roundtrip() {
+    // BENCH_fairness.json is the StudyReport of studies/tenant_fairness.toml:
+    // tenanted cells append jain_fairness plus a tenant_<name>_* metric
+    // block after the legacy vector; the untenanted `off` control cells
+    // (full shape only) carry the legacy metrics alone. Metric order
+    // inside a cell is part of the schema.
+    let metric = |name: &str, n: usize, mean: f64| MetricStats {
+        name: name.into(),
+        n,
+        mean,
+        std: 0.01,
+        ci95: if n >= 2 { Some(0.02) } else { None },
+    };
+    let cell = |idx: usize, key: &str, n: usize, tenanted: bool| CellStats {
+        cell: idx,
+        key: key.into(),
+        values: key
+            .split(',')
+            .map(|kv| {
+                let (k, v) = kv.split_once('=').unwrap();
+                (k.to_string(), v.to_string())
+            })
+            .collect(),
+        seed: 0xFA1_0000 + idx as u64,
+        fingerprint: 0xBEEF ^ idx as u64,
+        metrics: {
+            let mut ms = vec![metric("f1_true", n, 0.8), metric("latency_p99_s", n, 9.5)];
+            if tenanted {
+                ms.push(metric("jain_fairness", n, 0.64));
+                for t in ["gold", "silver"] {
+                    for suffix in
+                        ["chunks", "dropped", "f1", "p50_s", "p99_s", "wan_bytes", "billed"]
+                    {
+                        ms.push(metric(&format!("tenant_{t}_{suffix}"), n, 1.0));
+                    }
+                }
+            }
+            ms
+        },
+    };
+    // smoke shape: 2 repeats, tenanted cells only; full shape: 3 repeats
+    // plus the untenanted `off` control column
+    let tenant_axes =
+        ["tenants=gold:1+silver:1", "tenants=gold:3+silver:1"];
+    for (repeats, with_off) in [(2usize, false), (3, true)] {
+        let mut cells = Vec::new();
+        for workload in ["uniform", "bursty"] {
+            for axis in tenant_axes {
+                let key = format!("{axis},workload={workload}");
+                cells.push(cell(cells.len(), &key, repeats, true));
+            }
+            if with_off {
+                let key = format!("tenants=off,workload={workload}");
+                cells.push(cell(cells.len(), &key, repeats, false));
+            }
+        }
+        let report = StudyReport {
+            study: "tenant_fairness".into(),
+            system: "vpaas".into(),
+            dataset: "drone".into(),
+            scale: if with_off { 0.1 } else { 0.05 },
+            cameras: 8,
+            repeats,
+            base_seed: 0xFA1,
+            seed_mode: "per_cell".into(),
+            cells,
+        };
+        let text = report.to_json();
+        let doc = parse(&text);
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("study"));
+        assert_eq!(doc.get("study").and_then(Json::as_str), Some("tenant_fairness"));
+        let cells = doc.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), if with_off { 6 } else { 4 });
+        for c in cells {
+            let key = c.get("key").and_then(Json::as_str).unwrap();
+            let names: Vec<&str> = c
+                .get("metrics")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|m| m.get("name").and_then(Json::as_str).unwrap())
+                .collect();
+            if key.starts_with("tenants=off") {
+                // the control column must stay on the legacy vector
+                assert!(
+                    names.iter().all(|n| !n.starts_with("tenant_") && *n != "jain_fairness"),
+                    "untenanted cell {key:?} grew tenant metrics: {names:?}"
+                );
+            } else {
+                assert!(names.contains(&"jain_fairness"), "{key:?} lost jain: {names:?}");
+                for t in ["gold", "silver"] {
+                    for suffix in
+                        ["chunks", "dropped", "f1", "p50_s", "p99_s", "wan_bytes", "billed"]
+                    {
+                        let want = format!("tenant_{t}_{suffix}");
+                        assert!(names.iter().any(|n| *n == want), "{key:?} lost {want}");
+                    }
+                }
+                // tenant block sits after the legacy metrics, jain first
+                let jain_at = names.iter().position(|n| *n == "jain_fairness").unwrap();
+                assert!(names[..jain_at].iter().all(|n| !n.starts_with("tenant_")));
+            }
+        }
+        // the gate consumes the parse-back path
+        assert_eq!(StudyReport::from_json(&text).unwrap(), report);
+    }
 }

@@ -1,0 +1,101 @@
+//! CLI ↔ config-file parity for the run configuration: every
+//! [`RunConfig`] knob must be reachable from both input paths —
+//! `RunConfig::from_args` (the `vpaas run` / `vpaas figures` flag
+//! surface) and `RunConfig::from_config` (the sectioned config file the
+//! `--config` flag and the Fig. 14 deployment style read) — and
+//! equivalent inputs must produce equal configs. A knob added to one
+//! path but not the other breaks here.
+
+use vpaas::pipeline::RunConfig;
+use vpaas::serverless::executor::DispatchMode;
+use vpaas::sim::video::{Quality, WorkloadProfile};
+use vpaas::util::cli::Args;
+use vpaas::util::config::Config;
+
+fn args(s: &str) -> Args {
+    Args::parse(s.split_whitespace().map(|s| s.to_string()))
+}
+
+#[test]
+fn defaults_agree_across_both_paths() {
+    let from_cli = RunConfig::from_args(&args("run")).unwrap();
+    let from_file = RunConfig::from_config(&Config::parse("").unwrap()).unwrap();
+    assert_eq!(from_cli.wan_mbps, from_file.wan_mbps);
+    assert_eq!(from_cli.hitl_budget, from_file.hitl_budget);
+    assert_eq!(from_cli.drift, from_file.drift);
+    assert_eq!(from_cli.golden, from_file.golden);
+    assert_eq!(from_cli.shards, from_file.shards);
+    assert_eq!(from_cli.gpus, from_file.gpus);
+    assert!(from_cli.slo_ms.is_infinite() && from_file.slo_ms.is_infinite());
+    assert_eq!(from_cli.ladder, from_file.ladder);
+    assert_eq!(from_cli.dispatch, from_file.dispatch);
+    assert_eq!(from_cli.workload, from_file.workload);
+    assert_eq!(from_cli.tenants, from_file.tenants);
+    assert_eq!(from_cli.seed, from_file.seed);
+}
+
+#[test]
+fn every_knob_reaches_runconfig_from_both_paths() {
+    let cli = RunConfig::from_args(&args(
+        "run --wan 42 --budget 0.35 --no-drift --golden --shards 6 --gpus 3 \
+         --slo-ms 9000 --ladder 0.75:38,0.5:44 --seed 0xBEEF --workload bursty \
+         --dispatch streaming --tenants gold*3:2:5000,silver",
+    ))
+    .unwrap();
+    let file = RunConfig::from_config(
+        &Config::parse(
+            "[net]\nwan_mbps = 42\n\
+             [hitl]\nbudget = 0.35\n\
+             [app]\ndrift = false\ngolden = true\nshards = 6\nslo_ms = 9000\n\
+             ladder = 0.75:38, 0.5:44\nseed = 48879\nworkload = bursty\n\
+             dispatch = streaming\n\
+             [cloud]\ngpus = 3\n\
+             [tenants]\ngold*3 = 2:5000\nsilver =\n",
+        )
+        .unwrap(),
+    )
+    .unwrap();
+
+    // the individual values landed...
+    assert_eq!(cli.wan_mbps, 42.0);
+    assert_eq!(cli.hitl_budget, 0.35);
+    assert!(!cli.drift && cli.golden);
+    assert_eq!((cli.shards, cli.gpus), (6, 3));
+    assert_eq!(cli.slo_ms, 9000.0);
+    assert_eq!(cli.ladder, vec![Quality::new(0.75, 38.0), Quality::new(0.5, 44.0)]);
+    assert_eq!(cli.seed, 0xBEEF);
+    assert_eq!(cli.workload, WorkloadProfile::Bursty);
+    assert_eq!(cli.dispatch, DispatchMode::Streaming);
+    assert_eq!(cli.tenants.len(), 2);
+    assert_eq!(cli.tenants.get(0).name, "gold");
+    assert_eq!(cli.tenants.get(0).weight, 2.0);
+    assert_eq!(cli.tenants.get(0).slo_ms, Some(5000.0));
+    assert!(cli.tenants.fair_enabled());
+
+    // ...and both paths agree knob for knob
+    assert_eq!(cli.wan_mbps, file.wan_mbps);
+    assert_eq!(cli.hitl_budget, file.hitl_budget);
+    assert_eq!(cli.drift, file.drift);
+    assert_eq!(cli.golden, file.golden);
+    assert_eq!(cli.shards, file.shards);
+    assert_eq!(cli.gpus, file.gpus);
+    assert_eq!(cli.slo_ms, file.slo_ms);
+    assert_eq!(cli.ladder, file.ladder);
+    assert_eq!(cli.dispatch, file.dispatch);
+    assert_eq!(cli.workload, file.workload);
+    assert_eq!(cli.seed, file.seed);
+    assert_eq!(cli.tenants, file.tenants);
+}
+
+#[test]
+fn bad_values_error_on_both_paths() {
+    assert!(RunConfig::from_args(&args("run --workload warp")).is_err());
+    assert!(RunConfig::from_args(&args("run --dispatch warp")).is_err());
+    assert!(RunConfig::from_args(&args("run --ladder nonsense")).is_err());
+    assert!(RunConfig::from_args(&args("run --tenants gold:0")).is_err());
+    let bad = |text: &str| RunConfig::from_config(&Config::parse(text).unwrap());
+    assert!(bad("[app]\nworkload = warp\n").is_err());
+    assert!(bad("[app]\ndispatch = warp\n").is_err());
+    assert!(bad("[app]\nladder = nonsense\n").is_err());
+    assert!(bad("[tenants]\ngold = 0\n").is_err());
+}

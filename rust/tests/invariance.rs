@@ -12,6 +12,11 @@
 //!   for every planned chunk exactly, and a non-binding finite SLO (the
 //!   machinery enabled but never firing) reproduces the disabled-SLO run
 //!   byte for byte.
+//! * **Tenant axis** — tenancy that cannot bind must be byte-invisible:
+//!   single-tenant and `fifo`-mode registries (queue never armed) and an
+//!   armed equal-weight balanced registry (identity permutation) all
+//!   reproduce the untenanted run's fingerprint, makespan and latency
+//!   bits exactly, while per-tenant accounting still runs.
 //! * **Retirement sweep** — the defensive end-of-run `retire_all` sweep
 //!   retires zero sessions on every built-in workload profile (per-chunk
 //!   retirement must not hide behind it).
@@ -20,8 +25,9 @@
 
 use vpaas::pipeline::{Harness, RunConfig, SystemKind};
 use vpaas::serverless::executor::DispatchMode;
+use vpaas::serverless::TenantRegistry;
 use vpaas::sim::video::chunk::FRAMES_PER_CHUNK;
-use vpaas::sim::video::datasets::{self, DatasetSpec};
+use vpaas::sim::video::datasets::{self, DatasetSpec, VideoSpec};
 use vpaas::sim::video::{Quality, WorkloadProfile};
 
 fn cameras(n: usize) -> DatasetSpec {
@@ -199,6 +205,101 @@ fn ladder_beats_single_step_degrade_at_a_binding_slo() {
         if s.count > 0 {
             assert!(s.max <= slo_s + 1e-9, "scored chunk missed the SLO: {} > {slo_s}", s.max);
         }
+    }
+}
+
+#[test]
+fn tenancy_without_contention_is_byte_invisible() {
+    let h = Harness::new().unwrap();
+    let ds = cameras(3);
+    // tenant registries that must never arm the fair queue: a single
+    // tenant (nothing to arbitrate) and a multi-tenant registry in
+    // `fifo` mode (accounting without reordering)
+    let variants = [
+        (DispatchMode::EventDriven, 1usize, 1usize),
+        (DispatchMode::Streaming, 2, 2),
+        (DispatchMode::Sequential, 1, 4),
+        (DispatchMode::Streaming, 4, 1),
+    ];
+    for (dispatch, shards, gpus) in variants {
+        let base = cfg(shards, gpus, dispatch, WorkloadProfile::Uniform);
+        let plain = h.run(SystemKind::Vpaas, &ds, &base).unwrap();
+        assert!(plain.chunks > 0);
+        for spec in ["solo", "fifo,a,b"] {
+            let tenanted = RunConfig {
+                tenants: TenantRegistry::parse(spec).unwrap(),
+                ..base.clone()
+            };
+            let m = h.run(SystemKind::Vpaas, &ds, &tenanted).unwrap();
+            assert_eq!(
+                m.content_fingerprint(),
+                plain.content_fingerprint(),
+                "{spec:?} on {}/{shards}/{gpus} changed run content",
+                dispatch.name(),
+            );
+            assert_eq!(plain.makespan.to_bits(), m.makespan.to_bits());
+            let (sa, sb) = (plain.latency.summary(), m.latency.summary());
+            assert_eq!(sa.count, sb.count);
+            assert_eq!(sa.mean.to_bits(), sb.mean.to_bits());
+            assert_eq!(sa.max.to_bits(), sb.max.to_bits());
+            // accounting still runs: every chunk lands in a tenant slot
+            let per_tenant: u64 = m.tenants.iter().map(|t| t.chunks).sum();
+            assert_eq!(per_tenant, m.chunks);
+            if spec == "solo" {
+                // a lone tenant has no fairness to measure
+                assert!(m.jain_fairness().is_none());
+                assert_eq!(m.tenants[0].chunks, m.chunks);
+            }
+        }
+    }
+}
+
+#[test]
+fn equal_weight_balanced_tenants_stay_byte_identical() {
+    // Two identical-length cameras, one per tenant, equal weights, no
+    // SLO: the capture plan alternates the tenants chunk for chunk, so
+    // the fair queue's start tags arrive already sorted — its reorder is
+    // the identity permutation and the armed queue must be byte-invisible
+    // (the strongest form of the "non-binding fairness changes nothing"
+    // guarantee, with the queue actually running rather than disabled).
+    let h = Harness::new().unwrap();
+    let ds = DatasetSpec {
+        name: "balanced",
+        videos: (0..2)
+            .map(|i| VideoSpec {
+                duration_s: 30.0, // exactly 4 full 15-keyframe chunks
+                density: 8.2,
+                speed: 0.4,
+                size_range: (1.0, 2.0),
+                class_skew: 0.5,
+                seed: 0xD201 + i as u64,
+            })
+            .collect(),
+    };
+    for (dispatch, shards, gpus) in
+        [(DispatchMode::EventDriven, 1usize, 1usize), (DispatchMode::Streaming, 2, 2)]
+    {
+        let base = cfg(shards, gpus, dispatch, WorkloadProfile::Uniform);
+        let plain = h.run(SystemKind::Vpaas, &ds, &base).unwrap();
+        let fair_cfg =
+            RunConfig { tenants: TenantRegistry::parse("a,b").unwrap(), ..base.clone() };
+        let fair = h.run(SystemKind::Vpaas, &ds, &fair_cfg).unwrap();
+        assert!(fair_cfg.tenants.fair_enabled(), "the queue must actually arm here");
+        assert_eq!(
+            fair.content_fingerprint(),
+            plain.content_fingerprint(),
+            "an equal-weight balanced registry reordered a run on {}/{shards}/{gpus}",
+            dispatch.name(),
+        );
+        assert_eq!(plain.makespan.to_bits(), fair.makespan.to_bits());
+        let (sa, sb) = (plain.latency.summary(), fair.latency.summary());
+        assert_eq!(sa.count, sb.count);
+        assert_eq!(sa.mean.to_bits(), sb.mean.to_bits());
+        assert_eq!(sa.max.to_bits(), sb.max.to_bits());
+        // perfectly balanced service → Jain index exactly 1
+        assert_eq!(fair.tenants[0].chunks, 4);
+        assert_eq!(fair.tenants[1].chunks, 4);
+        assert_eq!(fair.jain_fairness(), Some(1.0));
     }
 }
 
