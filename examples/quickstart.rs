@@ -61,8 +61,8 @@ fn main() -> anyhow::Result<()> {
     // detects with the lite model — no pipeline code changes.
     let v = harness.functions.bind(
         "detect",
-        StageBody::Detect(Arc::new(|cloud: &mut CloudServer, frames: &[Tensor], at: f64| {
-            cloud.detect_chunk(frames, at, "detector_lite")
+        StageBody::Detect(Arc::new(|cloud: &CloudServer, frames: &[Tensor]| {
+            cloud.detect_heads(frames, "detector_lite")
         })),
     )?;
     println!("\nrebound function `detect` -> detector_lite (v{v})");

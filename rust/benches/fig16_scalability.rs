@@ -2,10 +2,12 @@
 //! shard sweep (throughput at shard counts {1, 2, 4, 8}), the event-driven
 //! vs sequential dispatch comparison (`BENCH_overlap.json`), the
 //! run-scoped streaming vs wave-barrier vs sequential sweep across
-//! workload profiles (`BENCH_stream.json`), and the cloud GPU pool sweep
-//! at worker counts {1, 2, 4, 8} (`BENCH_gpu.json`) — all three JSON
-//! artifacts are uploaded by CI so the perf trajectory is visible per PR.
-//! The sweeps run as declarative studies (`vpaas::study`) and the JSON
+//! workload profiles (`BENCH_stream.json`), the cloud GPU pool sweep at
+//! worker counts {1, 2, 4, 8} (`BENCH_gpu.json`), and the worker-thread
+//! wall-clock sweep (`BENCH_par.json`, the only artifact measuring host
+//! time rather than the virtual clock) — the JSON artifacts are uploaded
+//! by CI so the perf trajectory is visible per PR. The virtual-time
+//! sweeps run as declarative studies (`vpaas::study`) and the JSON
 //! encoders live in `pipeline::figures`, shared with the schema tests.
 //!
 //! Set `VPAAS_BENCH_SMOKE=1` for the reduced CI configuration: fewer
@@ -124,6 +126,38 @@ fn main() {
         }
     } else {
         assert!(m4 < m1, "4-GPU pool never beat 1 GPU: {gpu_rows:?}");
+    }
+
+    // worker-thread wall-clock sweep: the one artifact timed on the host
+    // clock. fig16_par_sweep itself asserts the determinism contract —
+    // every thread count's content fingerprint is bit-identical — before
+    // any timing is reported. Smoke shrinks the fleet and drops the
+    // 8-thread point; wall-clock speedup assertions only run at the full
+    // shape, where the workload is big enough to amortize thread startup.
+    let (par_cams, par_scale) = if smoke { (8, 0.05) } else { (16, 0.1) };
+    let par_counts: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let (par_text, par_rows) =
+        figures::fig16_par_sweep(&h, &cfg, par_cams, par_scale, par_counts).unwrap();
+    println!("{par_text}");
+    let json = figures::par_json(par_cams, &par_rows);
+    std::fs::write("BENCH_par.json", &json).expect("write BENCH_par.json");
+    println!("wrote BENCH_par.json: {json}");
+    let w1 = par_rows.iter().find(|r| r.threads == 1).expect("1-thread row").wall_s;
+    if smoke {
+        if !par_rows.iter().any(|r| r.threads > 1 && r.wall_s < w1) {
+            println!("WARN: no wall-clock win from threads at smoke scale: {par_rows:?}");
+        }
+    } else {
+        // the tentpole claim: at the full bench shape every multi-thread
+        // point is strictly faster than single-threaded on the wall clock
+        for r in par_rows.iter().filter(|r| r.threads > 1) {
+            assert!(
+                r.wall_s < w1,
+                "{} threads did not beat 1 thread on the wall clock: {} vs {w1}",
+                r.threads,
+                r.wall_s
+            );
+        }
     }
 
     // SLO/cost frontier: freshness target × degrade ladder, as JSON;

@@ -188,24 +188,27 @@ impl CloudServer {
         }
     }
 
-    /// Run the heavy detector over a chunk's frames (each `[A, D]`),
-    /// dynamic-batched into compiled buckets. Returns per-frame heads and
-    /// the completion time on the virtual clock.
-    pub fn detect_chunk(
-        &mut self,
+    /// Pure detector math over a chunk's frames (each `[A, D]`),
+    /// dynamic-batched into compiled buckets: build padded `[b, A, D]`
+    /// inputs, run `{artifact_prefix}_b{b}`, slice back per-frame heads
+    /// (padding rows are dropped). Touches no virtual-clock, billing or
+    /// planner state — that is [`CloudServer::account_detect`]'s half — so
+    /// it takes `&self` and is safe to fan out across worker threads
+    /// ([`crate::util::par`]): the heads are a pure function of `frames`
+    /// because the reference detector computes every grid cell
+    /// independently, making batch composition and thread count
+    /// unobservable in the output.
+    pub fn detect_heads(
+        &self,
         frames: &[Tensor],
-        arrival: f64,
         artifact_prefix: &str,
-    ) -> Result<(Vec<HeadsOwned>, ExecTiming)> {
+    ) -> Result<Vec<HeadsOwned>> {
         if frames.is_empty() {
             bail!("empty chunk");
         }
         let (a, d) = (self.grid * self.grid, self.feat_dim);
-        let plan = self.planner.plan(frames.len());
+        let plan = plan_batches(frames.len(), &self.cfg.batch_buckets);
         let mut heads = Vec::with_capacity(frames.len());
-        let mut t_done = arrival;
-        let mut t_start = f64::INFINITY;
-        let mut wait_total = 0.0;
         let mut offset = 0;
         for b in plan {
             let take = b.min(frames.len() - offset);
@@ -229,14 +232,43 @@ impl CloudServer {
                     num_classes: k,
                 });
             }
+            offset += take;
+        }
+        Ok(heads)
+    }
+
+    /// The timing/billing half of a chunk detect: occupy GPUs for each
+    /// bucket of the dynamic batch plan, record planner padding stats and
+    /// bill the frames. `detect_heads` + `account_detect` is bit-identical
+    /// to the legacy combined [`CloudServer::detect_chunk`] — the executor
+    /// uses the split form so prefetched (possibly parallel) head math can
+    /// be accounted later, at the chunk's `CloudDetect` event time.
+    pub fn account_detect(&mut self, n_frames: usize, arrival: f64) -> ExecTiming {
+        let plan = self.planner.plan(n_frames);
+        let mut t_done = arrival;
+        let mut t_start = f64::INFINITY;
+        let mut wait_total = 0.0;
+        for b in plan {
             let timing = self.schedule(arrival, self.device.batched(self.device.detect_s, b));
             t_done = t_done.max(timing.done);
             t_start = t_start.min(timing.start);
             wait_total += timing.queue_wait;
-            offset += take;
         }
-        self.billing.detector_frames += frames.len() as u64;
-        Ok((heads, ExecTiming { start: t_start, done: t_done, queue_wait: wait_total }))
+        self.billing.detector_frames += n_frames as u64;
+        ExecTiming { start: t_start, done: t_done, queue_wait: wait_total }
+    }
+
+    /// Run the heavy detector over a chunk's frames (each `[A, D]`),
+    /// dynamic-batched into compiled buckets. Returns per-frame heads and
+    /// the completion time on the virtual clock.
+    pub fn detect_chunk(
+        &mut self,
+        frames: &[Tensor],
+        arrival: f64,
+        artifact_prefix: &str,
+    ) -> Result<(Vec<HeadsOwned>, ExecTiming)> {
+        let heads = self.detect_heads(frames, artifact_prefix)?;
+        Ok((heads, self.account_detect(frames.len(), arrival)))
     }
 
     /// CloudSeg's extra stage: super-resolve a chunk's frames, billing one
@@ -715,6 +747,32 @@ mod tests {
             .cloned()
             .fold(f32::MIN, f32::max);
         assert!(max_loc > 0.5, "no confident anchors: {max_loc}");
+    }
+
+    #[test]
+    fn detect_heads_is_pure_and_matches_detect_chunk() {
+        let (svc, p, frames) = setup();
+        let mut cloud = CloudServer::new(
+            svc.handle(),
+            CloudConfig::default(),
+            p.grid,
+            p.num_classes,
+            p.feat_dim,
+        );
+        let pure = cloud.detect_heads(&frames, "detector").unwrap();
+        // the pure half must leave every accounting meter untouched
+        assert_eq!(cloud.billing.detector_frames, 0);
+        assert_eq!(cloud.earliest_free(), 0.0);
+        assert_eq!(cloud.padding_frac(), 0.0);
+        let (combined, timing) = cloud.detect_chunk(&frames, 1.0, "detector").unwrap();
+        assert!(timing.done > 1.0);
+        assert_eq!(cloud.billing.detector_frames, 5);
+        assert_eq!(pure.len(), combined.len());
+        for (a, b) in pure.iter().zip(&combined) {
+            assert_eq!(a.loc, b.loc);
+            assert_eq!(a.cls, b.cls);
+            assert_eq!(a.energy, b.energy);
+        }
     }
 
     #[test]

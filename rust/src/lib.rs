@@ -151,6 +151,28 @@
 //! `studies/tenant_fairness.toml` sweeps weight mixes × arrival mixes
 //! into `BENCH_fairness.json`.
 //!
+//! ## Parallel deterministic execution
+//!
+//! The event loop stays single-threaded (one virtual clock, one heap),
+//! but stage *bodies* — frame rendering, detector math, crop rendering —
+//! fan out across a `RunConfig::threads` worker pool
+//! ([`util::par::par_map`]), and each wave's cloud-bound frames are
+//! prefetched as contiguous slabs through the batched detector artifact
+//! variants so a full wave costs a few batched calls instead of one call
+//! per chunk. Thread count is a **pure wall-clock knob**: no RNG draw
+//! ever happens on a worker thread, parallel results merge back in input
+//! order, and admission/timing/billing still happen only at event time —
+//! so output is byte-identical at any thread count
+//! (`tests/invariance.rs` proves fingerprint, makespan *and* latency
+//! bits at threads ∈ {1, 2, 8}; the whole tier-1 suite re-runs under
+//! `VPAAS_THREADS=4` in CI). `BENCH_par.json`
+//! ([`pipeline::figures::fig16_par_sweep`]) tracks the host wall-clock
+//! speedup — the only bench artifact measured on the host clock rather
+//! than the virtual one. The full contract is written down in
+//! `ARCHITECTURE.md` ("Determinism model"); `README.md` has the
+//! quickstart and the `BENCH_*.json` glossary, and `docs/reference.md`
+//! the config grammars.
+//!
 //! ## Declarative scenario studies
 //!
 //! The [`study`] subsystem turns those sweeps into data: a declarative

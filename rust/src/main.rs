@@ -47,7 +47,7 @@ subcommands:
           [--scale 0.05] [--seed N]
   run     --system <vpaas|vpaas-nohitl|mpeg|dds|cloudseg|glimpse>
           --dataset <dashcam|drone|traffic> [--scale 0.05] [--wan 15]
-          [--budget 0.2] [--shards 1] [--gpus 1] [--slo-ms inf]
+          [--budget 0.2] [--shards 1] [--gpus 1] [--threads 1] [--slo-ms inf]
           [--ladder default|single|r:qp,...]
           [--no-drift] [--golden] [--workload uniform|bursty|churn]
           [--dispatch event|sequential|streaming]
@@ -121,6 +121,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
         println!("{}\n", figures::fig16_overlap(&h, &cfg, 6, 0.2, &[2, 4, 8])?.0);
         println!("{}\n", figures::fig16_stream(&h, &cfg, 6, 0.2)?.0);
         println!("{}\n", figures::fig16_gpu_sweep(&h, &cfg, 12, 0.1, &[1, 2, 4])?.0);
+        println!("{}\n", figures::fig16_par_sweep(&h, &cfg, 8, 0.05, &[1, 2, 4])?.0);
     }
     if want("fairness") {
         println!("{}\n", figures::fig_fairness(&h, &cfg, 8, 0.1)?.0);

@@ -942,6 +942,84 @@ pub fn fig16_gpu_sweep(
     Ok((text, raw))
 }
 
+// ------------------------------------------------- parallel wall-clock
+/// One `fig16_par_sweep` measurement: real (host) wall-clock time for the
+/// full pipeline at one worker-thread count. Unlike every other sweep row
+/// in this module, `wall_s` is *not* virtual time — it is what
+/// `RunConfig::threads` actually buys on this machine.
+#[derive(Debug, Clone, Copy)]
+pub struct ParRow {
+    pub threads: usize,
+    pub chunks: u64,
+    pub wall_s: f64,
+    pub chunks_per_s: f64,
+}
+
+/// Worker-thread wall-clock sweep: the same bursty fleet as
+/// [`fig16_gpu_sweep`] run at each thread count in `thread_counts`, timed
+/// with `std::time::Instant` around the whole run. This is deliberately
+/// *not* a declarative study — studies measure the simulated clock, which
+/// `threads` must never move. The sweep asserts exactly that: every run's
+/// [`RunMetrics::content_fingerprint`] must be bit-identical to the
+/// single-threaded reference before its timing is reported, so a speedup
+/// row is only ever produced for a provably-unchanged output. The bench
+/// writes the rows ([`par_json`]) to `BENCH_par.json` so raw-throughput
+/// regressions are tracked per PR.
+pub fn fig16_par_sweep(
+    h: &Harness,
+    cfg: &RunConfig,
+    cameras: usize,
+    scale: f64,
+    thread_counts: &[usize],
+) -> Result<(String, Vec<ParRow>)> {
+    let mut ds = datasets::drone(scale);
+    ds.videos.truncate(cameras);
+    let base = RunConfig {
+        shards: 8,
+        wan_mbps: 200.0,
+        golden: false,
+        autoscale: false,
+        hitl_budget: 0.0,
+        drift: false,
+        dispatch: DispatchMode::Streaming,
+        workload: WorkloadProfile::Bursty,
+        ..cfg.clone()
+    };
+    let mut raw: Vec<ParRow> = Vec::new();
+    let mut rows = Vec::new();
+    let mut reference = None;
+    for &threads in thread_counts {
+        let run_cfg = RunConfig { threads: threads.max(1), ..base.clone() };
+        let start = std::time::Instant::now();
+        let m = h.run(SystemKind::Vpaas, &ds, &run_cfg)?;
+        let wall_s = start.elapsed().as_secs_f64();
+        let fp = m.content_fingerprint();
+        match &reference {
+            None => reference = Some(fp),
+            Some(r) => anyhow::ensure!(
+                *r == fp,
+                "threads={threads} changed run content — determinism contract violated"
+            ),
+        }
+        let chunks_per_s = if wall_s > 0.0 { m.chunks as f64 / wall_s } else { 0.0 };
+        let speedup = raw.first().map_or(1.0, |first| first.wall_s / wall_s.max(1e-12));
+        raw.push(ParRow { threads, chunks: m.chunks, wall_s, chunks_per_s });
+        rows.push(vec![
+            threads.to_string(),
+            m.chunks.to_string(),
+            format!("{wall_s:.3}"),
+            format!("{chunks_per_s:.2}"),
+            format!("{speedup:.3}"),
+        ]);
+    }
+    let text = format!(
+        "Par — worker-thread wall-clock sweep ({cameras} cameras, bursty arrivals, 8 fog \
+         shards; output bit-identical at every point)\n{}",
+        table(&["threads", "chunks", "wall_s", "chunks/s", "speedup"], &rows)
+    );
+    Ok((text, raw))
+}
+
 /// Multi-tenant fairness sweep: tenant weight mixes × arrival mixes on a
 /// shared pool under a binding SLO, the same cell matrix the committed
 /// `studies/tenant_fairness.toml` spec runs in CI (which emits the
@@ -1080,6 +1158,26 @@ pub fn gpu_json(cameras: usize, rows: &[GpuRow]) -> String {
         .collect();
     format!(
         "{{\"bench\":\"fig16_gpu_sweep\",\"workload\":\"drone x{cameras} cameras, bursty, \
+         8 shards\",\"rows\":[{}]}}\n",
+        entries.join(",")
+    )
+}
+
+/// `BENCH_par.json` from [`fig16_par_sweep`] rows. The only `BENCH_*`
+/// artifact whose numbers are host wall-clock, not virtual time — compare
+/// `chunks_per_s` across thread counts, not across machines.
+pub fn par_json(cameras: usize, rows: &[ParRow]) -> String {
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"threads\":{},\"chunks\":{},\"wall_s\":{:.6},\"chunks_per_s\":{:.6}}}",
+                r.threads, r.chunks, r.wall_s, r.chunks_per_s
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"fig16_par_sweep\",\"workload\":\"drone x{cameras} cameras, bursty, \
          8 shards\",\"rows\":[{}]}}\n",
         entries.join(",")
     )

@@ -1,9 +1,13 @@
 //! End-to-end pipeline drivers: run any system over a dataset on the
 //! simulated testbed and collect every §VI metric.
 //!
-//! The [`Harness`] owns the shared PJRT inference service (one engine, as
-//! in the paper's single-cluster testbed) and is reused across runs so
-//! executable compilation is amortized.
+//! The [`Harness`] owns the shared PJRT inference service (a small pool
+//! of engine workers over one artifact set, standing in for the paper's
+//! single-cluster testbed) and is reused across runs so executable
+//! compilation is amortized. [`RunConfig::threads`] additionally fans the
+//! executor's heavy stage bodies out across worker threads — wall-clock
+//! speed only; content is byte-identical at any thread count (see
+//! ARCHITECTURE.md §Determinism model).
 //!
 //! VPaaS runs form cross-camera dispatch waves from the fleet's arrival
 //! plan ([`WorkloadProfile`]: uniform / bursty / churn) with a pure
@@ -154,8 +158,24 @@ pub struct RunConfig {
     /// accounting lands in `RunMetrics::tenants` either way. See
     /// [`crate::serverless::tenant`] for the spec grammar and model.
     pub tenants: TenantRegistry,
+    /// Worker threads for the executor's parallel stage bodies (frame /
+    /// crop rendering and the wave-batched detector prefetch). A pure
+    /// wall-clock knob: results are byte-identical at any value (asserted
+    /// by `tests/invariance.rs`), so it is *not* part of the content
+    /// fingerprint. Defaults to `VPAAS_THREADS` when set, else 1.
+    pub threads: usize,
     pub seed: u64,
     pub protocol: ProtocolConfig,
+}
+
+/// Default worker-thread count: the `VPAAS_THREADS` environment variable
+/// when set and ≥ 1, else 1. The env path lets CI run the whole test
+/// suite at a fixed thread count without touching every call site.
+pub(crate) fn default_threads() -> usize {
+    std::env::var("VPAAS_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map_or(1, |n| n.max(1))
 }
 
 impl Default for RunConfig {
@@ -175,6 +195,7 @@ impl Default for RunConfig {
             dispatch: DispatchMode::default(),
             workload: WorkloadProfile::default(),
             tenants: TenantRegistry::default(),
+            threads: default_threads(),
             seed: 0xCAFE,
             protocol: ProtocolConfig::default(),
         }
@@ -193,8 +214,8 @@ impl RunConfig {
     /// every CLI-reachable knob has a config-file path (asserted by
     /// `tests/config_parity.rs`): `[net] wan_mbps`, `[hitl] budget`,
     /// `[app] seed | dispatch | slo_ms | ladder | workload | shards |
-    /// drift | golden`, `[cloud] gpus | autoscale`, and a `[tenants]`
-    /// section.
+    /// threads | drift | golden`, `[cloud] gpus | autoscale`, and a
+    /// `[tenants]` section. See `docs/reference.md` for the full grammar.
     pub fn from_config(cfg: &crate::util::config::Config) -> Result<RunConfig> {
         let base = RunConfig::default();
         let ladder = match cfg.get("app", "ladder") {
@@ -211,11 +232,14 @@ impl RunConfig {
                 .ok_or_else(|| anyhow::anyhow!("[app] workload: unknown profile {w:?}"))?,
             None => base.workload,
         };
+        let threads = cfg.usize_or("app", "threads", base.threads)?;
+        anyhow::ensure!(threads >= 1, "[app] threads must be at least 1");
         Ok(RunConfig {
             wan_mbps: cfg.f64_or("net", "wan_mbps", base.wan_mbps)?,
             hitl_budget: cfg.f64_or("hitl", "budget", base.hitl_budget)?,
             seed: cfg.usize_or("app", "seed", base.seed as usize)? as u64,
             shards: cfg.usize_or("app", "shards", base.shards)?,
+            threads,
             gpus: cfg.usize_or("cloud", "gpus", base.gpus)?,
             autoscale: cfg.bool_or("cloud", "autoscale", base.autoscale)?,
             slo_ms: cfg.f64_or("app", "slo_ms", base.slo_ms)?,
@@ -232,9 +256,9 @@ impl RunConfig {
     /// Build a run config from parsed CLI arguments — the `vpaas run` /
     /// `vpaas figures` flag surface (`--wan --budget --no-drift --golden
     /// --shards --gpus --slo-ms --ladder --seed --workload --dispatch
-    /// --tenants`). Lives next to [`RunConfig::from_config`] so the two
-    /// input paths cover the same knobs; `tests/config_parity.rs` holds
-    /// them to that.
+    /// --tenants --threads`). Lives next to [`RunConfig::from_config`] so
+    /// the two input paths cover the same knobs; `tests/config_parity.rs`
+    /// holds them to that.
     pub fn from_args(args: &crate::util::cli::Args) -> Result<RunConfig> {
         let workload_name = args.get_or("workload", "uniform");
         let workload = WorkloadProfile::parse(workload_name).ok_or_else(|| {
@@ -248,6 +272,8 @@ impl RunConfig {
             anyhow::anyhow!("unknown dispatch mode {dispatch_name:?} (event|sequential|streaming)")
         })?;
         let tenants = TenantRegistry::parse(args.get_or("tenants", "off"))?;
+        let threads = args.get_usize("threads", default_threads())?;
+        anyhow::ensure!(threads >= 1, "--threads must be at least 1");
         Ok(RunConfig {
             wan_mbps: args.get_f64("wan", 15.0)?,
             hitl_budget: args.get_f64("budget", 0.2)?,
@@ -261,6 +287,7 @@ impl RunConfig {
             workload,
             dispatch,
             tenants,
+            threads,
             ..RunConfig::default()
         })
     }
@@ -407,7 +434,8 @@ impl Harness {
              for the legacy single-step controller)"
         );
         let p = self.params.clone();
-        let executor = Executor::from_registry(&self.functions, cfg.dispatch)?;
+        let executor =
+            Executor::from_registry(&self.functions, cfg.dispatch)?.with_threads(cfg.threads);
         let shards = cfg.shards.max(1);
         let shard_cfg = ShardConfig {
             initial_shards: shards,
@@ -532,7 +560,7 @@ impl Harness {
             let jobs = self.build_jobs(run, offsets, wave, dispatch_at);
             // SLO admission may have refused the whole wave
             if !jobs.is_empty() {
-                executor.admit_wave(&mut sess, jobs);
+                run.with_ctx(|ctx| executor.admit_wave(&mut sess, jobs, ctx))?;
             }
         }
         self.pump_stream(executor, &mut sess, run, f64::INFINITY)

@@ -148,8 +148,11 @@ fn sigmoid(v: f32) -> f32 {
 }
 
 /// Owns the reference backend and the compiled-plan cache. Kept `!Sync`-
-/// agnostic and single-threaded like the PJRT client it stands in for; see
-/// [`crate::runtime::service`] for the threaded front-end.
+/// agnostic and single-threaded like the PJRT client it stands in for;
+/// [`crate::runtime::service`] runs a small pool of these (one per worker
+/// thread, same manifest) behind one request channel, aggregating their
+/// per-model stats. Every kernel is a pure function of its inputs, so
+/// which engine in the pool serves a call is unobservable in the output.
 pub struct Engine {
     manifest: Manifest,
     weights: RefWeights,

@@ -1,15 +1,19 @@
 //! Model runtime: load the artifact manifest and execute models on the
 //! request path.
 //!
-//! * [`engine`] — single-threaded executor over `artifacts/manifest.txt`.
-//!   The PJRT/HLO backend is gated out in this environment (the `xla`
-//!   crate is not vendored); the engine runs a pure-Rust reference
+//! * [`engine`] — executor over `artifacts/manifest.txt`; each instance
+//!   is single-threaded, like the PJRT client it stands in for. The
+//!   PJRT/HLO backend is gated out in this environment (the `xla` crate
+//!   is not vendored); the engine runs a pure-Rust reference
 //!   implementation of the same model math, pinned to the JAX oracles in
 //!   `python/compile/kernels/ref.py`.
-//! * [`service`] — a dedicated inference thread + channel front-end (the
-//!   same shape a PJRT client requires, since it is `Rc`-based). Every
-//!   simulated device (cloud executor, fog shard, auto-trainer) holds a
-//!   cheap clonable [`service::InferenceHandle`].
+//! * [`service`] — a pool of engine threads behind one request channel
+//!   (the channel front-end is the same shape a PJRT client requires,
+//!   since it is `Rc`-based; the pool makes concurrent callers scale
+//!   instead of serializing). Every kernel is pure, so which engine
+//!   serves a call is unobservable. Every simulated device (cloud
+//!   executor, fog shard, auto-trainer) holds a cheap clonable
+//!   [`service::InferenceHandle`].
 //!
 //! Python never appears here: artifacts were exported once at build time.
 

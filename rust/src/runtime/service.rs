@@ -1,13 +1,24 @@
 //! Threaded inference front-end.
 //!
-//! `PjRtClient` is `Rc`-based and cannot cross threads, so one dedicated
-//! thread owns the [`Engine`] and serves requests from an mpsc channel —
-//! the same shape as a real serving runtime's executor thread. Handles are
-//! cheap to clone and `Send`, so the cloud executor pool, the fog executor
-//! and the auto-trainer can all share one engine (the paper co-locates
-//! training and inference on the same accelerator — Fig. 13b).
+//! `PjRtClient` is `Rc`-based and cannot cross threads, so the engines
+//! live on dedicated worker threads and serve requests from an mpsc
+//! channel — the same shape as a real serving runtime's executor pool.
+//! The service spawns a small fixed pool of workers (one [`Engine`] each,
+//! over the same artifact manifest), so concurrent `infer` calls — e.g.
+//! the executor's wave-prefetch detect slabs running on
+//! `RunConfig::threads` workers — execute in parallel instead of
+//! serializing behind one engine thread. The pool size is a host
+//! property (capped `available_parallelism`), never a run knob: engine
+//! math is pure per call, so neither the pool size nor which worker
+//! serves a request can affect any result. Handles are cheap to clone
+//! and `Send`, so the cloud executor pool, the fog executor and the
+//! auto-trainer all share the service (the paper co-locates training and
+//! inference on the same accelerator — Fig. 13b). Per-model stats
+//! aggregate across the pool, so [`InferenceHandle::stats`] reports
+//! fleet totals exactly as the single-engine service did.
 
-use std::sync::mpsc;
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
@@ -22,10 +33,13 @@ enum Request {
     Shutdown,
 }
 
+/// Pool-wide per-model stats, merged from every worker's engine.
+type SharedStats = Arc<Mutex<HashMap<String, ModelStats>>>;
+
 /// The owning service; keep it alive as long as handles are in use.
 pub struct InferenceService {
     tx: mpsc::Sender<Request>,
-    worker: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 /// Clonable, `Send` handle for submitting inference requests.
@@ -34,55 +48,34 @@ pub struct InferenceHandle {
     tx: mpsc::Sender<Request>,
 }
 
+/// Engine workers in the pool: enough for the executor's stage-body
+/// fan-out to overlap matmuls, bounded so a big host doesn't hoard
+/// threads. A host property, deliberately independent of
+/// `RunConfig::threads` (results cannot depend on either).
+fn pool_size() -> usize {
+    std::thread::available_parallelism().map_or(2, |n| n.get().clamp(2, 8))
+}
+
 impl InferenceService {
-    /// Spawn the engine thread over the repo's artifacts.
+    /// Spawn the engine worker pool over the repo's artifacts.
     pub fn start() -> Result<Self> {
-        // Build the engine on the caller thread first so startup errors
+        // Load the manifest on the caller thread so startup errors
         // (missing artifacts) surface synchronously...
         let dir = crate::interchange::artifacts_dir()?;
         let manifest = crate::interchange::Manifest::load(&dir)?;
         let (tx, rx) = mpsc::channel::<Request>();
-        let worker = std::thread::Builder::new()
-            .name("vpaas-inference".into())
-            .spawn(move || {
-                // ...but construct the non-Send PJRT client on its own thread.
-                let mut engine = match Engine::new(manifest) {
-                    Ok(e) => e,
-                    Err(err) => {
-                        // Fail every request with the construction error.
-                        for req in rx {
-                            match req {
-                                Request::Infer { reply, .. } => {
-                                    let _ = reply.send(Err(anyhow!("engine init failed: {err}")));
-                                }
-                                Request::Preload { reply, .. } => {
-                                    let _ = reply.send(Err(anyhow!("engine init failed: {err}")));
-                                }
-                                Request::Stats { reply, .. } => {
-                                    let _ = reply.send(ModelStats::default());
-                                }
-                                Request::Shutdown => break,
-                            }
-                        }
-                        return;
-                    }
-                };
-                for req in rx {
-                    match req {
-                        Request::Infer { model, inputs, reply } => {
-                            let _ = reply.send(engine.run(&model, &inputs));
-                        }
-                        Request::Preload { model, reply } => {
-                            let _ = reply.send(engine.load(&model));
-                        }
-                        Request::Stats { model, reply } => {
-                            let _ = reply.send(engine.stats(&model));
-                        }
-                        Request::Shutdown => break,
-                    }
-                }
-            })?;
-        Ok(InferenceService { tx, worker: Some(worker) })
+        let rx = Arc::new(Mutex::new(rx));
+        let stats: SharedStats = Arc::new(Mutex::new(HashMap::new()));
+        let mut workers = Vec::with_capacity(pool_size());
+        for i in 0..pool_size() {
+            let (manifest, rx, stats) = (manifest.clone(), rx.clone(), stats.clone());
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("vpaas-inference-{i}"))
+                    .spawn(move || serve(manifest, rx, stats))?,
+            );
+        }
+        Ok(InferenceService { tx, workers })
     }
 
     pub fn handle(&self) -> InferenceHandle {
@@ -90,10 +83,76 @@ impl InferenceService {
     }
 }
 
+/// One worker's serve loop: pull a request off the shared channel
+/// (releasing the lock before executing it, so the pool runs requests
+/// concurrently), run it on this worker's engine, and fold the engine's
+/// per-call stats delta into the pool-wide aggregate.
+fn serve(
+    manifest: crate::interchange::Manifest,
+    rx: Arc<Mutex<mpsc::Receiver<Request>>>,
+    stats: SharedStats,
+) {
+    // ...but construct the non-Send PJRT client on its own thread.
+    let mut engine = match Engine::new(manifest) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            crate::log_warn!("engine init failed: {err}");
+            None
+        }
+    };
+    loop {
+        let req = match rx.lock().expect("inference queue poisoned").recv() {
+            Ok(req) => req,
+            Err(_) => break, // service dropped the sender
+        };
+        match req {
+            Request::Infer { model, inputs, reply } => {
+                let _ = reply.send(match engine.as_mut() {
+                    Some(e) => {
+                        let before = e.stats(&model);
+                        let out = e.run(&model, &inputs);
+                        merge_delta(&stats, &model, before, e.stats(&model));
+                        out
+                    }
+                    None => Err(anyhow!("engine init failed")),
+                });
+            }
+            Request::Preload { model, reply } => {
+                let _ = reply.send(match engine.as_mut() {
+                    Some(e) => {
+                        let before = e.stats(&model);
+                        let out = e.load(&model);
+                        merge_delta(&stats, &model, before, e.stats(&model));
+                        out
+                    }
+                    None => Err(anyhow!("engine init failed")),
+                });
+            }
+            Request::Stats { model, reply } => {
+                let agg = stats.lock().expect("stats poisoned");
+                let _ = reply.send(agg.get(&model).copied().unwrap_or_default());
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+/// Fold one call's stats delta (this worker's engine, before vs after)
+/// into the pool aggregate.
+fn merge_delta(stats: &SharedStats, model: &str, before: ModelStats, after: ModelStats) {
+    let mut agg = stats.lock().expect("stats poisoned");
+    let slot = agg.entry(model.to_string()).or_default();
+    slot.invocations += after.invocations - before.invocations;
+    slot.wall_seconds += after.wall_seconds - before.wall_seconds;
+    slot.compile_seconds += after.compile_seconds - before.compile_seconds;
+}
+
 impl Drop for InferenceService {
     fn drop(&mut self) {
-        let _ = self.tx.send(Request::Shutdown);
-        if let Some(w) = self.worker.take() {
+        for _ in &self.workers {
+            let _ = self.tx.send(Request::Shutdown);
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -118,6 +177,8 @@ impl InferenceHandle {
         rx.recv().map_err(|_| anyhow!("inference service dropped request"))?
     }
 
+    /// Pool-aggregated stats for `model` (totals across every worker's
+    /// engine, so they read the same as the old single-engine service).
     pub fn stats(&self, model: &str) -> Result<ModelStats> {
         let (reply, rx) = mpsc::sync_channel(1);
         self.tx
@@ -148,6 +209,7 @@ mod tests {
             let out = t.join().unwrap();
             assert_eq!(out.len(), 3);
         }
+        // stats aggregate across the worker pool
         assert_eq!(h.stats("detector_b1").unwrap().invocations, 4);
     }
 
@@ -166,5 +228,27 @@ mod tests {
         let svc = InferenceService::start().unwrap();
         let h = svc.handle();
         assert!(h.infer("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn concurrent_results_are_bit_identical_to_serial() {
+        let svc = InferenceService::start().unwrap();
+        let h = svc.handle();
+        let x = Tensor::zeros(vec![1, 256, 24]);
+        let serial = h.infer("detector_b1", vec![x.clone()]).unwrap();
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let (h, x) = (h.clone(), x.clone());
+                std::thread::spawn(move || h.infer("detector_b1", vec![x]).unwrap())
+            })
+            .collect();
+        for t in threads {
+            let out = t.join().unwrap();
+            for (a, b) in out.iter().zip(&serial) {
+                assert_eq!(a.dims, b.dims);
+                let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(a), bits(b), "pool worker diverged from serial result");
+            }
+        }
     }
 }

@@ -85,6 +85,10 @@ pub struct VideoApp {
     /// reordering needs the multi-camera pipeline driver, but per-tenant
     /// metrics and SLO overrides apply here too.
     tenants: TenantRegistry,
+    /// Worker threads for the executor's parallel stage bodies (`[app]
+    /// threads`, default `VPAAS_THREADS` or 1). Wall-clock only — content
+    /// is byte-identical at any value.
+    threads: usize,
     chunks_processed: u64,
 }
 
@@ -148,6 +152,10 @@ impl VideoApp {
         let policies = PolicyManager::with_standard_policies();
         policies.get(&policy_name).map_err(|e| anyhow!("config [app] policy: {e}"))?;
         let tenants = TenantRegistry::from_config(cfg)?;
+        let threads = cfg.usize_or("app", "threads", crate::pipeline::default_threads())?;
+        if threads == 0 {
+            return Err(anyhow!("config [app] threads must be at least 1"));
+        }
         let mut metrics = RunMetrics::new("vpaas", "app");
         tenants.init_metrics(&mut metrics);
         Ok(VideoApp {
@@ -168,6 +176,7 @@ impl VideoApp {
             slo_s: slo_ms / 1e3,
             ladder,
             tenants,
+            threads,
             chunks_processed: 0,
         })
     }
@@ -199,7 +208,8 @@ impl VideoApp {
     /// (counted in `RunMetrics::chunks_dropped`) instead of being
     /// processed and dropped stale at the barrier.
     pub fn process_chunk(&mut self, chunk: &Chunk, t_offset: f64) -> Result<ChunkOutcome> {
-        let executor = Executor::from_registry(&self.functions, self.dispatch)?;
+        let executor =
+            Executor::from_registry(&self.functions, self.dispatch)?.with_threads(self.threads);
         let p = self.params.clone();
         // environmental-time drift: the world drifts over the deployment's
         // whole stream, not per camera — use the global chunk counter

@@ -68,21 +68,47 @@
 //! non-finite SLO (the default) all three mechanisms are inert and the
 //! pipeline is bit-identical to the pre-SLO system.
 //!
+//! ## Parallel stage bodies
+//!
+//! The event *loop* is single-threaded — one virtual clock, one heap —
+//! but the heavy stage *bodies* fan out across
+//! [`Executor::with_threads`] workers using the order-preserving
+//! [`par_map`]/[`try_par_map`] helpers. When a wave is dispatched (or
+//! admitted, in streaming mode) the executor *prefetches* the pure half
+//! of every cloud-routed job's detect path: it resolves the uplink
+//! quality the `reencode_low` function will pick, renders every frame in
+//! parallel, concatenates the wave's frames and runs the registered
+//! `detect` body over `threads` contiguous slabs — so a full wave costs
+//! a few large batched calls into the `detector_b4`/`b16` HLO variants
+//! instead of one small call per chunk. The resulting heads are parked
+//! on each job and consumed when its `CloudDetect` event fires; GPU
+//! *admission, timing and billing* still happen at event time on the
+//! virtual clock, so wall-clock parallelism never moves a virtual
+//! timestamp. Fog-side crop and fallback-frame rendering fan out the
+//! same way. This is safe because the detector is frozen (prefetched
+//! heads cannot observe incremental-learning updates that land at a
+//! later barrier) and every parallelized body is pure per item — see
+//! ARCHITECTURE.md §Determinism model for the full contract.
+//!
 //! ## Determinism
 //!
 //! Event order is (time, push-sequence); all content-bearing decisions
 //! (what is detected, classified, labeled, trained) happen either in pure
 //! stages or in wave-input order at the wave barrier, so runs are
 //! bit-reproducible per seed and label content is invariant to shard
-//! count and dispatch mode.
+//! count, dispatch mode *and worker-thread count*: no RNG draw ever
+//! happens on a worker thread, parallel results merge back in input
+//! order, and slab boundaries only regroup per-frame math that is
+//! row-independent by construction.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use anyhow::Result;
 
-use crate::cloud::CloudGpuPool;
+use crate::cloud::{CloudGpuPool, HeadsOwned};
 use crate::fog::FogNode;
+use crate::interchange::Tensor;
 use crate::metrics::f1::PredBox;
 use crate::metrics::meters::RunMetrics;
 use crate::protocol::coordinator::{ChunkOutcome, Coordinator};
@@ -97,6 +123,7 @@ use crate::sim::net::{Link, Topology};
 use crate::sim::params::SimParams;
 use crate::sim::video::codec;
 use crate::sim::video::{render_frame, render_region_crop, Chunk, Quality};
+use crate::util::par::{par_map, try_par_map};
 
 /// One step of the Fig. 6 protocol, as an event on the virtual clock.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -255,6 +282,12 @@ struct JobState {
     job: ChunkJob,
     /// Uplink quality chosen by the `reencode_low` function.
     quality: Quality,
+    /// Quality resolved ahead of time by the wave prefetch (override or
+    /// the registered encode body); consumed at `QualityControl`.
+    pre_quality: Option<Quality>,
+    /// Detector heads computed by the wave prefetch (pure math only);
+    /// consumed at `CloudDetect`, where admission/timing/billing happen.
+    pre_heads: Option<Vec<HeadsOwned>>,
     det_done: f64,
     /// WAN payload this chunk moved; accumulated into the run meter at the
     /// wave barrier so the float sum's order is event-schedule invariant.
@@ -273,6 +306,8 @@ impl JobState {
     fn new(job: ChunkJob) -> Self {
         JobState {
             quality: Quality::LOW,
+            pre_quality: None,
+            pre_heads: None,
             job,
             det_done: 0.0,
             wan_bytes: 0.0,
@@ -332,6 +367,10 @@ pub struct Executor {
     /// Every bound PostProcess function, applied in registry (name) order.
     post: Vec<PostFn>,
     pub mode: DispatchMode,
+    /// Worker threads for parallel stage bodies (`RunConfig::threads`).
+    /// 1 runs every body inline on the event loop's thread; any value
+    /// produces byte-identical output (see module docs).
+    pub threads: usize,
 }
 
 impl Executor {
@@ -380,7 +419,69 @@ impl Executor {
                 _ => None,
             })
             .collect();
-        Ok(Executor { encode, detect, classify, train, post, mode })
+        Ok(Executor { encode, detect, classify, train, post, mode, threads: 1 })
+    }
+
+    /// Set the worker-thread count for parallel stage bodies. Clamped to
+    /// at least 1; content is invariant to the value by construction.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Pre-compute the pure half of every cloud-routed job's detect path
+    /// before any of the wave's events fire: resolve the uplink quality
+    /// (override or the registered `reencode_low` body — deterministic, so
+    /// prefetching it is unobservable), render every frame in parallel,
+    /// and run the registered `detect` body over the wave's concatenated
+    /// frames in `threads` contiguous slabs. The heads are parked on each
+    /// job for its `CloudDetect` event; GPU admission, virtual timing and
+    /// billing still happen at event time, so a job that never reaches
+    /// `CloudDetect` (WAN outage, fog fallback) simply drops its prefetch
+    /// and bills nothing. Safe ahead of barriers because the detector is
+    /// frozen — only the fog classifier sees incremental-learning updates.
+    fn prefetch_wave(&self, states: &mut [JobState], ctx: &StageCtx) -> Result<()> {
+        // quality first, serially: one registered-fn call per cloud job
+        for s in states.iter_mut() {
+            if s.job.route == Route::Cloud {
+                s.pre_quality =
+                    Some(s.job.quality_override.unwrap_or_else(|| (self.encode)(&ctx.coord.cfg)));
+            }
+        }
+        // render every (job, frame) pair in parallel, in wave-input order
+        let mut refs: Vec<(usize, usize, Quality, f64)> = Vec::new();
+        for (ji, s) in states.iter().enumerate() {
+            if let Some(q) = s.pre_quality {
+                for fi in 0..s.job.chunk.frames.len() {
+                    refs.push((ji, fi, q, s.job.phi));
+                }
+            }
+        }
+        if refs.is_empty() {
+            return Ok(());
+        }
+        let shared = &*states;
+        let frames: Vec<Tensor> = par_map(self.threads, &refs, |&(ji, fi, q, phi)| {
+            render_frame(&shared[ji].job.chunk.frames[fi], q, phi, ctx.p)
+        });
+        // one batched detect call per slab over the wave's frames; the
+        // detect body is pure per-frame math (row-independent batching),
+        // so slab boundaries — and therefore the thread count — cannot
+        // change any head
+        let server = ctx.cloud.worker(0);
+        let slabs = slab_ranges(frames.len(), self.threads);
+        let per_slab = try_par_map(self.threads, &slabs, |&(lo, hi)| {
+            (self.detect)(server, &frames[lo..hi])
+        })?;
+        let mut heads = per_slab.into_iter().flatten();
+        for s in states.iter_mut() {
+            if s.pre_quality.is_some() {
+                s.pre_heads =
+                    Some(heads.by_ref().take(s.job.chunk.frames.len()).collect());
+            }
+        }
+        debug_assert!(heads.next().is_none(), "prefetch produced surplus heads");
+        Ok(())
     }
 
     /// Drive one dispatch wave of chunks end to end. Events interleave
@@ -394,6 +495,7 @@ impl Executor {
         ctx: &mut StageCtx,
     ) -> Result<Vec<(ChunkJob, ChunkOutcome)>> {
         let mut states: Vec<JobState> = jobs.into_iter().map(JobState::new).collect();
+        self.prefetch_wave(&mut states, ctx)?;
         let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
         let mut seq = 0u64;
         match self.mode {
@@ -466,9 +568,13 @@ impl Executor {
             Stage::QualityControl => {
                 let qc_done = ctx.fogs[s.job.shard].quality_control(n, at);
                 // SLO admission may have degraded this chunk's uplink,
-                // bypassing the registered encode function's choice
-                s.quality =
-                    s.job.quality_override.unwrap_or_else(|| (self.encode)(&ctx.coord.cfg));
+                // bypassing the registered encode function's choice; the
+                // wave prefetch resolves the same value ahead of time
+                s.quality = s
+                    .pre_quality
+                    .take()
+                    .or(s.job.quality_override)
+                    .unwrap_or_else(|| (self.encode)(&ctx.coord.cfg));
                 match s.job.route {
                     Route::Cloud => Ok(Some((qc_done, Stage::WanUplink))),
                     Route::Fog => Ok(Some((qc_done, Stage::FogFallback))),
@@ -485,13 +591,6 @@ impl Executor {
                 }
             }
             Stage::CloudDetect => {
-                let frames: Vec<_> = s
-                    .job
-                    .chunk
-                    .frames
-                    .iter()
-                    .map(|f| render_frame(f, s.quality, s.job.phi, ctx.p))
-                    .collect();
                 // Admit to the GPU pool; the admitted worker is released
                 // (with its ExecTiming) on completion. Under a finite SLO
                 // the pool is asked for a worker whose projected
@@ -507,14 +606,27 @@ impl Executor {
                 } else {
                     ctx.cloud.admit(at)
                 };
-                let (heads, timing) =
-                    match (self.detect)(ctx.cloud.worker_mut(worker), &frames, at) {
-                        Ok(out) => out,
-                        Err(e) => {
-                            ctx.cloud.abort(worker);
-                            return Err(e);
+                // The pure detector math usually ran already in the wave
+                // prefetch; the inline path renders and detects on the
+                // spot (e.g. a bare job injected without a wave). Either
+                // way virtual timing and billing happen here, at event
+                // time, via `account_detect`.
+                let heads = match s.pre_heads.take() {
+                    Some(heads) => heads,
+                    None => {
+                        let frames: Vec<Tensor> = par_map(self.threads, &s.job.chunk.frames, |f| {
+                            render_frame(f, s.quality, s.job.phi, ctx.p)
+                        });
+                        match (self.detect)(ctx.cloud.worker(worker), &frames) {
+                            Ok(heads) => heads,
+                            Err(e) => {
+                                ctx.cloud.abort(worker);
+                                return Err(e);
+                            }
                         }
-                    };
+                    }
+                };
+                let timing = ctx.cloud.worker_mut(worker).account_detect(n, at);
                 ctx.cloud.complete(worker, timing);
                 let mut per_frame: Vec<Vec<PredBox>> = Vec::with_capacity(n);
                 let mut uncertain: Vec<Vec<PredBox>> = Vec::with_capacity(n);
@@ -552,20 +664,19 @@ impl Executor {
             }
             Stage::FogClassify => {
                 let cfg = ctx.coord.cfg;
-                let mut crops = Vec::new();
                 let mut crop_refs: Vec<(usize, PredBox)> = Vec::new();
                 for (fi, regions) in s.uncertain.iter().enumerate() {
                     for r in regions {
-                        crops.push(render_region_crop(
-                            &s.job.chunk.frames[fi],
-                            &r.rect,
-                            cfg.crop_quality,
-                            s.job.phi,
-                            ctx.p,
-                        ));
                         crop_refs.push((fi, *r));
                     }
                 }
+                // crop rendering is pure per region, so it fans out; the
+                // classify body below stays on this thread (it mutates
+                // the shard and reads the IL-updated last layer)
+                let frames = &s.job.chunk.frames;
+                let crops = par_map(self.threads, &crop_refs, |(fi, r)| {
+                    render_region_crop(&frames[*fi], &r.rect, cfg.crop_quality, s.job.phi, ctx.p)
+                });
                 let (results, feats, cls_done) =
                     (self.classify)(&mut ctx.fogs[s.job.shard], &crops, at)?;
                 ctx.metrics.fog_regions += crops.len() as u64;
@@ -605,13 +716,9 @@ impl Executor {
                 Ok(None)
             }
             Stage::FogFallback => {
-                let hi_frames: Vec<_> = s
-                    .job
-                    .chunk
-                    .frames
-                    .iter()
-                    .map(|f| render_frame(f, Quality::ORIGINAL, s.job.phi, ctx.p))
-                    .collect();
+                let hi_frames: Vec<Tensor> = par_map(self.threads, &s.job.chunk.frames, |f| {
+                    render_frame(f, Quality::ORIGINAL, s.job.phi, ctx.p)
+                });
                 let (heads, done) =
                     ctx.fogs[s.job.shard].fallback_detect(&hi_frames, at, ctx.p.grid)?;
                 let theta_loc = ctx.coord.cfg.filter.theta_loc;
@@ -746,15 +853,25 @@ impl Executor {
     /// Admit one dispatch wave into the session: every member's
     /// `ClientUplink` enters the global queue at its dispatch time, and
     /// the wave gets a [`Stage::Barrier`] that will fire — in wave order —
-    /// once all members complete. Returns the wave index.
-    pub fn admit_wave(&self, sess: &mut StreamingSession, jobs: Vec<ChunkJob>) -> usize {
+    /// once all members complete. The wave's pure detect work is
+    /// prefetched here (see [`Executor::run_wave`]'s prefetch; it needs
+    /// the stage context, which is why admission takes one). Returns the
+    /// wave index.
+    pub fn admit_wave(
+        &self,
+        sess: &mut StreamingSession,
+        jobs: Vec<ChunkJob>,
+        ctx: &mut StageCtx,
+    ) -> Result<usize> {
         assert!(!jobs.is_empty(), "cannot admit an empty wave");
+        let mut states: Vec<JobState> = jobs.into_iter().map(JobState::new).collect();
+        self.prefetch_wave(&mut states, ctx)?;
         let wave = sess.waves.len();
-        let mut members = Vec::with_capacity(jobs.len());
-        for job in jobs {
-            let t0 = job.dispatch_at.max(job.captured());
+        let mut members = Vec::with_capacity(states.len());
+        for s in states {
+            let t0 = s.job.dispatch_at.max(s.job.captured());
             let idx = sess.states.len();
-            sess.states.push(Some(JobState::new(job)));
+            sess.states.push(Some(s));
             sess.job_wave.push(wave);
             sess.push_event(t0, idx, Stage::ClientUplink);
             members.push(idx);
@@ -765,7 +882,7 @@ impl Executor {
             barrier_t: 0.0,
             gated: Vec::new(),
         });
-        wave
+        Ok(wave)
     }
 
     /// Process every queued event with `t <= horizon` (the next wave's
@@ -928,6 +1045,22 @@ impl StreamingSession {
             .max()
             .unwrap_or(1)
     }
+}
+
+/// Split `0..n` into at most `parts` contiguous, non-empty, balanced
+/// `(lo, hi)` ranges — the slab decomposition the wave prefetch feeds to
+/// the detect body, one slab per worker thread.
+fn slab_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, n.max(1));
+    let (base, extra) = (n / parts, n % parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for i in 0..parts {
+        let hi = lo + base + usize::from(i < extra);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
 }
 
 /// The client→fog LAN serving `shard`: its own segment when the topology
@@ -1139,6 +1272,37 @@ mod tests {
     }
 
     #[test]
+    fn thread_count_is_unobservable_in_wave_output() {
+        let run = |threads: usize| {
+            let mut rig = Rig::new();
+            let ex = executor(DispatchMode::EventDriven).with_threads(threads);
+            let jobs: Vec<ChunkJob> =
+                (0..3).map(|i| ChunkJob::new(chunk(60 + i as u64), 0.0, i as f64 * 0.2)).collect();
+            let out = ex.run_wave(jobs, &mut rig.ctx()).unwrap();
+            (fingerprint(&out, &rig), rig.metrics.fog_regions)
+        };
+        let base = run(1);
+        assert_eq!(run(4), base, "threads=4 changed content");
+        assert_eq!(run(16), base, "threads=16 changed content");
+    }
+
+    #[test]
+    fn slab_ranges_cover_exactly_once_and_balance() {
+        for (n, parts) in [(0usize, 4usize), (1, 4), (7, 3), (16, 4), (5, 8)] {
+            let slabs = slab_ranges(n, parts);
+            let total: usize = slabs.iter().map(|(lo, hi)| hi - lo).sum();
+            assert_eq!(total, n, "n={n} parts={parts}");
+            let mut next = 0;
+            for &(lo, hi) in &slabs {
+                assert_eq!(lo, next, "gap or overlap at {lo}");
+                assert!(hi > lo || n == 0, "empty slab");
+                next = hi;
+            }
+            assert!(slabs.len() <= parts.max(1));
+        }
+    }
+
+    #[test]
     fn streaming_session_matches_wave_barrier_content() {
         let waves = |i: u64| -> Vec<ChunkJob> {
             (0..2)
@@ -1154,11 +1318,11 @@ mod tests {
         let mut rig_b = Rig::new();
         let ex_s = executor(DispatchMode::Streaming);
         let mut sess = ex_s.start_stream();
-        ex_s.admit_wave(&mut sess, waves(0));
+        ex_s.admit_wave(&mut sess, waves(0), &mut rig_b.ctx()).unwrap();
         // pump to the second wave's admission horizon, then admit it
         let horizon = waves(1)[0].dispatch_at;
         let mut out_b = ex_s.run_until(&mut sess, horizon, &mut rig_b.ctx()).unwrap();
-        ex_s.admit_wave(&mut sess, waves(1));
+        ex_s.admit_wave(&mut sess, waves(1), &mut rig_b.ctx()).unwrap();
         out_b.extend(ex_s.finish_stream(&mut sess, &mut rig_b.ctx()).unwrap());
         assert_eq!(out_a.len(), 4);
         assert_eq!(out_b.len(), 4);
@@ -1175,7 +1339,7 @@ mod tests {
         for w in 0..3u64 {
             let jobs: Vec<ChunkJob> =
                 (0..2).map(|j| ChunkJob::new(chunk(40 + 2 * w + j), 0.0, w as f64 * 0.3)).collect();
-            ex.admit_wave(&mut sess, jobs);
+            ex.admit_wave(&mut sess, jobs, &mut rig.ctx()).unwrap();
         }
         assert_eq!(sess.in_flight(), 6);
         let out = ex.finish_stream(&mut sess, &mut rig.ctx()).unwrap();

@@ -19,7 +19,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::cloud::{CloudServer, ExecTiming, HeadsOwned};
+use crate::cloud::{CloudServer, HeadsOwned};
 use crate::fog::{CropResult, FogNode};
 use crate::hitl::collector::LabeledCrop;
 use crate::hitl::IncrementalLearner;
@@ -41,11 +41,14 @@ pub enum FunctionKind {
 
 /// Encode stage: pick the uplink quality for the fog→cloud low stream.
 pub type EncodeFn = Arc<dyn Fn(&ProtocolConfig) -> Quality + Send + Sync>;
-/// Detection stage: run a detector over rendered frames on the cloud GPU
-/// pool at a virtual arrival time.
-pub type DetectFn = Arc<
-    dyn Fn(&mut CloudServer, &[Tensor], f64) -> Result<(Vec<HeadsOwned>, ExecTiming)> + Send + Sync,
->;
+/// Detection stage: the *pure* detector math over rendered frames —
+/// per-frame heads only, no virtual-clock or billing side effects (the
+/// executor accounts the GPU occupancy separately via
+/// [`CloudServer::account_detect`] at the chunk's `CloudDetect` event).
+/// Purity is what lets the executor prefetch a whole wave's detect bodies
+/// across `RunConfig::threads` workers without perturbing timing state.
+pub type DetectFn =
+    Arc<dyn Fn(&CloudServer, &[Tensor]) -> Result<Vec<HeadsOwned>> + Send + Sync>;
 /// Crop-classification stage on a fog node (results, features, done time).
 pub type ClassifyFn = Arc<
     dyn Fn(&mut FogNode, &[Vec<f32>], f64) -> Result<(Vec<CropResult>, Vec<Vec<f32>>, f64)>
@@ -258,8 +261,8 @@ impl FunctionRegistry {
             FunctionKind::Inference,
             "batch",
             "boxes",
-            StageBody::Detect(Arc::new(|cloud: &mut CloudServer, frames: &[Tensor], at: f64| {
-                cloud.detect_chunk(frames, at, "detector")
+            StageBody::Detect(Arc::new(|cloud: &CloudServer, frames: &[Tensor]| {
+                cloud.detect_heads(frames, "detector")
             })),
         );
         r.register_impl(
@@ -342,8 +345,8 @@ mod tests {
         let v1 = r
             .bind(
                 "detect",
-                StageBody::Detect(Arc::new(|cloud, frames, at| {
-                    cloud.detect_chunk(frames, at, "detector_lite")
+                StageBody::Detect(Arc::new(|cloud, frames| {
+                    cloud.detect_heads(frames, "detector_lite")
                 })),
             )
             .unwrap();

@@ -52,10 +52,13 @@
 //! gpus = 1, 2
 //! ```
 //!
-//! Axis / `[run]` keys: `workload`, `dispatch`, `ladder` (`default` |
-//! `single`), `shards`, `gpus`, `slo_ms` (`inf` disables), `wan_mbps`,
-//! `hitl_budget`, `drift`, `autoscale`, plus the special `system` axis
-//! that sweeps the pipeline under test itself.
+//! Axis / `[run]` keys ([`spec::KNOWN_AXES`]): `workload`, `dispatch`,
+//! `ladder` (`default` | `single`), `shards`, `gpus`, `threads` (pure
+//! wall-clock — sweeping it must not move any non-wall-clock metric),
+//! `slo_ms` (`inf` disables), `wan_mbps`, `hitl_budget`, `drift`,
+//! `autoscale`, `tenants`, plus the special `system` axis that sweeps
+//! the pipeline under test itself. The full grammar is consolidated in
+//! `docs/reference.md`.
 //!
 //! ## Determinism contract
 //!

@@ -47,7 +47,7 @@ use crate::util::config::Config;
 
 /// Axis/override keys the runner knows how to apply. `system` selects the
 /// pipeline under test; every other key writes one [`RunConfig`] field.
-pub const KNOWN_AXES: [&str; 12] = [
+pub const KNOWN_AXES: [&str; 13] = [
     "autoscale",
     "dispatch",
     "drift",
@@ -58,6 +58,7 @@ pub const KNOWN_AXES: [&str; 12] = [
     "slo_ms",
     "system",
     "tenants",
+    "threads",
     "wan_mbps",
     "workload",
 ];
@@ -243,6 +244,12 @@ pub fn apply_axis(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()> {
         "tenants" => cfg.tenants = TenantRegistry::parse(value)?,
         "shards" => cfg.shards = parse_usize("shards", value)?,
         "gpus" => cfg.gpus = parse_usize("gpus", value)?,
+        "threads" => {
+            cfg.threads = parse_usize("threads", value)?;
+            if cfg.threads == 0 {
+                bail!("axis threads: must be at least 1");
+            }
+        }
         "slo_ms" => cfg.slo_ms = parse_f64("slo_ms", value)?,
         "wan_mbps" => cfg.wan_mbps = parse_f64("wan_mbps", value)?,
         "hitl_budget" => cfg.hitl_budget = parse_f64("hitl_budget", value)?,
@@ -355,7 +362,10 @@ gpus = 1, 2
         apply_axis(&mut cfg, "dispatch", "streaming").unwrap();
         apply_axis(&mut cfg, "ladder", "single").unwrap();
         apply_axis(&mut cfg, "tenants", "gold:3+silver:1").unwrap();
+        apply_axis(&mut cfg, "threads", "4").unwrap();
         assert_eq!((cfg.gpus, cfg.shards), (4, 8));
+        assert_eq!(cfg.threads, 4);
+        assert!(apply_axis(&mut cfg, "threads", "0").is_err());
         assert!(cfg.slo_ms.is_infinite());
         assert_eq!(cfg.wan_mbps, 200.0);
         assert!(!cfg.drift && !cfg.autoscale);

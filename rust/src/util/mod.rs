@@ -15,6 +15,8 @@
 //!   the study baseline (schema-checked, bit-exact round-trips)
 //! * [`logging`] — leveled logger controlled by `VPAAS_LOG`
 //! * [`pool`] — a fixed thread pool + job handles (the async substrate)
+//! * [`par`] — order-preserving scoped parallel map (the determinism-safe
+//!   fan-out the executor's `RunConfig::threads` knob rides on)
 //! * [`prop`] — a mini property-testing framework used by the test suite
 
 pub mod cli;
@@ -22,6 +24,7 @@ pub mod clock;
 pub mod config;
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,131 @@
+//! Deterministic data-parallel helpers over scoped threads.
+//!
+//! [`crate::util::pool::ThreadPool`] wants `'static` jobs; the executor's
+//! hot loops instead fan out over *borrowed* per-wave slices (frames,
+//! crops, detect slabs), so this module provides order-preserving
+//! [`par_map`] / [`try_par_map`] built on [`std::thread::scope`]. Each
+//! output slot is written exactly once by exactly one worker and results
+//! are returned in input order, so a parallel map is observationally
+//! identical to the serial `iter().map()` it replaces — the determinism
+//! contract (ARCHITECTURE.md §Determinism model) only admits parallelism
+//! of exactly this shape: pure per-item work, merged back in input order,
+//! with every RNG draw left on the caller's thread.
+//!
+//! `threads <= 1` (or a single item) short-circuits to the serial path,
+//! byte-for-byte, without spawning.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Map `f` over `items` on up to `threads` scoped workers, preserving
+/// input order. `f` must be pure per item (no shared mutation) — that is
+/// what makes the thread count unobservable in the output.
+pub fn par_map<T, U, F>(threads: usize, items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let mut out: Vec<Option<U>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    let next = AtomicUsize::new(0);
+    let slots = as_send_slots(&mut out);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(items.len()) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let v = f(&items[i]);
+                // SAFETY: index `i` is claimed by exactly one worker via
+                // the atomic counter, so each slot is written once with no
+                // aliasing; the scope joins before `out` is read.
+                unsafe { *slots.get(i) = Some(v) };
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("par_map slot filled")).collect()
+}
+
+/// Fallible [`par_map`]: returns the first error by *input order* (not
+/// completion order), so error selection is thread-count-invariant too.
+pub fn try_par_map<T, U, F>(threads: usize, items: &[T], f: F) -> anyhow::Result<Vec<U>>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> anyhow::Result<U> + Sync,
+{
+    let results = par_map(threads, items, f);
+    results.into_iter().collect()
+}
+
+/// Shared raw view over the output slots. Wrapping the pointer is what
+/// lets the scoped closures (which only capture `&SendSlots`) write
+/// disjoint indices without locking.
+struct SendSlots<U>(*mut Option<U>);
+
+unsafe impl<U: Send> Sync for SendSlots<U> {}
+
+impl<U> SendSlots<U> {
+    /// SAFETY: caller must guarantee `i` is in bounds and claimed by a
+    /// single thread.
+    unsafe fn get(&self, i: usize) -> &mut Option<U> {
+        &mut *self.0.add(i)
+    }
+}
+
+fn as_send_slots<U>(out: &mut [Option<U>]) -> SendSlots<U> {
+    SendSlots(out.as_mut_ptr())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order_at_every_thread_count() {
+        let items: Vec<u64> = (0..257).collect();
+        let serial: Vec<u64> = items.iter().map(|v| v * 3 + 1).collect();
+        for threads in [1usize, 2, 3, 8, 64] {
+            let got = par_map(threads, &items, |v| v * 3 + 1);
+            assert_eq!(got, serial, "threads={threads} changed the output");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs_work() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map(8, &none, |v| v + 1).is_empty());
+        assert_eq!(par_map(8, &[41u32], |v| v + 1), vec![42]);
+    }
+
+    #[test]
+    fn try_par_map_reports_the_first_error_by_input_order() {
+        let items: Vec<i32> = (0..100).collect();
+        for threads in [1usize, 4, 16] {
+            let err = try_par_map(threads, &items, |&v| {
+                if v % 7 == 3 {
+                    anyhow::bail!("bad item {v}")
+                } else {
+                    Ok(v)
+                }
+            })
+            .unwrap_err();
+            // items 3, 10, 17, ... all fail; input order picks 3 always
+            assert_eq!(err.to_string(), "bad item 3", "threads={threads}");
+        }
+        let ok = try_par_map(4, &items, |&v| anyhow::Ok(v * 2)).unwrap();
+        assert_eq!(ok, items.iter().map(|v| v * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn results_match_serial_for_non_trivial_payloads() {
+        let items: Vec<Vec<f32>> = (0..50).map(|i| vec![i as f32; 33]).collect();
+        let sum = |v: &Vec<f32>| v.iter().sum::<f32>();
+        let serial: Vec<f32> = items.iter().map(sum).collect();
+        assert_eq!(par_map(5, &items, sum), serial);
+    }
+}

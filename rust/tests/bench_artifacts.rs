@@ -1,15 +1,15 @@
 //! Schema + round-trip tests for every emitted bench artifact:
 //! `BENCH_overlap.json`, `BENCH_stream.json`, `BENCH_gpu.json`,
-//! `BENCH_slo.json` (encoders in `pipeline::figures`, shared with the
-//! bench harness) and `BENCH_study.json` / `BENCH_fairness.json` (both
-//! `study::StudyReport` documents). Each
+//! `BENCH_par.json`, `BENCH_slo.json` (encoders in `pipeline::figures`,
+//! shared with the bench harness) and `BENCH_study.json` /
+//! `BENCH_fairness.json` (both `study::StudyReport` documents). Each
 //! artifact is built from synthetic rows in both its smoke- and
 //! full-sized shape, parsed back with the crate's JSON parser, and
 //! checked field by field — so a schema drift breaks here, not in the CI
 //! artifact consumers.
 
 use vpaas::pipeline::figures::{
-    gpu_json, overlap_json, slo_json, stream_json, GpuRow, SloRow, StreamRow,
+    gpu_json, overlap_json, par_json, slo_json, stream_json, GpuRow, ParRow, SloRow, StreamRow,
 };
 use vpaas::study::{CellStats, MetricStats, StudyReport};
 use vpaas::util::json::Json;
@@ -100,6 +100,34 @@ fn gpu_artifact_schema() {
             assert!((num(row, "makespan_s") - want.makespan_s).abs() < 1e-6);
             assert!((num(row, "p99_latency_s") - want.p99_s).abs() < 1e-6);
         }
+    }
+}
+
+#[test]
+fn par_artifact_schema() {
+    // smoke [1,2,4] and full [1,2,4,8] shapes
+    for counts in [vec![1usize, 2, 4], vec![1, 2, 4, 8]] {
+        let par_rows: Vec<ParRow> = counts
+            .iter()
+            .map(|&t| ParRow {
+                threads: t,
+                chunks: 64,
+                wall_s: 8.0 / t as f64,
+                chunks_per_s: 64.0 / (8.0 / t as f64),
+            })
+            .collect();
+        let text = par_json(8, &par_rows);
+        let doc = parse(&text);
+        let rs = rows(&doc, "fig16_par_sweep", "drone x8 cameras, bursty, 8 shards");
+        assert_eq!(rs.len(), counts.len());
+        for (row, want) in rs.iter().zip(&par_rows) {
+            assert_eq!(num(row, "threads"), want.threads as f64);
+            assert_eq!(num(row, "chunks"), 64.0);
+            assert!((num(row, "wall_s") - want.wall_s).abs() < 1e-6);
+            assert!((num(row, "chunks_per_s") - want.chunks_per_s).abs() < 1e-6);
+        }
+        // stable: same rows encode to identical bytes
+        assert_eq!(text, par_json(8, &par_rows));
     }
 }
 

@@ -31,6 +31,7 @@ fn defaults_agree_across_both_paths() {
     assert_eq!(from_cli.dispatch, from_file.dispatch);
     assert_eq!(from_cli.workload, from_file.workload);
     assert_eq!(from_cli.tenants, from_file.tenants);
+    assert_eq!(from_cli.threads, from_file.threads);
     assert_eq!(from_cli.seed, from_file.seed);
 }
 
@@ -39,7 +40,7 @@ fn every_knob_reaches_runconfig_from_both_paths() {
     let cli = RunConfig::from_args(&args(
         "run --wan 42 --budget 0.35 --no-drift --golden --shards 6 --gpus 3 \
          --slo-ms 9000 --ladder 0.75:38,0.5:44 --seed 0xBEEF --workload bursty \
-         --dispatch streaming --tenants gold*3:2:5000,silver",
+         --dispatch streaming --threads 4 --tenants gold*3:2:5000,silver",
     ))
     .unwrap();
     let file = RunConfig::from_config(
@@ -48,7 +49,7 @@ fn every_knob_reaches_runconfig_from_both_paths() {
              [hitl]\nbudget = 0.35\n\
              [app]\ndrift = false\ngolden = true\nshards = 6\nslo_ms = 9000\n\
              ladder = 0.75:38, 0.5:44\nseed = 48879\nworkload = bursty\n\
-             dispatch = streaming\n\
+             dispatch = streaming\nthreads = 4\n\
              [cloud]\ngpus = 3\n\
              [tenants]\ngold*3 = 2:5000\nsilver =\n",
         )
@@ -66,6 +67,7 @@ fn every_knob_reaches_runconfig_from_both_paths() {
     assert_eq!(cli.seed, 0xBEEF);
     assert_eq!(cli.workload, WorkloadProfile::Bursty);
     assert_eq!(cli.dispatch, DispatchMode::Streaming);
+    assert_eq!(cli.threads, 4);
     assert_eq!(cli.tenants.len(), 2);
     assert_eq!(cli.tenants.get(0).name, "gold");
     assert_eq!(cli.tenants.get(0).weight, 2.0);
@@ -84,6 +86,7 @@ fn every_knob_reaches_runconfig_from_both_paths() {
     assert_eq!(cli.dispatch, file.dispatch);
     assert_eq!(cli.workload, file.workload);
     assert_eq!(cli.seed, file.seed);
+    assert_eq!(cli.threads, file.threads);
     assert_eq!(cli.tenants, file.tenants);
 }
 
@@ -93,9 +96,11 @@ fn bad_values_error_on_both_paths() {
     assert!(RunConfig::from_args(&args("run --dispatch warp")).is_err());
     assert!(RunConfig::from_args(&args("run --ladder nonsense")).is_err());
     assert!(RunConfig::from_args(&args("run --tenants gold:0")).is_err());
+    assert!(RunConfig::from_args(&args("run --threads 0")).is_err());
     let bad = |text: &str| RunConfig::from_config(&Config::parse(text).unwrap());
     assert!(bad("[app]\nworkload = warp\n").is_err());
     assert!(bad("[app]\ndispatch = warp\n").is_err());
     assert!(bad("[app]\nladder = nonsense\n").is_err());
+    assert!(bad("[app]\nthreads = 0\n").is_err());
     assert!(bad("[tenants]\ngold = 0\n").is_err());
 }

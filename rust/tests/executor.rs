@@ -108,11 +108,9 @@ fn overriding_the_registered_detector_changes_pipeline_output() {
     h.functions
         .bind(
             "detect",
-            StageBody::Detect(Arc::new(
-                |cloud: &mut CloudServer, frames: &[Tensor], at: f64| {
-                    cloud.detect_chunk(frames, at, "detector_lite")
-                },
-            )),
+            StageBody::Detect(Arc::new(|cloud: &CloudServer, frames: &[Tensor]| {
+                cloud.detect_heads(frames, "detector_lite")
+            })),
         )
         .unwrap();
     let lite = h.run(SystemKind::Vpaas, &ds, &run_cfg).unwrap();

@@ -7,6 +7,11 @@
 //!   profile. Only *timing* (latency, makespan) may move. This promotes
 //!   the ad-hoc 7-way check that used to live in `tests/streaming.rs`
 //!   into one shared harness.
+//! * **Worker threads** — `RunConfig::threads` is a pure wall-clock knob:
+//!   at any thread count the fingerprint, the virtual makespan *and* the
+//!   latency distribution are bit-identical — parallelism may only move
+//!   host time, never a single simulated byte (see ARCHITECTURE.md,
+//!   "Determinism model").
 //! * **SLO admission** — with a binding `slo_ms`, every scored chunk
 //!   meets the SLO by construction, `chunks + chunks_dropped` accounts
 //!   for every planned chunk exactly, and a non-binding finite SLO (the
@@ -68,6 +73,42 @@ fn content_is_invariant_across_the_execution_matrix() {
                 shards,
                 gpus,
             );
+        }
+    }
+}
+
+#[test]
+fn worker_thread_count_is_byte_invisible() {
+    let h = Harness::new().unwrap();
+    let ds = cameras(3);
+    // unlike shards/gpus (content-invariant but timing-variant), threads
+    // must leave *timing* untouched too: the worker pool runs stage math
+    // ahead of the virtual clock, so even makespan and per-chunk latency
+    // bits are required to match the single-threaded run exactly
+    let shapes = [
+        (DispatchMode::EventDriven, 1usize, 1usize),
+        (DispatchMode::Streaming, 4, 2),
+        (DispatchMode::Sequential, 2, 1),
+    ];
+    for (dispatch, shards, gpus) in shapes {
+        let base = cfg(shards, gpus, dispatch, WorkloadProfile::Bursty);
+        let reference =
+            h.run(SystemKind::Vpaas, &ds, &RunConfig { threads: 1, ..base.clone() }).unwrap();
+        assert!(reference.chunks > 0);
+        for threads in [2usize, 8] {
+            let m =
+                h.run(SystemKind::Vpaas, &ds, &RunConfig { threads, ..base.clone() }).unwrap();
+            assert_eq!(
+                m.content_fingerprint(),
+                reference.content_fingerprint(),
+                "threads={threads} on {}/{shards} shards/{gpus} gpus changed run content",
+                dispatch.name(),
+            );
+            assert_eq!(reference.makespan.to_bits(), m.makespan.to_bits());
+            let (sa, sb) = (reference.latency.summary(), m.latency.summary());
+            assert_eq!(sa.count, sb.count);
+            assert_eq!(sa.mean.to_bits(), sb.mean.to_bits());
+            assert_eq!(sa.p99.to_bits(), sb.p99.to_bits());
         }
     }
 }
