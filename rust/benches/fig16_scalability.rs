@@ -175,21 +175,70 @@ fn main() {
     let json = figures::slo_json(slo_cams, &slo_rows);
     std::fs::write("BENCH_slo.json", &json).expect("write BENCH_slo.json");
     println!("wrote BENCH_slo.json: {json}");
-    // at every binding target the ladder must not drop more chunks than
+    // dominance checks on the frontier rows. Ladder: at every target and
+    // batching mode the multi-rung ladder must not drop more chunks than
     // the single-step controller (it only ever adds feasible rungs above
-    // the shared floor); accuracy ordering is asserted in the tier-1
-    // frontier test at a tuned configuration, not at smoke scale
-    for pair in slo_rows.chunks(2) {
-        let [on, off] = pair else { continue };
-        assert_eq!(on.slo_ms.to_bits(), off.slo_ms.to_bits(), "row pairing broke");
-        let ok = on.chunks_dropped <= off.chunks_dropped;
-        if smoke {
-            if !ok {
-                println!("WARN: ladder dropped more than single-step at smoke scale: {pair:?}");
+    // the shared floor). Batching: with the SLO disabled the adaptive
+    // planner must be inert (identical counters — asserted even at smoke
+    // scale, it is a determinism property, not a tuning one), and across
+    // the binding targets it must not drop more chunks in aggregate than
+    // static full-wave batching; accuracy ordering is asserted in the
+    // tier-1 frontier test at a tuned configuration, not at smoke scale
+    let find = |slo: f64, ladder: bool, adaptive: bool| {
+        slo_rows
+            .iter()
+            .find(|r| {
+                r.slo_ms.to_bits() == slo.to_bits() && r.ladder == ladder && r.adaptive == adaptive
+            })
+            .expect("planned frontier row")
+    };
+    for &slo in slo_points {
+        for adaptive in [false, true] {
+            let on = find(slo, true, adaptive);
+            let off = find(slo, false, adaptive);
+            let ok = on.chunks_dropped <= off.chunks_dropped;
+            if smoke {
+                if !ok {
+                    println!(
+                        "WARN: ladder dropped more than single-step at smoke scale: {on:?} vs {off:?}"
+                    );
+                }
+            } else {
+                assert!(ok, "ladder dropped more chunks than single-step: {on:?} vs {off:?}");
             }
-        } else {
-            assert!(ok, "ladder dropped more chunks than single-step: {pair:?}");
         }
+        if !slo.is_finite() {
+            for ladder in [true, false] {
+                let ada = find(slo, ladder, true);
+                let sta = find(slo, ladder, false);
+                assert_eq!(
+                    (ada.chunks, ada.chunks_dropped, ada.f1.to_bits()),
+                    (sta.chunks, sta.chunks_dropped, sta.f1.to_bits()),
+                    "adaptive batching moved an SLO-disabled run"
+                );
+            }
+        }
+    }
+    let dropped = |adaptive: bool| -> u64 {
+        slo_rows
+            .iter()
+            .filter(|r| r.adaptive == adaptive && r.slo_ms.is_finite())
+            .map(|r| r.chunks_dropped)
+            .sum()
+    };
+    let (ada_drops, sta_drops) = (dropped(true), dropped(false));
+    if smoke {
+        if ada_drops > sta_drops {
+            println!(
+                "WARN: adaptive batching dropped more than static at smoke scale: \
+                 {ada_drops} vs {sta_drops}"
+            );
+        }
+    } else {
+        assert!(
+            ada_drops <= sta_drops,
+            "adaptive batching dropped more chunks overall: {ada_drops} vs {sta_drops}"
+        );
     }
 
     if !smoke {

@@ -258,6 +258,34 @@ impl CloudServer {
         ExecTiming { start: t_start, done: t_done, queue_wait: wait_total }
     }
 
+    /// Timing half of an *externally planned* bucket group: occupy GPUs
+    /// for each bucket serially (the adaptive planner already decided the
+    /// composition), recording padding slots but billing nothing — the
+    /// adaptive split bills all input frames once, on the lead worker,
+    /// via [`CloudServer::bill_detect_frames`]. The per-bucket schedule
+    /// math is identical to [`CloudServer::account_detect`].
+    pub fn account_bucket_group(&mut self, buckets: &[usize], arrival: f64) -> ExecTiming {
+        let mut t_done = arrival;
+        let mut t_start = f64::INFINITY;
+        let mut wait_total = 0.0;
+        for &b in buckets {
+            let timing = self.schedule(arrival, self.device.batched(self.device.detect_s, b));
+            t_done = t_done.max(timing.done);
+            t_start = t_start.min(timing.start);
+            wait_total += timing.queue_wait;
+        }
+        self.planner.slots_used += buckets.iter().sum::<usize>() as u64;
+        ExecTiming { start: t_start.min(t_done), done: t_done, queue_wait: wait_total }
+    }
+
+    /// Bill `n_frames` detector invocations on this worker (the adaptive
+    /// split's lead-worker billing; per input frame, so batch regrouping
+    /// never changes a run's cost units).
+    pub fn bill_detect_frames(&mut self, n_frames: usize) {
+        self.planner.items_seen += n_frames as u64;
+        self.billing.detector_frames += n_frames as u64;
+    }
+
     /// Run the heavy detector over a chunk's frames (each `[A, D]`),
     /// dynamic-batched into compiled buckets. Returns per-frame heads and
     /// the completion time on the virtual clock.
@@ -675,6 +703,53 @@ impl CloudGpuPool {
             .sum()
     }
 
+    /// Deadline-aware split detect accounting (`--batching adaptive`):
+    /// plan bucket groups across the pool's workers with
+    /// [`crate::serving::plan_adaptive_groups`] — the fewest workers that
+    /// keep the detect inside `deadline`, latency-minimal when none can —
+    /// land each group on its worker, and return the merged timing
+    /// (`start` = earliest group start, `done` = slowest group, waits
+    /// summed). Billing stays per input frame, once, on `lead` (the
+    /// admitted worker), so batch regrouping never moves a cost unit.
+    /// With one worker, or when the single-worker plan meets the
+    /// deadline, the composition — and hence the timing — is exactly
+    /// [`CloudServer::account_detect`]'s.
+    pub fn account_detect_adaptive(
+        &mut self,
+        n_frames: usize,
+        arrival: f64,
+        deadline: f64,
+        lead: usize,
+    ) -> ExecTiming {
+        let device = self.tier.workers().first().map(|w| w.device).unwrap_or(CLOUD);
+        let mut cand: Vec<(usize, f64)> = self
+            .tier
+            .workers()
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (i, arrival.max(w.earliest_free())))
+            .collect();
+        cand.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        let starts: Vec<f64> = cand.iter().map(|&(_, s)| s).collect();
+        let plan = crate::serving::plan_adaptive_groups(
+            n_frames,
+            &self.cfg.worker.batch_buckets,
+            |b| device.batched(device.detect_s, b),
+            &starts,
+            deadline,
+        );
+        let mut merged = ExecTiming { start: f64::INFINITY, done: arrival, queue_wait: 0.0 };
+        for (group, &(w, _)) in plan.groups.iter().zip(&cand) {
+            let t = self.tier.worker_mut(w).account_bucket_group(group, arrival);
+            merged.start = merged.start.min(t.start);
+            merged.done = merged.done.max(t.done);
+            merged.queue_wait += t.queue_wait;
+        }
+        merged.start = merged.start.min(merged.done);
+        self.tier.worker_mut(lead).bill_detect_frames(n_frames);
+        merged
+    }
+
     /// Serverless billing summed across live and retired workers (the
     /// generic pool carries retired workers' bills over).
     pub fn billing(&self) -> CostMeter {
@@ -903,6 +978,43 @@ mod tests {
             "training burst queued behind detection instead of landing on the idle GPU"
         );
         assert_eq!(pool.billing().trainer_batches, 4);
+    }
+
+    #[test]
+    fn adaptive_split_meets_tight_deadlines_and_keeps_billing() {
+        let (svc, p, _frames) = setup();
+        let mk = || {
+            CloudGpuPool::new(
+                svc.handle(),
+                CloudPoolConfig::for_deployment(4, false),
+                p.grid,
+                p.num_classes,
+                p.feat_dim,
+                7,
+            )
+        };
+        // relaxed deadline: one worker, static bucket composition, so the
+        // timing is bit-identical to account_detect on that worker
+        let mut a = mk();
+        let lead_a = a.admit(0.0);
+        let t_static = a.worker_mut(lead_a).account_detect(15, 0.0);
+        a.complete(lead_a, t_static);
+        let mut b = mk();
+        let lead_b = b.admit(0.0);
+        let t_relaxed = b.account_detect_adaptive(15, 0.0, f64::INFINITY, lead_b);
+        b.complete(lead_b, t_relaxed);
+        assert_eq!(t_static.done.to_bits(), t_relaxed.done.to_bits());
+        assert_eq!(a.billing().detector_frames, b.billing().detector_frames);
+        // tight deadline: cost(16) = 0.11875 s misses 0.05 s, so the plan
+        // must spread across the idle workers and land inside the deadline
+        let mut c = mk();
+        let lead_c = c.admit(0.0);
+        let t_tight = c.account_detect_adaptive(15, 0.0, 0.05, lead_c);
+        c.complete(lead_c, t_tight);
+        assert!(t_tight.done <= 0.05 + 1e-12, "done={}", t_tight.done);
+        assert!(t_tight.done < t_static.done);
+        // regrouping never moves a cost unit: still 15 billed frames
+        assert_eq!(c.billing().detector_frames, 15);
     }
 
     #[test]

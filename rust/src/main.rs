@@ -50,7 +50,7 @@ subcommands:
           [--budget 0.2] [--shards 1] [--gpus 1] [--threads 1] [--slo-ms inf]
           [--ladder default|single|r:qp,...]
           [--no-drift] [--golden] [--workload uniform|bursty|churn]
-          [--dispatch event|sequential|streaming]
+          [--dispatch event|sequential|streaming] [--batching static|adaptive]
           [--tenants off|fifo,name[*cams][:weight[:slo_ms]],...]
           [--config run.cfg]  (config file supplies the whole run config)
   study   <spec.toml> [--smoke] [--out BENCH_study.json] [--baseline report.json]

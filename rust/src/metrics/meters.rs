@@ -2,7 +2,7 @@
 //! per-run aggregate every pipeline returns.
 
 use crate::metrics::f1::F1Counts;
-use crate::util::stats::{jain_index, Series, Summary};
+use crate::util::stats::{jain_index, Accum, Series, Summary};
 
 /// WAN bandwidth accounting (§VI-A: `b = Σ v_i / t`, normalized against
 /// the original-quality stream).
@@ -53,6 +53,80 @@ impl CostMeter {
         self.detector_frames += other.detector_frames;
         self.sr_frames += other.sr_frames;
         self.trainer_batches += other.trainer_batches;
+    }
+}
+
+/// Per-stage breakdown of one chunk's freshness projection, stashed on
+/// the [`ChunkJob`](crate::serverless::executor::ChunkJob) by SLO
+/// admission so the wave barrier can turn it into projection-vs-actual
+/// residuals. The three named stages are exactly the hand-tuned
+/// conservative allowances `pipeline::project_freshness` bakes in (the
+/// max-jitter uplink stretch, the `feedback_bytes(4·n)` region guess and
+/// the fixed batch-16 classify term); the self-calibrating projections
+/// tighten each one from its observed residual floor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FreshnessProjection {
+    /// Projected WAN uplink transfer at the admitted quality: backlog +
+    /// max-jitter serialization + propagation.
+    pub uplink_s: f64,
+    /// Projected feedback downlink transfer (4-regions-per-frame guess).
+    pub feedback_s: f64,
+    /// Projected fog classify allowance (one batch-16 call).
+    pub classify_s: f64,
+    /// The full projection the admission controller compared against the
+    /// SLO: stream age at dispatch plus every stage term.
+    pub total_s: f64,
+}
+
+/// Safety factor on a calibrated allowance cut: only half of a stage's
+/// smallest observed over-projection is ever reclaimed, so the calibrated
+/// projection stays conservative under drift in the residual floor.
+pub const CALIBRATION_SAFETY: f64 = 0.5;
+
+/// Per-stage projection-vs-actual residual accounting for the
+/// self-calibrating freshness projections (`--batching adaptive`).
+/// Residual = projected − actual, so positive means over-projection.
+/// Pushed at the wave barrier for every served cloud chunk whose
+/// admission stashed a [`FreshnessProjection`]. Streaming [`Accum`]s —
+/// O(1) memory at any fleet size. Deliberately NOT part of
+/// [`ContentFingerprint`] and not exported into study metric rows:
+/// residual bookkeeping must never move a run's content.
+#[derive(Debug, Clone, Default)]
+pub struct ProjectionStats {
+    /// WAN uplink transfer residuals.
+    pub uplink: Accum,
+    /// Feedback downlink transfer residuals.
+    pub feedback: Accum,
+    /// Fog classify residuals.
+    pub classify: Accum,
+    /// End-to-end residuals: projected total − actual stream age at
+    /// completion. The calibrated projection must keep this non-negative
+    /// for every scored chunk (asserted by `tests/invariance.rs`).
+    pub total: Accum,
+}
+
+impl ProjectionStats {
+    /// One stage's calibrated allowance cut: half its smallest observed
+    /// over-projection, zero while unobserved — and zero the moment any
+    /// sample under-projected (a negative floor means the hand-tuned
+    /// allowance is not conservative enough to shave at all).
+    fn stage_cut(stage: &Accum) -> f64 {
+        if stage.is_empty() {
+            return 0.0;
+        }
+        stage.min().max(0.0) * CALIBRATION_SAFETY
+    }
+
+    /// Total calibrated allowance cut in seconds: the sum of the
+    /// per-stage cuts. A constant with respect to the uplink byte count,
+    /// so subtracting it from `project_freshness` preserves the
+    /// monotonicity `plan_uplink`'s greedy ladder search relies on.
+    /// Zero observations → zero cut → the calibrated projection is
+    /// bit-identical to the hand-tuned one.
+    pub fn allowance_cut_s(&self) -> f64 {
+        Self::stage_cut(&self.uplink)
+            + Self::stage_cut(&self.feedback)
+            + Self::stage_cut(&self.classify)
     }
 }
 
@@ -124,6 +198,13 @@ pub struct RunMetrics {
     /// [`ContentFingerprint`]: a tenanted run that does not reorder work
     /// must stay byte-identical to the untenanted pipeline.
     pub tenants: Vec<TenantMetrics>,
+    /// Projection-vs-actual residuals per freshness stage (see
+    /// [`ProjectionStats`]). Tracked whenever SLO admission stashes a
+    /// projection — under both batching modes, so the calibration can be
+    /// audited on static runs too. Deliberately NOT part of
+    /// [`ContentFingerprint`]: residual bookkeeping is pure observation
+    /// and must never move a run's content.
+    pub projection: ProjectionStats,
 }
 
 /// One tenant's slice of a run: what was served, dropped, billed and how
@@ -364,6 +445,46 @@ mod tests {
         b.tenants.push(TenantMetrics::new("gold", 2.0));
         b.tenants[0].chunks = 4;
         assert_eq!(a.content_fingerprint().hash64(), b.content_fingerprint().hash64());
+    }
+
+    #[test]
+    fn projection_stats_stay_out_of_the_fingerprint() {
+        let mut a = RunMetrics::new("vpaas", "drone");
+        a.chunks = 4;
+        let mut b = a.clone();
+        b.projection.uplink.push(0.03);
+        b.projection.feedback.push(0.015);
+        b.projection.classify.push(0.005);
+        b.projection.total.push(0.05);
+        assert_eq!(a.content_fingerprint().hash64(), b.content_fingerprint().hash64());
+    }
+
+    #[test]
+    fn calibrated_allowance_cut_shrinks_error_but_never_under_projects() {
+        let mut p = ProjectionStats::default();
+        // no observations → no cut → projection unchanged
+        assert_eq!(p.allowance_cut_s(), 0.0);
+        // three served chunks, every stage over-projected
+        for (u, f, c) in [(0.04, 0.02, 0.006), (0.05, 0.03, 0.007), (0.045, 0.025, 0.0065)]
+        {
+            p.uplink.push(u);
+            p.feedback.push(f);
+            p.classify.push(c);
+            p.total.push(u + f + c);
+        }
+        let cut = p.allowance_cut_s();
+        assert!(cut > 0.0);
+        // the cut never exceeds half the smallest per-stage residual ...
+        assert!(cut <= 0.5 * (0.04 + 0.02 + 0.006) + 1e-12);
+        // ... so it shrinks mean projection error without ever pushing a
+        // previously-over-projected chunk into under-projection
+        assert!(p.total.mean() - cut < p.total.mean());
+        assert!(p.total.min() - cut >= 0.0);
+        // one under-projected uplink sample zeroes that stage's cut
+        p.uplink.push(-0.001);
+        let cut2 = p.allowance_cut_s();
+        assert!(cut2 < cut);
+        assert!(cut2 <= 0.5 * (0.02 + 0.006) + 1e-12);
     }
 
     #[test]

@@ -6,4 +6,7 @@ pub mod meters;
 pub mod report;
 
 pub use f1::{f1_score, match_boxes, F1Counts};
-pub use meters::{BandwidthMeter, CostMeter, LatencyMeter, RunMetrics, TenantMetrics};
+pub use meters::{
+    BandwidthMeter, CostMeter, FreshnessProjection, LatencyMeter, ProjectionStats,
+    RunMetrics, TenantMetrics,
+};

@@ -16,6 +16,7 @@ use crate::metrics::report::table;
 use crate::pipeline::{Harness, RunConfig, SystemKind};
 use crate::protocol::coordinator::Coordinator;
 use crate::serverless::executor::{ChunkJob, DispatchMode, Executor, StageCtx};
+use crate::serving::BatchMode;
 use crate::sim::device;
 use crate::sim::human::{Annotator, AnnotatorConfig};
 use crate::sim::net::Topology;
@@ -228,6 +229,9 @@ pub struct SloRow {
     pub slo_ms: f64,
     /// Multi-rung ladder (`true`) vs the legacy single-step degrade.
     pub ladder: bool,
+    /// Deadline-aware adaptive GPU batching (`true`) vs the static
+    /// full-wave batch ([`BatchMode`]).
+    pub adaptive: bool,
     pub f1: f64,
     pub wan_bytes: f64,
     pub cost_units: f64,
@@ -237,17 +241,22 @@ pub struct SloRow {
 }
 
 /// SLO-vs-cost frontier sweep (the cross-run Fig. 10/16 story), expressed
-/// as a declarative study over `slo_ms × ladder`: run the full VPaaS
-/// pipeline at each freshness target in `slo_ms_points` — non-finite
+/// as a declarative study over `slo_ms × ladder × batching`: run the full
+/// VPaaS pipeline at each freshness target in `slo_ms_points` — non-finite
 /// disables admission — once with the multi-rung ladder (`default` =
 /// [`Quality::LADDER`]) and once with the legacy single-step ladder
-/// (`single` = `[Quality::DEGRADED]`), reporting accuracy, WAN bytes,
-/// serverless billing and the degrade/drop counters. Note a chunk's
-/// stream age can never undercut its 7.5 s capture span, so
-/// millisecond-scale targets sit on the all-refused edge of the frontier.
-/// Returns the printable table plus raw [`SloRow`]s; the bench writes
-/// them ([`slo_json`]) to `BENCH_slo.json` so the frontier trajectory is
-/// tracked per PR.
+/// (`single` = `[Quality::DEGRADED]`), each under both static full-wave
+/// GPU batching and the deadline-aware adaptive planner
+/// ([`BatchMode::Adaptive`]), reporting accuracy, WAN bytes, serverless
+/// billing and the degrade/drop counters. Note a chunk's stream age can
+/// never undercut its 7.5 s capture span, so millisecond-scale targets
+/// sit on the all-refused edge of the frontier. At binding targets the
+/// adaptive cells should dominate the static ones (≥ F1 at ≤ drops):
+/// splitting a wave across idle workers cuts queue-serialized batch
+/// latency, and the self-calibrating projection cut admits chunks the
+/// hand-tuned allowances would refuse. Returns the printable table plus
+/// raw [`SloRow`]s; the bench writes them ([`slo_json`]) to
+/// `BENCH_slo.json` so the frontier trajectory is tracked per PR.
 pub fn fig10_slo_frontier(
     h: &Harness,
     cfg: &RunConfig,
@@ -269,6 +278,7 @@ pub fn fig10_slo_frontier(
         vec![
             Axis { name: "slo_ms".into(), values: slo_keys.clone() },
             Axis { name: "ladder".into(), values: vec!["default".into(), "single".into()] },
+            Axis { name: "batching".into(), values: vec!["static".into(), "adaptive".into()] },
         ],
     );
     let base = RunConfig {
@@ -285,37 +295,49 @@ pub fn fig10_slo_frontier(
     for (&slo_ms, slo_key) in slo_ms_points.iter().zip(&slo_keys) {
         for ladder_on in [true, false] {
             let ladder_key = if ladder_on { "default" } else { "single" };
-            let m = &run
-                .find(&[("ladder", ladder_key), ("slo_ms", slo_key)])
-                .expect("planned frontier trial")
-                .metrics;
-            raw.push(SloRow {
-                slo_ms,
-                ladder: ladder_on,
-                f1: m.f1_true.f1(),
-                wan_bytes: m.bandwidth.bytes,
-                cost_units: m.cost.units(),
-                chunks: m.chunks,
-                chunks_degraded: m.chunks_degraded,
-                chunks_dropped: m.chunks_dropped,
-            });
-            rows.push(vec![
-                if slo_ms.is_finite() { format!("{slo_ms:.0}") } else { "inf".into() },
-                if ladder_on { "ladder".into() } else { "single".into() },
-                format!("{:.3}", m.f1_true.f1()),
-                format!("{:.0}", m.bandwidth.bytes),
-                format!("{:.0}", m.cost.units()),
-                m.chunks.to_string(),
-                m.chunks_degraded.to_string(),
-                m.chunks_dropped.to_string(),
-            ]);
+            for batching in [BatchMode::Static, BatchMode::Adaptive] {
+                let m = &run
+                    .find(&[
+                        ("batching", batching.name()),
+                        ("ladder", ladder_key),
+                        ("slo_ms", slo_key),
+                    ])
+                    .expect("planned frontier trial")
+                    .metrics;
+                raw.push(SloRow {
+                    slo_ms,
+                    ladder: ladder_on,
+                    adaptive: batching == BatchMode::Adaptive,
+                    f1: m.f1_true.f1(),
+                    wan_bytes: m.bandwidth.bytes,
+                    cost_units: m.cost.units(),
+                    chunks: m.chunks,
+                    chunks_degraded: m.chunks_degraded,
+                    chunks_dropped: m.chunks_dropped,
+                });
+                rows.push(vec![
+                    if slo_ms.is_finite() { format!("{slo_ms:.0}") } else { "inf".into() },
+                    if ladder_on { "ladder".into() } else { "single".into() },
+                    batching.name().into(),
+                    format!("{:.3}", m.f1_true.f1()),
+                    format!("{:.0}", m.bandwidth.bytes),
+                    format!("{:.0}", m.cost.units()),
+                    m.chunks.to_string(),
+                    m.chunks_degraded.to_string(),
+                    m.chunks_dropped.to_string(),
+                ]);
+            }
         }
     }
     let text = format!(
-        "Fig. 10b — SLO/cost frontier: freshness target × degrade ladder ({cameras} cameras; \
-         targets below the 7.5 s capture span sit on the all-refused edge)\n{}",
+        "Fig. 10b — SLO/cost frontier: freshness target × degrade ladder × GPU batching \
+         ({cameras} cameras; targets below the 7.5 s capture span sit on the all-refused \
+         edge)\n{}",
         table(
-            &["slo_ms", "mode", "f1_true", "wan_bytes", "billing", "chunks", "degraded", "dropped"],
+            &[
+                "slo_ms", "mode", "batching", "f1_true", "wan_bytes", "billing", "chunks",
+                "degraded", "dropped",
+            ],
             &rows
         )
     );
@@ -470,6 +492,7 @@ pub fn fig13b(h: &Harness, _scale: f64, cfg: &RunConfig) -> Result<String> {
                         annotator: &mut annotator,
                         metrics: &mut metrics,
                         slo_s: f64::INFINITY,
+                        batching: BatchMode::Static,
                     };
                     ex.run_chunk(ChunkJob::new(chunk, phi, *offset), &mut ctx)?;
                 }
@@ -556,6 +579,7 @@ pub fn fig15(h: &Harness, cfg: &RunConfig) -> Result<(String, FaultTrace)> {
                 annotator: &mut annotator,
                 metrics: &mut metrics,
                 slo_s: f64::INFINITY,
+                batching: BatchMode::Static,
             };
             ex.run_chunk(ChunkJob::new(chunk, phi, 0.0), &mut ctx)?
         };
@@ -668,6 +692,7 @@ pub fn fig16(h: &Harness, cfg: &RunConfig) -> Result<String> {
             annotator: &mut annotator,
             metrics: &mut metrics,
             slo_s: f64::INFINITY,
+            batching: BatchMode::Static,
         };
         ex.run_chunk(ChunkJob::new(chunk, 0.0, *offset), &mut ctx)?;
         next[i] = video.next_chunk();
@@ -1190,11 +1215,13 @@ pub fn slo_json(cameras: usize, rows: &[SloRow]) -> String {
         .iter()
         .map(|r| {
             format!(
-                "{{\"slo_ms\":{},\"ladder\":{},\"f1\":{:.6},\"wan_bytes\":{:.0},\
+                "{{\"slo_ms\":{},\"ladder\":{},\"adaptive_batching\":{},\"f1\":{:.6},\
+                 \"wan_bytes\":{:.0},\
                  \"billing_units\":{:.0},\"chunks\":{},\"chunks_degraded\":{},\
                  \"chunks_dropped\":{}}}",
                 if r.slo_ms.is_finite() { format!("{:.0}", r.slo_ms) } else { "null".into() },
                 r.ladder,
+                r.adaptive,
                 r.f1,
                 r.wan_bytes,
                 r.cost_units,

@@ -27,7 +27,7 @@ use crate::cloud::{CloudConfig, CloudGpuPool, CloudPoolConfig, CloudServer};
 use crate::hitl::IncrementalLearner;
 use crate::interchange::Tensor;
 use crate::metrics::f1::{match_boxes, PredBox};
-use crate::metrics::meters::RunMetrics;
+use crate::metrics::meters::{FreshnessProjection, RunMetrics};
 use crate::protocol::coordinator::{ChunkOutcome, Coordinator};
 use crate::protocol::post::regions_from_heads;
 use crate::protocol::ProtocolConfig;
@@ -39,6 +39,7 @@ use crate::serverless::registry::FunctionRegistry;
 use crate::serverless::scheduler::{FogShardPool, ShardConfig};
 use crate::serverless::tenant::{chunk_cost, FairQueue, TenantRegistry};
 use crate::serving::batcher::DynamicBatcher;
+use crate::serving::BatchMode;
 use crate::sim::device;
 use crate::sim::human::{Annotator, AnnotatorConfig};
 use crate::sim::net::{LinkSpec, Topology};
@@ -124,6 +125,20 @@ pub struct RunConfig {
     /// `CloudServer` workers behind [`CloudGpuPool`] with least-queue-wait
     /// routing (`autoscale` then moves scaling to the pool provisioner).
     pub gpus: usize,
+    /// Cloud detect batching policy (`--batching`, `[cloud] batching`,
+    /// `batching` study axis). [`BatchMode::Static`] (the default) keeps
+    /// the legacy per-chunk cost-optimal plan on one worker and is
+    /// byte-identical to runs that predate the knob.
+    /// [`BatchMode::Adaptive`] arms two things, both inert unless an SLO
+    /// binds: (1) the executor's deadline-aware batch planner, which
+    /// splits a chunk's detect across deadline-feasible pool workers
+    /// when the static plan would push it past its effective SLO
+    /// (per-tenant overrides included), and (2) self-calibrating
+    /// freshness projections — admission shaves the hand-tuned
+    /// conservative allowances by half the smallest observed per-stage
+    /// over-projection (see
+    /// [`ProjectionStats`](crate::metrics::meters::ProjectionStats)).
+    pub batching: BatchMode,
     /// Freshness-latency SLO in milliseconds (chunk capture →
     /// `FogClassify`). Non-finite (the default) disables admission control
     /// and reproduces the pre-SLO pipeline bit-for-bit. A binding target
@@ -190,6 +205,7 @@ impl Default for RunConfig {
             outage: None,
             shards: 1,
             gpus: 1,
+            batching: BatchMode::default(),
             slo_ms: f64::INFINITY,
             ladder: Quality::LADDER.to_vec(),
             dispatch: DispatchMode::default(),
@@ -214,10 +230,17 @@ impl RunConfig {
     /// every CLI-reachable knob has a config-file path (asserted by
     /// `tests/config_parity.rs`): `[net] wan_mbps`, `[hitl] budget`,
     /// `[app] seed | dispatch | slo_ms | ladder | workload | shards |
-    /// threads | drift | golden`, `[cloud] gpus | autoscale`, and a
-    /// `[tenants]` section. See `docs/reference.md` for the full grammar.
+    /// threads | drift | golden`, `[cloud] gpus | autoscale | batching`,
+    /// and a `[tenants]` section. See `docs/reference.md` for the full
+    /// grammar.
     pub fn from_config(cfg: &crate::util::config::Config) -> Result<RunConfig> {
         let base = RunConfig::default();
+        let batching = match cfg.get("cloud", "batching") {
+            Some(b) => BatchMode::parse(b).ok_or_else(|| {
+                anyhow::anyhow!("[cloud] batching: unknown mode {b:?} (static|adaptive)")
+            })?,
+            None => base.batching,
+        };
         let ladder = match cfg.get("app", "ladder") {
             Some(spec) => codec::parse_ladder(spec)?,
             None => base.ladder.clone(),
@@ -242,6 +265,7 @@ impl RunConfig {
             threads,
             gpus: cfg.usize_or("cloud", "gpus", base.gpus)?,
             autoscale: cfg.bool_or("cloud", "autoscale", base.autoscale)?,
+            batching,
             slo_ms: cfg.f64_or("app", "slo_ms", base.slo_ms)?,
             drift: cfg.bool_or("app", "drift", base.drift)?,
             golden: cfg.bool_or("app", "golden", false)?,
@@ -255,8 +279,8 @@ impl RunConfig {
 
     /// Build a run config from parsed CLI arguments — the `vpaas run` /
     /// `vpaas figures` flag surface (`--wan --budget --no-drift --golden
-    /// --shards --gpus --slo-ms --ladder --seed --workload --dispatch
-    /// --tenants --threads`). Lives next to [`RunConfig::from_config`] so
+    /// --shards --gpus --batching --slo-ms --ladder --seed --workload
+    /// --dispatch --tenants --threads`). Lives next to [`RunConfig::from_config`] so
     /// the two input paths cover the same knobs; `tests/config_parity.rs`
     /// holds them to that.
     pub fn from_args(args: &crate::util::cli::Args) -> Result<RunConfig> {
@@ -272,6 +296,10 @@ impl RunConfig {
             anyhow::anyhow!("unknown dispatch mode {dispatch_name:?} (event|sequential|streaming)")
         })?;
         let tenants = TenantRegistry::parse(args.get_or("tenants", "off"))?;
+        let batching_name = args.get_or("batching", "static");
+        let batching = BatchMode::parse(batching_name).ok_or_else(|| {
+            anyhow::anyhow!("unknown batching mode {batching_name:?} (static|adaptive)")
+        })?;
         let threads = args.get_usize("threads", default_threads())?;
         anyhow::ensure!(threads >= 1, "--threads must be at least 1");
         Ok(RunConfig {
@@ -281,6 +309,7 @@ impl RunConfig {
             golden: args.flag("golden"),
             shards: args.get_usize("shards", 1)?,
             gpus: args.get_usize("gpus", 1)?,
+            batching,
             slo_ms: args.get_f64("slo-ms", f64::INFINITY)?,
             ladder,
             seed: args.get_u64("seed", 0xCAFE)?,
@@ -654,7 +683,16 @@ impl Harness {
         // path, then search the rate ladder greedily — keep the standard
         // low quality if its projection meets the SLO, otherwise uplink
         // at the highest feasible rung, and refuse the chunk when even
-        // the lowest rung misses.
+        // the lowest rung misses. Under adaptive batching the projection
+        // is self-calibrating: the hand-tuned allowances shrink by the
+        // run's observed residual floor (a per-wave constant, so the
+        // ladder search's monotonicity survives). Static batching keeps
+        // cut 0.0 and stays bit-identical to the pre-calibration path.
+        let cut_s = if run.cfg.batching == BatchMode::Adaptive {
+            run.metrics.projection.allowance_cut_s()
+        } else {
+            0.0
+        };
         let mut admitted = Vec::with_capacity(jobs.len());
         for mut job in jobs {
             let eff_slo = job.effective_slo(slo_s);
@@ -664,7 +702,11 @@ impl Harness {
                     run.cfg.protocol.low_quality,
                     &run.cfg.ladder,
                     eff_slo,
-                    |q| project_freshness(&run.p, &run.topo, fog_backlog, &run.cloud, &job, q),
+                    |q| {
+                        project_freshness_calibrated(
+                            &run.p, &run.topo, fog_backlog, &run.cloud, &job, q, cut_s,
+                        )
+                    },
                 );
                 match plan {
                     UplinkPlan::Standard => {}
@@ -681,6 +723,14 @@ impl Harness {
                         continue;
                     }
                 }
+                // stash the uncut per-stage projection at the admitted
+                // quality: the barrier scores residuals against it, and
+                // the executor's adaptive batch planner reads its
+                // feedback + classify tail to derive the detect deadline
+                let q = job.quality_override.unwrap_or(run.cfg.protocol.low_quality);
+                job.projection = Some(project_freshness_parts(
+                    &run.p, &run.topo, fog_backlog, &run.cloud, &job, q,
+                ));
             }
             admitted.push(job);
         }
@@ -986,6 +1036,23 @@ pub fn project_freshness(
     job: &ChunkJob,
     quality: Quality,
 ) -> f64 {
+    project_freshness_parts(p, topo, fog_backlog_s, cloud, job, quality).total_s
+}
+
+/// [`project_freshness`] with its hand-tuned allowance terms broken out
+/// (WAN uplink transfer, feedback transfer, fog classify) so SLO
+/// admission can stash them on the job and the wave barrier can score
+/// projection-vs-actual residuals per stage. `total_s` sums the terms in
+/// the exact order `project_freshness` always has, so the two are
+/// bit-identical — asserted by `projection_parts_total_matches_the_projection`.
+pub fn project_freshness_parts(
+    p: &SimParams,
+    topo: &Topology,
+    fog_backlog_s: f64,
+    cloud: &CloudGpuPool,
+    job: &ChunkJob,
+    quality: Quality,
+) -> FreshnessProjection {
     let n = job.chunk.frames.len();
     let at = job.dispatch_at;
     // worst-case transfer: queue backlog + serialization at ≥ the max
@@ -1002,15 +1069,44 @@ pub fn project_freshness(
     // a bound — crop count is unknowable before detection runs
     let classify_s = fog_dev.batched(fog_dev.classify_s, 16);
     let fb_bytes = codec::feedback_bytes(4 * n);
-    job.stream_age(at)
+    let uplink_s = xfer(topo.wan_up.spec(), topo.wan_up.backlog_s(at), low_bytes);
+    let feedback_s = xfer(topo.wan_down.spec(), topo.wan_down.backlog_s(at), fb_bytes);
+    let total_s = job.stream_age(at)
         + xfer(lan.spec(), lan.backlog_s(at), hi_bytes)
         + fog_backlog_s
         + fog_dev.quality_control_s(n)
-        + xfer(topo.wan_up.spec(), topo.wan_up.backlog_s(at), low_bytes)
+        + uplink_s
         + cloud.min_backlog_s(at)
         + cloud.detect_cost_s(n)
-        + xfer(topo.wan_down.spec(), topo.wan_down.backlog_s(at), fb_bytes)
-        + classify_s
+        + feedback_s
+        + classify_s;
+    FreshnessProjection { uplink_s, feedback_s, classify_s, total_s }
+}
+
+/// The self-calibrating projection (`--batching adaptive`):
+/// [`project_freshness`] minus the run's current calibrated allowance cut
+/// (`ProjectionStats::allowance_cut_s`), floored at the stream's age at
+/// dispatch — a freshness latency below the chunk's own age is
+/// physically impossible, and the floor keeps the projection from going
+/// absurd if the observed residual floor ever drifts large. `cut_s` is a
+/// per-wave constant w.r.t. the uplink byte count, so the calibrated
+/// projection inherits the byte-monotonicity [`plan_uplink`]'s greedy
+/// ladder search requires; with `cut_s == 0.0` (no observations yet, or
+/// static batching) it is bit-identical to the hand-tuned projection.
+pub fn project_freshness_calibrated(
+    p: &SimParams,
+    topo: &Topology,
+    fog_backlog_s: f64,
+    cloud: &CloudGpuPool,
+    job: &ChunkJob,
+    quality: Quality,
+    cut_s: f64,
+) -> f64 {
+    let total = project_freshness_parts(p, topo, fog_backlog_s, cloud, job, quality).total_s;
+    if cut_s == 0.0 {
+        return total;
+    }
+    (total - cut_s).max(job.stream_age(job.dispatch_at))
 }
 
 /// Mutable state of one sharded VPaaS run, bundled so the per-wave step
@@ -1051,6 +1147,7 @@ impl VpaasRun {
             annotator,
             metrics,
             slo_s: cfg.slo_s(),
+            batching: cfg.batching,
         };
         f(&mut ctx)
     }
@@ -1154,6 +1251,41 @@ mod tests {
         let at_floor = cost(Quality::DEGRADED);
         assert_eq!(plan_uplink(low, &single, at_floor + 1e-9, project), UplinkPlan::Degrade(0));
         assert_eq!(plan_uplink(low, &single, at_floor - 1e-9, project), UplinkPlan::Refuse);
+    }
+
+    #[test]
+    fn projection_parts_total_matches_the_projection_and_calibration_is_safe() {
+        let h = Harness::new().unwrap();
+        let cfg = RunConfig::default();
+        let topo = Topology::new(cfg.wan_mbps, cfg.seed);
+        let cloud = h.make_cloud_pool(&cfg);
+        let p = h.params.clone();
+        let mut videos = tiny().make_videos(&p);
+        let chunk = videos[0].next_chunk().unwrap();
+        let mut job = ChunkJob::new(chunk, 0.0, 0.0);
+        job.dispatch_at = job.captured();
+        let age = job.stream_age(job.dispatch_at);
+        for &q in &[Quality::LOW, Quality::DEGRADED] {
+            let parts = project_freshness_parts(&p, &topo, 0.0, &cloud, &job, q);
+            let total = project_freshness(&p, &topo, 0.0, &cloud, &job, q);
+            // the decomposition sums in the historical order: bit-identical
+            assert_eq!(parts.total_s.to_bits(), total.to_bits());
+            assert!(parts.uplink_s > 0.0 && parts.feedback_s > 0.0 && parts.classify_s > 0.0);
+            // zero cut (static batching / no observations) changes nothing
+            let cal0 = project_freshness_calibrated(&p, &topo, 0.0, &cloud, &job, q, 0.0);
+            assert_eq!(cal0.to_bits(), total.to_bits());
+            // a positive cut shaves the projection but never below the
+            // chunk's own stream age
+            let cal = project_freshness_calibrated(&p, &topo, 0.0, &cloud, &job, q, 0.01);
+            assert!(cal < total);
+            assert!(cal >= age);
+            let huge = project_freshness_calibrated(&p, &topo, 0.0, &cloud, &job, q, 1e9);
+            assert!((huge - age).abs() < 1e-12);
+        }
+        // calibration preserves the byte-monotonicity plan_uplink needs
+        let lo = project_freshness_calibrated(&p, &topo, 0.0, &cloud, &job, Quality::DEGRADED, 0.01);
+        let hi = project_freshness_calibrated(&p, &topo, 0.0, &cloud, &job, Quality::LOW, 0.01);
+        assert!(lo <= hi, "degraded uplink must never project fresher than low: {lo} vs {hi}");
     }
 
     #[test]

@@ -22,7 +22,10 @@ use crate::cloud::{CloudGpuPool, CloudPoolConfig};
 use crate::fog::FogNode;
 use crate::hitl::IncrementalLearner;
 use crate::metrics::meters::RunMetrics;
-use crate::pipeline::{plan_uplink, project_freshness, UplinkPlan};
+use crate::pipeline::{
+    plan_uplink, project_freshness, project_freshness_calibrated, project_freshness_parts,
+    UplinkPlan,
+};
 use crate::protocol::coordinator::{ChunkOutcome, Coordinator};
 use crate::protocol::ProtocolConfig;
 use crate::runtime::{InferenceHandle, InferenceService};
@@ -32,6 +35,7 @@ use crate::serverless::monitor::GlobalMonitor;
 use crate::serverless::policy::{PolicyInput, PolicyManager, Route};
 use crate::serverless::registry::FunctionRegistry;
 use crate::serverless::tenant::TenantRegistry;
+use crate::serving::BatchMode;
 use crate::sim::human::{Annotator, AnnotatorConfig};
 use crate::sim::net::Topology;
 use crate::sim::params::SimParams;
@@ -89,6 +93,11 @@ pub struct VideoApp {
     /// threads`, default `VPAAS_THREADS` or 1). Wall-clock only — content
     /// is byte-identical at any value.
     threads: usize,
+    /// Cloud detect batching policy (`[cloud] batching`): `static` (the
+    /// default) or `adaptive` — deadline-aware batch splitting plus
+    /// self-calibrating freshness projections, mirroring
+    /// [`crate::pipeline::RunConfig::batching`].
+    batching: BatchMode,
     chunks_processed: u64,
 }
 
@@ -130,6 +139,10 @@ impl VideoApp {
         // single-server layout (with its in-server provisioner when
         // `[cloud] autoscale` is set)
         let gpus = cfg.usize_or("cloud", "gpus", 1)?;
+        let batching_name = cfg.str_or("cloud", "batching", "static").to_string();
+        let batching = BatchMode::parse(&batching_name).ok_or_else(|| {
+            anyhow!("config [cloud] batching: unknown mode {batching_name:?} (static|adaptive)")
+        })?;
         let slo_ms = cfg.f64_or("app", "slo_ms", f64::INFINITY)?;
         let ladder = codec::parse_ladder(cfg.str_or("app", "ladder", "default"))
             .map_err(|e| anyhow!("config [app] ladder: {e}"))?;
@@ -177,6 +190,7 @@ impl VideoApp {
             ladder,
             tenants,
             threads,
+            batching,
             chunks_processed: 0,
         })
     }
@@ -233,8 +247,24 @@ impl VideoApp {
         job.slo_override = self.tenants.slo_s_for(job.tenant);
         let slo_s = job.effective_slo(self.slo_s);
         if slo_s.is_finite() && job.route == Route::Cloud {
+            // same calibration gate as the pipeline driver: adaptive
+            // batching shaves the hand-tuned allowances by the observed
+            // residual floor, static keeps the projection untouched
+            let cut_s = if self.batching == BatchMode::Adaptive {
+                self.metrics.projection.allowance_cut_s()
+            } else {
+                0.0
+            };
             let plan = plan_uplink(self.coordinator.cfg.low_quality, &self.ladder, slo_s, |q| {
-                project_freshness(p.as_ref(), &self.topo, fog_backlog, &self.cloud, &job, q)
+                project_freshness_calibrated(
+                    p.as_ref(),
+                    &self.topo,
+                    fog_backlog,
+                    &self.cloud,
+                    &job,
+                    q,
+                    cut_s,
+                )
             });
             match plan {
                 UplinkPlan::Standard => {}
@@ -258,6 +288,18 @@ impl VideoApp {
                     });
                 }
             }
+            // stash the uncut per-stage projection at the admitted quality
+            // so the barrier can score residuals and the adaptive batch
+            // planner can read the post-detect tail
+            let q = job.quality_override.unwrap_or(self.coordinator.cfg.low_quality);
+            job.projection = Some(project_freshness_parts(
+                p.as_ref(),
+                &self.topo,
+                fog_backlog,
+                &self.cloud,
+                &job,
+                q,
+            ));
         }
         let (_, outcome) = {
             let mut ctx = StageCtx {
@@ -269,6 +311,7 @@ impl VideoApp {
                 annotator: &mut self.annotator,
                 metrics: &mut self.metrics,
                 slo_s: self.slo_s,
+                batching: self.batching,
             };
             executor.run_chunk(job, &mut ctx)?
         };
@@ -432,6 +475,17 @@ mod tests {
         // a malformed section is rejected loudly
         let bad = Config::parse("[tenants]\nacme = -1\n").unwrap();
         assert!(VideoApp::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn batching_is_config_selectable_and_validated() {
+        let cfg = Config::parse("[cloud]\nbatching = adaptive\n").unwrap();
+        let a = VideoApp::from_config(&cfg).unwrap();
+        assert_eq!(a.batching, BatchMode::Adaptive);
+        assert_eq!(app().batching, BatchMode::Static, "static must stay the default");
+        let bad = Config::parse("[cloud]\nbatching = warp\n").unwrap();
+        let err = VideoApp::from_config(&bad).unwrap_err();
+        assert!(err.to_string().contains("[cloud] batching"), "{err}");
     }
 
     #[test]

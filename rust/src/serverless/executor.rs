@@ -110,7 +110,7 @@ use crate::cloud::{CloudGpuPool, HeadsOwned};
 use crate::fog::FogNode;
 use crate::interchange::Tensor;
 use crate::metrics::f1::PredBox;
-use crate::metrics::meters::RunMetrics;
+use crate::metrics::meters::{FreshnessProjection, RunMetrics};
 use crate::protocol::coordinator::{ChunkOutcome, Coordinator};
 use crate::protocol::post::regions_from_heads;
 use crate::protocol::split_regions;
@@ -118,6 +118,7 @@ use crate::serverless::policy::Route;
 use crate::serverless::registry::{
     ClassifyFn, DetectFn, EncodeFn, FunctionRegistry, PostFn, StageBody, TrainFn,
 };
+use crate::serving::BatchMode;
 use crate::sim::human::Annotator;
 use crate::sim::net::{Link, Topology};
 use crate::sim::params::SimParams;
@@ -211,6 +212,13 @@ pub struct ChunkJob {
     /// Per-tenant freshness-SLO override in seconds; `None` inherits the
     /// run-level [`StageCtx::slo_s`].
     pub slo_override: Option<f64>,
+    /// Per-stage freshness projection stashed by SLO admission (only for
+    /// cloud-routed chunks under a finite effective SLO). The wave
+    /// barrier scores projection-vs-actual residuals against it, and the
+    /// adaptive batch planner reads its feedback + classify tail to turn
+    /// the chunk's SLO into a detect-stage deadline. `None` on runs
+    /// without admission — both consumers are then inert.
+    pub projection: Option<FreshnessProjection>,
 }
 
 impl ChunkJob {
@@ -226,6 +234,7 @@ impl ChunkJob {
             quality_override: None,
             tenant: 0,
             slo_override: None,
+            projection: None,
         }
     }
 
@@ -275,6 +284,13 @@ pub struct StageCtx<'a> {
     /// `RunMetrics::chunks_dropped` instead of being served; non-finite
     /// (the default everywhere but SLO runs) disables the gate.
     pub slo_s: f64,
+    /// Cloud detect batching policy (`RunConfig::batching`). Under
+    /// [`BatchMode::Adaptive`] a `CloudDetect` event with a finite
+    /// effective SLO plans its batches deadline-aware across the pool's
+    /// workers ([`CloudGpuPool::account_detect_adaptive`]); otherwise the
+    /// legacy single-worker static plan runs, bit-identical to runs that
+    /// predate the knob.
+    pub batching: BatchMode,
 }
 
 /// Per-job runtime state while its events are in flight.
@@ -300,6 +316,15 @@ struct JobState {
     cls_done: f64,
     done: f64,
     fallback: bool,
+    /// Actual WAN uplink transfer time (arrival at `WanUplink` → arrival
+    /// at the cloud); pairs with `FreshnessProjection::uplink_s`.
+    wan_up_s: f64,
+    /// Actual feedback downlink transfer time; pairs with
+    /// `FreshnessProjection::feedback_s`.
+    feedback_s: f64,
+    /// Actual fog classify latency (arrival at `FogClassify` → classify
+    /// completion); pairs with `FreshnessProjection::classify_s`.
+    classify_s: f64,
 }
 
 impl JobState {
@@ -319,6 +344,9 @@ impl JobState {
             cls_done: 0.0,
             done: 0.0,
             fallback: false,
+            wan_up_s: 0.0,
+            feedback_s: 0.0,
+            classify_s: 0.0,
         }
     }
 
@@ -585,6 +613,7 @@ impl Executor {
                 match ctx.topo.wan_up.transfer(low_bytes, at) {
                     Ok(at_cloud) => {
                         s.wan_bytes += low_bytes;
+                        s.wan_up_s = at_cloud - at;
                         Ok(Some((at_cloud, Stage::CloudDetect)))
                     }
                     Err(down) => Ok(Some((down.detected_at, Stage::FogFallback))),
@@ -626,7 +655,27 @@ impl Executor {
                         }
                     }
                 };
-                let timing = ctx.cloud.worker_mut(worker).account_detect(n, at);
+                // Static batching lands the chunk's cost-optimal bucket
+                // plan serially on the admitted worker. Adaptive batching
+                // (only under a finite SLO — the deadline is what it
+                // adapts *to*) re-plans deadline-aware: the detect-stage
+                // deadline is the chunk's staleness deadline minus the
+                // projected post-detect tail (feedback + classify, uncut
+                // — conservative), and the pool may split the batches
+                // across deadline-feasible workers. Billing is per input
+                // frame either way, so the bill is identical.
+                let timing = if ctx.batching == BatchMode::Adaptive && slo_s.is_finite() {
+                    let deadline = s.job.t_offset + s.job.chunk.t_capture + slo_s;
+                    let tail = s
+                        .job
+                        .projection
+                        .as_ref()
+                        .map(|pr| pr.feedback_s + pr.classify_s)
+                        .unwrap_or(0.0);
+                    ctx.cloud.account_detect_adaptive(n, at, (deadline - tail).max(at), worker)
+                } else {
+                    ctx.cloud.worker_mut(worker).account_detect(n, at)
+                };
                 ctx.cloud.complete(worker, timing);
                 let mut per_frame: Vec<Vec<PredBox>> = Vec::with_capacity(n);
                 let mut uncertain: Vec<Vec<PredBox>> = Vec::with_capacity(n);
@@ -651,6 +700,7 @@ impl Executor {
                 match ctx.topo.wan_down.transfer(fb_bytes, at) {
                     Ok(at_fog) => {
                         s.wan_bytes += fb_bytes;
+                        s.feedback_s = at_fog - at;
                         Ok(Some((at_fog, Stage::FogClassify)))
                     }
                     Err(down) => {
@@ -707,6 +757,7 @@ impl Executor {
                 s.crop_refs = crop_refs;
                 s.feats = feats;
                 s.cls_done = cls_done;
+                s.classify_s = (cls_done - at).max(0.0);
                 s.done = cls_done.max(s.det_done);
                 for pf in &self.post {
                     for (fi, boxes) in s.per_frame.iter_mut().enumerate() {
@@ -771,6 +822,21 @@ impl Executor {
                 tm.chunks_dropped += 1;
             }
             return Ok(());
+        }
+        // Score projection-vs-actual residuals for every served chunk
+        // whose admission stashed a projection (fallback chunks never ran
+        // the projected path). Pure observation: the accums are excluded
+        // from the content fingerprint and from study metric rows, so
+        // this runs under both batching modes — only *admission* reads
+        // the calibration back, and only under BatchMode::Adaptive.
+        if !s.fallback {
+            if let Some(proj) = &s.job.projection {
+                let m = &mut ctx.metrics.projection;
+                m.uplink.push(proj.uplink_s - s.wan_up_s);
+                m.feedback.push(proj.feedback_s - s.feedback_s);
+                m.classify.push(proj.classify_s - s.classify_s);
+                m.total.push(proj.total_s - s.job.stream_age(s.done));
+            }
         }
         if ctx.coord.hitl_enabled && !s.fallback {
             for ((fi, region), f) in s.crop_refs.iter().zip(&s.feats) {
@@ -1131,6 +1197,10 @@ mod tests {
         }
 
         fn ctx_with_slo(&mut self, slo_s: f64) -> StageCtx<'_> {
+            self.ctx_batched(slo_s, BatchMode::Static)
+        }
+
+        fn ctx_batched(&mut self, slo_s: f64, batching: BatchMode) -> StageCtx<'_> {
             StageCtx {
                 p: self.p.as_ref(),
                 coord: &mut self.coord,
@@ -1140,6 +1210,7 @@ mod tests {
                 annotator: &mut self.annotator,
                 metrics: &mut self.metrics,
                 slo_s,
+                batching,
             }
         }
     }
@@ -1329,6 +1400,86 @@ mod tests {
         // the per-chunk label-count vector is order-sensitive, so this
         // also checks outcomes return in (wave, wave-input) order
         assert_eq!(fingerprint(&out_a, &rig_a), fingerprint(&out_b, &rig_b));
+    }
+
+    #[test]
+    fn barrier_scores_projection_residuals_for_served_chunks_only() {
+        let mut rig = Rig::new();
+        let ex = executor(DispatchMode::EventDriven);
+        // no projection stashed → nothing to score
+        ex.run_chunk(ChunkJob::new(chunk(7), 0.0, 0.0), &mut rig.ctx_with_slo(60.0)).unwrap();
+        assert!(rig.metrics.projection.total.is_empty());
+        // a (deliberately generous) stashed projection scores one residual
+        // per stage, all positive here because every allowance over-shot
+        let proj = FreshnessProjection {
+            uplink_s: 30.0,
+            feedback_s: 30.0,
+            classify_s: 30.0,
+            total_s: 90.0,
+        };
+        let mut job = ChunkJob::new(chunk(8), 0.0, 0.0);
+        job.projection = Some(proj);
+        ex.run_chunk(job, &mut rig.ctx_with_slo(60.0)).unwrap();
+        let m = &rig.metrics.projection;
+        assert_eq!(
+            (m.uplink.count(), m.feedback.count(), m.classify.count(), m.total.count()),
+            (1, 1, 1, 1)
+        );
+        assert!(m.uplink.min() > 0.0 && m.feedback.min() > 0.0 && m.classify.min() > 0.0);
+        assert!(m.total.min() > 0.0);
+        assert!(m.allowance_cut_s() > 0.0);
+        // a stale (dropped) chunk scores nothing — it was never served
+        let mut rig2 = Rig::new();
+        let mut stale = ChunkJob::new(chunk(8), 0.0, 0.0);
+        stale.projection = Some(proj);
+        ex.run_chunk(stale, &mut rig2.ctx_with_slo(1.0)).unwrap();
+        assert_eq!(rig2.metrics.chunks_dropped, 1);
+        assert!(rig2.metrics.projection.total.is_empty());
+    }
+
+    #[test]
+    fn adaptive_batching_is_inert_without_an_slo_and_never_finishes_later_with_one() {
+        // no SLO: the adaptive branch is gated off, content and timing
+        // are bit-identical to static
+        let run = |batching: BatchMode| {
+            let mut rig = Rig::new();
+            let ex = executor(DispatchMode::EventDriven);
+            let jobs: Vec<ChunkJob> = (0..3)
+                .map(|i| ChunkJob::new(chunk(80 + i as u64), 0.0, i as f64 * 0.2))
+                .collect();
+            let out = ex.run_wave(jobs, &mut rig.ctx_batched(f64::INFINITY, batching)).unwrap();
+            let dones: Vec<u64> = out.iter().map(|(_, o)| o.done.to_bits()).collect();
+            (fingerprint(&out, &rig), dones)
+        };
+        assert_eq!(run(BatchMode::Static), run(BatchMode::Adaptive));
+
+        // binding SLO + idle extra GPUs: the deadline-aware plan finishes
+        // the chunk no later than the static single-worker plan
+        let run_slo = |batching: BatchMode| {
+            let mut rig = Rig::new();
+            rig.cloud = CloudGpuPool::new(
+                rig._svc.handle(),
+                CloudPoolConfig::for_deployment(4, false),
+                rig.p.grid,
+                rig.p.num_classes,
+                rig.p.feat_dim,
+                7,
+            );
+            let ex = executor(DispatchMode::EventDriven);
+            let mut job = ChunkJob::new(chunk(81), 0.0, 0.0);
+            job.projection = Some(FreshnessProjection {
+                uplink_s: 0.0,
+                feedback_s: 0.0,
+                classify_s: 0.0,
+                total_s: 0.0,
+            });
+            let (_, out) = ex.run_chunk(job, &mut rig.ctx_batched(8.1, batching)).unwrap();
+            (out.done, rig.cloud.billing().detector_frames)
+        };
+        let (done_s, bill_s) = run_slo(BatchMode::Static);
+        let (done_a, bill_a) = run_slo(BatchMode::Adaptive);
+        assert!(done_a <= done_s + 1e-12, "adaptive {done_a} later than static {done_s}");
+        assert_eq!(bill_a, bill_s, "regrouping must not move the per-frame bill");
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! SLO-aware adaptive GPU batching (Tangram-style, arXiv 2404.09267).
+//!
+//! The static cloud path plans one cost-optimal bucket cover per chunk
+//! ([`crate::serving::plan_batches`]) and lands it serially on a single
+//! pool worker. That minimizes GPU occupancy but not latency: a 15-frame
+//! chunk runs as one padded 16-batch even when the chunk's freshness
+//! deadline is about to expire and three other workers sit idle.
+//!
+//! [`plan_adaptive_groups`] is the pure policy underneath the adaptive
+//! path: given the chunk size, the compiled bucket sizes, the batched
+//! cost curve, the candidate workers' earliest start times and the
+//! chunk's effective deadline, it chooses how many workers to spread the
+//! detect across — the fewest that still meet the deadline (occupancy is
+//! money), falling back to the latency-minimal split when no candidate
+//! meets it. Billing is per input frame either way, so regrouping never
+//! changes a run's cost units (see ARCHITECTURE.md, "Determinism model").
+
+use crate::serving::batcher::plan_batches;
+
+/// Cloud detect batching policy (`--batching`, `[cloud] batching`,
+/// `batching` study axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchMode {
+    /// Legacy per-chunk static plan on one worker (byte-identical to
+    /// runs that predate the knob).
+    #[default]
+    Static,
+    /// Deadline-aware: split the batch plan across deadline-feasible
+    /// workers when the freshness projection says the static plan would
+    /// push the chunk past its effective SLO, and let calibrated
+    /// projections replace the hand-tuned conservative allowances.
+    Adaptive,
+}
+
+impl BatchMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchMode::Static => "static",
+            BatchMode::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BatchMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Some(BatchMode::Static),
+            "adaptive" => Some(BatchMode::Adaptive),
+            _ => None,
+        }
+    }
+}
+
+/// One adaptive batch plan: bucket groups in worker-assignment order
+/// (group `i` runs serially on the `i`-th candidate worker) and the
+/// projected completion time of the slowest group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupPlan {
+    pub groups: Vec<Vec<usize>>,
+    pub done: f64,
+}
+
+impl GroupPlan {
+    /// Total slots across all groups (≥ the item count; the excess is
+    /// padding).
+    pub fn slots(&self) -> usize {
+        self.groups.iter().flatten().sum()
+    }
+}
+
+/// Split `n` items into `k` near-even parts, largest first.
+fn split_even(n: usize, k: usize) -> Vec<usize> {
+    let base = n / k;
+    let extra = n % k;
+    (0..k).map(|i| base + usize::from(i < extra)).collect()
+}
+
+/// Choose bucket groups for `n` items across up to `starts.len()`
+/// workers under `deadline`.
+///
+/// `starts[i]` is the earliest time the `i`-th candidate worker could
+/// begin (its backlog already folded in), sorted ascending by the
+/// caller — least-loaded first. `cost_s(b)` is the execution time of
+/// one `b`-sized batch on the device.
+///
+/// The search walks k = 1, 2, … workers; each k plans every part with
+/// the cost-optimal bucket cover and projects completion as the max
+/// over groups of `starts[i] + Σ cost_s(b)`. The first k whose
+/// projection meets the deadline wins (fewest workers = least
+/// occupancy); if none does, the latency-minimal candidate wins. k = 1
+/// reproduces the static plan exactly, so adaptive planning is never
+/// slower than static on the same worker.
+pub fn plan_adaptive_groups(
+    n: usize,
+    buckets: &[usize],
+    cost_s: impl Fn(usize) -> f64,
+    starts: &[f64],
+    deadline: f64,
+) -> GroupPlan {
+    assert!(n > 0, "plan_adaptive_groups needs items");
+    assert!(!starts.is_empty(), "plan_adaptive_groups needs workers");
+    debug_assert!(
+        starts.windows(2).all(|w| w[0] <= w[1]),
+        "candidate starts must be sorted ascending"
+    );
+    let group_done = |sizes: &[usize]| -> (Vec<Vec<usize>>, f64) {
+        let groups: Vec<Vec<usize>> =
+            sizes.iter().map(|&m| plan_batches(m, buckets)).collect();
+        let done = groups
+            .iter()
+            .zip(starts)
+            .map(|(g, &s)| s + g.iter().map(|&b| cost_s(b)).sum::<f64>())
+            .fold(f64::NEG_INFINITY, f64::max);
+        (groups, done)
+    };
+    let k_max = starts.len().min(n);
+    let mut best: Option<GroupPlan> = None;
+    for k in 1..=k_max {
+        let (groups, done) = group_done(&split_even(n, k));
+        let plan = GroupPlan { groups, done };
+        if plan.done <= deadline {
+            return plan;
+        }
+        match &best {
+            Some(b) if plan.done >= b.done - 1e-12 => {}
+            _ => best = Some(plan),
+        }
+    }
+    best.expect("k_max >= 1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device;
+
+    fn cloud_cost(b: usize) -> f64 {
+        let d = device::CLOUD;
+        d.batched(d.detect_s, b)
+    }
+
+    #[test]
+    fn mode_parses_and_names_roundtrip() {
+        assert_eq!(BatchMode::parse("static"), Some(BatchMode::Static));
+        assert_eq!(BatchMode::parse("Adaptive"), Some(BatchMode::Adaptive));
+        assert_eq!(BatchMode::parse("warp"), None);
+        for m in [BatchMode::Static, BatchMode::Adaptive] {
+            assert_eq!(BatchMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(BatchMode::default(), BatchMode::Static);
+    }
+
+    #[test]
+    fn relaxed_deadline_reproduces_the_static_plan() {
+        // plenty of slack: one worker, one cost-optimal [16] cover
+        let plan =
+            plan_adaptive_groups(15, &[1, 4, 16], cloud_cost, &[0.0, 0.0, 0.0, 0.0], 10.0);
+        assert_eq!(plan.groups, vec![vec![16]]);
+        assert!((plan.done - cloud_cost(16)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tight_deadline_splits_across_idle_workers() {
+        // cost(16) = 0.11875 s misses a 0.05 s deadline; four parallel
+        // 4-batches (0.04375 s each) meet it
+        let starts = [0.0, 0.0, 0.0, 0.0];
+        let plan = plan_adaptive_groups(15, &[1, 4, 16], cloud_cost, &starts, 0.05);
+        assert!(plan.done <= 0.05, "done={}", plan.done);
+        assert!(plan.groups.len() > 1);
+        assert!(plan.slots() >= 15);
+    }
+
+    #[test]
+    fn infeasible_deadline_minimizes_latency() {
+        // nothing meets deadline 0: return the fastest candidate anyway
+        let starts = [0.0, 0.01];
+        let plan = plan_adaptive_groups(15, &[1, 4, 16], cloud_cost, &starts, 0.0);
+        let one = plan_adaptive_groups(15, &[1, 4, 16], cloud_cost, &starts, f64::INFINITY);
+        assert!(plan.done <= one.done + 1e-12);
+    }
+
+    #[test]
+    fn prop_adaptive_plans_cover_items_and_honor_feasible_deadlines() {
+        crate::util::prop::prop_check(300, 0xADA7, |g| {
+            let n = g.usize_in(1, 64);
+            let workers = g.usize_in(1, 6);
+            let mut starts: Vec<f64> =
+                (0..workers).map(|_| g.f64_range(0.0, 0.2)).collect();
+            starts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let deadline = g.f64_range(0.0, 0.5);
+            let plan = plan_adaptive_groups(n, &[1, 4, 16], cloud_cost, &starts, deadline);
+            if plan.slots() < n {
+                return Err(format!("plan covers {} < {n}", plan.slots()));
+            }
+            if plan.groups.len() > workers {
+                return Err(format!(
+                    "plan uses {} groups for {workers} workers",
+                    plan.groups.len()
+                ));
+            }
+            // if ANY candidate split meets the deadline, the plan must
+            // (never violate the per-chunk deadline when avoidable)
+            let feasible = (1..=workers.min(n)).any(|k| {
+                let base = n / k;
+                let extra = n % k;
+                (0..k)
+                    .map(|i| {
+                        let m = base + usize::from(i < extra);
+                        starts[i]
+                            + plan_batches(m, &[1, 4, 16])
+                                .iter()
+                                .map(|&b| cloud_cost(b))
+                                .sum::<f64>()
+                    })
+                    .fold(f64::NEG_INFINITY, f64::max)
+                    <= deadline
+            });
+            if feasible && plan.done > deadline {
+                return Err(format!(
+                    "feasible deadline {deadline} violated: done {}",
+                    plan.done
+                ));
+            }
+            // never slower than the single-worker static plan
+            let static_done = starts[0]
+                + plan_batches(n, &[1, 4, 16]).iter().map(|&b| cloud_cost(b)).sum::<f64>();
+            if plan.done > static_done + 1e-12 {
+                return Err(format!(
+                    "adaptive done {} worse than static {static_done}",
+                    plan.done
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -10,6 +10,8 @@
 //!   when `max_batch` is reached or the oldest request exceeds
 //!   `max_wait_s` on the virtual clock (Clipper-style adaptive batching).
 
+use crate::util::stats::Accum;
+
 /// Default batching-efficiency assumption for planning:
 /// `cost(batch b) = 1 + (b − 1)·gain` relative to a single-item call
 /// (matches [`crate::sim::device::DeviceProfile::batched`]).
@@ -24,8 +26,19 @@ pub fn plan_batches(n: usize, buckets: &[usize]) -> Vec<usize> {
 }
 
 /// [`plan_batches`] with an explicit batch-efficiency gain.
+///
+/// `gain` must be finite and non-negative: a NaN gain makes every DP
+/// comparison false (leaving `choice` unset), and a negative gain makes a
+/// big batch "cheaper" than its parts, so the planner would pad every
+/// request up to the largest bucket. Both would corrupt plans silently,
+/// so they are rejected here — the single chokepoint every caller
+/// (library, CLI, config) funnels through.
 pub fn plan_batches_cost(n: usize, buckets: &[usize], gain: f64) -> Vec<usize> {
     assert!(!buckets.is_empty());
+    assert!(
+        gain.is_finite() && gain >= 0.0,
+        "batch gain must be finite and >= 0, got {gain}"
+    );
     if n == 0 {
         return Vec::new();
     }
@@ -105,23 +118,34 @@ struct Pending<T> {
 /// Clipper-style dynamic batcher on the virtual clock: accumulates items
 /// and flushes either a full `max_batch` or everything older than
 /// `max_wait_s`.
+///
+/// The queue is kept sorted by arrival time (stable for ties: equal
+/// arrivals stay in push order), so `queue[0]` really is the oldest item
+/// even when pushes arrive out of virtual-clock order — streaming
+/// admission across shards can interleave arrivals that way.
 #[derive(Debug)]
 pub struct DynamicBatcher<T> {
     queue: Vec<Pending<T>>,
     pub max_batch: usize,
     pub max_wait_s: f64,
-    /// Queue-time samples (seconds) for latency accounting.
-    pub queue_times: Vec<f64>,
+    /// Queue-time accounting (seconds): streaming count/mean/min/max.
+    /// Bounded memory — a raw sample vector here grows for the whole run
+    /// at thousand-camera scale.
+    pub queue_times: Accum,
 }
 
 impl<T> DynamicBatcher<T> {
     pub fn new(max_batch: usize, max_wait_s: f64) -> Self {
         assert!(max_batch > 0 && max_wait_s >= 0.0);
-        DynamicBatcher { queue: Vec::new(), max_batch, max_wait_s, queue_times: Vec::new() }
+        DynamicBatcher { queue: Vec::new(), max_batch, max_wait_s, queue_times: Accum::new() }
     }
 
     pub fn push(&mut self, item: T, now: f64) {
-        self.queue.push(Pending { item, arrived: now });
+        // Sorted insert: position after every item with arrived <= now, so
+        // in-order pushes (the common case) append in O(1) and ties keep
+        // push order — wave formation's merge order must survive intact.
+        let at = self.queue.partition_point(|p| p.arrived <= now);
+        self.queue.insert(at, Pending { item, arrived: now });
     }
 
     pub fn len(&self) -> usize {
@@ -151,6 +175,10 @@ impl<T> DynamicBatcher<T> {
         if self.queue.is_empty() {
             return None;
         }
+        debug_assert!(
+            self.queue.windows(2).all(|w| w[0].arrived <= w[1].arrived),
+            "batcher queue out of arrival order"
+        );
         let oldest = self.queue[0].arrived;
         if self.queue.len() >= self.max_batch || now - oldest >= self.max_wait_s {
             let take = self.queue.len().min(self.max_batch);
@@ -245,8 +273,39 @@ mod tests {
         assert!(b.pop_batch(0.02).is_none());
         let batch = b.pop_batch(0.06).unwrap();
         assert_eq!(batch, vec![1, 2]);
-        assert_eq!(b.queue_times.len(), 2);
-        assert!((b.queue_times[0] - 0.06).abs() < 1e-9);
+        assert_eq!(b.queue_times.count(), 2);
+        assert!((b.queue_times.max() - 0.06).abs() < 1e-9);
+        assert!((b.queue_times.min() - 0.05).abs() < 1e-9);
+        assert!((b.queue_times.mean() - 0.055).abs() < 1e-9);
+    }
+
+    #[test]
+    fn out_of_order_pushes_still_flush_by_true_oldest() {
+        // Regression: queue[0] used to be "first pushed", not "oldest
+        // arrival" — an out-of-order push made pop_batch/due_at read the
+        // wrong item and a due partial batch never flushed.
+        let mut b = DynamicBatcher::new(8, 0.05);
+        b.push("late", 0.04);
+        b.push("early", 0.0); // arrives out of virtual-clock order
+        assert_eq!(b.oldest_arrival(), Some(0.0));
+        assert_eq!(b.due_at(), Some(0.05));
+        // at t=0.05 the true oldest item has aged out, so the batch is due
+        // and drains in arrival order, not push order
+        let batch = b.pop_batch(0.05).unwrap();
+        assert_eq!(batch, vec!["early", "late"]);
+        // queue-time accounting uses the true arrivals
+        assert!((b.queue_times.max() - 0.05).abs() < 1e-9);
+        assert!((b.queue_times.min() - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn equal_arrivals_keep_push_order() {
+        let mut b = DynamicBatcher::new(8, 0.0);
+        b.push(1, 1.0);
+        b.push(2, 1.0);
+        b.push(3, 0.5);
+        b.push(4, 1.0);
+        assert_eq!(b.pop_batch(1.0).unwrap(), vec![3, 1, 2, 4]);
     }
 
     #[test]
@@ -281,6 +340,60 @@ mod tests {
         assert_eq!(batches.len(), 3);
         assert_eq!(batches[0].len(), 4);
         assert_eq!(batches[2].len(), 2);
+    }
+
+    #[test]
+    fn flush_all_accounts_queue_time_for_every_item() {
+        let mut b = DynamicBatcher::new(4, 100.0);
+        b.push(0, 0.0);
+        b.push(1, 0.5);
+        b.push(2, 2.0);
+        let batches = b.flush_all(2.0);
+        assert_eq!(batches.len(), 1);
+        // every drained item records (now - arrived).max(0): 2.0, 1.5, 0.0
+        assert_eq!(b.queue_times.count(), 3);
+        assert!((b.queue_times.sum() - 3.5).abs() < 1e-12);
+        assert!((b.queue_times.max() - 2.0).abs() < 1e-12);
+        assert_eq!(b.queue_times.min(), 0.0);
+    }
+
+    #[test]
+    fn due_at_retargets_after_partial_pop() {
+        let mut b = DynamicBatcher::new(2, 1.0);
+        b.push(1, 0.0);
+        b.push(2, 0.5);
+        b.push(3, 0.7);
+        // full batch pops the two oldest; due_at must follow the survivor
+        let batch = b.pop_batch(0.8).unwrap();
+        assert_eq!(batch, vec![1, 2]);
+        assert_eq!(b.oldest_arrival(), Some(0.7));
+        assert_eq!(b.due_at(), Some(1.7));
+    }
+
+    #[test]
+    fn plan_cost_extremes_are_sane() {
+        // gain = 0.0: every batch costs 1 regardless of size, so one
+        // largest bucket covers everything
+        assert_eq!(plan_batches_cost(7, &[1, 4, 16], 0.0), vec![16]);
+        assert_eq!(plan_batches_cost(16, &[1, 4, 16], 0.0), vec![16]);
+        // gain = 1.0: cost is linear in slots, padding can only lose, and
+        // total cost equals the item count exactly
+        let plan = plan_batches_cost(21, &[1, 4, 16], 1.0);
+        assert_eq!(plan.iter().sum::<usize>(), 21);
+        let cost: f64 = plan.iter().map(|&b| 1.0 + (b as f64 - 1.0)).sum();
+        assert!((cost - 21.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch gain")]
+    fn plan_rejects_nan_gain() {
+        plan_batches_cost(5, &[1, 4, 16], f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch gain")]
+    fn plan_rejects_negative_gain() {
+        plan_batches_cost(5, &[1, 4, 16], -0.1);
     }
 
     #[test]

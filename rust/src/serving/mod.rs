@@ -1,5 +1,8 @@
-//! Serving-layer building blocks: dynamic batching and batched model calls.
+//! Serving-layer building blocks: dynamic batching, SLO-aware adaptive
+//! batch planning, and batched model calls.
 
+pub mod adaptive;
 pub mod batcher;
 
+pub use adaptive::{plan_adaptive_groups, BatchMode, GroupPlan};
 pub use batcher::{plan_batches, BatchPlanner, DynamicBatcher};

@@ -47,8 +47,9 @@ use crate::util::config::Config;
 
 /// Axis/override keys the runner knows how to apply. `system` selects the
 /// pipeline under test; every other key writes one [`RunConfig`] field.
-pub const KNOWN_AXES: [&str; 13] = [
+pub const KNOWN_AXES: [&str; 14] = [
     "autoscale",
+    "batching",
     "dispatch",
     "drift",
     "gpus",
@@ -255,6 +256,10 @@ pub fn apply_axis(cfg: &mut RunConfig, key: &str, value: &str) -> Result<()> {
         "hitl_budget" => cfg.hitl_budget = parse_f64("hitl_budget", value)?,
         "drift" => cfg.drift = parse_bool("drift", value)?,
         "autoscale" => cfg.autoscale = parse_bool("autoscale", value)?,
+        "batching" => {
+            cfg.batching = crate::serving::BatchMode::parse(value)
+                .ok_or_else(|| anyhow!("axis batching: unknown mode {value:?} (static|adaptive)"))?;
+        }
         "system" => bail!("the `system` axis is applied by the study runner, not apply_axis"),
         other => bail!("unknown study axis {other:?} (known: {KNOWN_AXES:?})"),
     }
@@ -363,6 +368,9 @@ gpus = 1, 2
         apply_axis(&mut cfg, "ladder", "single").unwrap();
         apply_axis(&mut cfg, "tenants", "gold:3+silver:1").unwrap();
         apply_axis(&mut cfg, "threads", "4").unwrap();
+        apply_axis(&mut cfg, "batching", "adaptive").unwrap();
+        assert_eq!(cfg.batching, crate::serving::BatchMode::Adaptive);
+        assert!(apply_axis(&mut cfg, "batching", "warp").is_err());
         assert_eq!((cfg.gpus, cfg.shards), (4, 8));
         assert_eq!(cfg.threads, 4);
         assert!(apply_axis(&mut cfg, "threads", "0").is_err());

@@ -116,6 +116,81 @@ impl Series {
     }
 }
 
+/// Streaming accumulator: count / sum / mean / min / max in O(1) memory.
+/// Where a [`Series`] keeps every sample (fine for study repeats, needed
+/// for percentiles), an `Accum` is the right shape for per-run telemetry
+/// that grows with the chunk count — queue times, projection residuals —
+/// which would otherwise leak at thousand-camera scale.
+///
+/// The running `sum` adds samples in push order, so a `mean()` computed
+/// here is bit-identical to `Series::mean()` over the same push sequence.
+#[derive(Debug, Clone, Copy)]
+pub struct Accum {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Accum {
+    fn default() -> Self {
+        Accum { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Accum::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        assert!(x.is_finite(), "non-finite sample {x}");
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean of the pushed samples; 0.0 when empty (matches `Series`).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Smallest sample; +∞ when empty (matches `Series::min`).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest sample; −∞ when empty (matches `Series::max`).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Fold another accumulator in (per-shard accumulators merge at
+    /// end of run).
+    pub fn merge(&mut self, other: &Accum) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
 /// Point-in-time summary of a [`Series`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
@@ -402,6 +477,47 @@ mod tests {
     #[should_panic(expected = "non-finite")]
     fn rejects_nan() {
         Series::new().push(f64::NAN);
+    }
+
+    #[test]
+    fn accum_matches_series_bit_for_bit() {
+        let xs = [0.06, 0.05, 1.25, 0.0, 3.5e-3];
+        let mut series = Series::new();
+        let mut acc = Accum::new();
+        for &x in &xs {
+            series.push(x);
+            acc.push(x);
+        }
+        assert_eq!(acc.count(), xs.len() as u64);
+        assert_eq!(acc.sum().to_bits(), series.sum().to_bits());
+        assert_eq!(acc.mean().to_bits(), series.mean().to_bits());
+        assert_eq!(acc.min().to_bits(), series.min().to_bits());
+        assert_eq!(acc.max().to_bits(), series.max().to_bits());
+    }
+
+    #[test]
+    fn accum_empty_and_merge() {
+        let empty = Accum::new();
+        assert!(empty.is_empty());
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.min(), f64::INFINITY);
+        assert_eq!(empty.max(), f64::NEG_INFINITY);
+        let mut a = Accum::new();
+        a.push(1.0);
+        a.push(3.0);
+        let mut b = Accum::new();
+        b.push(-2.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.sum() - 2.0).abs() < 1e-12);
+        assert_eq!(a.min(), -2.0);
+        assert_eq!(a.max(), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn accum_rejects_nan() {
+        Accum::new().push(f64::NAN);
     }
 
     #[test]

@@ -133,9 +133,10 @@ fn par_artifact_schema() {
 
 #[test]
 fn slo_artifact_encodes_disabled_slo_as_null() {
-    let mk = |slo: f64, ladder: bool, dropped: u64| SloRow {
+    let mk = |slo: f64, ladder: bool, adaptive: bool, dropped: u64| SloRow {
         slo_ms: slo,
         ladder,
+        adaptive,
         f1: 0.8,
         wan_bytes: 1.0e6,
         cost_units: 500.0,
@@ -144,21 +145,25 @@ fn slo_artifact_encodes_disabled_slo_as_null() {
         chunks_dropped: dropped,
     };
     let slo_rows = vec![
-        mk(f64::INFINITY, true, 0),
-        mk(f64::INFINITY, false, 0),
-        mk(10_000.0, true, 1),
-        mk(10_000.0, false, 2),
+        mk(f64::INFINITY, true, false, 0),
+        mk(f64::INFINITY, false, false, 0),
+        mk(10_000.0, true, false, 1),
+        mk(10_000.0, true, true, 0),
+        mk(10_000.0, false, true, 2),
     ];
     let text = slo_json(4, &slo_rows);
     let doc = parse(&text);
     let rs = rows(&doc, "fig10_slo_frontier", "drone x4 cameras, bursty, 2 shards");
-    assert_eq!(rs.len(), 4);
+    assert_eq!(rs.len(), 5);
     // a disabled SLO is JSON null, never a non-finite number literal
     assert!(rs[0].get("slo_ms").unwrap().is_null());
     assert!(rs[1].get("slo_ms").unwrap().is_null());
     assert_eq!(num(&rs[2], "slo_ms"), 10_000.0);
     assert_eq!(rs[2].get("ladder").and_then(Json::as_bool), Some(true));
-    assert_eq!(rs[3].get("ladder").and_then(Json::as_bool), Some(false));
+    assert_eq!(rs[4].get("ladder").and_then(Json::as_bool), Some(false));
+    // the batching column is a plain JSON bool, adaptive = true
+    assert_eq!(rs[2].get("adaptive_batching").and_then(Json::as_bool), Some(false));
+    assert_eq!(rs[3].get("adaptive_batching").and_then(Json::as_bool), Some(true));
     for (row, want) in rs.iter().zip(&slo_rows) {
         assert!((num(row, "f1") - want.f1).abs() < 1e-6);
         assert_eq!(num(row, "wan_bytes"), want.wan_bytes);
@@ -166,6 +171,82 @@ fn slo_artifact_encodes_disabled_slo_as_null() {
         assert_eq!(num(row, "chunks"), 40.0);
         assert_eq!(num(row, "chunks_degraded"), 3.0);
         assert_eq!(num(row, "chunks_dropped"), want.chunks_dropped as f64);
+        assert_eq!(row.get("adaptive_batching").and_then(Json::as_bool), Some(want.adaptive));
+    }
+    // stable: same rows encode to identical bytes
+    assert_eq!(text, slo_json(4, &slo_rows));
+}
+
+#[test]
+fn batching_artifact_schema_and_roundtrip() {
+    // BENCH_batch.json is the StudyReport of studies/batching.toml: the
+    // static-vs-adaptive GPU batching matrix over binding SLO targets.
+    // Every cell carries the legacy metric vector; what the artifact
+    // tracks per PR is how the adaptive column moves f1/drops at each
+    // target, so cell keys must spell out both axis values.
+    let metric = |name: &str, n: usize, mean: f64| MetricStats {
+        name: name.into(),
+        n,
+        mean,
+        std: 0.01,
+        ci95: if n >= 2 { Some(0.02) } else { None },
+    };
+    let cell = |idx: usize, key: &str, n: usize| CellStats {
+        cell: idx,
+        key: key.into(),
+        values: key
+            .split(',')
+            .map(|kv| {
+                let (k, v) = kv.split_once('=').unwrap();
+                (k.to_string(), v.to_string())
+            })
+            .collect(),
+        seed: 0xBA7C_0000 + idx as u64,
+        fingerprint: 0xD00D ^ idx as u64,
+        metrics: vec![
+            metric("f1_true", n, 0.8),
+            metric("chunks_dropped", n, 2.0),
+            metric("latency_p99_s", n, 9.5),
+        ],
+    };
+    // smoke shape: 2 repeats over {10000, 8500}; full adds inf + 12000
+    for (repeats, slo_values) in
+        [(2usize, vec!["10000", "8500"]), (3, vec!["inf", "12000", "10000", "8500"])]
+    {
+        let mut cells = Vec::new();
+        for batching in ["static", "adaptive"] {
+            for slo in &slo_values {
+                let key = format!("batching={batching},slo_ms={slo}");
+                cells.push(cell(cells.len(), &key, repeats));
+            }
+        }
+        let report = StudyReport {
+            study: "batching".into(),
+            system: "vpaas".into(),
+            dataset: "drone".into(),
+            scale: if repeats == 2 { 0.05 } else { 0.1 },
+            cameras: if repeats == 2 { 4 } else { 6 },
+            repeats,
+            base_seed: 0xBA7C,
+            seed_mode: "per_cell".into(),
+            cells,
+        };
+        let text = report.to_json();
+        let doc = parse(&text);
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("study"));
+        assert_eq!(doc.get("study").and_then(Json::as_str), Some("batching"));
+        let cells = doc.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 2 * slo_values.len());
+        for c in cells {
+            let key = c.get("key").and_then(Json::as_str).unwrap();
+            assert!(
+                key.contains("batching=static") || key.contains("batching=adaptive"),
+                "cell key {key:?} must pin the batching axis"
+            );
+            assert!(key.contains("slo_ms="), "cell key {key:?} must pin the SLO axis");
+        }
+        // the gate consumes the parse-back path
+        assert_eq!(StudyReport::from_json(&text).unwrap(), report);
     }
 }
 

@@ -8,6 +8,7 @@
 
 use vpaas::pipeline::RunConfig;
 use vpaas::serverless::executor::DispatchMode;
+use vpaas::serving::BatchMode;
 use vpaas::sim::video::{Quality, WorkloadProfile};
 use vpaas::util::cli::Args;
 use vpaas::util::config::Config;
@@ -33,6 +34,8 @@ fn defaults_agree_across_both_paths() {
     assert_eq!(from_cli.tenants, from_file.tenants);
     assert_eq!(from_cli.threads, from_file.threads);
     assert_eq!(from_cli.seed, from_file.seed);
+    assert_eq!(from_cli.batching, BatchMode::Static);
+    assert_eq!(from_cli.batching, from_file.batching);
 }
 
 #[test]
@@ -40,7 +43,8 @@ fn every_knob_reaches_runconfig_from_both_paths() {
     let cli = RunConfig::from_args(&args(
         "run --wan 42 --budget 0.35 --no-drift --golden --shards 6 --gpus 3 \
          --slo-ms 9000 --ladder 0.75:38,0.5:44 --seed 0xBEEF --workload bursty \
-         --dispatch streaming --threads 4 --tenants gold*3:2:5000,silver",
+         --dispatch streaming --threads 4 --batching adaptive \
+         --tenants gold*3:2:5000,silver",
     ))
     .unwrap();
     let file = RunConfig::from_config(
@@ -50,7 +54,7 @@ fn every_knob_reaches_runconfig_from_both_paths() {
              [app]\ndrift = false\ngolden = true\nshards = 6\nslo_ms = 9000\n\
              ladder = 0.75:38, 0.5:44\nseed = 48879\nworkload = bursty\n\
              dispatch = streaming\nthreads = 4\n\
-             [cloud]\ngpus = 3\n\
+             [cloud]\ngpus = 3\nbatching = adaptive\n\
              [tenants]\ngold*3 = 2:5000\nsilver =\n",
         )
         .unwrap(),
@@ -73,6 +77,7 @@ fn every_knob_reaches_runconfig_from_both_paths() {
     assert_eq!(cli.tenants.get(0).weight, 2.0);
     assert_eq!(cli.tenants.get(0).slo_ms, Some(5000.0));
     assert!(cli.tenants.fair_enabled());
+    assert_eq!(cli.batching, BatchMode::Adaptive);
 
     // ...and both paths agree knob for knob
     assert_eq!(cli.wan_mbps, file.wan_mbps);
@@ -88,6 +93,7 @@ fn every_knob_reaches_runconfig_from_both_paths() {
     assert_eq!(cli.seed, file.seed);
     assert_eq!(cli.threads, file.threads);
     assert_eq!(cli.tenants, file.tenants);
+    assert_eq!(cli.batching, file.batching);
 }
 
 #[test]
@@ -97,10 +103,12 @@ fn bad_values_error_on_both_paths() {
     assert!(RunConfig::from_args(&args("run --ladder nonsense")).is_err());
     assert!(RunConfig::from_args(&args("run --tenants gold:0")).is_err());
     assert!(RunConfig::from_args(&args("run --threads 0")).is_err());
+    assert!(RunConfig::from_args(&args("run --batching warp")).is_err());
     let bad = |text: &str| RunConfig::from_config(&Config::parse(text).unwrap());
     assert!(bad("[app]\nworkload = warp\n").is_err());
     assert!(bad("[app]\ndispatch = warp\n").is_err());
     assert!(bad("[app]\nladder = nonsense\n").is_err());
     assert!(bad("[app]\nthreads = 0\n").is_err());
     assert!(bad("[tenants]\ngold = 0\n").is_err());
+    assert!(bad("[cloud]\nbatching = warp\n").is_err());
 }

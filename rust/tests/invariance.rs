@@ -31,6 +31,7 @@
 use vpaas::pipeline::{Harness, RunConfig, SystemKind};
 use vpaas::serverless::executor::DispatchMode;
 use vpaas::serverless::TenantRegistry;
+use vpaas::serving::BatchMode;
 use vpaas::sim::video::chunk::FRAMES_PER_CHUNK;
 use vpaas::sim::video::datasets::{self, DatasetSpec, VideoSpec};
 use vpaas::sim::video::{Quality, WorkloadProfile};
@@ -341,6 +342,171 @@ fn equal_weight_balanced_tenants_stay_byte_identical() {
         assert_eq!(fair.tenants[0].chunks, 4);
         assert_eq!(fair.tenants[1].chunks, 4);
         assert_eq!(fair.jain_fairness(), Some(1.0));
+    }
+}
+
+#[test]
+fn adaptive_batching_without_an_slo_is_byte_invisible() {
+    // `batching = static` is the default, so the reference runs here are
+    // exactly the pre-batching pipeline. Flipping the knob to `adaptive`
+    // with the SLO disabled must change nothing at all — the planner
+    // only arms for a finite effective target, the calibration cut only
+    // applies under `Adaptive` with observed residuals (and residuals
+    // are only stashed for admitted, SLO-governed chunks) — so even
+    // makespan and latency bits are required to match, across dispatch
+    // mode × shards × gpus × worker threads.
+    let h = Harness::new().unwrap();
+    let ds = cameras(3);
+    let variants = [
+        (DispatchMode::EventDriven, 1usize, 1usize, 1usize),
+        (DispatchMode::Streaming, 2, 2, 1),
+        (DispatchMode::Sequential, 1, 4, 1),
+        (DispatchMode::Streaming, 4, 1, 4),
+    ];
+    for (dispatch, shards, gpus, threads) in variants {
+        let base =
+            RunConfig { threads, ..cfg(shards, gpus, dispatch, WorkloadProfile::Bursty) };
+        let stat = h.run(SystemKind::Vpaas, &ds, &base).unwrap();
+        assert!(stat.chunks > 0);
+        let ada = h
+            .run(
+                SystemKind::Vpaas,
+                &ds,
+                &RunConfig { batching: BatchMode::Adaptive, ..base.clone() },
+            )
+            .unwrap();
+        assert_eq!(
+            ada.content_fingerprint(),
+            stat.content_fingerprint(),
+            "adaptive batching changed an SLO-free run on {}/{shards} shards/{gpus} \
+             gpus/{threads} threads",
+            dispatch.name(),
+        );
+        assert_eq!(stat.makespan.to_bits(), ada.makespan.to_bits());
+        let (sa, sb) = (stat.latency.summary(), ada.latency.summary());
+        assert_eq!(sa.count, sb.count);
+        assert_eq!(sa.mean.to_bits(), sb.mean.to_bits());
+        assert_eq!(sa.max.to_bits(), sb.max.to_bits());
+        // and with no SLO there is nothing to calibrate against
+        assert!(ada.projection.total.is_empty());
+        assert_eq!(ada.projection.allowance_cut_s(), 0.0);
+    }
+}
+
+#[test]
+fn adaptive_batching_dominates_static_at_a_binding_slo() {
+    // The point of the deadline-aware planner: where the freshness target
+    // binds, splitting detect waves across idle workers (shorter batch
+    // completion) and the self-calibrating projection cut (admitting
+    // chunks the hand-tuned allowances would refuse) must buy accuracy
+    // without buying drops. Scan candidate targets derived from the
+    // unconstrained run's chunk-age distribution and require at least one
+    // binding cell where adaptive strictly dominates static: ≥ F1 at
+    // ≤ drops with at least one strict improvement.
+    let h = Harness::new().unwrap();
+    let ds = cameras(4);
+    let base = cfg(2, 4, DispatchMode::Streaming, WorkloadProfile::Bursty);
+    let reference = h.run(SystemKind::Vpaas, &ds, &base).unwrap();
+    let mut ages: Vec<f64> = reference
+        .latency
+        .freshness
+        .values()
+        .chunks(FRAMES_PER_CHUNK)
+        .map(|c| c[0])
+        .collect();
+    ages.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |f: f64| ages[((ages.len() - 1) as f64 * f) as usize];
+    let candidates =
+        [(q(0.75) + q(1.0)) / 2.0, (q(0.5) + q(1.0)) / 2.0, q(0.9), q(0.75), q(0.6)];
+    let planned: u64 = ds.make_videos(&h.params).iter().map(|v| v.chunks_total()).sum();
+    let mut cells = Vec::new();
+    let mut win = false;
+    for slo_s in candidates {
+        let stat_cfg = RunConfig { slo_ms: slo_s * 1e3, ..base.clone() };
+        let ada_cfg = RunConfig { batching: BatchMode::Adaptive, ..stat_cfg.clone() };
+        let stat = h.run(SystemKind::Vpaas, &ds, &stat_cfg).unwrap();
+        let ada = h.run(SystemKind::Vpaas, &ds, &ada_cfg).unwrap();
+        // both modes: every scored chunk meets the target, and exact
+        // accounting holds — the planner and the cut may move *which*
+        // chunks are served, never lose one
+        for m in [&stat, &ada] {
+            let s = m.latency.summary();
+            if s.count > 0 {
+                assert!(s.max <= slo_s + 1e-9, "scored chunk missed the SLO: {} > {slo_s}", s.max);
+            }
+            assert_eq!(m.chunks + m.chunks_dropped, planned, "chunks lost under SLO batching");
+        }
+        // adaptive runs stay deterministic
+        let again = h.run(SystemKind::Vpaas, &ds, &ada_cfg).unwrap();
+        assert_eq!(ada.content_fingerprint(), again.content_fingerprint());
+        assert_eq!(ada.makespan.to_bits(), again.makespan.to_bits());
+        let (f1_s, f1_a) = (stat.f1_true.f1(), ada.f1_true.f1());
+        cells.push((slo_s, f1_s, f1_a, stat.chunks_dropped, ada.chunks_dropped));
+        if stat.chunks_degraded + stat.chunks_dropped == 0 {
+            continue; // target never bound — not a cell that can dominate
+        }
+        let no_worse = f1_a + 1e-9 >= f1_s && ada.chunks_dropped <= stat.chunks_dropped;
+        let strict = f1_a > f1_s + 1e-9 || ada.chunks_dropped < stat.chunks_dropped;
+        if no_worse && strict {
+            win = true;
+            break;
+        }
+    }
+    assert!(
+        win,
+        "adaptive batching never dominated static at any binding target \
+         (slo_s, f1_static, f1_adaptive, dropped_static, dropped_adaptive): {cells:?}"
+    );
+}
+
+#[test]
+fn projection_residuals_track_scored_chunks_and_the_cut_stays_conservative() {
+    let h = Harness::new().unwrap();
+    let ds = cameras(3);
+    let base = cfg(2, 2, DispatchMode::Streaming, WorkloadProfile::Bursty);
+    // no SLO → no projections stashed → no residuals, zero cut
+    let free = h.run(SystemKind::Vpaas, &ds, &base).unwrap();
+    assert!(free.projection.total.is_empty(), "residuals recorded without an SLO");
+    assert_eq!(free.projection.allowance_cut_s(), 0.0);
+    // binding target from the free run's chunk ages (as in the SLO tests)
+    let mut ages: Vec<f64> = free
+        .latency
+        .freshness
+        .values()
+        .chunks(FRAMES_PER_CHUNK)
+        .map(|c| c[0])
+        .collect();
+    ages.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let slo_s = (ages[ages.len() * 3 / 4] + ages[ages.len() - 1]) / 2.0;
+    for batching in [BatchMode::Static, BatchMode::Adaptive] {
+        let m = h
+            .run(
+                SystemKind::Vpaas,
+                &ds,
+                &RunConfig { slo_ms: slo_s * 1e3, batching, ..base.clone() },
+            )
+            .unwrap();
+        assert!(m.chunks > 0);
+        // one residual sample per scored cloud chunk, all stages in step
+        let n = m.projection.total.count();
+        assert!(n > 0, "{}: no residuals under a binding SLO", batching.name());
+        assert!(n <= m.chunks, "{}: more residuals than served chunks", batching.name());
+        assert_eq!(m.projection.uplink.count(), n);
+        assert_eq!(m.projection.feedback.count(), n);
+        assert_eq!(m.projection.classify.count(), n);
+        // the calibrated cut is non-negative, finite, and never exceeds
+        // half the smallest observed per-stage over-projection — the
+        // safety margin that keeps the calibrated projection conservative
+        let cut = m.projection.allowance_cut_s();
+        assert!(cut >= 0.0 && cut.is_finite());
+        let bound = m.projection.uplink.min().max(0.0)
+            + m.projection.feedback.min().max(0.0)
+            + m.projection.classify.min().max(0.0);
+        assert!(
+            cut <= bound * 0.5 + 1e-12,
+            "{}: cut {cut} exceeds the conservative bound {bound}",
+            batching.name()
+        );
     }
 }
 
