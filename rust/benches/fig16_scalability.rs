@@ -3,12 +3,14 @@
 //! vs sequential dispatch comparison (`BENCH_overlap.json`), the
 //! run-scoped streaming vs wave-barrier vs sequential sweep across
 //! workload profiles (`BENCH_stream.json`), the cloud GPU pool sweep at
-//! worker counts {1, 2, 4, 8} (`BENCH_gpu.json`), and the worker-thread
-//! wall-clock sweep (`BENCH_par.json`, the only artifact measuring host
-//! time rather than the virtual clock) — the JSON artifacts are uploaded
-//! by CI so the perf trajectory is visible per PR. The virtual-time
-//! sweeps run as declarative studies (`vpaas::study`) and the JSON
-//! encoders live in `pipeline::figures`, shared with the schema tests.
+//! worker counts {1, 2, 4, 8} (`BENCH_gpu.json`), the worker-thread
+//! wall-clock sweep (`BENCH_par.json`), and the render-once hot-path
+//! sweep (`BENCH_hotpath.json`, frame cache on/off × thread counts —
+//! these last two measure host time rather than the virtual clock) — the
+//! JSON artifacts are uploaded by CI so the perf trajectory is visible
+//! per PR. The virtual-time sweeps run as declarative studies
+//! (`vpaas::study`) and the JSON encoders live in `pipeline::figures`,
+//! shared with the schema tests.
 //!
 //! Set `VPAAS_BENCH_SMOKE=1` for the reduced CI configuration: fewer
 //! cameras, a shorter dataset, no repeated timing reps — the JSON
@@ -156,6 +158,49 @@ fn main() {
                 "{} threads did not beat 1 thread on the wall clock: {} vs {w1}",
                 r.threads,
                 r.wall_s
+            );
+        }
+    }
+
+    // render-once hot path: frame cache on/off × worker threads, timed on
+    // the host clock. fig16_hotpath itself asserts the determinism
+    // contract (fingerprint + makespan bits identical at every cell, and
+    // decode-demand volume invariant under the cache flag) before any
+    // timing is reported. The cache-beats-baseline assertion only runs at
+    // the full shape, where the decode volume is big enough to dominate
+    // the memo's bookkeeping.
+    let (hot_cams, hot_scale) = if smoke { (8, 0.05) } else { (16, 0.1) };
+    let hot_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 4] };
+    let (hot_text, hot_rows) =
+        figures::fig16_hotpath(&h, &cfg, hot_cams, hot_scale, hot_counts).unwrap();
+    println!("{hot_text}");
+    let json = figures::hotpath_json(hot_cams, &hot_rows);
+    std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json: {json}");
+    for &threads in hot_counts {
+        let cell = |cache: bool| {
+            hot_rows
+                .iter()
+                .find(|r| r.threads == threads && r.frame_cache == cache)
+                .expect("swept hotpath cell")
+        };
+        let (off, on) = (cell(false), cell(true));
+        if smoke {
+            if on.wall_s >= off.wall_s {
+                println!(
+                    "WARN: frame cache did not beat cache-off at smoke scale \
+                     ({threads} threads): {} vs {}",
+                    on.wall_s, off.wall_s
+                );
+            }
+        } else {
+            // the tentpole claim: rendering each frame once must strictly
+            // beat per-region re-rendering at every swept thread count
+            assert!(
+                on.wall_s < off.wall_s,
+                "frame cache did not beat cache-off at {threads} threads: {} vs {}",
+                on.wall_s,
+                off.wall_s
             );
         }
     }

@@ -9,21 +9,32 @@
 //! Costs: ≥1 detector invocation per frame plus one more per frame that
 //! needs round 2 (Fig. 10a), extra WAN bytes for region re-sends (Fig. 9),
 //! and an extra WAN round trip (Fig. 10b).
+//!
+//! Round 2's server-side decode goes through a [`FrameCache`]: each
+//! uncertain region demands its frame at `HIGH_ROUND2` quality, and the
+//! cache dedups those demands to one render per distinct frame. Renders
+//! are pure, so the memo is byte-invisible; a zero-capacity cache (the
+//! `--no-frame-cache` baseline) renders per region instead and meters the
+//! same demand volume.
 
 use anyhow::Result;
 
 use crate::baselines::{ChunkEnv, ChunkOutcome};
+use crate::fog::{FrameCache, FRAME_CACHE_FRAMES};
 use crate::metrics::f1::PredBox;
 use crate::protocol::post::regions_from_heads;
 use crate::protocol::{split_regions, FilterConfig};
 use crate::sim::device::CLIENT;
-use crate::sim::video::{codec, render_frame, Chunk, Quality};
+use crate::sim::video::render::recycle;
+use crate::sim::video::{codec, render_frame_with, Chunk, DriftedBank, Quality};
 
 pub struct Dds {
     pub low: Quality,
     pub round2: Quality,
     pub theta_cls: f64,
     pub filter: FilterConfig,
+    /// Memo of round-2 decoded frames, keyed `(frame, quality, drift)`.
+    pub frames: FrameCache,
     /// Client CPU horizon (QC runs on the client in DDS).
     client_free: f64,
 }
@@ -35,12 +46,21 @@ impl Default for Dds {
             round2: Quality::HIGH_ROUND2,
             theta_cls: 0.70,
             filter: FilterConfig::default(),
+            frames: FrameCache::new(FRAME_CACHE_FRAMES),
             client_free: 0.0,
         }
     }
 }
 
 impl Dds {
+    /// Enable or disable the round-2 frame memo (`RunConfig::frame_cache`).
+    /// Off swaps in a zero-capacity cache: every demand renders, but the
+    /// hit/miss ledger still meters demand volume.
+    pub fn with_frame_cache(mut self, on: bool) -> Self {
+        self.frames = FrameCache::new(if on { FRAME_CACHE_FRAMES } else { 0 });
+        self
+    }
+
     pub fn process_chunk(
         &mut self,
         chunk: &Chunk,
@@ -64,12 +84,17 @@ impl Dds {
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         env.metrics.bandwidth.add(low_bytes);
 
+        // one drift bank serves every render of the chunk (both rounds)
+        let bank = DriftedBank::new(phi, p);
         let low_frames: Vec<_> = chunk
             .frames
             .iter()
-            .map(|f| render_frame(f, self.low, phi, p))
+            .map(|f| render_frame_with(f, self.low, &bank, p))
             .collect();
         let (heads, t1) = env.cloud.detect_chunk(&low_frames, at_cloud, "detector")?;
+        for f in low_frames {
+            recycle(f);
+        }
 
         let mut per_frame: Vec<Vec<PredBox>> = Vec::with_capacity(n);
         let mut round2_frames: Vec<usize> = Vec::new();
@@ -116,10 +141,22 @@ impl Dds {
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
             env.metrics.bandwidth.add(r2_bytes);
 
-            // Cloud round 2: detector on the high-quality re-sends.
+            // Cloud round 2: detector on the high-quality re-sends. Each
+            // uncertain region demands a decode of its frame; the cache
+            // dedups to one render per distinct frame (per-region renders
+            // when disabled), keeping one Arc per frame for the detector.
+            let q2 = self.round2;
             let hi_frames: Vec<_> = round2_frames
                 .iter()
-                .map(|&fi| render_frame(&chunk.frames[fi], self.round2, phi, p))
+                .map(|&fi| {
+                    let mut frame = None;
+                    for _ in &uncertain_per_frame[fi] {
+                        frame = Some(self.frames.fetch(&chunk.frames[fi], q2, phi, || {
+                            render_frame_with(&chunk.frames[fi], q2, &bank, p)
+                        }));
+                    }
+                    frame.expect("a round-2 frame has at least one uncertain region")
+                })
                 .collect();
             let (heads2, t2) = env.cloud.detect_chunk(&hi_frames, at_cloud2, "detector")?;
             done = t2.done;

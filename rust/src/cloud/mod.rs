@@ -197,10 +197,12 @@ impl CloudServer {
     /// ([`crate::util::par`]): the heads are a pure function of `frames`
     /// because the reference detector computes every grid cell
     /// independently, making batch composition and thread count
-    /// unobservable in the output.
-    pub fn detect_heads(
+    /// unobservable in the output. Frames may be owned or `Arc`-shared
+    /// out of a [`FrameCache`](crate::fog::FrameCache) — hence the
+    /// `Borrow` bound.
+    pub fn detect_heads<T: std::borrow::Borrow<Tensor>>(
         &self,
-        frames: &[Tensor],
+        frames: &[T],
         artifact_prefix: &str,
     ) -> Result<Vec<HeadsOwned>> {
         if frames.is_empty() {
@@ -215,7 +217,7 @@ impl CloudServer {
             // Build padded batch input [b, A, D].
             let mut data = vec![0.0f32; b * a * d];
             for i in 0..take {
-                let f = &frames[offset + i];
+                let f = frames[offset + i].borrow();
                 assert_eq!(f.dims, vec![a, d], "frame tensor must be [A, D]");
                 data[i * a * d..(i + 1) * a * d].copy_from_slice(&f.data);
             }
@@ -289,9 +291,9 @@ impl CloudServer {
     /// Run the heavy detector over a chunk's frames (each `[A, D]`),
     /// dynamic-batched into compiled buckets. Returns per-frame heads and
     /// the completion time on the virtual clock.
-    pub fn detect_chunk(
+    pub fn detect_chunk<T: std::borrow::Borrow<Tensor>>(
         &mut self,
-        frames: &[Tensor],
+        frames: &[T],
         arrival: f64,
         artifact_prefix: &str,
     ) -> Result<(Vec<HeadsOwned>, ExecTiming)> {

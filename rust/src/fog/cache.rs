@@ -1,8 +1,19 @@
-//! The fog model cache (Fig. 3): stores models dispatched from the cloud,
-//! LRU-evicted under a capacity budget; the IL loop refreshes entries
-//! "periodically" by bumping their version.
+//! The fog caches (Fig. 3): the *model* cache stores models dispatched
+//! from the cloud, LRU-evicted under a capacity budget, with the IL loop
+//! refreshing entries "periodically" by bumping their version — and the
+//! *frame* cache memoizes decoded high-quality frames so the render-once
+//! protocol (the cloud only ever sees low-quality video plus region
+//! coordinates) costs one render per frame instead of one per demand.
+//! Both report hit rates through [`GlobalMonitor`] via
+//! [`FogShardPool::observe`].
+//!
+//! [`GlobalMonitor`]: crate::serverless::monitor::GlobalMonitor
+//! [`FogShardPool::observe`]: crate::serverless::scheduler::FogShardPool::observe
 
+use crate::interchange::Tensor;
+use crate::sim::video::{FrameTruth, Quality};
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// An entry in the fog cache.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -72,6 +83,168 @@ impl ModelCache {
         }
         false
     }
+
+    /// Lifetime hit rate, `None` before the first lookup.
+    pub fn hit_rate(&self) -> Option<f64> {
+        let total = self.hits + self.misses;
+        (total > 0).then(|| self.hits as f64 / total as f64)
+    }
+}
+
+/// Identity of one decoded frame. `clutter_seed` already folds the video
+/// seed and the frame index together (see
+/// [`FrameTruth`](crate::sim::video::FrameTruth)); `frame_idx` rides along
+/// so a (vanishingly unlikely) cross-video seed collision still cannot
+/// alias. Quality and drift enter as exact bit patterns — renders are pure
+/// in `(truth, quality, phi)`, so bit-equal keys imply byte-equal frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameKey {
+    clutter_seed: u64,
+    frame_idx: u64,
+    r_bits: u64,
+    qp_bits: u64,
+    phi_bits: u64,
+}
+
+impl FrameKey {
+    pub fn new(truth: &FrameTruth, q: Quality, phi: f64) -> Self {
+        FrameKey {
+            clutter_seed: truth.clutter_seed,
+            frame_idx: truth.frame_idx,
+            r_bits: q.r.to_bits(),
+            qp_bits: q.qp.to_bits(),
+            phi_bits: phi.to_bits(),
+        }
+    }
+}
+
+/// Capacity-bounded LRU memo of rendered (decoded) frames.
+///
+/// Because renders are pure functions of the key, a cached frame is
+/// byte-identical to a fresh render — the cache can only move wall-clock
+/// time, never a simulated byte. Hit/miss accounting is resolved on the
+/// single-threaded event loop in demand order (see
+/// [`FrameCache::plan`]), so the ledger is also thread-count invariant.
+/// Entries are `Arc`-shared: eviction can never invalidate a frame a
+/// consumer still holds.
+///
+/// `capacity == 0` is the metering-only mode the `--no-frame-cache` run
+/// uses for its baseline: every demand is a recorded miss and nothing is
+/// ever resident.
+#[derive(Debug, Default)]
+pub struct FrameCache {
+    capacity: usize,
+    // front = most recent
+    entries: VecDeque<(FrameKey, Arc<Tensor>)>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl FrameCache {
+    pub fn new(capacity: usize) -> Self {
+        FrameCache { capacity, entries: VecDeque::new(), hits: 0, misses: 0 }
+    }
+
+    /// Bump a resident key to most-recent. No accounting.
+    fn touch(&mut self, key: &FrameKey) -> bool {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| k == key) {
+            let entry = self.entries.remove(pos).unwrap();
+            self.entries.push_front(entry);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Resident frame for `key`, if any. No accounting, no recency bump —
+    /// the retrieval half of a [`FrameCache::plan`] round, which already
+    /// did both.
+    pub fn get(&self, key: &FrameKey) -> Option<Arc<Tensor>> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, t)| Arc::clone(t))
+    }
+
+    /// Resolve one batch of decode demands, in demand order, against the
+    /// resident set plus the demands already planned within this batch
+    /// (their renders land before any decoded frame is consumed). Returns
+    /// the indices of demands that must actually render, in first-demand
+    /// order; every demand is counted as a hit or a miss. With
+    /// `capacity == 0` nothing is resident or planned, so every demand
+    /// renders. Callers keep a batch within capacity (one chunk's frames
+    /// against [`FRAME_CACHE_FRAMES`](crate::fog::FRAME_CACHE_FRAMES)).
+    pub fn plan(&mut self, keys: &[FrameKey]) -> Vec<usize> {
+        let mut to_render: Vec<usize> = Vec::new();
+        for (i, key) in keys.iter().enumerate() {
+            let pending =
+                self.capacity > 0 && to_render.iter().any(|&j| keys[j] == *key);
+            if self.touch(key) || pending {
+                self.hits += 1;
+            } else {
+                self.misses += 1;
+                to_render.push(i);
+            }
+        }
+        to_render
+    }
+
+    /// Cache-off accounting for a batch of `n` demands: every demand is a
+    /// recorded miss and every demand renders.
+    pub fn plan_bypass(&mut self, n: usize) -> Vec<usize> {
+        self.misses += n as u64;
+        (0..n).collect()
+    }
+
+    /// Install a rendered frame, evicting the LRU entry when full.
+    /// Returns the evicted key, if any. A no-op at `capacity == 0`.
+    pub fn insert(&mut self, key: FrameKey, frame: Arc<Tensor>) -> Option<FrameKey> {
+        if self.capacity == 0 {
+            return None;
+        }
+        self.entries.retain(|(k, _)| *k != key);
+        self.entries.push_front((key, frame));
+        if self.entries.len() > self.capacity {
+            self.entries.pop_back().map(|(k, _)| k)
+        } else {
+            None
+        }
+    }
+
+    /// Single-demand path (the sequential DDS baseline): hit returns the
+    /// resident frame, miss renders and installs it. Accounting included.
+    pub fn fetch(
+        &mut self,
+        truth: &FrameTruth,
+        q: Quality,
+        phi: f64,
+        render: impl FnOnce() -> Tensor,
+    ) -> Arc<Tensor> {
+        let key = FrameKey::new(truth, q, phi);
+        if self.touch(&key) {
+            self.hits += 1;
+            return self.get(&key).unwrap();
+        }
+        self.misses += 1;
+        let frame = Arc::new(render());
+        self.insert(key, Arc::clone(&frame));
+        frame
+    }
+
+    pub fn contains(&self, key: &FrameKey) -> bool {
+        self.entries.iter().any(|(k, _)| k == key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Lifetime hit rate, `None` before the first demand.
+    pub fn hit_rate(&self) -> Option<f64> {
+        let total = self.hits + self.misses;
+        (total > 0).then(|| self.hits as f64 / total as f64)
+    }
 }
 
 #[cfg(test)]
@@ -116,5 +289,119 @@ mod tests {
         assert!(c.refresh("cls", 5));
         assert_eq!(c.lookup("cls").unwrap().version, 5);
         assert!(!c.refresh("ghost", 1));
+    }
+
+    #[test]
+    fn model_cache_hit_rate_tracks_lookups() {
+        let mut c = ModelCache::new(2);
+        assert_eq!(c.hit_rate(), None);
+        c.install("cls", 1);
+        c.lookup("cls");
+        c.lookup("ghost");
+        c.lookup("cls");
+        assert_eq!(c.hit_rate(), Some(2.0 / 3.0));
+    }
+
+    // -- FrameCache ---------------------------------------------------
+
+    fn truth(frame_idx: u64) -> crate::sim::video::FrameTruth {
+        crate::sim::video::FrameTruth {
+            frame_idx,
+            clutter_seed: 0xABCD ^ frame_idx.wrapping_mul(0x9E3779B97F4A7C15),
+            objects: Vec::new(),
+        }
+    }
+
+    fn frame(tag: f32) -> Arc<Tensor> {
+        Arc::new(Tensor { dims: vec![1, 1], data: vec![tag] })
+    }
+
+    #[test]
+    fn frame_plan_accounts_every_demand_and_renders_once_per_frame() {
+        let mut c = FrameCache::new(4);
+        let (t0, t1) = (truth(0), truth(1));
+        let q = Quality::ORIGINAL;
+        // region demands: frame 0 twice, frame 1 once — one render each
+        let keys = vec![
+            FrameKey::new(&t0, q, 0.0),
+            FrameKey::new(&t0, q, 0.0),
+            FrameKey::new(&t1, q, 0.0),
+        ];
+        let miss = c.plan(&keys);
+        assert_eq!(miss, vec![0, 2], "first demand per distinct frame renders");
+        assert_eq!((c.hits, c.misses), (1, 2));
+        c.insert(keys[0], frame(0.0));
+        c.insert(keys[2], frame(1.0));
+        // the same chunk re-demanded is all hits
+        let miss = c.plan(&keys);
+        assert!(miss.is_empty());
+        assert_eq!((c.hits, c.misses), (4, 2));
+        assert_eq!(c.hit_rate(), Some(4.0 / 6.0));
+        // a different quality is a different frame
+        let other = vec![FrameKey::new(&t0, Quality::LOW, 0.0)];
+        assert_eq!(c.plan(&other), vec![0]);
+        // ... and so is a different drift phase
+        let drifted = vec![FrameKey::new(&t0, q, 0.25)];
+        assert_eq!(c.plan(&drifted), vec![0]);
+    }
+
+    #[test]
+    fn frame_cache_holds_the_lru_bound_and_evicts_deterministically() {
+        let mut c = FrameCache::new(2);
+        let q = Quality::ORIGINAL;
+        let keys: Vec<FrameKey> =
+            (0..3).map(|i| FrameKey::new(&truth(i), q, 0.0)).collect();
+        assert!(c.insert(keys[0], frame(0.0)).is_none());
+        assert!(c.insert(keys[1], frame(1.0)).is_none());
+        // touch 0 → 1 becomes LRU → inserting 2 evicts exactly 1
+        assert!(c.plan(&keys[0..1]).is_empty());
+        assert_eq!(c.insert(keys[2], frame(2.0)), Some(keys[1]));
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(&keys[0]) && c.contains(&keys[2]) && !c.contains(&keys[1]));
+        // eviction is a pure function of the demand sequence: replaying
+        // the same ops on a fresh cache evicts the same key
+        let mut d = FrameCache::new(2);
+        d.insert(keys[0], frame(0.0));
+        d.insert(keys[1], frame(1.0));
+        d.plan(&keys[0..1]);
+        assert_eq!(d.insert(keys[2], frame(2.0)), Some(keys[1]));
+        // an evicted entry stays alive for holders of the Arc
+        let held = c.get(&keys[0]).unwrap();
+        c.insert(keys[1], frame(1.0));
+        c.insert(FrameKey::new(&truth(9), q, 0.0), frame(9.0));
+        assert_eq!(held.data, vec![0.0]);
+    }
+
+    #[test]
+    fn zero_capacity_meters_without_storing() {
+        let mut c = FrameCache::new(0);
+        let q = Quality::ORIGINAL;
+        let keys = vec![FrameKey::new(&truth(0), q, 0.0), FrameKey::new(&truth(0), q, 0.0)];
+        // duplicate demands both render: nothing is resident or planned
+        assert_eq!(c.plan(&keys), vec![0, 1]);
+        assert!(c.insert(keys[0], frame(0.0)).is_none());
+        assert!(c.is_empty());
+        assert_eq!((c.hits, c.misses), (0, 2));
+        assert_eq!(c.plan_bypass(3), vec![0, 1, 2]);
+        assert_eq!(c.misses, 5);
+    }
+
+    #[test]
+    fn fetch_renders_once_and_serves_the_memo_after() {
+        let mut c = FrameCache::new(2);
+        let t = truth(4);
+        let mut renders = 0u32;
+        let a = c.fetch(&t, Quality::ORIGINAL, 0.1, || {
+            renders += 1;
+            Tensor { dims: vec![1, 1], data: vec![7.0] }
+        });
+        let b = c.fetch(&t, Quality::ORIGINAL, 0.1, || {
+            renders += 1;
+            Tensor { dims: vec![1, 1], data: vec![7.0] }
+        });
+        assert_eq!(renders, 1, "second fetch must be served from the memo");
+        assert_eq!(a.data, b.data);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((c.hits, c.misses), (1, 1));
     }
 }

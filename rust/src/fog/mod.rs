@@ -12,7 +12,12 @@ use crate::runtime::InferenceHandle;
 use crate::serving::batcher::BatchPlanner;
 use crate::sim::device::{DeviceProfile, FOG};
 
-pub use cache::ModelCache;
+pub use cache::{FrameCache, FrameKey, ModelCache};
+
+/// Decoded high-quality frames a shard keeps resident ([`FrameCache`]
+/// capacity) — comfortably above the 15 frames of one chunk, so a whole
+/// chunk's decode demands dedup to one render per frame.
+pub const FRAME_CACHE_FRAMES: usize = 32;
 
 /// One classified crop.
 #[derive(Debug, Clone, Copy)]
@@ -26,6 +31,10 @@ pub struct FogNode {
     handle: InferenceHandle,
     pub device: DeviceProfile,
     pub cache: ModelCache,
+    /// Decoded-frame memo serving the region-crop, fallback-detect and
+    /// round-2 decode demands (the paper's "fog caches the high-quality
+    /// frame" protocol made literal).
+    pub frames: FrameCache,
     /// Current classifier last layer `[H+1, K]` — swapped by the IL loop.
     w_last: Tensor,
     pub w_last_version: u64,
@@ -48,6 +57,7 @@ impl FogNode {
             handle,
             device: FOG,
             cache: ModelCache::new(4),
+            frames: FrameCache::new(FRAME_CACHE_FRAMES),
             w_last: w_last0,
             w_last_version: 0,
             gpu_free: 0.0,
@@ -146,10 +156,12 @@ impl FogNode {
     }
 
     /// Fallback detection with the lite model (cloud outage, Fig. 15).
-    /// Frames are `[A, D]` tensors of the *high-quality* cached stream.
-    pub fn fallback_detect(
+    /// Frames are `[A, D]` tensors of the *high-quality* cached stream —
+    /// owned, borrowed or `Arc`-shared out of the [`FrameCache`], hence
+    /// the `Borrow` bound.
+    pub fn fallback_detect<T: std::borrow::Borrow<Tensor>>(
         &mut self,
-        frames: &[Tensor],
+        frames: &[T],
         arrival: f64,
         grid: usize,
     ) -> Result<(Vec<HeadsOwned>, f64)> {
@@ -167,7 +179,7 @@ impl FogNode {
             let take = b.min(frames.len() - offset);
             let mut data = vec![0.0f32; b * a * d];
             for i in 0..take {
-                data[i * a * d..(i + 1) * a * d].copy_from_slice(&frames[offset + i].data);
+                data[i * a * d..(i + 1) * a * d].copy_from_slice(&frames[offset + i].borrow().data);
             }
             let input = Tensor::new(vec![b, a, d], data)?;
             let out = self.handle.infer(&format!("detector_lite_b{b}"), vec![input])?;

@@ -205,6 +205,16 @@ pub struct RunMetrics {
     /// [`ContentFingerprint`]: residual bookkeeping is pure observation
     /// and must never move a run's content.
     pub projection: ProjectionStats,
+    /// Lifetime [`FrameCache`](crate::fog::FrameCache) hits, summed over
+    /// fog shards (or the DDS round-2 memo) at run end. Deliberately NOT
+    /// part of [`ContentFingerprint`]: renders are pure, so the cache can
+    /// only move wall-clock time — `--no-frame-cache` must stay
+    /// byte-identical while its ledger reads all-miss.
+    pub frame_cache_hits: u64,
+    /// Lifetime frame-cache misses (see [`RunMetrics::frame_cache_hits`]);
+    /// hits + misses meters total decode demand, which is itself
+    /// cache-flag invariant.
+    pub frame_cache_misses: u64,
 }
 
 /// One tenant's slice of a run: what was served, dropped, billed and how
@@ -444,6 +454,18 @@ mod tests {
         let mut b = a.clone();
         b.tenants.push(TenantMetrics::new("gold", 2.0));
         b.tenants[0].chunks = 4;
+        assert_eq!(a.content_fingerprint().hash64(), b.content_fingerprint().hash64());
+    }
+
+    #[test]
+    fn frame_cache_counters_stay_out_of_the_fingerprint() {
+        let mut a = RunMetrics::new("vpaas", "drone");
+        a.chunks = 4;
+        let mut b = a.clone();
+        // cache-on (hits) and cache-off (all-miss) ledgers fingerprint
+        // identically: the memo is a pure wall-clock lever
+        b.frame_cache_hits = 120;
+        b.frame_cache_misses = 40;
         assert_eq!(a.content_fingerprint().hash64(), b.content_fingerprint().hash64());
     }
 

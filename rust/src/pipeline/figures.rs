@@ -1045,6 +1045,116 @@ pub fn fig16_par_sweep(
     Ok((text, raw))
 }
 
+/// One `fig16_hotpath` measurement: host wall-clock for the full pipeline
+/// at one (worker threads × frame cache) cell, plus the run's lifetime
+/// frame-cache ledger. Like [`ParRow`], `wall_s` is real time, not the
+/// virtual clock — the cache is a pure wall-clock lever.
+#[derive(Debug, Clone, Copy)]
+pub struct HotRow {
+    pub threads: usize,
+    pub frame_cache: bool,
+    pub chunks: u64,
+    pub wall_s: f64,
+    pub chunks_per_s: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Render-once hot-path sweep: the [`fig16_par_sweep`] fleet (with drift
+/// on, which keeps the classifier uncertain and the per-region decode
+/// demand high) run at every cell of `thread_counts` × frame cache
+/// {off, on}, timed with `std::time::Instant` around the whole run. The
+/// sweep proves the cache is a pure wall-clock lever before reporting any
+/// timing: every cell's [`RunMetrics::content_fingerprint`] *and*
+/// makespan bits must match the first cell's, and total decode demand
+/// (hits + misses) must be identical between the off and on cell of each
+/// thread count. The bench writes the rows ([`hotpath_json`]) to
+/// `BENCH_hotpath.json` and, on the full shape, asserts cache-on strictly
+/// beats cache-off at every swept thread count.
+pub fn fig16_hotpath(
+    h: &Harness,
+    cfg: &RunConfig,
+    cameras: usize,
+    scale: f64,
+    thread_counts: &[usize],
+) -> Result<(String, Vec<HotRow>)> {
+    let mut ds = datasets::drone(scale);
+    ds.videos.truncate(cameras);
+    let base = RunConfig {
+        shards: 8,
+        wan_mbps: 200.0,
+        golden: false,
+        autoscale: false,
+        hitl_budget: 0.0,
+        drift: true,
+        dispatch: DispatchMode::Streaming,
+        workload: WorkloadProfile::Bursty,
+        ..cfg.clone()
+    };
+    let mut raw: Vec<HotRow> = Vec::new();
+    let mut rows = Vec::new();
+    let mut reference = None;
+    for &threads in thread_counts {
+        for frame_cache in [false, true] {
+            let run_cfg = RunConfig { threads: threads.max(1), frame_cache, ..base.clone() };
+            let start = std::time::Instant::now();
+            let m = h.run(SystemKind::Vpaas, &ds, &run_cfg)?;
+            let wall_s = start.elapsed().as_secs_f64();
+            let cell = (m.content_fingerprint(), m.makespan.to_bits());
+            match &reference {
+                None => reference = Some(cell),
+                Some(r) => anyhow::ensure!(
+                    *r == cell,
+                    "threads={threads} frame_cache={frame_cache} changed run content or \
+                     virtual timing — determinism contract violated"
+                ),
+            }
+            let chunks_per_s = if wall_s > 0.0 { m.chunks as f64 / wall_s } else { 0.0 };
+            raw.push(HotRow {
+                threads,
+                frame_cache,
+                chunks: m.chunks,
+                wall_s,
+                chunks_per_s,
+                cache_hits: m.frame_cache_hits,
+                cache_misses: m.frame_cache_misses,
+            });
+            let demand = (m.frame_cache_hits + m.frame_cache_misses) as f64;
+            let hit_rate = if demand > 0.0 { m.frame_cache_hits as f64 / demand } else { 0.0 };
+            // cache-on speedup over the cache-off cell at this thread count
+            let speedup =
+                if frame_cache { raw[raw.len() - 2].wall_s / wall_s.max(1e-12) } else { 1.0 };
+            rows.push(vec![
+                threads.to_string(),
+                frame_cache.to_string(),
+                m.chunks.to_string(),
+                format!("{wall_s:.3}"),
+                format!("{chunks_per_s:.2}"),
+                format!("{hit_rate:.3}"),
+                format!("{speedup:.3}"),
+            ]);
+        }
+        // demand volume must be cache-invariant: the off cell meters the
+        // same decode demands the on cell serves from the memo
+        let (off, on) = (&raw[raw.len() - 2], &raw[raw.len() - 1]);
+        anyhow::ensure!(
+            off.cache_hits == 0 && off.cache_misses == on.cache_hits + on.cache_misses,
+            "threads={threads}: decode demand moved with the cache flag \
+             (off: {}/{}, on: {}/{})",
+            off.cache_hits,
+            off.cache_misses,
+            on.cache_hits,
+            on.cache_misses
+        );
+    }
+    let text = format!(
+        "Hotpath — frame-cache wall-clock sweep ({cameras} cameras, bursty arrivals, 8 fog \
+         shards, drift on; output bit-identical at every cell)\n{}",
+        table(&["threads", "cache", "chunks", "wall_s", "chunks/s", "hit_rate", "speedup"], &rows)
+    );
+    Ok((text, raw))
+}
+
 /// Multi-tenant fairness sweep: tenant weight mixes × arrival mixes on a
 /// shared pool under a binding SLO, the same cell matrix the committed
 /// `studies/tenant_fairness.toml` spec runs in CI (which emits the
@@ -1203,6 +1313,33 @@ pub fn par_json(cameras: usize, rows: &[ParRow]) -> String {
         .collect();
     format!(
         "{{\"bench\":\"fig16_par_sweep\",\"workload\":\"drone x{cameras} cameras, bursty, \
+         8 shards\",\"rows\":[{}]}}\n",
+        entries.join(",")
+    )
+}
+
+/// `BENCH_hotpath.json` from [`fig16_hotpath`] rows. Like
+/// [`par_json`], the numbers are host wall-clock, not virtual time —
+/// compare the cache-on and cache-off cells of one run, not machines.
+pub fn hotpath_json(cameras: usize, rows: &[HotRow]) -> String {
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"threads\":{},\"frame_cache\":{},\"chunks\":{},\"wall_s\":{:.6},\
+                 \"chunks_per_s\":{:.6},\"cache_hits\":{},\"cache_misses\":{}}}",
+                r.threads,
+                r.frame_cache,
+                r.chunks,
+                r.wall_s,
+                r.chunks_per_s,
+                r.cache_hits,
+                r.cache_misses
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"fig16_hotpath\",\"workload\":\"drone x{cameras} cameras, bursty, \
          8 shards\",\"rows\":[{}]}}\n",
         entries.join(",")
     )

@@ -179,6 +179,14 @@ pub struct RunConfig {
     /// by `tests/invariance.rs`), so it is *not* part of the content
     /// fingerprint. Defaults to `VPAAS_THREADS` when set, else 1.
     pub threads: usize,
+    /// Serve fog decode demands (region crops, fallback frames, the DDS
+    /// baseline's round-2 re-renders) through the render-once
+    /// [`FrameCache`](crate::fog::FrameCache) (`--no-frame-cache`,
+    /// `[app] frame_cache`). Renders are pure, so this is a pure
+    /// wall-clock knob: content, makespan and latency are bit-identical
+    /// either way (asserted by `tests/invariance.rs`), and the hit/miss
+    /// counters stay out of the content fingerprint.
+    pub frame_cache: bool,
     pub seed: u64,
     pub protocol: ProtocolConfig,
 }
@@ -212,6 +220,7 @@ impl Default for RunConfig {
             workload: WorkloadProfile::default(),
             tenants: TenantRegistry::default(),
             threads: default_threads(),
+            frame_cache: true,
             seed: 0xCAFE,
             protocol: ProtocolConfig::default(),
         }
@@ -230,7 +239,8 @@ impl RunConfig {
     /// every CLI-reachable knob has a config-file path (asserted by
     /// `tests/config_parity.rs`): `[net] wan_mbps`, `[hitl] budget`,
     /// `[app] seed | dispatch | slo_ms | ladder | workload | shards |
-    /// threads | drift | golden`, `[cloud] gpus | autoscale | batching`,
+    /// threads | drift | golden | frame_cache`,
+    /// `[cloud] gpus | autoscale | batching`,
     /// and a `[tenants]` section. See `docs/reference.md` for the full
     /// grammar.
     pub fn from_config(cfg: &crate::util::config::Config) -> Result<RunConfig> {
@@ -268,6 +278,7 @@ impl RunConfig {
             batching,
             slo_ms: cfg.f64_or("app", "slo_ms", base.slo_ms)?,
             drift: cfg.bool_or("app", "drift", base.drift)?,
+            frame_cache: cfg.bool_or("app", "frame_cache", base.frame_cache)?,
             golden: cfg.bool_or("app", "golden", false)?,
             ladder,
             dispatch,
@@ -280,7 +291,8 @@ impl RunConfig {
     /// Build a run config from parsed CLI arguments — the `vpaas run` /
     /// `vpaas figures` flag surface (`--wan --budget --no-drift --golden
     /// --shards --gpus --batching --slo-ms --ladder --seed --workload
-    /// --dispatch --tenants --threads`). Lives next to [`RunConfig::from_config`] so
+    /// --dispatch --tenants --threads --no-frame-cache`). Lives next to
+    /// [`RunConfig::from_config`] so
     /// the two input paths cover the same knobs; `tests/config_parity.rs`
     /// holds them to that.
     pub fn from_args(args: &crate::util::cli::Args) -> Result<RunConfig> {
@@ -306,6 +318,7 @@ impl RunConfig {
             wan_mbps: args.get_f64("wan", 15.0)?,
             hitl_budget: args.get_f64("budget", 0.2)?,
             drift: !args.flag("no-drift"),
+            frame_cache: !args.flag("no-frame-cache"),
             golden: args.flag("golden"),
             shards: args.get_usize("shards", 1)?,
             gpus: args.get_usize("gpus", 1)?,
@@ -463,8 +476,9 @@ impl Harness {
              for the legacy single-step controller)"
         );
         let p = self.params.clone();
-        let executor =
-            Executor::from_registry(&self.functions, cfg.dispatch)?.with_threads(cfg.threads);
+        let executor = Executor::from_registry(&self.functions, cfg.dispatch)?
+            .with_threads(cfg.threads)
+            .with_frame_cache(cfg.frame_cache);
         let shards = cfg.shards.max(1);
         let shard_cfg = ShardConfig {
             initial_shards: shards,
@@ -568,6 +582,14 @@ impl Harness {
         run.metrics.sessions_retired += swept;
         let mut metrics = run.metrics;
         metrics.cost = run.cloud.billing();
+        // Lifetime frame-cache ledger, summed over the shards live at run
+        // end (an autoscale shrink retires a shard with its counters; the
+        // in-run gauge published by `FogShardPool::observe` sees them
+        // while they serve). Excluded from the content fingerprint.
+        for fog in run.pool.shards_mut().iter() {
+            metrics.frame_cache_hits += fog.frames.hits;
+            metrics.frame_cache_misses += fog.frames.misses;
+        }
         Ok(metrics)
     }
 
@@ -853,7 +875,7 @@ impl Harness {
         }
         let mut cloud = self.make_cloud(cfg);
         let mut mpeg = Mpeg::default();
-        let mut dds = Dds::default();
+        let mut dds = Dds::default().with_frame_cache(cfg.frame_cache);
         let mut cloudseg = CloudSeg::default();
         let mut glimpse = Glimpse::default();
 
@@ -902,7 +924,11 @@ impl Harness {
             }
             t_offset += video_len + 1.0;
         }
-        metrics.cost = cloud.billing.clone();
+        metrics.cost = cloud.billing;
+        // the DDS round-2 memo's lifetime ledger (zero for every other
+        // baseline); excluded from the content fingerprint
+        metrics.frame_cache_hits = dds.frames.hits;
+        metrics.frame_cache_misses = dds.frames.misses;
         Ok(metrics)
     }
 }

@@ -147,6 +147,56 @@ fn sigmoid(v: f32) -> f32 {
     1.0 / (1.0 + (-v).exp())
 }
 
+/// Register block: `GEMM_MR` rows × `GEMM_NR` columns of C held in a
+/// stack-resident accumulator tile the optimizer keeps in registers.
+const GEMM_MR: usize = 4;
+const GEMM_NR: usize = 8;
+
+/// Tiled `C[M, N] = A[M, K] · B[K, N]` (`ldc` ≥ N is C's row stride, so a
+/// caller can write into strided destination rows, e.g. the classifier's
+/// bias-augmented feature matrix).
+///
+/// **Bit-exact vs the naive triple loop** the detector/classifier kernels
+/// used to spell out: every output element accumulates its K terms in
+/// ascending-k order in one f32 accumulator, and exact-zero entries of A
+/// skip their term exactly as the reference loops skipped zero
+/// activations. Tiling only reorders work across *independent* output
+/// elements, never within one element's reduction, so the per-element
+/// float op sequence — and therefore every output bit — is unchanged
+/// (pinned by `tiled_kernels_match_the_naive_reference_loops_bitwise`).
+fn gemm_blocked(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, ldc: usize) {
+    debug_assert!(a.len() >= m * k);
+    debug_assert!(b.len() >= k * n);
+    debug_assert!(ldc >= n && (m == 0 || c.len() >= (m - 1) * ldc + n));
+    let mut i0 = 0;
+    while i0 < m {
+        let ib = GEMM_MR.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let jb = GEMM_NR.min(n - j0);
+            let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+            for kk in 0..k {
+                let br = &b[kk * n + j0..kk * n + j0 + jb];
+                for (mi, accr) in acc.iter_mut().enumerate().take(ib) {
+                    let xi = a[(i0 + mi) * k + kk];
+                    if xi == 0.0 {
+                        continue; // the reference loops skip zero activations
+                    }
+                    for (av, &bv) in accr[..jb].iter_mut().zip(br) {
+                        *av += xi * bv;
+                    }
+                }
+            }
+            for (mi, accr) in acc.iter().enumerate().take(ib) {
+                let row = (i0 + mi) * ldc + j0;
+                c[row..row + jb].copy_from_slice(&accr[..jb]);
+            }
+            j0 += jb;
+        }
+        i0 += ib;
+    }
+}
+
 /// Owns the reference backend and the compiled-plan cache. Kept `!Sync`-
 /// agnostic and single-threaded like the PJRT client it stands in for;
 /// [`crate::runtime::service`] runs a small pool of these (one per worker
@@ -245,30 +295,24 @@ impl Engine {
     }
 
     /// Detector forward (see `models/detector.py`): per-anchor heads
-    /// `(loc_conf, cls_prob, energy)` over `x: [B, A, D]`.
+    /// `(loc_conf, cls_prob, energy)` over `x: [B, A, D]`. Both matmuls
+    /// run through the tiled [`gemm_blocked`] kernel, batching cells
+    /// across the register tile; the nonlinearities keep the reference
+    /// per-element order.
     fn run_detector(&self, x: &Tensor, lite: bool) -> Vec<Vec<f32>> {
         let w = &self.weights;
         let (d, k, h2) = (w.feat_dim, w.num_classes, w.det_hidden);
         let w_cls = if lite { &w.lite_cls } else { &w.det_cls };
         let cells = x.data.len() / d;
+        // embed: H[cells, h2] = X · det_embed
+        let mut h = vec![0.0f32; cells * h2];
+        gemm_blocked(&x.data, &w.det_embed, &mut h, cells, d, h2, h2);
         let mut loc = vec![0.0f32; cells];
-        let mut cls = vec![0.0f32; cells * k];
         let mut energy = vec![0.0f32; cells];
-        let mut h = vec![0.0f32; h2];
         for cell in 0..cells {
-            let xr = &x.data[cell * d..(cell + 1) * d];
-            h.iter_mut().for_each(|v| *v = 0.0);
-            for (i, &xi) in xr.iter().enumerate() {
-                if xi == 0.0 {
-                    continue;
-                }
-                let er = &w.det_embed[i * h2..(i + 1) * h2];
-                for (hj, &ej) in h.iter_mut().zip(er) {
-                    *hj += xi * ej;
-                }
-            }
+            let hr = &mut h[cell * h2..(cell + 1) * h2];
             let mut e = 0.0f32;
-            for hj in h.iter_mut() {
+            for hj in hr.iter_mut() {
                 if *hj < 0.0 {
                     *hj = 0.0; // relu
                 }
@@ -276,18 +320,14 @@ impl Engine {
             }
             energy[cell] = e;
             loc[cell] = sigmoid(w.obj_gain * (e - w.obj_bias));
+        }
+        // class head: CLS[cells, k] = relu(H) · w_cls
+        let mut cls = vec![0.0f32; cells * k];
+        gemm_blocked(&h, w_cls, &mut cls, cells, h2, k, k);
+        for cell in 0..cells {
             let out = &mut cls[cell * k..(cell + 1) * k];
-            for (j, &hj) in h.iter().enumerate() {
-                if hj == 0.0 {
-                    continue;
-                }
-                let wr = &w_cls[j * k..(j + 1) * k];
-                for (o, &wk) in out.iter_mut().zip(wr) {
-                    *o += hj * wk;
-                }
-            }
             // energy-normalized softmax head (calibrated across qualities)
-            let norm = e.max(1e-4);
+            let norm = energy[cell].max(1e-4);
             let mut mx = f32::NEG_INFINITY;
             for o in out.iter_mut() {
                 *o = w.cls_gain * *o / norm;
@@ -306,45 +346,31 @@ impl Engine {
     }
 
     /// Classifier forward (see `models/classifier.py`): one-vs-all sigmoid
-    /// probabilities + the bias-augmented feature vector.
+    /// probabilities + the bias-augmented feature vector. Both matmuls run
+    /// through the tiled [`gemm_blocked`] kernel; the backbone writes
+    /// `hf`-strided rows so the bias slot stays untouched until set.
     fn run_classifier(&self, x: &Tensor, w_last: &Tensor) -> Vec<Vec<f32>> {
         let w = &self.weights;
         let (d, k, hf) = (w.feat_dim, w.num_classes, w.cls_feat);
         let hid = hf - 1;
         let b = x.data.len() / d;
+        // backbone: FEATS[b, hid] = X · cls_backbone
         let mut feats = vec![0.0f32; b * hf];
-        let mut prob = vec![0.0f32; b * k];
+        gemm_blocked(&x.data, &w.cls_backbone.data, &mut feats, b, d, hid, hf);
         for bi in 0..b {
-            let xr = &x.data[bi * d..(bi + 1) * d];
             let fr = &mut feats[bi * hf..(bi + 1) * hf];
-            for (i, &xi) in xr.iter().enumerate() {
-                if xi == 0.0 {
-                    continue;
-                }
-                let br = self.weights.cls_backbone.row(i);
-                for (fj, &bj) in fr[..hid].iter_mut().zip(br) {
-                    *fj += xi * bj;
-                }
-            }
             for fj in fr[..hid].iter_mut() {
                 if *fj < 0.0 {
                     *fj = 0.0; // relu
                 }
             }
             fr[hid] = 1.0; // bias feature
-            let pr = &mut prob[bi * k..(bi + 1) * k];
-            for (j, &fj) in fr.iter().enumerate() {
-                if fj == 0.0 {
-                    continue;
-                }
-                let wr = w_last.row(j);
-                for (p, &wk) in pr.iter_mut().zip(wr) {
-                    *p += fj * wk;
-                }
-            }
-            for p in pr.iter_mut() {
-                *p = sigmoid(*p);
-            }
+        }
+        // last layer: PROB[b, k] = feats · w_last
+        let mut prob = vec![0.0f32; b * k];
+        gemm_blocked(&feats, &w_last.data, &mut prob, b, hf, k, k);
+        for p in prob.iter_mut() {
+            *p = sigmoid(*p);
         }
         vec![prob, feats]
     }
@@ -547,6 +573,194 @@ mod tests {
         let w = &out[0];
         assert!(w.data[2] > 0.0, "labeled class weight must grow: {}", w.data[2]);
         assert!(w.data[0] < 0.0, "unlabeled class weight must shrink: {}", w.data[0]);
+    }
+
+    /// The pre-tiling detector loop, verbatim: the oracle for the
+    /// bit-exactness contract of [`gemm_blocked`].
+    fn naive_detector(w: &RefWeights, x: &Tensor, lite: bool) -> Vec<Vec<f32>> {
+        let (d, k, h2) = (w.feat_dim, w.num_classes, w.det_hidden);
+        let w_cls = if lite { &w.lite_cls } else { &w.det_cls };
+        let cells = x.data.len() / d;
+        let mut loc = vec![0.0f32; cells];
+        let mut cls = vec![0.0f32; cells * k];
+        let mut energy = vec![0.0f32; cells];
+        let mut h = vec![0.0f32; h2];
+        for cell in 0..cells {
+            let xr = &x.data[cell * d..(cell + 1) * d];
+            h.iter_mut().for_each(|v| *v = 0.0);
+            for (i, &xi) in xr.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let er = &w.det_embed[i * h2..(i + 1) * h2];
+                for (hj, &ej) in h.iter_mut().zip(er) {
+                    *hj += xi * ej;
+                }
+            }
+            let mut e = 0.0f32;
+            for hj in h.iter_mut() {
+                if *hj < 0.0 {
+                    *hj = 0.0;
+                }
+                e += *hj;
+            }
+            energy[cell] = e;
+            loc[cell] = sigmoid(w.obj_gain * (e - w.obj_bias));
+            let out = &mut cls[cell * k..(cell + 1) * k];
+            for (j, &hj) in h.iter().enumerate() {
+                if hj == 0.0 {
+                    continue;
+                }
+                let wr = &w_cls[j * k..(j + 1) * k];
+                for (o, &wk) in out.iter_mut().zip(wr) {
+                    *o += hj * wk;
+                }
+            }
+            let norm = e.max(1e-4);
+            let mut mx = f32::NEG_INFINITY;
+            for o in out.iter_mut() {
+                *o = w.cls_gain * *o / norm;
+                mx = mx.max(*o);
+            }
+            let mut sum = 0.0f32;
+            for o in out.iter_mut() {
+                *o = (*o - mx).exp();
+                sum += *o;
+            }
+            for o in out.iter_mut() {
+                *o /= sum;
+            }
+        }
+        vec![loc, cls, energy]
+    }
+
+    /// The pre-tiling classifier loop, verbatim.
+    fn naive_classifier(w: &RefWeights, x: &Tensor, w_last: &Tensor) -> Vec<Vec<f32>> {
+        let (d, k, hf) = (w.feat_dim, w.num_classes, w.cls_feat);
+        let hid = hf - 1;
+        let b = x.data.len() / d;
+        let mut feats = vec![0.0f32; b * hf];
+        let mut prob = vec![0.0f32; b * k];
+        for bi in 0..b {
+            let xr = &x.data[bi * d..(bi + 1) * d];
+            let fr = &mut feats[bi * hf..(bi + 1) * hf];
+            for (i, &xi) in xr.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let br = w.cls_backbone.row(i);
+                for (fj, &bj) in fr[..hid].iter_mut().zip(br) {
+                    *fj += xi * bj;
+                }
+            }
+            for fj in fr[..hid].iter_mut() {
+                if *fj < 0.0 {
+                    *fj = 0.0;
+                }
+            }
+            fr[hid] = 1.0;
+            let pr = &mut prob[bi * k..(bi + 1) * k];
+            for (j, &fj) in fr.iter().enumerate() {
+                if fj == 0.0 {
+                    continue;
+                }
+                let wr = w_last.row(j);
+                for (p, &wk) in pr.iter_mut().zip(wr) {
+                    *p += fj * wk;
+                }
+            }
+            for p in pr.iter_mut() {
+                *p = sigmoid(*p);
+            }
+        }
+        vec![prob, feats]
+    }
+
+    fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "{what}[{i}]: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn gemm_blocked_matches_the_triple_loop_at_odd_shapes() {
+        // shapes that leave ragged row/column tails on the register block,
+        // plus a strided destination (ldc > n)
+        let (m, k, n, ldc) = (5usize, 7usize, 11usize, 13usize);
+        let mut rng = crate::util::rng::Pcg32::new(0x6E44, 2);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        for v in a.iter_mut().chain(b.iter_mut()) {
+            *v = rng.normal() as f32;
+        }
+        a[3] = 0.0; // exercise the zero-skip
+        a[k + 1] = 0.0;
+        let mut c = vec![f32::NAN; (m - 1) * ldc + n + 1];
+        gemm_blocked(&a, &b, &mut c, m, k, n, ldc);
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = 0.0f32;
+                for kk in 0..k {
+                    let x = a[i * k + kk];
+                    if x != 0.0 {
+                        want += x * b[kk * n + j];
+                    }
+                }
+                assert_eq!(c[i * ldc + j].to_bits(), want.to_bits(), "C[{i},{j}]");
+            }
+        }
+        // stride padding was never touched
+        for i in 0..m - 1 {
+            for j in n..ldc {
+                assert!(c[i * ldc + j].is_nan(), "C stride slot [{i},{j}] written");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_kernels_match_the_naive_reference_loops_bitwise() {
+        // the f32 bit-exactness contract, pinned on the exported
+        // artifacts: tiled output == the pre-tiling triple loop, bit for
+        // bit, on a busy input with exact zeros sprinkled in
+        let mut e = engine();
+        let p = crate::sim::params::SimParams::load().unwrap();
+        let mut rng = crate::util::rng::Pcg32::new(0xF00D, 9);
+        let mut x = Tensor::zeros(vec![1, 256, 24]);
+        for v in x.data.iter_mut() {
+            *v = 0.3 * rng.normal() as f32;
+        }
+        for i in (0..x.data.len()).step_by(17) {
+            x.data[i] = 0.0; // exercise the zero-skip path
+        }
+        for (cell, kk) in [(3usize, 0usize), (100, 5), (255, 7)] {
+            for (v, &s) in
+                x.data[cell * 24..(cell + 1) * 24].iter_mut().zip(p.signatures.row(kk))
+            {
+                *v += s;
+            }
+        }
+        for lite in [false, true] {
+            let name = if lite { "detector_lite_b1" } else { "detector_b1" };
+            let out = e.run(name, &[x.clone()]).unwrap();
+            let want = naive_detector(&e.weights, &x, lite);
+            assert_bits_eq(&out[0].data, &want[0], "loc");
+            assert_bits_eq(&out[1].data, &want[1], "cls");
+            assert_bits_eq(&out[2].data, &want[2], "energy");
+        }
+        // classifier, batched: 16 crops against the t = 0 last layer
+        let mut xc = Tensor::zeros(vec![16, 24]);
+        for v in xc.data.iter_mut() {
+            *v = 0.5 * rng.normal() as f32;
+        }
+        for i in (0..xc.data.len()).step_by(11) {
+            xc.data[i] = 0.0;
+        }
+        let w_last = p.cls_last0.clone();
+        let out = e.run("classifier_b16", &[xc.clone(), w_last.clone()]).unwrap();
+        let want = naive_classifier(&e.weights, &xc, &w_last);
+        assert_bits_eq(&out[0].data, &want[0], "prob");
+        assert_bits_eq(&out[1].data, &want[1], "feats");
     }
 
     #[test]

@@ -364,7 +364,7 @@ mod tests {
     #[test]
     fn app_processes_chunks_end_to_end() {
         let mut a = app();
-        let mut v = video(&a.params.clone());
+        let mut v = video(&a.params);
         let chunk = v.next_chunk().unwrap();
         let out = a.process_chunk(&chunk, 0.0).unwrap();
         assert!(!out.fallback_used);
@@ -377,7 +377,7 @@ mod tests {
     fn policy_routes_to_fog_during_outage() {
         let mut a = app();
         a.inject_cloud_outage(0.0, 1e9);
-        let mut v = video(&a.params.clone());
+        let mut v = video(&a.params);
         let chunk = v.next_chunk().unwrap();
         let out = a.process_chunk(&chunk, 0.0).unwrap();
         assert!(out.fallback_used);
@@ -389,7 +389,7 @@ mod tests {
         let cfg = Config::parse("[cloud]\ngpus = 2\n[app]\nslo_ms = 1000\n").unwrap();
         let mut a = VideoApp::from_config(&cfg).unwrap();
         a.deploy_standard().unwrap();
-        let mut v = video(&a.params.clone());
+        let mut v = video(&a.params);
         let chunk = v.next_chunk().unwrap();
         a.process_chunk(&chunk, 0.0).unwrap();
         // the worker pool is really 2 wide and publishes its gauge
@@ -408,7 +408,7 @@ mod tests {
         // between the top rung's projection and the standard quality's:
         // admission must degrade to rung 0, never refuse
         let probe = app();
-        let mut v = video(&probe.params.clone());
+        let mut v = video(&probe.params);
         let chunk = v.next_chunk().unwrap();
         let job = ChunkJob::new(chunk.clone(), 0.0, 0.0);
         let proj = |q: Quality| {
@@ -462,7 +462,7 @@ mod tests {
         assert_eq!(a.metrics.tenants.len(), 2);
         assert_eq!(a.metrics.tenants[0].name, "acme");
         assert_eq!(a.metrics.tenants[0].weight, 3.0);
-        let mut v = video(&a.params.clone());
+        let mut v = video(&a.params);
         let chunk = v.next_chunk().unwrap();
         a.process_chunk(&chunk, 0.0).unwrap();
         // the single camera lands on slot 0's tenant; its meter moves
@@ -517,7 +517,7 @@ mod tests {
             .unwrap();
             let mut app = VideoApp::from_config(&cfg).unwrap();
             app.deploy_standard().unwrap();
-            let mut v = video(&app.params.clone());
+            let mut v = video(&app.params);
             while let Some(chunk) = v.next_chunk() {
                 app.process_chunk(&chunk, 0.0).unwrap();
             }
@@ -544,7 +544,7 @@ mod tests {
                 )),
             )
             .unwrap();
-        let mut v = video(&a.params.clone());
+        let mut v = video(&a.params);
         let chunk = v.next_chunk().unwrap();
         let out = a.process_chunk(&chunk, 0.0).unwrap();
         let labels: u64 = out.per_frame.iter().map(|f| f.len() as u64).sum();

@@ -90,6 +90,25 @@
 //! later barrier) and every parallelized body is pure per item — see
 //! ARCHITECTURE.md §Determinism model for the full contract.
 //!
+//! ## Render-once decode path
+//!
+//! Fog-side work consumes *decoded high-quality frames*: every uncertain
+//! region demands a decode of its frame at crop quality, and the fallback
+//! detector demands the chunk's full ORIGINAL-quality stream. Each shard
+//! memoizes those decodes in a [`FrameCache`](crate::fog::FrameCache)
+//! keyed by `(frame, quality, drift)`, so a chunk costs one render per
+//! *distinct* frame instead of one per demand. Renders are pure functions
+//! of the key, so a memoized frame is byte-identical to a fresh one;
+//! hit/miss accounting runs on the event-loop thread in demand order, so
+//! the ledger is thread-count invariant too. [`Executor::with_frame_cache`]
+//! `(false)` renders every demand instead — the cache-off baseline the
+//! `BENCH_hotpath.json` sweep times — with bit-identical content and
+//! virtual timing, because the cache only ever moves wall-clock work. The
+//! render layer's two other hot-path levers ride along here: the
+//! per-chunk [`DriftedBank`] is built once on the event thread and shared
+//! by every render of the chunk, and consumed frame buffers return to the
+//! render scratch arena via [`recycle`].
+//!
 //! ## Determinism
 //!
 //! Event order is (time, push-sequence); all content-bearing decisions
@@ -103,11 +122,12 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::cloud::{CloudGpuPool, HeadsOwned};
-use crate::fog::FogNode;
+use crate::fog::{FogNode, FrameKey};
 use crate::interchange::Tensor;
 use crate::metrics::f1::PredBox;
 use crate::metrics::meters::{FreshnessProjection, RunMetrics};
@@ -123,7 +143,8 @@ use crate::sim::human::Annotator;
 use crate::sim::net::{Link, Topology};
 use crate::sim::params::SimParams;
 use crate::sim::video::codec;
-use crate::sim::video::{render_frame, render_region_crop, Chunk, Quality};
+use crate::sim::video::render::recycle;
+use crate::sim::video::{render_frame_with, render_region_crop_with, Chunk, DriftedBank, Quality};
 use crate::util::par::{par_map, try_par_map};
 
 /// One step of the Fig. 6 protocol, as an event on the virtual clock.
@@ -399,6 +420,12 @@ pub struct Executor {
     /// 1 runs every body inline on the event loop's thread; any value
     /// produces byte-identical output (see module docs).
     pub threads: usize,
+    /// Serve fog decode demands through each shard's
+    /// [`FrameCache`](crate::fog::FrameCache) (`RunConfig::frame_cache`).
+    /// `false` renders every demand — the cache-off baseline
+    /// `figures::fig16_hotpath` times; the hit/miss ledger still meters
+    /// demand volume, and content is flag-invariant (see module docs).
+    pub frame_cache: bool,
 }
 
 impl Executor {
@@ -447,13 +474,21 @@ impl Executor {
                 _ => None,
             })
             .collect();
-        Ok(Executor { encode, detect, classify, train, post, mode, threads: 1 })
+        Ok(Executor { encode, detect, classify, train, post, mode, threads: 1, frame_cache: true })
     }
 
     /// Set the worker-thread count for parallel stage bodies. Clamped to
     /// at least 1; content is invariant to the value by construction.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Toggle the fog frame cache (render-once decode memoization).
+    /// Renders are pure, so the flag only moves wall-clock time and the
+    /// hit/miss ledger — never a simulated byte or virtual timestamp.
+    pub fn with_frame_cache(mut self, on: bool) -> Self {
+        self.frame_cache = on;
         self
     }
 
@@ -477,20 +512,27 @@ impl Executor {
             }
         }
         // render every (job, frame) pair in parallel, in wave-input order
-        let mut refs: Vec<(usize, usize, Quality, f64)> = Vec::new();
+        let mut refs: Vec<(usize, usize, Quality)> = Vec::new();
         for (ji, s) in states.iter().enumerate() {
             if let Some(q) = s.pre_quality {
                 for fi in 0..s.job.chunk.frames.len() {
-                    refs.push((ji, fi, q, s.job.phi));
+                    refs.push((ji, fi, q));
                 }
             }
         }
         if refs.is_empty() {
             return Ok(());
         }
+        // one drift bank per job, hoisted out of the per-frame renders
+        // (phi is chunk-constant, and the bank is the render hot path)
+        let banks: Vec<Option<DriftedBank>> = states
+            .iter()
+            .map(|s| s.pre_quality.map(|_| DriftedBank::new(s.job.phi, ctx.p)))
+            .collect();
         let shared = &*states;
-        let frames: Vec<Tensor> = par_map(self.threads, &refs, |&(ji, fi, q, phi)| {
-            render_frame(&shared[ji].job.chunk.frames[fi], q, phi, ctx.p)
+        let frames: Vec<Tensor> = par_map(self.threads, &refs, |&(ji, fi, q)| {
+            let bank = banks[ji].as_ref().expect("bank built for every prefetched job");
+            render_frame_with(&shared[ji].job.chunk.frames[fi], q, bank, ctx.p)
         });
         // one batched detect call per slab over the wave's frames; the
         // detect body is pure per-frame math (row-independent batching),
@@ -501,6 +543,10 @@ impl Executor {
         let per_slab = try_par_map(self.threads, &slabs, |&(lo, hi)| {
             (self.detect)(server, &frames[lo..hi])
         })?;
+        // the prefetch frames are consumed; park their buffers for reuse
+        for f in frames {
+            recycle(f);
+        }
         let mut heads = per_slab.into_iter().flatten();
         for s in states.iter_mut() {
             if s.pre_quality.is_some() {
@@ -643,10 +689,15 @@ impl Executor {
                 let heads = match s.pre_heads.take() {
                     Some(heads) => heads,
                     None => {
+                        let bank = DriftedBank::new(s.job.phi, ctx.p);
                         let frames: Vec<Tensor> = par_map(self.threads, &s.job.chunk.frames, |f| {
-                            render_frame(f, s.quality, s.job.phi, ctx.p)
+                            render_frame_with(f, s.quality, &bank, ctx.p)
                         });
-                        match (self.detect)(ctx.cloud.worker(worker), &frames) {
+                        let res = (self.detect)(ctx.cloud.worker(worker), &frames);
+                        for f in frames {
+                            recycle(f);
+                        }
+                        match res {
                             Ok(heads) => heads,
                             Err(e) => {
                                 ctx.cloud.abort(worker);
@@ -720,12 +771,49 @@ impl Executor {
                         crop_refs.push((fi, *r));
                     }
                 }
-                // crop rendering is pure per region, so it fans out; the
+                // Every uncertain region demands a decode of its frame's
+                // cached high-quality stream at crop quality. The shard's
+                // FrameCache dedups those demands to one render per
+                // *distinct* frame, with hit/miss accounting resolved here
+                // on the event thread in demand order; with the cache off
+                // every demand renders — exactly the per-region decode
+                // cost the render-once protocol removes.
+                let p = ctx.p;
+                let frames = &s.job.chunk.frames;
+                let keys: Vec<FrameKey> = crop_refs
+                    .iter()
+                    .map(|(fi, _)| FrameKey::new(&frames[*fi], cfg.crop_quality, s.job.phi))
+                    .collect();
+                let miss = {
+                    let fog = &mut ctx.fogs[s.job.shard];
+                    if self.frame_cache {
+                        fog.frames.plan(&keys)
+                    } else {
+                        fog.frames.plan_bypass(keys.len())
+                    }
+                };
+                let bank = DriftedBank::new(s.job.phi, p);
+                let decoded: Vec<Tensor> = par_map(self.threads, &miss, |&i| {
+                    render_frame_with(&frames[crop_refs[i].0], cfg.crop_quality, &bank, p)
+                });
+                {
+                    let fog = &mut ctx.fogs[s.job.shard];
+                    let mut fresh = decoded.into_iter();
+                    for &i in &miss {
+                        let t = fresh.next().expect("one decode per planned miss");
+                        debug_assert_eq!(t.dims, [p.anchors, p.feat_dim]);
+                        if self.frame_cache {
+                            fog.frames.insert(keys[i], Arc::new(t));
+                        } else {
+                            recycle(t);
+                        }
+                    }
+                }
+                // crop extraction is pure per region, so it fans out; the
                 // classify body below stays on this thread (it mutates
                 // the shard and reads the IL-updated last layer)
-                let frames = &s.job.chunk.frames;
                 let crops = par_map(self.threads, &crop_refs, |(fi, r)| {
-                    render_region_crop(&frames[*fi], &r.rect, cfg.crop_quality, s.job.phi, ctx.p)
+                    render_region_crop_with(&frames[*fi], &r.rect, cfg.crop_quality, &bank, p)
                 });
                 let (results, feats, cls_done) =
                     (self.classify)(&mut ctx.fogs[s.job.shard], &crops, at)?;
@@ -767,11 +855,49 @@ impl Executor {
                 Ok(None)
             }
             Stage::FogFallback => {
-                let hi_frames: Vec<Tensor> = par_map(self.threads, &s.job.chunk.frames, |f| {
-                    render_frame(f, Quality::ORIGINAL, s.job.phi, ctx.p)
+                // The fallback consumes the chunk's cached high-quality
+                // stream: one ORIGINAL-quality decode demand per frame,
+                // served through the shard's FrameCache (accounting on the
+                // event thread; only misses render, fanned out across
+                // workers).
+                let p = ctx.p;
+                let phi = s.job.phi;
+                let frames = &s.job.chunk.frames;
+                let keys: Vec<FrameKey> =
+                    frames.iter().map(|f| FrameKey::new(f, Quality::ORIGINAL, phi)).collect();
+                let miss = {
+                    let fog = &mut ctx.fogs[s.job.shard];
+                    if self.frame_cache {
+                        fog.frames.plan(&keys)
+                    } else {
+                        fog.frames.plan_bypass(keys.len())
+                    }
+                };
+                let bank = DriftedBank::new(phi, p);
+                let rendered: Vec<Tensor> = par_map(self.threads, &miss, |&i| {
+                    render_frame_with(&frames[i], Quality::ORIGINAL, &bank, p)
                 });
-                let (heads, done) =
-                    ctx.fogs[s.job.shard].fallback_detect(&hi_frames, at, ctx.p.grid)?;
+                let fog = &mut ctx.fogs[s.job.shard];
+                let (heads, done) = if self.frame_cache {
+                    let mut fresh = rendered.into_iter();
+                    for &i in &miss {
+                        let t = fresh.next().expect("one render per planned miss");
+                        fog.frames.insert(keys[i], Arc::new(t));
+                    }
+                    // a 15-frame chunk fits the 32-frame cache, so every
+                    // demand is resident once its misses land
+                    let hi: Vec<Arc<Tensor>> = keys
+                        .iter()
+                        .map(|k| fog.frames.get(k).expect("chunk demands fit FRAME_CACHE_FRAMES"))
+                        .collect();
+                    fog.fallback_detect(&hi, at, p.grid)?
+                } else {
+                    let out = fog.fallback_detect(&rendered, at, p.grid)?;
+                    for f in rendered {
+                        recycle(f);
+                    }
+                    out
+                };
                 let theta_loc = ctx.coord.cfg.filter.theta_loc;
                 // single-stage fallback: take argmax labels directly
                 s.per_frame =
@@ -1355,6 +1481,37 @@ mod tests {
         let base = run(1);
         assert_eq!(run(4), base, "threads=4 changed content");
         assert_eq!(run(16), base, "threads=16 changed content");
+    }
+
+    #[test]
+    fn frame_cache_toggle_is_unobservable_in_wave_output() {
+        let run = |on: bool| {
+            let mut rig = Rig::new();
+            let ex = executor(DispatchMode::EventDriven).with_frame_cache(on).with_threads(2);
+            // two identical chunks (the second's decode demands are all
+            // resident when the cache is on) plus a fog-routed one, so
+            // both the classify and the fallback demand paths run
+            let mut jobs: Vec<ChunkJob> = [90u64, 90, 91]
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| ChunkJob::new(chunk(s), 0.0, i as f64 * 0.2))
+                .collect();
+            jobs[2].route = Route::Fog;
+            let out = ex.run_wave(jobs, &mut rig.ctx()).unwrap();
+            let dones: Vec<u64> = out.iter().map(|(_, o)| o.done.to_bits()).collect();
+            let ledger = (rig.fog.frames.hits, rig.fog.frames.misses);
+            (fingerprint(&out, &rig), rig.metrics.fog_regions, dones, ledger)
+        };
+        let (fp_off, regions_off, dones_off, (hits_off, misses_off)) = run(false);
+        let (fp_on, regions_on, dones_on, (hits_on, misses_on)) = run(true);
+        assert_eq!(fp_on, fp_off, "the frame cache changed content");
+        assert_eq!(regions_on, regions_off);
+        assert_eq!(dones_on, dones_off, "the frame cache moved virtual time");
+        assert_eq!(hits_off, 0, "plan_bypass records misses only");
+        assert_eq!(hits_on + misses_on, misses_off, "demand volume must be cache-invariant");
+        // the duplicated chunk guarantees hits whenever it has any
+        // uncertain region at all
+        assert!(hits_on > 0 || regions_on == 0, "no hit despite duplicate demands");
     }
 
     #[test]

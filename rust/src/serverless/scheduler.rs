@@ -196,10 +196,26 @@ impl FogShardPool {
         }
     }
 
-    /// Publish pool gauges (`fog_backlog_s`, `fog_shards`) into the global
-    /// monitor and refresh the smoothed backlog the provisioner acts on.
+    /// Publish pool gauges (`fog_backlog_s`, `fog_shards`, and the two
+    /// cache hit rates `fog_model_cache_hit_rate` /
+    /// `fog_frame_cache_hit_rate`, pooled over the live shards) into the
+    /// global monitor and refresh the smoothed backlog the provisioner
+    /// acts on. A retired shard leaves with its counters, so the pooled
+    /// rate reflects the shards serving *now* — the end-of-run ledger in
+    /// `RunMetrics::frame_cache_{hits,misses}` has the same scope.
     pub fn observe(&mut self, now: f64, monitor: &mut GlobalMonitor) {
         self.tier.observe(now, monitor);
+        let (mut mc, mut fc) = ((0u64, 0u64), (0u64, 0u64));
+        for s in self.tier.workers_mut().iter() {
+            mc = (mc.0 + s.cache.hits, mc.1 + s.cache.misses);
+            fc = (fc.0 + s.frames.hits, fc.1 + s.frames.misses);
+        }
+        if mc.0 + mc.1 > 0 {
+            monitor.gauge("fog_model_cache_hit_rate", now, mc.0 as f64 / (mc.0 + mc.1) as f64);
+        }
+        if fc.0 + fc.1 > 0 {
+            monitor.gauge("fog_frame_cache_hit_rate", now, fc.0 as f64 / (fc.0 + fc.1) as f64);
+        }
     }
 
     /// Grow/shrink the pool against the backlog thresholds (delegates to
@@ -239,6 +255,28 @@ mod tests {
             7,
         );
         (svc, pool)
+    }
+
+    #[test]
+    fn observe_publishes_pooled_cache_hit_rates() {
+        let (_svc, mut pool) =
+            pool_with(ShardConfig { initial_shards: 2, ..ShardConfig::default() });
+        let mut monitor = GlobalMonitor::new();
+        // before any lookup or decode demand there is no rate to publish
+        pool.observe(0.0, &mut monitor);
+        assert!(monitor.track("fog_model_cache_hit_rate").is_none());
+        assert!(monitor.track("fog_frame_cache_hit_rate").is_none());
+        // one hit + one miss on shard 0's model cache, pooled with shard
+        // 1's silence → 0.5; three all-miss frame demands → 0.0
+        pool.shard_mut(0).cache.install("cls", 1);
+        pool.shard_mut(0).cache.lookup("cls");
+        pool.shard_mut(0).cache.lookup("ghost");
+        pool.shard_mut(0).frames.plan_bypass(3);
+        pool.observe(1.0, &mut monitor);
+        let mc = monitor.track("fog_model_cache_hit_rate").unwrap().latest().unwrap();
+        assert_eq!(mc, 0.5);
+        let fc = monitor.track("fog_frame_cache_hit_rate").unwrap().latest().unwrap();
+        assert_eq!(fc, 0.0);
     }
 
     #[test]

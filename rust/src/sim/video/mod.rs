@@ -17,5 +17,8 @@ pub mod scene;
 pub use arrivals::{CameraArrival, WorkloadProfile};
 pub use chunk::{Chunk, Video};
 pub use codec::Quality;
-pub use render::{render_crop, render_frame, render_region_crop};
+pub use render::{
+    render_crop, render_crop_with, render_frame, render_frame_with, render_region_crop,
+    render_region_crop_with, DriftedBank,
+};
 pub use scene::{FrameTruth, GtBox, Scene, SceneConfig};

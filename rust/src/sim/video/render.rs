@@ -5,35 +5,94 @@
 //! `alpha(r,q) · ((1−m)·s_c(φ) + m·s_conf(φ) + eps(q)·n)` into each covered
 //! cell; empty cells carry clutter noise. All randomness comes from seeds
 //! stored in the truth, so renders are pure functions — the same frame
-//! rendered twice (or at two qualities) is consistent.
+//! rendered twice (or at two qualities) is consistent. That purity is what
+//! makes the fog's [`FrameCache`](crate::fog::FrameCache) content-safe: a
+//! memoized render is byte-identical to a fresh one by construction.
+//!
+//! Two hot-path disciplines live here:
+//!
+//! * **Bank threading** — the drift-rotated signature bank
+//!   ([`DriftedBank`]) depends only on `phi`, which is constant within a
+//!   chunk. Every render entry point has a `*_with` variant taking
+//!   `&DriftedBank` so callers hoist the bank out of per-frame (and
+//!   per-region) loops; the plain signatures remain as thin wrappers that
+//!   build a one-shot bank.
+//! * **Scratch arena** — `render_frame` fills a `[A, D]` tensor whose
+//!   backing buffer would otherwise be a fresh heap allocation per frame.
+//!   Consumers that are done with a rendered frame hand the buffer back
+//!   via [`recycle`]; the next render on the same thread reuses it. The
+//!   arena is thread-local and value-invisible: every element of the
+//!   buffer is overwritten before use, so a recycled render is
+//!   bit-identical to a fresh one.
 
 use crate::interchange::Tensor;
 use crate::sim::params::SimParams;
 use crate::sim::video::codec::{self, Quality};
 use crate::sim::video::scene::{FrameObject, FrameTruth, GtBox};
 use crate::util::rng::Pcg32;
+use std::cell::RefCell;
+
+/// Upper bound on buffers parked per thread. Workers recycle into their
+/// own arena; the event-loop thread is the long-lived beneficiary. At
+/// paper scale a buffer is `A·D` f32s (~24 KiB), so the cap bounds parked
+/// memory at ~1.5 MiB per thread.
+const SCRATCH_CAP: usize = 64;
+
+thread_local! {
+    static FRAME_SCRATCH: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+fn take_scratch() -> Vec<f32> {
+    FRAME_SCRATCH.with(|s| s.borrow_mut().pop()).unwrap_or_default()
+}
+
+/// Return a consumed frame's buffer to this thread's scratch arena so the
+/// next [`render_frame`] call skips the heap allocation. Purely a
+/// wall-clock lever: the arena never changes a rendered byte (every slot
+/// is overwritten before use) and over-capacity buffers are simply freed.
+pub fn recycle(frame: Tensor) {
+    FRAME_SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        if s.len() < SCRATCH_CAP {
+            let mut buf = frame.data;
+            buf.clear();
+            s.push(buf);
+        }
+    });
+}
 
 /// Render a full frame to a `[A, D]` tensor (`A = grid²` anchors).
 pub fn render_frame(truth: &FrameTruth, q: Quality, phi: f64, p: &SimParams) -> Tensor {
+    render_frame_with(truth, q, &DriftedBank::new(phi, p), p)
+}
+
+/// [`render_frame`] with a caller-hoisted signature bank (phi is constant
+/// within a chunk, so one bank serves every frame and region of it).
+pub fn render_frame_with(
+    truth: &FrameTruth,
+    q: Quality,
+    bank: &DriftedBank,
+    p: &SimParams,
+) -> Tensor {
     let (a, d) = (p.anchors, p.feat_dim);
-    let mut data = vec![0.0f32; a * d];
+    let mut data = take_scratch();
+    data.reserve(a * d);
     // Background clutter: quality-independent texture in signature space.
+    // Single-pass fill — every element is written here, so the recycled
+    // buffer's old contents are unobservable.
     let mut crng = Pcg32::new(truth.clutter_seed, 101);
-    for v in data.iter_mut() {
-        *v = (p.clutter * crng.normal()) as f32;
-    }
+    data.extend((0..a * d).map(|_| (p.clutter * crng.normal()) as f32));
     let alpha = codec::alpha(q, p) as f32;
     let eps = codec::eps(q, p) as f32;
-    // drifted signatures are shared across objects of a class: compute the
-    // bank once per frame, not once per object (the render hot path)
-    let bank = DriftedBank::new(phi, p);
     for obj in &truth.objects {
-        deposit_object(&mut data, obj, alpha, eps, q, &bank, p);
+        deposit_object(&mut data, obj, alpha, eps, q, bank, p);
     }
     Tensor { dims: vec![a, d], data }
 }
 
-/// Per-render cache of the drift-rotated signature bank.
+/// Per-chunk cache of the drift-rotated signature bank. Drifted signatures
+/// are shared across objects of a class: compute the bank once per chunk,
+/// not once per object (the render hot path).
 pub struct DriftedBank {
     rows: Vec<Vec<f32>>,
 }
@@ -66,12 +125,17 @@ fn deposit_object(
     let m = object_mix(obj, q, p);
     let sig = bank.row(obj.gt.class);
     let conf = bank.row(obj.conf_class);
-    for cell in obj.gt.cells(p.grid) {
-        let mut nrng = Pcg32::new(obj.noise_seed, cell as u64 + 7);
-        let base = cell * d;
-        for i in 0..d {
-            let n = nrng.normal() as f32;
-            data[base + i] += alpha * ((1.0 - m) * sig[i] + m * conf[i] + eps * n);
+    // direct y/x walk in GtBox::cells order, without materializing the
+    // cell list per object
+    for y in obj.gt.y0..=obj.gt.y1 {
+        for x in obj.gt.x0..=obj.gt.x1 {
+            let cell = y * p.grid + x;
+            let mut nrng = Pcg32::new(obj.noise_seed, cell as u64 + 7);
+            let base = cell * d;
+            for i in 0..d {
+                let n = nrng.normal() as f32;
+                data[base + i] += alpha * ((1.0 - m) * sig[i] + m * conf[i] + eps * n);
+            }
         }
     }
 }
@@ -80,25 +144,39 @@ fn deposit_object(
 /// quality `q` — what the fog classifier consumes after its preprocessing
 /// (the classifier normalizes crops, so its input is unit-scale).
 pub fn render_crop(obj: &FrameObject, q: Quality, phi: f64, p: &SimParams) -> Vec<f32> {
+    render_crop_with(obj, q, &DriftedBank::new(phi, p), p)
+}
+
+/// [`render_crop`] against a caller-hoisted [`DriftedBank`] — the bank
+/// rows ARE `drifted_signature(class, phi)`, so reusing them is
+/// bit-identical to the per-object recomputation this replaces.
+pub fn render_crop_with(
+    obj: &FrameObject,
+    q: Quality,
+    bank: &DriftedBank,
+    p: &SimParams,
+) -> Vec<f32> {
     let d = p.feat_dim;
     let m = object_mix(obj, q, p);
     let eps = codec::eps(q, p) as f32;
     let alpha = codec::alpha(q, p) as f32;
-    let sig = p.drifted_signature(obj.gt.class, phi);
-    let conf = p.drifted_signature(obj.conf_class, phi);
+    let sig = bank.row(obj.gt.class);
+    let conf = bank.row(obj.conf_class);
     // Average over covered cells (noise averages down like a real crop
     // resize), clutter enters scaled by 1/alpha from the normalization.
-    let cells = obj.gt.cells(p.grid);
     let mut out = vec![0.0f32; d];
     let mut crng = Pcg32::new(obj.noise_seed ^ 0xC2B2AE3D27D4EB4F, 3);
-    for &cell in &cells {
-        let mut nrng = Pcg32::new(obj.noise_seed, cell as u64 + 7);
-        for (i, o) in out.iter_mut().enumerate() {
-            let n = nrng.normal() as f32;
-            *o += (1.0 - m) * sig[i] + m * conf[i] + eps * n;
+    for y in obj.gt.y0..=obj.gt.y1 {
+        for x in obj.gt.x0..=obj.gt.x1 {
+            let cell = y * p.grid + x;
+            let mut nrng = Pcg32::new(obj.noise_seed, cell as u64 + 7);
+            for (i, o) in out.iter_mut().enumerate() {
+                let n = nrng.normal() as f32;
+                *o += (1.0 - m) * sig[i] + m * conf[i] + eps * n;
+            }
         }
     }
-    let inv = 1.0 / cells.len() as f32;
+    let inv = 1.0 / obj.gt.area() as f32;
     for o in out.iter_mut() {
         *o *= inv;
     }
@@ -120,6 +198,18 @@ pub fn render_region_crop(
     phi: f64,
     p: &SimParams,
 ) -> Vec<f32> {
+    render_region_crop_with(truth, region, q, &DriftedBank::new(phi, p), p)
+}
+
+/// [`render_region_crop`] with a caller-hoisted [`DriftedBank`] — one
+/// bank serves every uncertain region of a chunk.
+pub fn render_region_crop_with(
+    truth: &FrameTruth,
+    region: &GtBox,
+    q: Quality,
+    bank: &DriftedBank,
+    p: &SimParams,
+) -> Vec<f32> {
     // Find the object with the highest overlap.
     let best = truth
         .objects
@@ -129,7 +219,7 @@ pub fn render_region_crop(
         .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
     match best {
         Some((obj, iou)) => {
-            let mut crop = render_crop(obj, q, phi, p);
+            let mut crop = render_crop_with(obj, q, bank, p);
             if iou < 0.999 {
                 // Partial overlap dilutes the signature with clutter.
                 let dilute = iou.max(0.25) as f32;
@@ -199,6 +289,43 @@ mod tests {
         let a = render_frame(&t, Quality::LOW, 0.1, &p);
         let b = render_frame(&t, Quality::LOW, 0.1, &p);
         assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn recycled_scratch_never_changes_a_rendered_byte() {
+        let (p, t) = setup();
+        let fresh = render_frame(&t, Quality::ORIGINAL, 0.2, &p);
+        let want = fresh.data.clone();
+        // park the consumed buffer, render into it, and compare: the
+        // arena is a pure wall-clock lever
+        recycle(fresh);
+        let reused = render_frame(&t, Quality::ORIGINAL, 0.2, &p);
+        assert_eq!(reused.data, want);
+        // a differently-keyed render through the same buffer also matches
+        // its from-scratch twin
+        recycle(reused);
+        let a = render_frame(&t, Quality::LOW, 0.0, &p);
+        let b = render_frame(&t, Quality::LOW, 0.0, &p);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn hoisted_bank_matches_the_one_shot_wrappers() {
+        let (p, t) = setup();
+        let phi = 0.37;
+        let bank = DriftedBank::new(phi, &p);
+        let with = render_frame_with(&t, Quality::HIGH_ROUND2, &bank, &p);
+        let plain = render_frame(&t, Quality::HIGH_ROUND2, phi, &p);
+        assert_eq!(with.data, plain.data);
+        let obj = &t.objects[0];
+        assert_eq!(
+            render_crop_with(obj, Quality::LOW, &bank, &p),
+            render_crop(obj, Quality::LOW, phi, &p)
+        );
+        assert_eq!(
+            render_region_crop_with(&t, &obj.gt, Quality::ORIGINAL, &bank, &p),
+            render_region_crop(&t, &obj.gt, Quality::ORIGINAL, phi, &p)
+        );
     }
 
     #[test]

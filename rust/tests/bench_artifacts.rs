@@ -1,7 +1,7 @@
 //! Schema + round-trip tests for every emitted bench artifact:
 //! `BENCH_overlap.json`, `BENCH_stream.json`, `BENCH_gpu.json`,
-//! `BENCH_par.json`, `BENCH_slo.json` (encoders in `pipeline::figures`,
-//! shared with the bench harness) and `BENCH_study.json` /
+//! `BENCH_par.json`, `BENCH_hotpath.json`, `BENCH_slo.json` (encoders in
+//! `pipeline::figures`, shared with the bench harness) and `BENCH_study.json` /
 //! `BENCH_fairness.json` (both `study::StudyReport` documents). Each
 //! artifact is built from synthetic rows in both its smoke- and
 //! full-sized shape, parsed back with the crate's JSON parser, and
@@ -9,7 +9,8 @@
 //! artifact consumers.
 
 use vpaas::pipeline::figures::{
-    gpu_json, overlap_json, par_json, slo_json, stream_json, GpuRow, ParRow, SloRow, StreamRow,
+    gpu_json, hotpath_json, overlap_json, par_json, slo_json, stream_json, GpuRow, HotRow, ParRow,
+    SloRow, StreamRow,
 };
 use vpaas::study::{CellStats, MetricStats, StudyReport};
 use vpaas::util::json::Json;
@@ -128,6 +129,46 @@ fn par_artifact_schema() {
         }
         // stable: same rows encode to identical bytes
         assert_eq!(text, par_json(8, &par_rows));
+    }
+}
+
+#[test]
+fn hotpath_artifact_schema() {
+    // smoke threads [1,2] and full threads [1,4] shapes, each × cache off/on
+    for counts in [vec![1usize, 2], vec![1, 4]] {
+        let hot_rows: Vec<HotRow> = counts
+            .iter()
+            .flat_map(|&t| {
+                [false, true].into_iter().map(move |cache| {
+                    let wall = 8.0 / t as f64 / if cache { 2.0 } else { 1.0 };
+                    HotRow {
+                        threads: t,
+                        frame_cache: cache,
+                        chunks: 64,
+                        wall_s: wall,
+                        chunks_per_s: 64.0 / wall,
+                        cache_hits: if cache { 300 } else { 0 },
+                        cache_misses: if cache { 100 } else { 400 },
+                    }
+                })
+            })
+            .collect();
+        let text = hotpath_json(8, &hot_rows);
+        let doc = parse(&text);
+        let rs = rows(&doc, "fig16_hotpath", "drone x8 cameras, bursty, 8 shards");
+        assert_eq!(rs.len(), 2 * counts.len());
+        for (row, want) in rs.iter().zip(&hot_rows) {
+            assert_eq!(num(row, "threads"), want.threads as f64);
+            // the cache axis is a plain JSON bool, not a string
+            assert_eq!(row.get("frame_cache").and_then(Json::as_bool), Some(want.frame_cache));
+            assert_eq!(num(row, "chunks"), 64.0);
+            assert!((num(row, "wall_s") - want.wall_s).abs() < 1e-6);
+            assert!((num(row, "chunks_per_s") - want.chunks_per_s).abs() < 1e-6);
+            assert_eq!(num(row, "cache_hits"), want.cache_hits as f64);
+            assert_eq!(num(row, "cache_misses"), want.cache_misses as f64);
+        }
+        // stable: same rows encode to identical bytes
+        assert_eq!(text, hotpath_json(8, &hot_rows));
     }
 }
 

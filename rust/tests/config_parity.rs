@@ -36,6 +36,8 @@ fn defaults_agree_across_both_paths() {
     assert_eq!(from_cli.seed, from_file.seed);
     assert_eq!(from_cli.batching, BatchMode::Static);
     assert_eq!(from_cli.batching, from_file.batching);
+    // the frame cache is on by default on both paths
+    assert!(from_cli.frame_cache && from_file.frame_cache);
 }
 
 #[test]
@@ -43,7 +45,7 @@ fn every_knob_reaches_runconfig_from_both_paths() {
     let cli = RunConfig::from_args(&args(
         "run --wan 42 --budget 0.35 --no-drift --golden --shards 6 --gpus 3 \
          --slo-ms 9000 --ladder 0.75:38,0.5:44 --seed 0xBEEF --workload bursty \
-         --dispatch streaming --threads 4 --batching adaptive \
+         --dispatch streaming --threads 4 --batching adaptive --no-frame-cache \
          --tenants gold*3:2:5000,silver",
     ))
     .unwrap();
@@ -53,7 +55,7 @@ fn every_knob_reaches_runconfig_from_both_paths() {
              [hitl]\nbudget = 0.35\n\
              [app]\ndrift = false\ngolden = true\nshards = 6\nslo_ms = 9000\n\
              ladder = 0.75:38, 0.5:44\nseed = 48879\nworkload = bursty\n\
-             dispatch = streaming\nthreads = 4\n\
+             dispatch = streaming\nthreads = 4\nframe_cache = false\n\
              [cloud]\ngpus = 3\nbatching = adaptive\n\
              [tenants]\ngold*3 = 2:5000\nsilver =\n",
         )
@@ -78,6 +80,7 @@ fn every_knob_reaches_runconfig_from_both_paths() {
     assert_eq!(cli.tenants.get(0).slo_ms, Some(5000.0));
     assert!(cli.tenants.fair_enabled());
     assert_eq!(cli.batching, BatchMode::Adaptive);
+    assert!(!cli.frame_cache);
 
     // ...and both paths agree knob for knob
     assert_eq!(cli.wan_mbps, file.wan_mbps);
@@ -94,6 +97,7 @@ fn every_knob_reaches_runconfig_from_both_paths() {
     assert_eq!(cli.threads, file.threads);
     assert_eq!(cli.tenants, file.tenants);
     assert_eq!(cli.batching, file.batching);
+    assert_eq!(cli.frame_cache, file.frame_cache);
 }
 
 #[test]

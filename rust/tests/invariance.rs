@@ -12,6 +12,12 @@
 //!   latency distribution are bit-identical — parallelism may only move
 //!   host time, never a single simulated byte (see ARCHITECTURE.md,
 //!   "Determinism model").
+//! * **Frame cache** — `RunConfig::frame_cache` is likewise a pure
+//!   wall-clock knob: the fog [`FrameCache`] memoizes pure renders, so
+//!   cache-off runs must reproduce the default cached run's fingerprint,
+//!   makespan and latency bits exactly — for VPaaS (with drift on, the
+//!   shape that maximizes uncertain-region decode demand) *and* for the
+//!   DDS baseline's round-2 re-renders.
 //! * **SLO admission** — with a binding `slo_ms`, every scored chunk
 //!   meets the SLO by construction, `chunks + chunks_dropped` accounts
 //!   for every planned chunk exactly, and a non-binding finite SLO (the
@@ -112,6 +118,60 @@ fn worker_thread_count_is_byte_invisible() {
             assert_eq!(sa.p99.to_bits(), sb.p99.to_bits());
         }
     }
+}
+
+#[test]
+fn frame_cache_toggle_is_byte_invisible() {
+    let h = Harness::new().unwrap();
+    let ds = cameras(3);
+    // the memo serves pure renders, so like `threads` it must leave both
+    // content and *timing* untouched: fingerprint, virtual makespan and
+    // latency bits all match the cache-off run bit for bit. Drift is on —
+    // it keeps the classifier uncertain, so the fog decode demand (the
+    // path the cache actually serves) stays high; the thread axis rides
+    // along to cover the cache under the parallel planner too.
+    let shapes = [
+        (DispatchMode::EventDriven, 1usize, 1usize, 1usize),
+        (DispatchMode::Streaming, 4, 2, 4),
+        (DispatchMode::Sequential, 2, 1, 1),
+    ];
+    for (dispatch, shards, gpus, threads) in shapes {
+        let base = RunConfig {
+            threads,
+            drift: true,
+            ..cfg(shards, gpus, dispatch, WorkloadProfile::Bursty)
+        };
+        let cached = h.run(SystemKind::Vpaas, &ds, &base).unwrap();
+        assert!(cached.chunks > 0);
+        let cold = h
+            .run(SystemKind::Vpaas, &ds, &RunConfig { frame_cache: false, ..base.clone() })
+            .unwrap();
+        assert_eq!(
+            cold.content_fingerprint(),
+            cached.content_fingerprint(),
+            "frame_cache=false on {}/{shards} shards/{gpus} gpus/{threads} threads \
+             changed run content",
+            dispatch.name(),
+        );
+        assert_eq!(cached.makespan.to_bits(), cold.makespan.to_bits());
+        let (sa, sb) = (cached.latency.summary(), cold.latency.summary());
+        assert_eq!(sa.count, sb.count);
+        assert_eq!(sa.mean.to_bits(), sb.mean.to_bits());
+        assert_eq!(sa.p99.to_bits(), sb.p99.to_bits());
+        // the ledger meters the same decode demand either way; a bypassed
+        // cache can only miss
+        assert_eq!(cold.frame_cache_hits, 0);
+        assert_eq!(cold.frame_cache_misses, cached.frame_cache_hits + cached.frame_cache_misses);
+    }
+    // the DDS baseline's round-2 memo holds the same contract
+    let base =
+        RunConfig { drift: true, ..cfg(1, 1, DispatchMode::EventDriven, WorkloadProfile::Bursty) };
+    let cached = h.run(SystemKind::Dds, &ds, &base).unwrap();
+    let cold = h.run(SystemKind::Dds, &ds, &RunConfig { frame_cache: false, ..base }).unwrap();
+    assert_eq!(cold.content_fingerprint(), cached.content_fingerprint());
+    assert_eq!(cached.makespan.to_bits(), cold.makespan.to_bits());
+    assert_eq!(cold.frame_cache_hits, 0);
+    assert_eq!(cold.frame_cache_misses, cached.frame_cache_hits + cached.frame_cache_misses);
 }
 
 #[test]
